@@ -1,0 +1,59 @@
+"""Kernel micro-bench: wall time of the portable paths on this host (the
+Pallas kernels target TPU; interpret mode is correctness-only, so we time
+the jnp fallbacks that share the same math) + oracle agreement."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.spec_verify.ref import spec_verify_ref
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+def _time(fn, *args, reps=5, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    print("name,us_per_call,derived")
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 2048, 8, 128), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 2048, 2, 128), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 2048, 2, 128), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: attention(q, k, v, causal=True,
+                                          force_pallas=False))
+    us = _time(f, q, k, v)
+    flops = 4 * 2048 * 2048 * 8 * 128 / 2  # causal half
+    print(f"bench_attention_2k,{us:.0f},{flops / (us * 1e-6) / 1e9:.1f}GFLOP/s")
+
+    dp = jax.nn.softmax(jax.random.normal(ks[0], (8, 32000)))
+    tp = jax.nn.softmax(jax.random.normal(ks[1], (9, 32000)))
+    dt = jax.random.randint(ks[2], (8,), 0, 32000)
+    ua = jax.random.uniform(ks[0], (9,))
+    ur = jax.random.uniform(ks[1], (9,))
+    f2 = jax.jit(spec_verify_ref)
+    us = _time(f2, dt, dp, tp, ua, ur)
+    print(f"bench_spec_verify_32k_vocab,{us:.0f},K=8")
+
+    x = jax.random.normal(ks[0], (2, 1024, 8, 64))
+    dtm = jax.nn.softplus(jax.random.normal(ks[1], (2, 1024, 8)))
+    a = -jnp.exp(jax.random.normal(ks[2], (8,)))
+    bm = jax.random.normal(ks[0], (2, 1024, 1, 64))
+    cm = jax.random.normal(ks[1], (2, 1024, 1, 64))
+    f3 = jax.jit(lambda *a_: ssd_ref(*a_, 128))
+    us = _time(f3, x, dtm, a, bm, cm)
+    print(f"bench_ssd_1k,{us:.0f},chunk=128")
+
+
+if __name__ == "__main__":
+    main()

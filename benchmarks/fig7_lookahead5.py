@@ -1,0 +1,40 @@
+"""Figure 7 reproduction: pairwise speedups at a STATIC lookahead = 5
+(no per-cell lookahead optimization — the paper's smooth-heatmap variant).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import simulate_dsi_pool, simulate_si
+from repro.core.planner import min_sp
+
+N_TOKENS = 50
+LOOKAHEAD = 5
+REPEATS = 3
+
+
+def main():
+    lats = np.linspace(0.02, 1.0, 15)
+    accs = np.linspace(0.0, 1.0, 16)
+    nonsi = float(N_TOKENS)
+    print("name,drafter_latency,acceptance,si_vs_nonsi,dsi_vs_si,dsi_vs_nonsi")
+    viol = 0
+    for t_d in lats:
+        sp = min_sp(1.0, t_d, LOOKAHEAD) + 1
+        for a in accs:
+            si = np.mean([simulate_si(1.0, t_d, a, LOOKAHEAD, N_TOKENS,
+                                      seed=3 * r).latency
+                          for r in range(REPEATS)])
+            dsi = np.mean([simulate_dsi_pool(1.0, t_d, a, LOOKAHEAD, sp,
+                                             N_TOKENS, seed=3 * r).latency
+                           for r in range(REPEATS)])
+            print(f"fig7,{t_d:.3f},{a:.3f},{nonsi / si:.3f},"
+                  f"{si / dsi:.3f},{nonsi / dsi:.3f}")
+            if dsi > si * 1.03 or dsi > nonsi * 1.03:
+                viol += 1
+    print(f"# fig7 DSI-never-slower violations: {viol}")
+    assert viol == 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Render EXPERIMENTS.md §Dry-run + §Roofline tables from the dry-run
+sweep JSONLs. Usage:
+  PYTHONPATH=src python -m benchmarks.make_experiments_md \
+      dryrun_single.jsonl dryrun_multi.jsonl > /tmp/tables.md
+"""
+import json
+import sys
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-4:
+        return f"{x:.1e}"
+    return f"{x:.4f}" if x < 1 else f"{x:.2f}"
+
+
+def main():
+    single = [json.loads(l) for l in open(sys.argv[1])]
+    multi = [json.loads(l) for l in open(sys.argv[2])] if len(sys.argv) > 2 else []
+
+    print("### Dry-run results — single pod (16,16)=(data,model), 256 chips\n")
+    print("| arch | shape | status | compile s | arg GB/dev | temp GB/dev | "
+          "FLOPs/dev | HBM B/dev | coll B/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in single:
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | **{r['status']}**: "
+                  f"{r.get('reason', r.get('error', ''))[:60]} | | | | | | |")
+            continue
+        m = r["memory"]
+        print(f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']} | "
+              f"{fmt_bytes(m['argument_size_in_bytes'])} | "
+              f"{fmt_bytes(m['temp_size_in_bytes'])} | "
+              f"{r['flops']:.3g} | {r['bytes_accessed']:.3g} | "
+              f"{r['collectives']['total_bytes']:.3g} |")
+
+    if multi:
+        print("\n### Dry-run — multi-pod (2,16,16)=(pod,data,model), 512 chips"
+              " (proves the pod axis shards)\n")
+        print("| arch | shape | status | compile s | arg GB/dev | "
+              "temp GB/dev |")
+        print("|---|---|---|---|---|---|")
+        for r in multi:
+            if r["status"] != "ok":
+                print(f"| {r['arch']} | {r['shape']} | **{r['status']}**: "
+                      f"{r.get('reason', r.get('error', ''))[:60]} | | | |")
+                continue
+            m = r["memory"]
+            print(f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']} | "
+                  f"{fmt_bytes(m['argument_size_in_bytes'])} | "
+                  f"{fmt_bytes(m['temp_size_in_bytes'])} |")
+
+    print("\n### Roofline — single pod, per (arch × shape)\n")
+    print("TPU v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link "
+          "ICI. Terms in seconds per step (loop-corrected per-device "
+          "numbers; see launch/hlo_analysis.py).\n")
+    print("| arch | shape | t_compute | t_memory (tpu-adj) | t_collective |"
+          " dominant | useful-FLOPs ratio | one-line bottleneck note |")
+    print("|---|---|---|---|---|---|---|---|")
+    notes = {
+        ("kimi-k2-1t-a32b", "decode_32k"):
+            "FSDP expert all-gather per layer dominates decode — weights "
+            "should stay resident (perf iteration #2)",
+        ("kimi-k2-1t-a32b", "long_500k"):
+            "same FSDP gather pathology at batch 1",
+        ("kimi-k2-1t-a32b", "train_4k"):
+            "expert AG + activation psum; a2a dispatch would cut volume",
+        ("minitron-4b", "train_4k"):
+            "vocab-256k unembed AG + grad RS dominate",
+        ("nemotron-4-15b", "train_4k"):
+            "same vocab-heavy collective profile as minitron",
+        ("llama-3.2-vision-11b", "train_4k"):
+            "cross-attn image KV all-gathered per superblock",
+        ("mamba2-370m", "prefill_32k"):
+            "SSD chunk matmuls near roofline (useful≈1)",
+    }
+
+    def note(r):
+        rl = r["roofline"]
+        key = (r["arch"], r["shape"])
+        if key in notes:
+            return notes[key]
+        if rl["dominant"] == "memory" and r["shape"].startswith("decode"):
+            return "decode is KV/weight-read bound (expected)"
+        if rl["dominant"] == "memory":
+            return "HBM-bound: larger per-device batch or fusion would help"
+        if rl["dominant"] == "collective":
+            return "collective-bound: reshard or overlap collectives"
+        return "compute-bound: near roofline"
+
+    for r in single:
+        if r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        adj = rl.get("t_memory_tpu_adjusted_s", rl["t_memory_s"])
+        print(f"| {r['arch']} | {r['shape']} | {fmt_s(rl['t_compute_s'])} | "
+              f"{fmt_s(rl['t_memory_s'])} ({fmt_s(adj)}) | "
+              f"{fmt_s(rl['t_collective_s'])} | "
+              f"{rl['dominant']} | {rl['useful_flops_ratio']:.2f} | "
+              f"{note(r)} |")
+
+    if len(sys.argv) > 3:  # baseline jsonl for the before/after comparison
+        base = {(r["arch"], r["shape"]): r
+                for r in map(json.loads, open(sys.argv[3]))}
+        print("\n### §Perf before → after (paper-faithful baseline vs "
+              "optimized), dominant term per pair\n")
+        print("| arch | shape | baseline dominant (s) | optimized (s) | Δ |")
+        print("|---|---|---|---|---|")
+        for r in single:
+            b = base.get((r["arch"], r["shape"]))
+            if not b or r["status"] != "ok" or b.get("status") != "ok":
+                continue
+            rb, ro = b["roofline"], r["roofline"]
+            kb = rb["dominant"]
+            before = rb[f"t_{kb}_s"]
+            after = ro[f"t_{kb}_s"]
+            if before <= 0:
+                continue
+            ratio = before / max(after, 1e-12)
+            flag = "" if ratio < 1.2 else f" (**{ratio:.1f}×**)"
+            print(f"| {r['arch']} | {r['shape']} | {kb} {fmt_s(before)} | "
+                  f"{fmt_s(after)} | {ratio:.2f}×{flag} |")
+
+
+if __name__ == "__main__":
+    main()

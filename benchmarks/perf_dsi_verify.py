@@ -1,0 +1,81 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb #3: the DSI verification chunk forward — the paper's
+own technique — on the speculation-parallel serving mesh
+(spec, data, model) = (4, 4, 16). One macro-step verifies ``lookahead``
+draft positions against a 32k KV cache; the ``spec`` axis context-shards
+the window (one block per paper "target server").
+
+  PYTHONPATH=src python -m benchmarks.perf_dsi_verify [--lookahead 32]
+      [--arch yi-9b] [--no-spec]  (--no-spec folds spec into data: the
+      baseline without speculation parallelism)
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.launch import hlo_analysis, roofline
+from repro.launch.mesh import _mk
+from repro.launch.specs import cache_shardings
+from repro.models.model import Model
+from repro.sharding import param_specs, use_mesh
+
+
+def profile(arch: str, lookahead: int, *, spec: bool = True,
+            batch: int = 16, seq: int = 32768, top: int = 8):
+    cfg = get_config(arch)
+    model = Model(cfg)
+    if spec:
+        mesh = _mk((4, 4, 16), ("spec", "data", "model"))
+    else:
+        mesh = _mk((16, 16), ("data", "model"))
+
+    with use_mesh(mesh):
+        p_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        p_shard = param_specs(mesh, p_shapes)
+        c_specs = jax.eval_shape(
+            lambda: model.init_cache(batch, seq, filled=seq - 2 * lookahead))
+        c_shard = cache_shardings(mesh, c_specs, cfg)
+        toks = jax.ShapeDtypeStruct((batch, lookahead), jnp.int32)
+
+        def dsi_verify_step(params, cache, window):
+            logits, cache2 = model.verify_chunk(params, cache, window)
+            return logits, cache2
+
+        compiled = jax.jit(dsi_verify_step,
+                           in_shardings=(p_shard, c_shard, None)
+                           ).lower(p_shapes, c_specs, toks).compile()
+    text = compiled.as_text()
+    res = hlo_analysis.analyze(text)
+
+    class _Shape:
+        global_batch, seq_len, kind = batch, lookahead, "decode"
+    rec = {"flops": res["flops"], "bytes_accessed": res["hbm_bytes"],
+           "move_bytes": res["move_bytes"],
+           "collectives": res["collective_bytes"]}
+    terms = roofline.terms(rec, cfg, _Shape, mesh)
+    mem = compiled.memory_analysis()
+    print(f"== DSI verify: {arch} W={lookahead} "
+          f"mesh={'spec(4,4,16)' if spec else 'flat(16,16)'} ==")
+    print(f"memory/dev: arg {mem.argument_size_in_bytes/2**30:.2f} GB, "
+          f"temp {mem.temp_size_in_bytes/2**30:.2f} GB")
+    print(f"terms: compute {terms['t_compute_s']:.4g}s  "
+          f"memory {terms['t_memory_s']:.4g}s "
+          f"(tpu-adj {terms['t_memory_tpu_adjusted_s']:.4g}s)  "
+          f"collective {terms['t_collective_s']:.4g}s  "
+          f"dominant={terms['dominant']}")
+    for b, kind, src, cnt in hlo_analysis.top_collectives(text, top):
+        print(f"  {b/2**30:8.3f} GB  {kind:<18} x{cnt:<5} {src[:100]}")
+    return terms
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="yi-9b")
+    ap.add_argument("--lookahead", type=int, default=32)
+    ap.add_argument("--no-spec", action="store_true")
+    a = ap.parse_args()
+    profile(a.arch, a.lookahead, spec=not a.no_spec)

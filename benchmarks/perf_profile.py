@@ -1,0 +1,71 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf profiling driver: compile one (arch × shape × mesh), print the
+three roofline terms and the top collective contributors (loop-scaled,
+attributed via op_name metadata).
+
+  PYTHONPATH=src python -m benchmarks.perf_profile --arch kimi-k2-1t-a32b \
+      --shape decode_32k [--multi-pod]
+"""
+import argparse
+
+import jax
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config, get_shape
+from repro.launch import hlo_analysis, roofline
+from repro.launch.dryrun import build_step
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import arch_for_shape
+from repro.models.model import Model
+from repro.sharding import use_mesh
+
+
+def profile(arch: str, shape_name: str, *, multi_pod: bool = False,
+            top: int = 12):
+    shape = get_shape(shape_name)
+    cfg = arch_for_shape(get_config(arch), shape)
+    model = Model(cfg, remat=(shape.kind == "train"))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    with use_mesh(mesh):
+        step, args, shardings, donate = build_step(model, shape, mesh)
+        compiled = jax.jit(step, in_shardings=shardings,
+                           donate_argnums=donate).lower(*args).compile()
+    text = compiled.as_text()
+    res = hlo_analysis.analyze(text)
+    rec = {"flops": res["flops"], "bytes_accessed": res["hbm_bytes"],
+           "move_bytes": res["move_bytes"],
+           "collectives": res["collective_bytes"]}
+    terms = roofline.terms(rec, cfg, shape, mesh)
+    mem = compiled.memory_analysis()
+    print(f"== {arch} × {shape_name} × "
+          f"{'multi(2,16,16)' if multi_pod else 'single(16,16)'} ==")
+    print(f"memory/dev: arg {mem.argument_size_in_bytes/2**30:.2f} GB, "
+          f"temp {mem.temp_size_in_bytes/2**30:.2f} GB")
+    print(f"terms: compute {terms['t_compute_s']:.4g}s  "
+          f"memory {terms['t_memory_s']:.4g}s "
+          f"(tpu-adj {terms['t_memory_tpu_adjusted_s']:.4g}s)  "
+          f"collective {terms['t_collective_s']:.4g}s  "
+          f"dominant={terms['dominant']} useful={terms['useful_flops_ratio']:.2f}")
+    print(f"collective total/dev: "
+          f"{res['collective_bytes']['total_bytes']/2**30:.2f} GB  "
+          f"by kind: " + ", ".join(
+              f"{k}={v/2**30:.2f}GB"
+              for k, v in res['collective_bytes']['by_kind'].items() if v))
+    print("top collective sites (loop-scaled bytes/dev):")
+    for b, kind, src, cnt in hlo_analysis.top_collectives(text, top):
+        print(f"  {b/2**30:8.3f} GB  {kind:<18} x{cnt:<5} {src[:110]}")
+    print("top HBM sites (loop-scaled bytes/dev, traffic model):")
+    for b, op, src, cnt in hlo_analysis.top_hbm(text, top):
+        print(f"  {b/2**30:8.3f} GB  {op:<18} x{cnt:<5} {src[:110]}")
+    return terms, res
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, required=True)
+    ap.add_argument("--shape", choices=sorted(SHAPES), required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=12)
+    a = ap.parse_args()
+    profile(a.arch, a.shape, multi_pod=a.multi_pod, top=a.top)

@@ -1,0 +1,28 @@
+"""Benchmark aggregator — one function per paper table/figure.
+Prints ``name,...`` CSV sections. ``python -m benchmarks.run [--quick]``."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    from benchmarks import (bench_kernels, engine_stats, fig2_heatmaps,
+                            fig7_lookahead5, table1_timeline, table2_speedups)
+    print("== Table 1: token-count timeline ==")
+    table1_timeline.main()
+    print("== Table 2: DSI vs SI speedups (paper rows) ==")
+    table2_speedups.main()
+    if not quick:
+        print("== Figure 2: offline heatmaps ==")
+        fig2_heatmaps.main()
+        print("== Figure 7: lookahead=5 heatmaps ==")
+        fig7_lookahead5.main()
+        print("== Engine-level drafter-quality sweep (real models) ==")
+        engine_stats.main()
+    print("== Kernel micro-benchmarks ==")
+    bench_kernels.main()
+
+
+if __name__ == "__main__":
+    main()

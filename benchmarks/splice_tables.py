@@ -1,0 +1,33 @@
+"""Regenerate the §Dry-run/§Roofline tables inside EXPERIMENTS.md from
+sweep JSONLs (keeps everything before the section header and from the
+§Perf header onward).
+
+  PYTHONPATH=src python -m benchmarks.splice_tables \
+      dryrun_single.jsonl dryrun_multi.jsonl dryrun_single_baseline.jsonl
+"""
+import io
+import sys
+from contextlib import redirect_stdout
+
+from benchmarks import make_experiments_md
+
+HDR = "## §Dry-run + §Roofline"
+PERF = "\n## §Perf — hillclimbing log"
+
+
+def main():
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        make_experiments_md.main()
+    tables = buf.getvalue()
+
+    text = open("EXPERIMENTS.md").read()
+    pre = text.split(HDR)[0]
+    post = text[text.index(PERF) + 1:]
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(pre + HDR + "\n\n" + tables + "\n\n" + post)
+    print("EXPERIMENTS.md tables refreshed")
+
+
+if __name__ == "__main__":
+    main()

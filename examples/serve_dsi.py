@@ -1,0 +1,44 @@
+"""End-to-end serving driver (the paper's kind): batched requests through
+the serving engine in all three modes, with losslessness cross-checks.
+
+  PYTHONPATH=src python examples/serve_dsi.py
+"""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+
+cfg_t = dataclasses.replace(reduced(get_config("yi-9b"), layers=4,
+                                    d_model=256), dtype="float32")
+cfg_d = dataclasses.replace(reduced(get_config("yi-9b"), layers=2,
+                                    d_model=128), dtype="float32")
+target, drafter = Model(cfg_t), Model(cfg_d)
+params_t = target.init(jax.random.PRNGKey(0))
+params_d = drafter.init(jax.random.PRNGKey(1))
+
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, cfg_t.vocab_size, size=12).tolist()
+           for _ in range(3)]
+
+outputs = {}
+for mode in ("nonsi", "si", "dsi"):
+    eng = ServingEngine(target=target, params_t=params_t, drafter=drafter,
+                        params_d=params_d, mode=mode, lookahead=4)
+    for p in prompts:
+        eng.submit(p, 24)
+    t0 = time.time()
+    done = eng.run()
+    wall = time.time() - t0
+    outputs[mode] = [r.output for r in done]
+    print(f"{mode:6s}: {len(done)} requests in {wall:.2f}s")
+
+for mode in ("si", "dsi"):
+    same = all(a == b for a, b in zip(outputs["nonsi"], outputs[mode]))
+    print(f"{mode} outputs identical to non-SI: {same}")
+    assert same
+print("lossless serving across all modes ✓")

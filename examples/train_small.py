@@ -1,0 +1,28 @@
+"""Train a small decoder for a few hundred steps on the synthetic corpus
+(loss decreases — substrate end-to-end check), then checkpoint.
+
+  PYTHONPATH=src python examples/train_small.py [--steps 300] [--big]
+
+--big uses a ~100M-parameter config (slow on CPU; sized for a real host).
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--big", action="store_true")
+    args = ap.parse_args()
+    argv = ["--arch", "yi-9b", "--steps", str(args.steps),
+            "--ckpt", "/tmp/repro_train_small.npz"]
+    if args.big:  # ~100M params
+        argv += ["--layers", "12", "--d-model", "512", "--batch", "8",
+                 "--seq", "512"]
+    else:
+        argv += ["--layers", "4", "--d-model", "256", "--batch", "8",
+                 "--seq", "256"]
+    loss = train_main(argv)
+    print(f"final loss {loss:.4f}")
+    sys.exit(0)

@@ -1,0 +1,38 @@
+"""Architecture + shape registry (``--arch <id>`` resolution)."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    DSIConfig, ModelConfig, MoEConfig, SSMConfig, ShapeConfig,
+    drafter_of, reduced,
+)
+from repro.configs.shapes import SHAPES  # noqa: F401
+
+_ARCH_MODULES = {
+    "hymba-1.5b": "hymba_1p5b",
+    "hubert-xlarge": "hubert_xlarge",
+    "minitron-4b": "minitron_4b",
+    "granite-34b": "granite_34b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "llama-3.2-vision-11b": "llama_3p2_vision_11b",
+    "yi-9b": "yi_9b",
+    "mamba2-370m": "mamba2_370m",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+}
+
+ARCH_NAMES = tuple(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}")
+    return SHAPES[name]

@@ -1,0 +1,213 @@
+"""Config dataclasses for models, input shapes, and DSI serving.
+
+Every assigned architecture gets one module in ``repro/configs/<id>.py``
+exporting ``CONFIG: ModelConfig``. The registry in ``__init__`` resolves
+``--arch <id>`` strings. All fields are plain data so configs hash/compare
+cleanly and can be serialized into experiment logs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0          # routed experts
+    num_shared_experts: int = 0   # dense experts applied to every token
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01  # load-balance aux loss weight
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128              # SSD chunk length
+    n_groups: int = 1
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    source: str                   # citation from the assignment table
+    num_layers: int
+    d_model: int
+    vocab_size: int
+    # attention (0 heads => attention-free)
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    # mlp
+    d_ff: int = 0
+    mlp_act: str = "swiglu"       # swiglu | relu2 | gelu
+    # variants
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    causal: bool = True           # False => encoder (bidirectional, no decode)
+    cross_attn_every: int = 0     # >0 => VLM: cross-attn layer every Nth layer
+    num_image_tokens: int = 0     # VLM stub frontend output length
+    d_frontend: int = 0           # VLM/audio stub frontend embedding width
+    rope_theta: float = 500_000.0
+    norm_eps: float = 1e-5
+    # sliding-window attention (None => full attention). ``global_layers``
+    # lists layer indices that stay full-attention even in window mode
+    # (Hymba-style hybrid global/local pattern).
+    window: Optional[int] = None
+    global_layers: Tuple[int, ...] = ()
+    # runtime
+    dtype: str = "bfloat16"
+    # True when the arch supports long_500k decode natively or via window
+    subquadratic_long: bool = True
+
+    # ---- derived ----
+    @property
+    def attn(self) -> bool:
+        return self.num_heads > 0
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 so the embedding shards cleanly."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def ssm_d_inner(self) -> int:
+        assert self.ssm is not None
+        return self.ssm.expand * self.d_model
+
+    @property
+    def ssm_n_heads(self) -> int:
+        assert self.ssm is not None
+        return self.ssm_d_inner // self.ssm.head_dim
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks + head)."""
+        d = self.d_model
+        n = 2 * self.padded_vocab * d  # embed + unembed
+        per_layer = 2 * d  # norms
+        if self.attn:
+            per_layer += d * (self.q_dim + 2 * self.kv_dim) + self.q_dim * d
+        if self.ssm is not None:
+            di, cfg = self.ssm_d_inner, self.ssm
+            bc = 2 * cfg.n_groups * cfg.d_state
+            per_layer += d * (2 * di + bc + self.ssm_n_heads)  # in_proj
+            per_layer += di * d  # out_proj
+            per_layer += (di + bc) * cfg.conv_width + 3 * self.ssm_n_heads
+        if self.moe is not None:
+            e = self.moe.num_experts + self.moe.num_shared_experts
+            per_layer += 3 * e * d * self.d_ff + d * self.moe.num_experts
+        elif self.d_ff:
+            mats = 3 if self.mlp_act == "swiglu" else 2
+            per_layer += mats * d * self.d_ff
+        n += self.num_layers * per_layer
+        if self.cross_attn_every:
+            n_cross = self.num_layers // self.cross_attn_every
+            n += n_cross * (d * (self.q_dim + 2 * self.kv_dim) + self.q_dim * d + 2 * d)
+            n += self.d_frontend * d  # projector
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k + shared experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        e_total = self.moe.num_experts + self.moe.num_shared_experts
+        e_active = self.moe.top_k + self.moe.num_shared_experts
+        expert_params = 3 * e_total * self.d_model * self.d_ff * self.num_layers
+        active_expert = 3 * e_active * self.d_model * self.d_ff * self.num_layers
+        return full - expert_params + active_expert
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+@dataclass(frozen=True)
+class DSIConfig:
+    """Paper hyperparameters for the DSI engine / simulator."""
+    lookahead: int = 5
+    sp_degree: int = 0            # 0 => derive minimal SP from Eq. 1
+    acceptance: str = "leviathan"  # leviathan | exact
+    max_new_tokens: int = 50       # paper's Table 2 generates 50 tokens
+    drafter_latency: float = 0.05  # fraction of target latency (sim only)
+
+
+def reduced(cfg: ModelConfig, *, layers: int = 2, d_model: int = 256,
+            max_experts: int = 4) -> ModelConfig:
+    """Smoke-test variant of the same family: 2 layers, d_model<=512, <=4 experts."""
+    d_model = min(d_model, 512)
+    if cfg.attn:
+        head_dim = 64
+        heads = max(2, d_model // head_dim)
+        kv = max(1, min(cfg.num_kv_heads, heads))
+        while heads % kv:
+            kv -= 1
+    else:
+        head_dim = heads = kv = 0
+    updates = dict(
+        num_layers=layers, d_model=d_model,
+        num_heads=heads, num_kv_heads=kv, head_dim=head_dim,
+        vocab_size=min(cfg.vocab_size, 1024),
+        d_ff=min(cfg.d_ff, 4 * d_model) if cfg.d_ff else 0,
+        num_image_tokens=min(cfg.num_image_tokens, 16),
+        d_frontend=min(cfg.d_frontend, 128),
+        window=min(cfg.window, 64) if cfg.window else None,
+        global_layers=tuple(i for i in cfg.global_layers if i < layers),
+        cross_attn_every=min(cfg.cross_attn_every, layers) if cfg.cross_attn_every else 0,
+    )
+    if cfg.moe is not None:
+        updates["moe"] = dataclasses.replace(
+            cfg.moe,
+            num_experts=min(cfg.moe.num_experts, max_experts),
+            num_shared_experts=min(cfg.moe.num_shared_experts, 1),
+            top_k=min(cfg.moe.top_k, 2),
+        )
+        updates["d_ff"] = min(cfg.d_ff, d_model)
+    if cfg.ssm is not None:
+        updates["ssm"] = dataclasses.replace(cfg.ssm, d_state=16, chunk=32)
+    return dataclasses.replace(cfg, **updates)
+
+
+def drafter_of(cfg: ModelConfig, *, frac: int = 4) -> ModelConfig:
+    """A same-family reduced-depth/width drafter for DSI serving."""
+    d_model = max(256, cfg.d_model // frac)
+    d_model -= d_model % 128
+    if cfg.attn:
+        head_dim = cfg.head_dim
+        heads = max(1, d_model // head_dim)
+        kv = max(1, min(cfg.num_kv_heads, heads))
+        while heads % kv:
+            kv -= 1
+    else:
+        head_dim = heads = kv = 0
+    updates = dict(
+        name=cfg.name + "-drafter",
+        num_layers=max(2, cfg.num_layers // frac),
+        d_model=d_model, num_heads=heads, num_kv_heads=kv, head_dim=head_dim,
+        d_ff=(cfg.d_ff // frac) if cfg.d_ff else 0,
+    )
+    if cfg.moe is not None:  # drafters are dense members of the family
+        updates["moe"] = None
+        updates["d_ff"] = 4 * d_model
+    return dataclasses.replace(cfg, **updates)

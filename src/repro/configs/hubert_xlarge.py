@@ -1,0 +1,26 @@
+"""hubert-xlarge — audio encoder backbone [arXiv:2106.07447].
+
+Encoder-only (bidirectional, no decode shapes). The mel/conv feature
+frontend is a stub per the assignment carve-out: ``input_specs()`` supplies
+precomputed frame embeddings of width ``d_frontend``; a linear projector
+maps them to ``d_model``. Training objective = HuBERT masked cluster
+prediction over the 504-unit vocabulary.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    source="arXiv:2106.07447",
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab_size=504,
+    mlp_act="gelu",
+    causal=False,
+    d_frontend=512,
+    subquadratic_long=False,  # encoder-only: no decode at all
+)

@@ -1,0 +1,26 @@
+"""hymba-1.5b — hybrid parallel attn+mamba heads [arXiv:2411.13676].
+
+Hymba runs attention heads and SSM heads *in parallel within every block*,
+normalizes each branch, and averages. Most layers use sliding-window
+attention; three layers (first/middle/last) stay global — reproduced via
+``window`` + ``global_layers``.
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    source="arXiv:2411.13676",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    mlp_act="swiglu",
+    ssm=SSMConfig(d_state=16, head_dim=64, expand=2),
+    window=1024,
+    global_layers=(0, 15, 31),
+    rope_theta=10_000.0,
+)

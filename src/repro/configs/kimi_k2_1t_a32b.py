@@ -1,0 +1,23 @@
+"""kimi-k2-1t-a32b — trillion-param MoE, 384 routed experts top-8 + 1 shared
+[arXiv:2501.kimi2, paper table].
+
+Assignment table specifies the attention as GQA 64H kv=8 (the production
+model's MLA is approximated as GQA per the table). d_ff=2048 is the
+per-expert hidden width.
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    source="arXiv:2501.kimi2",
+    num_layers=61,
+    d_model=7168,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=2048,
+    vocab_size=163840,
+    mlp_act="swiglu",
+    moe=MoEConfig(num_experts=384, num_shared_experts=1, top_k=8),
+)

@@ -1,0 +1,25 @@
+"""llama-3.2-vision-11b — text decoder with cross-attn image layers
+[hf:meta-llama/Llama-3.2-11B-Vision].
+
+Vision encoder (ViT) is a stub per the assignment carve-out:
+``input_specs()`` supplies patch embeddings of width ``d_frontend``; the
+model owns the projector and the cross-attention layers (every 5th layer).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    mlp_act="swiglu",
+    cross_attn_every=5,
+    num_image_tokens=1600,
+    d_frontend=7680,
+)

@@ -1,0 +1,16 @@
+"""minitron-4b — width-pruned Nemotron-4 (squared-ReLU MLP) [arXiv:2407.14679]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-4b",
+    family="dense",
+    source="arXiv:2407.14679",
+    num_layers=32,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=9216,
+    vocab_size=256000,
+    mlp_act="relu2",
+)

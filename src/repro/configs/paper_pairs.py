@@ -1,0 +1,55 @@
+"""The paper's Table-2 (target, drafter, dataset) latency/acceptance
+profiles as first-class configs — the simulator analog of ``--arch``
+(these are measured profiles of HF checkpoints, not weights)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class PairProfile:
+    name: str
+    target: str
+    drafter: str
+    dataset: str
+    target_latency_ms: float     # TPOT, paper Table 2
+    drafter_latency_ms: float
+    acceptance: float
+    ttft_ratio_target: float     # TTFT/TPOT, paper Table 3
+    ttft_ratio_drafter: float
+    paper_speedup: float         # DSI vs SI, paper Table 2
+
+    @property
+    def drafter_fraction(self) -> float:
+        return self.drafter_latency_ms / self.target_latency_ms
+
+
+PAPER_PAIRS: Dict[str, PairProfile] = {p.name: p for p in [
+    PairProfile("starcoder-humaneval", "Starcoder-15B", "Starcoder-168M",
+                "HumanEval", 20.6, 6.8, 0.93, 1.35, 1.19, 1.92),
+    PairProfile("starcoder-mbpp", "Starcoder-15B", "Starcoder-168M",
+                "MBPP", 21.0, 6.8, 0.90, 1.54, 1.20, 1.66),
+    PairProfile("phi3-alpaca", "Phi3-14B", "Phi3-4B",
+                "Alpaca", 49.6, 33.4, 0.87, 1.15, 1.05, 1.60),
+    PairProfile("phi3-humaneval", "Phi3-14B", "Phi3-4B",
+                "HumanEval", 52.1, 34.0, 0.95, 1.29, 1.23, 1.41),
+    PairProfile("phi3-cnndm", "Phi3-14B", "Phi3-4B",
+                "CNN-DM", 52.4, 34.6, 0.93, 4.77, 3.88, 1.39),
+    PairProfile("phi3-mbpp", "Phi3-14B", "Phi3-4B",
+                "MBPP", 52.2, 34.3, 0.94, 1.43, 1.27, 1.37),
+    PairProfile("vicuna13b-cnndm", "Vicuna-13B", "Vicuna-68M",
+                "CNN-DM", 37.7, 2.5, 0.63, 5.36, 1.04, 1.47),
+    PairProfile("vicuna13b-alpaca", "Vicuna-13B", "Vicuna-68M",
+                "Alpaca", 33.3, 2.5, 0.58, 1.15, 1.05, 1.41),
+    PairProfile("vicuna7b-cnndm", "Vicuna-7B", "Vicuna-68M",
+                "CNN-DM", 29.4, 2.5, 0.67, 4.53, 1.06, 1.29),
+    PairProfile("vicuna7b-alpaca", "Vicuna-7B", "Vicuna-68M",
+                "Alpaca", 26.0, 2.5, 0.59, 1.19, 1.06, 1.70),
+]}
+
+
+def get_pair(name: str) -> PairProfile:
+    if name not in PAPER_PAIRS:
+        raise KeyError(f"unknown pair {name!r}; known: {sorted(PAPER_PAIRS)}")
+    return PAPER_PAIRS[name]

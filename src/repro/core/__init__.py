@@ -1,0 +1,22 @@
+"""DSI core: the paper's contribution.
+
+  planner     — Eq. 1 lookahead/SP-degree resource planning
+  analytic    — closed-form expected latencies (Prop. 1, App. F.3)
+  acceptance  — geometric acceptance-rate estimation (App. F.2)
+  si_sim      — non-SI and SI latency simulators (App. F.4)
+  dsi_sim     — event-driven Algorithm 1 simulator (pool + unbounded)
+  verify      — lossless verification rules (exact / Leviathan) in JAX
+  dsi_jax     — lockstep speculation-parallel DSI engine on real JAX models
+  si_jax      — draft-then-verify SI baseline on real JAX models
+"""
+from repro.core.planner import (  # noqa: F401
+    max_useful_sp, min_lookahead, min_sp, plan,
+)
+from repro.core.analytic import (  # noqa: F401
+    dsi_expected_latency, nonsi_latency, si_expected_latency,
+)
+from repro.core.acceptance import (  # noqa: F401
+    acceptance_rate_from_matches, expected_accepted_per_iter,
+)
+from repro.core.si_sim import simulate_nonsi, simulate_si  # noqa: F401
+from repro.core.dsi_sim import simulate_dsi_pool, simulate_dsi_unbounded  # noqa: F401

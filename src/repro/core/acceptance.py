@@ -1,0 +1,43 @@
+"""Acceptance-rate estimation via a fitted geometric distribution
+(paper App. F.2 / F.2.1).
+
+Given per-prompt longest exact-match lengths n_i between drafter and
+target generations, the expected accepted-per-iteration is
+``nbar = mean(n_i)`` and the fitted acceptance rate is
+
+    acceptance = 1 - 1 / (1 + nbar)
+
+which converges to the true i.i.d. acceptance probability as the number
+of prompts grows (App. F.2.1).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+
+def acceptance_rate_from_matches(match_lengths: Sequence[int]) -> float:
+    ns = np.asarray(list(match_lengths), dtype=np.float64)
+    assert (ns >= 0).all()
+    nbar = ns.mean() if ns.size else 0.0
+    return float(1.0 - 1.0 / (1.0 + nbar))
+
+
+def expected_accepted_per_iter(acceptance: float, lookahead: int) -> float:
+    """E[# accepted drafts per SI iteration] = sum_{i=1..L} a^i."""
+    a = min(max(acceptance, 0.0), 1.0)
+    if a >= 1.0:
+        return float(lookahead)
+    return a * (1 - a ** lookahead) / (1 - a)
+
+
+def match_length(target_tokens: Sequence[int],
+                 drafter_tokens: Sequence[int]) -> int:
+    """Longest shared prefix length (the paper's exact-match statistic)."""
+    n = 0
+    for t, d in zip(target_tokens, drafter_tokens):
+        if t != d:
+            break
+        n += 1
+    return n

@@ -1,0 +1,47 @@
+"""Closed-form expected latencies (paper Prop. 1 and App. F.3).
+
+All latencies are per-forward wall times; TTFT handled by callers via the
+``ttft_*`` extras (the paper separates TTFT/TPOT the same way).
+"""
+from __future__ import annotations
+
+
+def nonsi_latency(target_latency: float, n_tokens: int, *,
+                  ttft: float = 0.0) -> float:
+    """Autoregressive baseline: one target forward per token."""
+    extra = max(ttft - target_latency, 0.0)
+    return extra + n_tokens * target_latency
+
+
+def si_expected_latency(target_latency: float, drafter_latency: float,
+                        acceptance: float, lookahead: int, n_tokens: int
+                        ) -> float:
+    """App. F.3: each SI iteration costs L·t_d + t_t and yields
+    E[min(Geom(a), L)] + 1 tokens."""
+    a = min(max(acceptance, 0.0), 1.0)
+    if a >= 1.0:
+        exp_acc = float(lookahead)
+    else:
+        # E[# accepted among L i.i.d. Bernoulli-prefix] = sum_{i=1..L} a^i
+        exp_acc = a * (1 - a ** lookahead) / (1 - a)
+    tokens_per_iter = exp_acc + 1.0
+    iters = n_tokens / tokens_per_iter
+    return iters * (lookahead * drafter_latency + target_latency)
+
+
+def dsi_expected_latency(target_latency: float, drafter_latency: float,
+                         acceptance: float, n_tokens: int, *,
+                         lookahead: int = 1) -> float:
+    """Prop. 1 upper bound (lookahead=1 form), extended to lookahead>1:
+
+      E[T] <= t_d·p·(N-1) + t_t·((1-p)(N-1) + 1)
+
+    Accepted positions cost one drafter forward of latency; each rejection
+    surfaces one (non-hidden) target forward. The final token always pays
+    one target verification. For lookahead>1 rejection detection is
+    delayed to block boundaries; the bound still holds because the paper
+    accounts a full t_t per rejection.
+    """
+    p = min(max(acceptance, 0.0), 1.0)
+    n = n_tokens
+    return drafter_latency * p * (n - 1) + target_latency * ((1 - p) * (n - 1) + 1)

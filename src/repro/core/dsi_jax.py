@@ -1,0 +1,265 @@
+"""Lockstep speculation-parallel DSI on real JAX models (TPU-native DSI).
+
+The paper's asynchronous thread tree is re-expressed for SPMD hardware as a
+software-pipelined macro-step (DESIGN.md §3). Every macro-step runs two
+data-independent halves that XLA can schedule concurrently (the drafter
+submesh ∥ the spec-sharded target verification — the target's chunk
+forward is context-parallel over the ``spec`` mesh axis, one block per
+paper "target server"):
+
+  step s:   verify window w_s (target, W positions)   ∥   draft W more
+            tokens (drafter, speculative continuation of w_s)
+
+Pipeline invariants at step start (B = 1 stream):
+  * ``window`` — W tokens at positions [tp, tp+W) where tp = target cache
+    pos; ``forced`` of its leading tokens are already confirmed (a
+    correction token re-entering the pipeline).
+  * ``carry``  — the target's distribution for position tp (from the
+    previous verification's last row, or the prefill logits).
+  * ``prefetch`` — the draft for position tp+W (drafted last step).
+  * drafter cache sits at position tp+W (it produced the window + prefetch).
+
+Outcomes:
+  * full accept — window += drafts; no target latency surfaced (paper §3.1:
+    verification is hidden).
+  * rejection at offset j — commit j tokens + the correction token c*; the
+    speculative drafts are dead and the next step is a pipeline *bubble*
+    (draft-only), exactly the paper's restart cost. Drafter recurrent state
+    rolls back via the per-position state history collected during
+    drafting; attention caches are overwrite-safe and need no rollback.
+
+Losslessness: ``rule="exact"`` ⇒ output equals the target's greedy
+decoding token-for-token; ``rule="leviathan"`` ⇒ output follows the target
+distribution (core/verify.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.verify import batched_verify
+from repro.models.model import Model
+
+State = Dict[str, Any]
+
+
+def _softmax(logits):
+    return jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+
+def _extract_states(cache):
+    """Recurrent leaves (ssm/conv) of a cache, as a flat dict."""
+    out = {}
+    for k, v in cache.items():
+        if isinstance(v, dict):
+            for kk in ("ssm", "conv"):
+                if kk in v:
+                    out[f"{k}/{kk}"] = v[kk]
+    return out
+
+
+def _restore_states(cache, states):
+    cache = dict(cache)
+    for path, val in states.items():
+        seg, kk = path.split("/")
+        cache[seg] = dict(cache[seg])
+        cache[seg][kk] = val
+    return cache
+
+
+def draft_scan(model: Model, params, cache, t_in, n: int, key, greedy: bool):
+    """n drafter decode steps feeding their own outputs.
+
+    Returns (tokens (B,n), probs (B,n,V), cache', state_hist) where
+    state_hist holds the drafter's recurrent states *after processing the
+    input at each position* — entry i = state after position pos0+i-1 for
+    i>=1, entry 0 = state before the scan — enabling exact rollback to any
+    offset inside the drafted range.
+    """
+    init_states = _extract_states(cache)
+
+    def body(carry, k):
+        c, tok = carry
+        logits, c = model.decode_step(params, c, tok[:, None])
+        probs = _softmax(logits)
+        if greedy:
+            nxt = jnp.argmax(probs, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(k, jnp.log(probs + 1e-30), axis=-1
+                                         ).astype(jnp.int32)
+        return (c, nxt), (nxt, probs, _extract_states(c))
+
+    keys = jax.random.split(key, n)
+    (cache, _), (toks, probs, hist) = jax.lax.scan(body, (cache, t_in), keys)
+    state_hist = jax.tree.map(
+        lambda a, b: jnp.concatenate([a[None], b], axis=0), init_states, hist)
+    return jnp.moveaxis(toks, 0, 1), jnp.moveaxis(probs, 0, 1), cache, state_hist
+
+
+@dataclass
+class EngineStats:
+    macro_steps: int = 0
+    bubbles: int = 0
+    accepted_drafts: int = 0
+    rejections: int = 0
+    emitted: int = 0
+    history: list = field(default_factory=list)
+
+    @property
+    def acceptance_rate(self) -> float:
+        tot = self.accepted_drafts + self.rejections
+        return self.accepted_drafts / tot if tot else 0.0
+
+
+class DSIEngine:
+    """Target + drafter pair generating with speculation parallelism."""
+
+    def __init__(self, target: Model, drafter: Model, *, lookahead: int = 8,
+                 rule: str = "exact"):
+        assert rule in ("exact", "leviathan")
+        self.target, self.drafter = target, drafter
+        self.w = lookahead
+        self.rule = rule
+        self._jit_step = jax.jit(self._macro_step)
+
+    # ---------------------------------------------------------- macro-step
+    def _macro_step(self, params_t, params_d, state: State) -> State:
+        w = self.w
+        greedy = self.rule == "exact"
+        key, k_draft, k_verify = jax.random.split(state["key"], 3)
+
+        # (a) drafter: W speculative continuation steps
+        d_toks, d_probs, d_cache, d_hist = draft_scan(
+            self.drafter, params_d, state["d_cache"], state["prefetch"], w,
+            k_draft, greedy)
+
+        # (b) target: verify the current window (discarded when bubble)
+        logits, t_post = self.target.verify_chunk(params_t, state["t_cache"],
+                                                  state["window"])
+        rows = _softmax(logits)                                   # (B,W,V)
+        target_probs = jnp.concatenate([state["carry"][:, None], rows], 1)
+        n_acc, nxt = batched_verify(k_verify, state["window"],
+                                    state["window_probs"], target_probs,
+                                    n_forced=state["forced"], rule=self.rule)
+        have = state["have_window"]
+        n_acc = jnp.where(have, n_acc, 0)
+        full = have & (n_acc == w)
+        rejected = have & (n_acc < w)
+
+        t_cache = self.target.commit(state["t_cache"], t_post, n_acc[0])
+
+        # (c) emit accepted non-forced window tokens (+ correction if rejected)
+        buf, n_out = state["out"], state["n_out"]
+        pos_idx = jnp.arange(buf.shape[1])[None]
+        for i in range(w):
+            put = have & (i >= state["forced"]) & (i < n_acc)
+            tgt_slot = n_out + i - state["forced"]
+            buf = jnp.where(put[:, None] & (pos_idx == tgt_slot[:, None]),
+                            state["window"][:, i:i + 1], buf)
+        n_emit = jnp.where(have, n_acc - state["forced"], 0)
+        n_out = n_out + n_emit
+        buf = jnp.where(rejected[:, None] & (pos_idx == n_out[:, None]),
+                        nxt[:, None], buf)
+        n_out = n_out + rejected.astype(jnp.int32)
+
+        # (d) drafter bookkeeping
+        # on rejection: roll recurrent state to offset n_acc of the *window*
+        # range — the PREVIOUS scan's history covers positions tp-1..tp+W-1.
+        rolled = jax.tree.map(
+            lambda h: jax.lax.dynamic_index_in_dim(h, n_acc[0], 0, False),
+            state["d_hist_prev"])
+        d_cache_rej = _restore_states(d_cache, rolled)
+        d_cache = jax.tree.map(
+            lambda a, b: jnp.where(rejected[0], a, b), d_cache_rej, d_cache)
+        d_cache["pos"] = jnp.where(rejected[0], t_cache["pos"],
+                                   state["d_cache_pos0"] + w)
+
+        # (e) assemble next pipeline state
+        onehot_nxt = jax.nn.one_hot(nxt, rows.shape[-1], dtype=jnp.float32)
+        window_next = jnp.concatenate(
+            [state["prefetch"][:, None], d_toks[:, :w - 1]], axis=1)
+        wprobs_next = jnp.concatenate(
+            [state["prefetch_prob"][:, None], d_probs[:, :w - 1]], axis=1)
+        prefetch_next = jnp.where(rejected, nxt, d_toks[:, w - 1])
+        pprob_next = jnp.where(rejected[:, None], onehot_nxt,
+                               d_probs[:, w - 1])
+        # bubble after a rejection; otherwise the assembled window is live
+        have_next = ~rejected
+        forced_next = jnp.where(rejected, 1, jnp.zeros_like(state["forced"]))
+        forced_next = jnp.where(have, forced_next, state["forced"])
+        carry_next = jnp.where(full[:, None], rows[:, w - 1], state["carry"])
+
+        return {
+            "key": key, "window": window_next, "window_probs": wprobs_next,
+            "have_window": have_next, "forced": forced_next,
+            "carry": carry_next, "prefetch": prefetch_next,
+            "prefetch_prob": pprob_next, "t_cache": t_cache,
+            "d_cache": d_cache, "d_cache_pos0": d_cache["pos"],
+            "d_hist_prev": d_hist, "out": buf, "n_out": n_out,
+            "n_acc": n_acc, "rejected": rejected,
+        }
+
+    # ------------------------------------------------------------ generate
+    def generate(self, params_t, params_d, prompt: jnp.ndarray, n_new: int,
+                 key: Optional[jax.Array] = None, max_len: Optional[int] = None,
+                 extra_inputs: Optional[Dict[str, jnp.ndarray]] = None
+                 ) -> Tuple[jnp.ndarray, EngineStats]:
+        assert prompt.shape[0] == 1, "DSI engine is a single-stream latency path"
+        b, s = prompt.shape
+        w = self.w
+        key = key if key is not None else jax.random.PRNGKey(0)
+        max_len = max_len or (s + n_new + 2 * w + 2)
+        cap = n_new + w + 1
+
+        batch = {"tokens": prompt, **(extra_inputs or {})}
+        t_logits, t_cache = self.target.prefill(params_t, batch,
+                                                max_len=max_len,
+                                                window_headroom=w)
+        d_logits, d_cache = self.drafter.prefill(params_d, batch,
+                                                 max_len=max_len,
+                                                 window_headroom=w)
+        d_prob0 = _softmax(d_logits)
+        if self.rule == "exact":
+            prefetch = jnp.argmax(d_prob0, -1).astype(jnp.int32)
+        else:
+            key, k0 = jax.random.split(key)
+            prefetch = jax.random.categorical(
+                k0, jnp.log(d_prob0 + 1e-30), axis=-1).astype(jnp.int32)
+
+        zero_states = _extract_states(d_cache)
+        hist0 = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (w + 1,) + a.shape), zero_states)
+        state: State = {
+            "key": key,
+            "window": jnp.zeros((b, w), jnp.int32),
+            "window_probs": jnp.zeros((b, w, self.target.cfg.padded_vocab),
+                                      jnp.float32),
+            "have_window": jnp.zeros((b,), bool),
+            "forced": jnp.zeros((b,), jnp.int32),
+            "carry": _softmax(t_logits),
+            "prefetch": prefetch, "prefetch_prob": d_prob0,
+            "t_cache": t_cache, "d_cache": d_cache,
+            "d_cache_pos0": d_cache["pos"],
+            "d_hist_prev": hist0,
+            "out": jnp.zeros((b, cap), jnp.int32),
+            "n_out": jnp.zeros((b,), jnp.int32),
+            "n_acc": jnp.zeros((b,), jnp.int32),
+            "rejected": jnp.zeros((b,), bool),
+        }
+
+        stats = EngineStats()
+        while int(state["n_out"][0]) < n_new:
+            state = self._jit_step(params_t, params_d, state)
+            stats.macro_steps += 1
+            n_acc = int(state["n_acc"][0])
+            rej = bool(state["rejected"][0])
+            if rej:
+                stats.rejections += 1
+                stats.bubbles += 1  # the following step is draft-only
+            stats.accepted_drafts += n_acc
+            stats.history.append((n_acc, rej, int(state["n_out"][0])))
+        stats.emitted = int(state["n_out"][0])
+        return state["out"][:, :n_new], stats

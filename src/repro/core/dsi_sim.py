@@ -1,0 +1,149 @@
+"""Event-driven simulators for DSI (Algorithm 1).
+
+Two faithful realizations:
+
+``simulate_dsi_unbounded`` — Algorithm 1 verbatim (lookahead=1, m models,
+unbounded processors). With exact-match acceptance the surviving thread at
+every position is the minimal-index drafter that matched (line 9), so the
+realized wall time collapses to  t_m + sum_{i<N} t_{j*_i}  (Assumption 3 /
+Theorem-1 proof structure) — which this simulator samples directly.
+
+``simulate_dsi_pool`` — the practical thread-pool deployment (App. D):
+one drafter server + an SP-sized target-server pool, lookahead-sized
+verification tasks. Drafting never blocks on verification; a rejection
+(detected when the verification task containing it completes) cancels all
+draft/verify work beyond the corrected position and restarts drafting from
+there. Tasks wait for a free target server if Eq. 1 is violated — the
+simulator models the contention the paper's planner is designed to avoid.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.si_sim import SimResult
+
+
+def simulate_dsi_unbounded(latencies: Sequence[float],
+                           acceptances: Sequence[float],
+                           n_tokens: int, *, seed: int = 0) -> SimResult:
+    """latencies[j] = forward latency of model j (target last);
+    acceptances[j] = P(drafter j's token == target token), len m-1."""
+    lat = list(latencies)
+    acc = list(acceptances)
+    assert len(lat) == len(acc) + 1 and n_tokens >= 1
+    assert all(l <= lat[-1] + 1e-12 for l in lat), "drafters must be faster"
+    rng = np.random.default_rng(seed)
+    t_m = lat[-1]
+    total = t_m  # final position is always produced by the verifier
+    n_fwd_by_model = [0] * len(lat)
+    n_fwd_by_model[-1] += 1
+    timeline = []
+    for _ in range(n_tokens - 1):
+        j_star = len(lat) - 1
+        for j, p in enumerate(acc):
+            if rng.random() < p:
+                j_star = j
+                break
+        total += lat[j_star]
+        n_fwd_by_model[j_star] += 1
+        timeline.append((total, len(timeline) + 1))
+    timeline.append((total, n_tokens))
+    return SimResult(latency=total, n_tokens=n_tokens,
+                     n_target_forwards=n_fwd_by_model[-1],
+                     n_drafter_forwards=sum(n_fwd_by_model[:-1]),
+                     timeline=timeline)
+
+
+def simulate_dsi_pool(target_latency: float, drafter_latency: float,
+                      acceptance: float, lookahead: int, sp: int,
+                      n_tokens: int, *, seed: int = 0,
+                      ttft_target: Optional[float] = None,
+                      ttft_drafter: Optional[float] = None) -> SimResult:
+    """Returns end-to-end latency for N tokens under speculation parallelism.
+
+    Task structure (Algorithm 1 + App. D, m = 2): within a run starting at
+    the confirmed frontier, TWO confirmation sources race per position —
+    Algorithm 1 line 6 spawns a target thread at every token event:
+
+      direct chain  — C_{…⊕(m)} threads along the confirmed path: position
+                      i confirms at confirm(i-1) + t_target (this is the
+                      non-SI fallback that makes Theorem 1 hold);
+      block tasks   — batched verification forwards launched every
+                      ``lookahead`` drafts: task b (over prefix + b·L
+                      drafts) completes at b·L·t_draft + t_target and
+                      marginally confirms draft offsets (b-1)·L+2 … b·L+1.
+
+      confirm(i) = min(confirm(i-1) + t_tgt, block_time(i))
+
+    The first wrong draft at offset j is corrected by whichever source
+    reaches it first (both produce the true token there), so a rejection
+    surfaces at most ONE target latency — Prop. 1 is tight at L = 1 and
+    p = 0 degrades exactly to non-SI pace. The simulator assumes SP sized
+    per Eq. 1 (+1 server for the fallback chain); pass a smaller ``sp``
+    and block tasks queue on the shared pool.
+    """
+    assert sp >= 1 and lookahead >= 1
+    rng = np.random.default_rng(seed)
+    servers: List[float] = [0.0] * sp      # free-at times (min-heap)
+    heapq.heapify(servers)
+
+    frontier = 0                           # confirmed tokens
+    t = 0.0                                # current run start time
+    n_t = n_d = 0
+    first_draft = True
+    first_verify = True
+    timeline = []
+
+    while frontier < n_tokens:
+        # --- one run: first wrong draft offset j ~ Geometric -------------
+        needed = n_tokens - frontier
+        j = 1
+        while j <= needed and rng.random() < acceptance:
+            j += 1
+        rejected = j <= needed             # draft j is wrong
+        last = j if rejected else needed   # final confirmed offset this run
+
+        run_start = t
+        d_extra = max((ttft_drafter or drafter_latency) - drafter_latency,
+                      0.0) if first_draft else 0.0
+        first_draft = False
+
+        t_lat0 = max(ttft_target or target_latency, target_latency) \
+            if first_verify else target_latency
+        first_verify = False
+
+        # block task completion times (launch every L drafts, shared pool)
+        n_blocks = (last - 1 + lookahead - 1) // lookahead  # ceil((last-1)/L)
+        block_done = {}
+        for b in range(1, n_blocks + 1):
+            k = min(b * lookahead, needed)
+            ready = run_start + d_extra + k * drafter_latency
+            free_at = heapq.heappop(servers)
+            done = max(ready, free_at) + (t_lat0 if b == 1 else target_latency)
+            heapq.heappush(servers, done)
+            n_t += 1
+            block_done[b] = done
+        n_d += min(n_blocks * lookahead, needed)
+
+        # race the direct chain against block confirmations per position
+        confirm = run_start
+        for i in range(1, last + 1):
+            direct = confirm + (t_lat0 if n_blocks == 0 and i == 1
+                                else target_latency)
+            n_t += 1
+            b_i = (i - 1 + lookahead - 1) // lookahead  # ceil((i-1)/L)
+            blk = block_done.get(b_i, np.inf) if b_i >= 1 else np.inf
+            confirm = min(direct, blk)
+            timeline.append((confirm, min(frontier + i, n_tokens)))
+
+        frontier += last
+        # cancelled tasks free their servers at run end
+        servers = [min(s_, confirm) for s_ in servers]
+        heapq.heapify(servers)
+        t = confirm
+
+    return SimResult(latency=t, n_tokens=n_tokens, n_target_forwards=n_t,
+                     n_drafter_forwards=n_d, timeline=timeline)

@@ -1,0 +1,63 @@
+"""Eq. 1 resource planning: lookahead ↔ SP degree ↔ processor budget.
+
+Paper Eq. (1):  ceil(t_target / (lookahead · t_drafter)) <= SP
+guarantees a verification task never waits for a free target server.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+def min_lookahead(target_latency: float, drafter_latency: float,
+                  sp: int) -> int:
+    """Smallest lookahead satisfying Eq. 1 for a given SP degree.
+
+    Minimal feasible lookahead is optimal (earliest rejection detection).
+    """
+    assert sp >= 1 and target_latency > 0 and drafter_latency > 0
+    # ceil(t / (L·d)) <= SP  <=>  t/(L·d) <= SP  <=>  L >= t/(SP·d)
+    return max(1, math.ceil(target_latency / (sp * drafter_latency)))
+
+
+def min_sp(target_latency: float, drafter_latency: float,
+           lookahead: int) -> int:
+    """Smallest SP degree satisfying Eq. 1 for a given lookahead."""
+    assert lookahead >= 1
+    return max(1, math.ceil(target_latency / (lookahead * drafter_latency)))
+
+
+def max_useful_sp(target_latency: float, drafter_latency: float) -> int:
+    """SP = ceil(t_target/t_drafter) reaches the maximum expected speedup;
+    larger SP cannot help (paper §3.1)."""
+    return max(1, math.ceil(target_latency / drafter_latency))
+
+
+@dataclass(frozen=True)
+class Plan:
+    sp: int
+    lookahead: int
+    n_target_servers: int
+    n_drafter_servers: int
+
+    @property
+    def total_servers(self) -> int:
+        return self.n_target_servers + self.n_drafter_servers
+
+
+def plan(target_latency: float, drafter_latency: float, *,
+         n_processors: int, mp_target: int = 1, mp_drafter: int = 1) -> Plan:
+    """Allocate ``n_processors`` (>= mp_target + mp_drafter) into one drafter
+    server plus a target pool, then pick the minimal feasible lookahead.
+
+    ``mp_*`` = processors each server instance needs (model parallelism).
+    """
+    budget = n_processors - mp_drafter
+    sp = budget // mp_target
+    if sp < 1:
+        raise ValueError(
+            f"need >= {mp_target + mp_drafter} processors, got {n_processors}")
+    sp = min(sp, max_useful_sp(target_latency, drafter_latency))
+    la = min_lookahead(target_latency, drafter_latency, sp)
+    return Plan(sp=sp, lookahead=la, n_target_servers=sp,
+                n_drafter_servers=1)

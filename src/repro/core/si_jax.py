@@ -1,0 +1,161 @@
+"""Baselines on real JAX models: classic blocking SI (draft-then-verify,
+Leviathan et al. 2023) and plain autoregressive decoding (non-SI).
+
+SI shares DSI's verification/commit machinery but is *sequential*: each
+iteration drafts ``lookahead`` tokens (blocking), verifies them with one
+target chunk forward (blocking), and only then drafts again — the paper's
+Figure-1 "SI" lane. The first window token each iteration is the previous
+iteration's bonus/correction token (forced-accepted).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dsi_jax import EngineStats, _softmax, draft_scan
+from repro.core.verify import batched_verify
+from repro.models.model import Model
+
+
+class SIEngine:
+    def __init__(self, target: Model, drafter: Model, *, lookahead: int = 8,
+                 rule: str = "exact"):
+        self.target, self.drafter = target, drafter
+        self.w = lookahead
+        self.rule = rule
+        self._jit_step = jax.jit(self._iteration)
+
+    def _iteration(self, params_t, params_d, state):
+        w = self.w
+        greedy = self.rule == "exact"
+        key, k_draft, k_verify = jax.random.split(state["key"], 3)
+
+        # draft (blocking): continue from the pending confirmed token.
+        # w steps (not w-1) so the drafter's recurrent state / kv covers the
+        # full window for next iteration's restart; the extra draft is unused.
+        d_toks, d_probs, d_cache, d_hist = draft_scan(
+            self.drafter, params_d, state["d_cache"], state["pending"],
+            w, k_draft, greedy)
+        window = jnp.concatenate(
+            [state["pending"][:, None], d_toks[:, :w - 1]], axis=1)
+        v = d_probs.shape[-1]
+        wprobs = jnp.concatenate(
+            [jax.nn.one_hot(state["pending"], v, dtype=jnp.float32)[:, None],
+             d_probs[:, :w - 1]], axis=1)
+
+        # verify (blocking)
+        logits, t_post = self.target.verify_chunk(params_t, state["t_cache"],
+                                                  window)
+        rows = _softmax(logits)
+        target_probs = jnp.concatenate([state["carry"][:, None], rows], 1)
+        n_acc, nxt = batched_verify(
+            k_verify, window, wprobs, target_probs,
+            n_forced=jnp.ones((window.shape[0],), jnp.int32), rule=self.rule)
+        t_cache = self.target.commit(state["t_cache"], t_post, n_acc[0])
+
+        # emit accepted drafts (excluding forced pending) + bonus/correction
+        buf, n_out = state["out"], state["n_out"]
+        pos_idx = jnp.arange(buf.shape[1])[None]
+        for i in range(1, w):
+            put = (i < n_acc)
+            slot = n_out + i - 1
+            buf = jnp.where(put[:, None] & (pos_idx == slot[:, None]),
+                            window[:, i:i + 1], buf)
+        n_out = n_out + n_acc - 1
+        buf = jnp.where(pos_idx == n_out[:, None], nxt[:, None], buf)
+        n_out = n_out + 1
+
+        carry = jnp.take_along_axis(
+            target_probs, n_acc[:, None, None].repeat(v, -1), axis=1)[:, 0]
+        # drafter restarts from the committed frontier every iteration:
+        # roll recurrent state back to the accepted offset
+        from repro.core.dsi_jax import _restore_states
+        rolled = jax.tree.map(
+            lambda h: jax.lax.dynamic_index_in_dim(h, n_acc[0], 0, False),
+            d_hist)
+        d_cache = _restore_states(d_cache, rolled)
+        d_cache["pos"] = t_cache["pos"]
+        return {
+            "key": key, "pending": nxt, "carry": carry,
+            "t_cache": t_cache, "d_cache": d_cache,
+            "out": buf, "n_out": n_out, "n_acc": n_acc,
+        }
+
+    def generate(self, params_t, params_d, prompt: jnp.ndarray, n_new: int,
+                 key: Optional[jax.Array] = None,
+                 max_len: Optional[int] = None,
+                 extra_inputs: Optional[dict] = None
+                 ) -> Tuple[jnp.ndarray, EngineStats]:
+        b, s = prompt.shape
+        key = key if key is not None else jax.random.PRNGKey(0)
+        max_len = max_len or (s + n_new + 2 * self.w + 2)
+        cap = n_new + self.w + 1
+        batch = {"tokens": prompt, **(extra_inputs or {})}
+        t_logits, t_cache = self.target.prefill(params_t, batch,
+                                                max_len=max_len,
+                                                window_headroom=self.w)
+        _, d_cache = self.drafter.prefill(params_d, batch, max_len=max_len,
+                                          window_headroom=self.w)
+        carry = _softmax(t_logits)
+        if self.rule == "exact":
+            pending = jnp.argmax(carry, -1).astype(jnp.int32)
+        else:
+            key, k0 = jax.random.split(key)
+            pending = jax.random.categorical(
+                k0, jnp.log(carry + 1e-30), -1).astype(jnp.int32)
+        # the first token is target-sampled => already confirmed, emit it
+        out = jnp.zeros((b, cap), jnp.int32)
+        out = out.at[:, 0].set(pending[:])
+        state = {"key": key, "pending": pending, "carry": carry,
+                 "t_cache": t_cache, "d_cache": d_cache, "out": out,
+                 "n_out": jnp.ones((b,), jnp.int32),
+                 "n_acc": jnp.zeros((b,), jnp.int32)}
+        stats = EngineStats()
+        while int(state["n_out"][0]) < n_new:
+            state = self._jit_step(params_t, params_d, state)
+            stats.macro_steps += 1
+            stats.accepted_drafts += int(state["n_acc"][0]) - 1
+            stats.history.append((int(state["n_acc"][0]),
+                                  int(state["n_out"][0])))
+        stats.emitted = int(state["n_out"][0])
+        return state["out"][:, :n_new], stats
+
+
+def nonsi_generate(model: Model, params, prompt: jnp.ndarray, n_new: int, *,
+                   greedy: bool = True, key: Optional[jax.Array] = None,
+                   max_len: Optional[int] = None,
+                   extra_inputs: Optional[dict] = None) -> jnp.ndarray:
+    """Plain autoregressive decoding (the non-SI baseline)."""
+    b, s = prompt.shape
+    key = key if key is not None else jax.random.PRNGKey(0)
+    max_len = max_len or (s + n_new + 2)
+    batch = {"tokens": prompt, **(extra_inputs or {})}
+    logits, cache = model.prefill(params, batch, max_len=max_len)
+
+    @jax.jit
+    def step(params, cache, tok, k):
+        logits, cache = model.decode_step(params, cache, tok[:, None])
+        probs = _softmax(logits)
+        if greedy:
+            nxt = jnp.argmax(probs, -1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(k, jnp.log(probs + 1e-30), -1
+                                         ).astype(jnp.int32)
+        return cache, nxt
+
+    probs0 = _softmax(logits)
+    if greedy:
+        tok = jnp.argmax(probs0, -1).astype(jnp.int32)
+    else:
+        key, k0 = jax.random.split(key)
+        tok = jax.random.categorical(k0, jnp.log(probs0 + 1e-30), -1
+                                     ).astype(jnp.int32)
+    toks = [tok]
+    for _ in range(n_new - 1):
+        key, k = jax.random.split(key)
+        cache, tok = step(params, cache, tok, k)
+        toks.append(tok)
+    return jnp.stack(toks, axis=1)

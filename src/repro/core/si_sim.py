@@ -1,0 +1,65 @@
+"""Latency simulators for non-SI and SI (paper App. F.4, generalized).
+
+These are *offline* simulators in the paper's sense: total latency is the
+sum of forward latencies (no thread-management costs), with acceptance
+randomness driven by an i.i.d. Bernoulli(acceptance) process — exactly the
+model used for Fig. 2 / Fig. 7 and validated by App. F.2.1.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class SimResult:
+    latency: float
+    n_tokens: int
+    n_target_forwards: int
+    n_drafter_forwards: int
+    # timeline of (time, confirmed_token_count) checkpoints
+    timeline: List[tuple] = field(default_factory=list)
+
+
+def simulate_nonsi(target_latency: float, n_tokens: int, *,
+                   ttft: Optional[float] = None) -> SimResult:
+    t0 = max(ttft - target_latency, 0.0) if ttft else 0.0
+    timeline = [(t0 + (i + 1) * target_latency, i + 1) for i in range(n_tokens)]
+    return SimResult(latency=t0 + n_tokens * target_latency,
+                     n_tokens=n_tokens, n_target_forwards=n_tokens,
+                     n_drafter_forwards=0, timeline=timeline)
+
+
+def simulate_si(target_latency: float, drafter_latency: float,
+                acceptance: float, lookahead: int, n_tokens: int, *,
+                seed: int = 0,
+                ttft_target: Optional[float] = None,
+                ttft_drafter: Optional[float] = None) -> SimResult:
+    """Draft-then-verify loop: each iteration drafts L tokens (blocking),
+    then verifies with one target forward (blocking). Yields
+    min(prefix-accepted, L) + 1 tokens per iteration."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    toks = 0
+    n_t = n_d = 0
+    timeline = []
+    first = True
+    while toks < n_tokens:
+        d_lat = drafter_latency
+        t_lat = target_latency
+        if first:
+            d_lat = max(ttft_drafter or drafter_latency, drafter_latency)
+            t_lat = max(ttft_target or target_latency, target_latency)
+            first = False
+        t += lookahead * d_lat + t_lat
+        n_d += lookahead
+        n_t += 1
+        acc = 0
+        while acc < lookahead and rng.random() < acceptance:
+            acc += 1
+        toks += acc + 1
+        timeline.append((t, min(toks, n_tokens)))
+    return SimResult(latency=t, n_tokens=n_tokens, n_target_forwards=n_t,
+                     n_drafter_forwards=n_d, timeline=timeline)

@@ -1,0 +1,81 @@
+"""Lossless verification rules (JAX).
+
+``exact``     — naive speculation (Gante 2023-style): accept while the
+                draft equals the target's greedy token; correction = the
+                target's greedy token at the first mismatch.
+``leviathan`` — rejection sampling (Leviathan et al. 2023): accept draft
+                d_i with prob min(1, p_t(d_i)/p_d(d_i)); on first
+                rejection resample from norm(max(p_t - p_d, 0)). If all
+                accepted, sample the bonus from p_t at the next position.
+
+Both preserve the target distribution (property-tested in
+tests/test_verify.py by enumeration).
+
+Shapes: draft_tokens (K,), draft_probs (K, V), target_probs (K+1, V) —
+row i of target_probs is the target's distribution for the position of
+draft i; row K is the bonus/next-position distribution. Batched use is
+``jax.vmap`` over a leading axis.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def exact_verify(draft_tokens: jnp.ndarray, target_probs: jnp.ndarray,
+                 n_forced=0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Greedy exact-match. Returns (n_accepted, next_token).
+
+    The first ``n_forced`` window tokens are already-confirmed (e.g. a
+    correction token re-entering the pipeline) and are force-accepted.
+    """
+    k = draft_tokens.shape[0]
+    tgt = jnp.argmax(target_probs, axis=-1)                    # (K+1,)
+    match = draft_tokens == tgt[:k]
+    match = match | (jnp.arange(k) < n_forced)
+    all_prefix = jnp.cumprod(match.astype(jnp.int32))
+    n_acc = all_prefix.sum()
+    nxt = tgt[jnp.minimum(n_acc, k)]
+    return n_acc.astype(jnp.int32), nxt.astype(jnp.int32)
+
+
+def leviathan_verify(key, draft_tokens: jnp.ndarray, draft_probs: jnp.ndarray,
+                     target_probs: jnp.ndarray, n_forced=0
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Speculative rejection sampling. Returns (n_accepted, next_token)."""
+    k, v = draft_probs.shape
+    key_u, key_r = jax.random.split(key)
+    u = jax.random.uniform(key_u, (k,))
+    idx = jnp.arange(k)
+    p_t = target_probs[idx, draft_tokens]                      # (K,)
+    p_d = draft_probs[idx, draft_tokens]
+    accept = u * p_d < p_t                                     # u < p_t/p_d
+    accept = accept | (idx < n_forced)
+    all_prefix = jnp.cumprod(accept.astype(jnp.int32))
+    n_acc = all_prefix.sum().astype(jnp.int32)
+
+    # residual distribution at the first rejected position (if any)
+    j = jnp.minimum(n_acc, k - 1)
+    resid = jnp.clip(target_probs[j] - draft_probs[j], 0.0, None)
+    z = resid.sum()
+    resid = jnp.where(z > 1e-20, resid / z, target_probs[j])
+    dist = jnp.where(n_acc == k, target_probs[k], resid)       # (V,)
+    nxt = jax.random.categorical(key_r, jnp.log(dist + 1e-30))
+    return n_acc, nxt.astype(jnp.int32)
+
+
+def batched_verify(key, draft_tokens: jnp.ndarray, draft_probs: jnp.ndarray,
+                   target_probs: jnp.ndarray, n_forced=None, *,
+                   rule: str = "leviathan"
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(B,K)/(B,K,V)/(B,K+1,V) -> (n_accepted (B,), next_token (B,))."""
+    b = draft_tokens.shape[0]
+    if n_forced is None:
+        n_forced = jnp.zeros((b,), jnp.int32)
+    if rule == "exact":
+        return jax.vmap(exact_verify)(draft_tokens, target_probs, n_forced)
+    keys = jax.random.split(key, b)
+    return jax.vmap(leviathan_verify)(keys, draft_tokens, draft_probs,
+                                      target_probs, n_forced)

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (  # noqa: F401
+    SyntheticLM, TextFileSource, TokenPipeline,
+)
+from repro.data.tokenizer import ByteTokenizer  # noqa: F401

@@ -1,0 +1,29 @@
+"""Byte-level tokenizer (no external vocab files — fully offline).
+
+ids 0..255 = raw bytes; 256 = BOS, 257 = EOS, 258 = PAD. Vocabularies
+larger than 259 simply leave the rest unused (models in this repo are
+trained from scratch, so any consistent mapping works).
+"""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+BOS, EOS, PAD = 256, 257, 258
+VOCAB = 259
+
+
+class ByteTokenizer:
+    vocab_size = VOCAB
+    bos, eos, pad = BOS, EOS, PAD
+
+    def encode(self, text: str, *, add_bos: bool = True,
+               add_eos: bool = False) -> List[int]:
+        ids = list(text.encode("utf-8"))
+        if add_bos:
+            ids.insert(0, BOS)
+        if add_eos:
+            ids.append(EOS)
+        return ids
+
+    def decode(self, ids: Iterable[int]) -> str:
+        return bytes(i for i in ids if i < 256).decode("utf-8", "replace")

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for DSI's compute hot-spots, each as
+# <name>/<name>.py (pl.pallas_call + BlockSpec) + ops.py (jit'd wrapper
+# with a portable jnp fallback) + ref.py (pure-jnp oracle).
+#
+#   flash_attention — draft-window verification / prefill attention
+#   spec_verify     — fused Leviathan acceptance + residual resampling
+#   ssd_scan        — Mamba2 SSD intra-chunk compute (ssm/hybrid archs)

@@ -1,0 +1,135 @@
+"""Pallas TPU flash attention (GQA, causal/sliding-window) for DSI
+draft-window verification and prefill.
+
+TPU-native design (not a CUDA port):
+  * grid = (B, H, nq, nk); nk is the innermost, sequentially-executed
+    ("arbitrary") dim so the online-softmax running state lives in VMEM
+    scratch across k-steps — the TPU analogue of a persistent CTA.
+  * BlockSpec tiles: q (1,bq,1,D), k/v (1,bk,1,D) with bq=bk=128 and D a
+    multiple of 128 where possible — MXU-aligned matmul dims; the (bq,bk)
+    score tile and (bq,D) accumulator stay resident in VMEM
+    (~128·128·4 + 128·D·4 bytes ≪ 16 MiB v5e VMEM).
+  * causal/window masking is computed from absolute positions
+    (q_offset + iq·bq) so the same kernel serves prefill chunks and DSI
+    verification windows; fully-masked k-blocks are skipped with pl.when.
+  * dynamic scalars (q_offset, kv_len) ride in SMEM.
+
+Oracle: ref.attention_ref; validated via interpret=True on CPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(scalars_ref,            # SMEM (2,): [q_offset, kv_len]
+            q_ref, k_ref, v_ref,    # VMEM tiles
+            o_ref,
+            m_scr, l_scr, acc_scr,  # VMEM scratch
+            *, bq: int, bk: int, nk: int, causal: bool,
+            window: Optional[int], scale: float):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_offset = scalars_ref[0]
+    kv_len = scalars_ref[1]
+    iq = pl.program_id(2)
+    q_start = q_offset + iq * bq
+    k_start = ik * bk
+
+    # Skip blocks that are entirely masked out (strictly above the causal
+    # diagonal, or entirely below the sliding window).
+    run = k_start < kv_len
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + bq - 1)
+    if window is not None:
+        run = jnp.logical_and(run, k_start + bk - 1 > q_start - window)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)          # (bq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_pos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True,
+                    window: Optional[int] = None,
+                    q_offset=0,
+                    kv_len=None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q (B,Sq,H,D); k/v (B,Sk,KV,D); H % KV == 0; Sq % bq == Sk % bk == 0."""
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    assert h % kv == 0 and sq % bq == 0 and sk % bk == 0, (q.shape, k.shape)
+    g = h // kv
+    nq, nk = sq // bq, sk // bk
+    if kv_len is None:
+        kv_len = sk
+    scalars = jnp.array([jnp.asarray(q_offset, jnp.int32),
+                         jnp.asarray(kv_len, jnp.int32)], jnp.int32)
+
+    kernel = functools.partial(_kernel, bq=bq, bk=bk, nk=nk, causal=causal,
+                               window=window, scale=1.0 / float(d) ** 0.5)
+    grid = (b, h, nq, nk)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bq, 1, d), lambda bi, hi, qi, ki, *_: (bi, qi, hi, 0)),
+                pl.BlockSpec((1, bk, 1, d), lambda bi, hi, qi, ki, *_: (bi, ki, hi // g, 0)),
+                pl.BlockSpec((1, bk, 1, d), lambda bi, hi, qi, ki, *_: (bi, ki, hi // g, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bq, 1, d), lambda bi, hi, qi, ki, *_: (bi, qi, hi, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bq,), jnp.float32),
+                pltpu.VMEM((bq,), jnp.float32),
+                pltpu.VMEM((bq, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(scalars, q, k, v)
+    return out

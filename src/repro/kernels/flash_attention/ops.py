@@ -1,0 +1,82 @@
+"""Attention entry point used by the model stack.
+
+Dispatch:
+  * TPU backend (or ``force_pallas``): the Pallas flash kernel.
+  * elsewhere: a memory-bounded blocked-jnp path (lax.scan over query
+    chunks, full-precision softmax) — never materializes (Sq, Sk) scores
+    for large Sq, so 32k-token prefill lowers with bounded live memory.
+
+Semantics match ``ref.attention_ref`` bit-for-bit up to fp accumulation
+order; tests sweep shapes/dtypes against the oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ref import attention_ref
+
+_DEFAULT_CHUNK = 1024
+
+
+def _pick_chunk(sq: int, chunk: int) -> int:
+    c = min(chunk, sq)
+    while sq % c:
+        c -= 1
+    return c
+
+
+def _blocked(q, k, v, *, causal, window, q_offset, kv_len, kv_positions, chunk):
+    b, sq, h, d = q.shape
+    c = _pick_chunk(sq, chunk)
+    n = sq // c
+    if n == 1:
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, kv_len=kv_len,
+                             kv_positions=kv_positions)
+    qc = q.reshape(b, n, c, h, d).swapaxes(0, 1)  # (n, B, c, H, D)
+
+    def body(_, xs):
+        qi, i = xs
+        out = attention_ref(qi, k, v, causal=causal, window=window,
+                            q_offset=jnp.asarray(q_offset) + i * c,
+                            kv_len=kv_len, kv_positions=kv_positions)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (qc, jnp.arange(n)))
+    return outs.swapaxes(0, 1).reshape(b, sq, h, d)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True,
+              window: Optional[int] = None,
+              q_offset=0,
+              kv_len: Optional[jnp.ndarray] = None,
+              kv_positions: Optional[jnp.ndarray] = None,
+              chunk: int = _DEFAULT_CHUNK,
+              force_pallas: Optional[bool] = None,
+              interpret: bool = False) -> jnp.ndarray:
+    """GQA attention. q (B,Sq,H,D); k/v (B,Sk,KV,D). See ref.py for masks."""
+    use_pallas = force_pallas
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas and kv_positions is None and q.shape[1] >= 128:
+        from repro.kernels.flash_attention.flash_attention import flash_attention
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, kv_len=kv_len,
+                               interpret=interpret)
+    return _blocked(q, k, v, causal=causal, window=window, q_offset=q_offset,
+                    kv_len=kv_len, kv_positions=kv_positions, chunk=chunk)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     kv_positions: jnp.ndarray, pos: jnp.ndarray, *,
+                     causal: bool = True,
+                     window: Optional[int] = None) -> jnp.ndarray:
+    """Single-step decode: q (B,1,H,D) against a (ring or linear) cache."""
+    return attention_ref(q, k, v, causal=causal, window=window, q_offset=pos,
+                         kv_positions=kv_positions)

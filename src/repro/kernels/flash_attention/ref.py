@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for GQA attention (full materialized scores).
+
+Layout convention everywhere in this repo:
+  q: (B, Sq, H, D)   k/v: (B, Sk, KV, D)   with H % KV == 0.
+
+``q_offset`` is the absolute position of q[0] (prefill chunks / decode).
+``window`` (if set) allows attending only to keys with
+``q_pos - window < k_pos <= q_pos`` (plus causality).
+``kv_positions`` gives per-slot absolute key positions (ring-buffer caches;
+slots with position < 0 are invalid). Defaults to ``arange(Sk)``.
+``kv_len`` masks out slots with position >= kv_len (padded decode caches).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True,
+                  window: Optional[int] = None,
+                  q_offset=0,
+                  kv_len: Optional[jnp.ndarray] = None,
+                  kv_positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    assert h % kv == 0, (h, kv)
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, d)
+    # bf16 operands with fp32 accumulation (MXU-native) — casting k/v to
+    # fp32 would materialize a 2× copy of the whole KV cache per step
+    # (§Perf iteration; see EXPERIMENTS.md).
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(d).astype(jnp.float32)
+
+    q_pos = jnp.asarray(q_offset) + jnp.arange(sq)[:, None]        # (sq, 1)
+    if kv_positions is None:
+        k_pos = jnp.arange(sk)[None, :]                            # (1, sk)
+    else:
+        k_pos = jnp.asarray(kv_positions, jnp.int32)[None, :]
+    valid = k_pos >= 0
+    if causal:
+        valid = valid & (k_pos <= q_pos)
+    if window is not None:
+        valid = valid & (k_pos > q_pos - window)
+    if kv_len is not None:
+        valid = valid & (k_pos < jnp.asarray(kv_len))
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+
+    m = scores.max(-1, keepdims=True)
+    probs = jnp.exp(scores - m)
+    probs = probs / (probs.sum(-1, keepdims=True) + 1e-30)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, d).astype(q.dtype)

@@ -1,0 +1,42 @@
+"""Jit'd wrapper: kernel (TPU / interpret) or jnp fallback, reduced to the
+(n_accepted, next_token) the engines consume."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spec_verify.ref import spec_verify_ref
+
+
+def verify_and_sample(key, draft_tokens: jnp.ndarray,
+                      draft_probs: jnp.ndarray, target_probs: jnp.ndarray,
+                      n_forced=0, *, force_pallas: Optional[bool] = None,
+                      interpret: bool = False
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single stream. draft_tokens (K,), draft_probs (K,V),
+    target_probs (K+1,V) -> (n_accepted, next_token). Equivalent to
+    core.verify.leviathan_verify with the same uniforms."""
+    k, v = draft_probs.shape
+    ka, kr = jax.random.split(key)
+    u_accept = jnp.concatenate(
+        [jax.random.uniform(ka, (k,)), jnp.zeros((1,))])
+    u_resample = jax.random.uniform(kr, (k + 1,))
+
+    use_pallas = force_pallas
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas or interpret:
+        from repro.kernels.spec_verify.spec_verify import spec_verify
+        accept, tokens = spec_verify(draft_tokens, draft_probs, target_probs,
+                                     u_accept, u_resample,
+                                     interpret=interpret)
+    else:
+        accept, tokens = spec_verify_ref(draft_tokens, draft_probs,
+                                         target_probs, u_accept, u_resample)
+    accept = accept | (jnp.arange(k + 1) < n_forced)
+    acc_prefix = jnp.cumprod(accept[:k].astype(jnp.int32))
+    n_acc = acc_prefix.sum().astype(jnp.int32)
+    nxt = tokens[n_acc]
+    return n_acc, nxt

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the fused speculative-verification kernel.
+
+Per draft position i (plus a virtual position K for the bonus token):
+  accept[i]   = u_accept[i] * p_d(d_i) < p_t(d_i)      (position K: False)
+  resample[i] = inverse-CDF sample from the residual
+                norm(max(p_t[i] - p_d[i], 0)) at u_resample[i]
+                (position K: residual = p_t[K] — the bonus distribution)
+
+The wrapper (ops.py) reduces these to (n_accepted, next_token); keeping
+the kernel per-position makes it embarrassingly tileable over (K+1, V).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def spec_verify_ref(draft_tokens: jnp.ndarray, draft_probs: jnp.ndarray,
+                    target_probs: jnp.ndarray, u_accept: jnp.ndarray,
+                    u_resample: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """draft_tokens (K,), draft_probs (K,V), target_probs (K+1,V),
+    u_accept (K+1,), u_resample (K+1,) -> (accept (K+1,), resample (K+1,))."""
+    k, v = draft_probs.shape
+    idx = jnp.arange(k)
+    p_t = target_probs[idx, draft_tokens].astype(jnp.float32)
+    p_d = draft_probs[idx, draft_tokens].astype(jnp.float32)
+    accept = jnp.concatenate(
+        [u_accept[:k].astype(jnp.float32) * p_d < p_t, jnp.zeros((1,), bool)])
+
+    pd_ext = jnp.concatenate(
+        [draft_probs.astype(jnp.float32),
+         jnp.zeros((1, v), jnp.float32)], axis=0)              # (K+1, V)
+    resid = jnp.clip(target_probs.astype(jnp.float32) - pd_ext, 0.0, None)
+    z = resid.sum(-1, keepdims=True)
+    csum = jnp.cumsum(resid, axis=-1)
+    thresh = u_resample.astype(jnp.float32)[:, None] * z
+    hit = csum >= thresh - 1e-12
+    resample = jnp.argmax(hit, axis=-1)
+    # all-miss fallback (z==0 can't happen for normalized p_t): last index
+    resample = jnp.where(hit.any(-1), resample, v - 1)
+    return accept, resample.astype(jnp.int32)

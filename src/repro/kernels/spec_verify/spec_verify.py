@@ -1,0 +1,139 @@
+"""Pallas TPU kernel: fused speculative acceptance + residual resampling.
+
+DSI's only *serial* latency point is the accept/resample decision after a
+verification chunk (a rejection is the one place target latency surfaces —
+paper §3.1), so the whole decision is fused into one vocab-tiled kernel:
+no (K,V)-sized residual/cumsum intermediates ever hit HBM.
+
+TPU-native design:
+  * grid = (K+1, 2, nV): positions × {pass1, pass2} × vocab tiles. The
+    vocab walk is the innermost sequential dim; per-position running state
+    (Z, p_t(d), p_d(d), CDF cursor, found token) lives in SMEM/VMEM
+    scratch across tiles.
+  * pass 1 accumulates the residual mass Z = Σ max(p_t - p_d, 0) and picks
+    p_t(d_i), p_d(d_i) off the tile containing the draft token (iota mask
+    — no gather unit needed).
+  * pass 2 re-walks the tiles, advancing a cumulative-sum cursor until it
+    crosses u_resample · Z (inverse-CDF sampling), recording the token.
+  * position K is the virtual bonus row: draft_probs row is zero, so the
+    residual is p_t[K] itself and "resample" = bonus sampling. One kernel
+    covers accept, correction, and bonus paths.
+
+Oracle: ref.spec_verify_ref; validated in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(draft_tok_ref,                 # scalar-prefetch (K+1,)
+            tprobs_ref, dprobs_ref, ua_ref, ur_ref,
+            accept_ref, token_ref,
+            z_scr, ptd_scr, pdd_scr, cum_scr, tok_scr, found_scr,
+            *, bv: int, nv: int, k_drafts: int, vocab: int):
+    kpos = pl.program_id(0)
+    phase = pl.program_id(1)
+    iv = pl.program_id(2)
+
+    @pl.when((phase == 0) & (iv == 0))
+    def _init():
+        z_scr[0] = 0.0
+        ptd_scr[0] = 0.0
+        pdd_scr[0] = 0.0
+        cum_scr[0] = 0.0
+        tok_scr[0] = vocab - 1
+        found_scr[0] = 0
+
+    p_t = tprobs_ref[0, :].astype(jnp.float32)                  # (bv,)
+    p_d = dprobs_ref[0, :].astype(jnp.float32)
+    resid = jnp.maximum(p_t - p_d, 0.0)
+    col = iv * bv + jax.lax.broadcasted_iota(jnp.int32, (bv,), 0)
+
+    @pl.when(phase == 0)
+    def _pass1():
+        z_scr[0] += resid.sum()
+        d = draft_tok_ref[kpos]
+        sel = (col == d).astype(jnp.float32)
+        ptd_scr[0] += (p_t * sel).sum()
+        pdd_scr[0] += (p_d * sel).sum()
+
+    @pl.when(phase == 1)
+    def _pass2():
+        thresh = ur_ref[0] * z_scr[0] - 1e-12
+        csum = jnp.cumsum(resid) + cum_scr[0]
+        hit = (csum >= thresh) & (found_scr[0] == 0)
+        any_hit = hit.any()
+
+        @pl.when(any_hit)
+        def _record():
+            first = jnp.argmax(hit)
+            tok_scr[0] = iv * bv + first.astype(jnp.int32)
+            found_scr[0] = 1
+
+        cum_scr[0] += resid.sum()
+
+        @pl.when(iv == nv - 1)
+        def _finish():
+            is_draft = kpos < k_drafts
+            acc = (ua_ref[0] * pdd_scr[0] < ptd_scr[0]) & is_draft
+            accept_ref[0] = acc.astype(jnp.int32)
+            token_ref[0] = tok_scr[0]
+
+
+@functools.partial(jax.jit, static_argnames=("bv", "interpret"))
+def spec_verify(draft_tokens: jnp.ndarray, draft_probs: jnp.ndarray,
+                target_probs: jnp.ndarray, u_accept: jnp.ndarray,
+                u_resample: jnp.ndarray, *, bv: int = 512,
+                interpret: bool = False):
+    """draft_tokens (K,), draft_probs (K,V), target_probs (K+1,V),
+    u_accept (K+1,), u_resample (K+1,) -> (accept (K+1,) i32, token (K+1,))."""
+    k, v = draft_probs.shape
+    bv = min(bv, v)
+    pad = (-v) % bv
+    if pad:
+        draft_probs = jnp.pad(draft_probs, ((0, 0), (0, pad)))
+        target_probs = jnp.pad(target_probs, ((0, 0), (0, pad)))
+    vp = v + pad
+    nv = vp // bv
+    dprobs_ext = jnp.concatenate(
+        [draft_probs, jnp.zeros((1, vp), draft_probs.dtype)], axis=0)
+    dtoks = jnp.concatenate(
+        [draft_tokens.astype(jnp.int32), jnp.zeros((1,), jnp.int32)])
+
+    kernel = functools.partial(_kernel, bv=bv, nv=nv, k_drafts=k, vocab=v)
+    grid = (k + 1, 2, nv)
+    accept, token = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bv), lambda kp, ph, ivv, *_: (kp, ivv)),
+                pl.BlockSpec((1, bv), lambda kp, ph, ivv, *_: (kp, ivv)),
+                pl.BlockSpec((1,), lambda kp, ph, ivv, *_: (kp,)),
+                pl.BlockSpec((1,), lambda kp, ph, ivv, *_: (kp,)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1,), lambda kp, ph, ivv, *_: (kp,)),
+                pl.BlockSpec((1,), lambda kp, ph, ivv, *_: (kp,)),
+            ],
+            scratch_shapes=[
+                pltpu.SMEM((1,), jnp.float32),   # Z
+                pltpu.SMEM((1,), jnp.float32),   # p_t(d)
+                pltpu.SMEM((1,), jnp.float32),   # p_d(d)
+                pltpu.SMEM((1,), jnp.float32),   # CDF cursor
+                pltpu.SMEM((1,), jnp.int32),     # found token
+                pltpu.SMEM((1,), jnp.int32),     # found flag
+            ],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((k + 1,), jnp.int32),
+                   jax.ShapeDtypeStruct((k + 1,), jnp.int32)],
+        interpret=interpret,
+    )(dtoks, target_probs, dprobs_ext, u_accept.astype(jnp.float32),
+      u_resample.astype(jnp.float32))
+    return accept.astype(bool), token

@@ -1,0 +1,3 @@
+"""Oracle for the SSD kernel: the portable chunked implementation from
+repro.models.mamba2 (itself validated against sequential decode)."""
+from repro.models.mamba2 import ssd_chunked as ssd_ref  # noqa: F401

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: Mamba2 SSD (state-space duality) chunked scan.
+
+TPU-native layout (vs. the CUDA kernel in the paper):
+  * grid = (B, H, nc) with the chunk dim innermost/sequential — the
+    inter-chunk recurrence lives in a (P, N) fp32 VMEM scratch carried
+    across chunk steps; no HBM round-trip for states.
+  * per chunk, the intra-chunk "attention form" runs on the MXU as three
+    dense matmuls: scores = (C·Bᵀ) ⊙ L, y = scores·xd + (C·stateᵀ)⊙decay,
+    with the (Q,Q) decay matrix L = exp(segsum(dA)) built in-register from
+    a cumulative sum (Q = chunk ≤ 128 → Q² tile fits VMEM).
+  * grouped B/C (G < H) index their group via the head grid coordinate —
+    no repeat/copy of the (Q,N) tensors.
+
+Inputs are pre-discretized (xd = x·dt, dA = dt·A) so the kernel is pure
+scan+matmul. Oracle: ref.ssd_ref (= models.mamba2.ssd_chunked).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(xd_ref, da_ref, b_ref, c_ref, init_ref,
+            y_ref, fin_ref, state_scr, *, q: int, nc: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = init_ref[0, 0, :, :].astype(jnp.float32)
+
+    xd = xd_ref[0, 0, :, 0, :].astype(jnp.float32)             # (Q, P)
+    da = da_ref[0, 0, :, 0].astype(jnp.float32)                # (Q,)
+    bmat = b_ref[0, 0, :, 0, :].astype(jnp.float32)            # (Q, N)
+    cmat = c_ref[0, 0, :, 0, :].astype(jnp.float32)
+
+    da_cum = jnp.cumsum(da)                                    # (Q,)
+    # L[i,j] = exp(sum_{k=j+1..i} da) for i>=j
+    seg = da_cum[:, None] - da_cum[None, :] + da[None, :] - da[None, :]
+    seg = da_cum[:, None] - da_cum[None, :]
+    iq = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jq = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.where(iq >= jq, jnp.exp(seg), 0.0)             # (Q, Q)
+
+    scores = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    scores = scores * decay
+    y = jax.lax.dot_general(scores, xd, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    state = state_scr[...]                                     # (P, N)
+    y_off = jax.lax.dot_general(cmat, state, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (Q,P)
+    y = y + y_off * jnp.exp(da_cum)[:, None]
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state' = exp(ΣdA)·state + xdᵀ·(B ⊙ exp(ΣdA - da_cum))
+    total = da_cum[q - 1]
+    w = jnp.exp(total - da_cum)[:, None] * bmat                # (Q, N)
+    upd = jax.lax.dot_general(xd, w, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    state_scr[...] = state * jnp.exp(total) + upd
+
+    @pl.when(ic == nc - 1)
+    def _finish():
+        fin_ref[0, 0, :, :] = state_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(xd: jnp.ndarray, da: jnp.ndarray, b_mat: jnp.ndarray,
+             c_mat: jnp.ndarray, initial_state=None, *, chunk: int = 128,
+             interpret: bool = False):
+    """xd (B,S,H,P) = x·dt; da (B,S,H) = dt·A; b/c (B,S,G,N); H % G == 0.
+    Returns (y (B,S,H,P) f32, final_state (B,H,P,N) f32)."""
+    bsz, s, h, p = xd.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    q = min(chunk, s)
+    while s % q:
+        q -= 1
+    nc = s // q
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def ch(t):
+        return t.reshape(bsz, nc, q, *t.shape[2:])
+
+    kernel = functools.partial(_kernel, q=q, nc=nc)
+    grid = (bsz, h, nc)
+    y, fin = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q, 1, p), lambda b, hh, c: (b, c, 0, hh, 0)),
+            pl.BlockSpec((1, 1, q, 1), lambda b, hh, c: (b, c, 0, hh)),
+            pl.BlockSpec((1, 1, q, 1, n),
+                         lambda b, hh, c, _rep=rep: (b, c, 0, hh // _rep, 0)),
+            pl.BlockSpec((1, 1, q, 1, n),
+                         lambda b, hh, c, _rep=rep: (b, c, 0, hh // _rep, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b, hh, c: (b, hh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, 1, p), lambda b, hh, c: (b, c, 0, hh, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b, hh, c: (b, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, nc, q, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(ch(xd), ch(da), ch(b_mat), ch(c_mat), initial_state)
+    return y.reshape(bsz, s, h, p), fin

@@ -1,0 +1,174 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (architecture × input
+shape × mesh) on 512 placeholder CPU devices, then report memory and
+roofline terms. THE FIRST TWO LINES of this module must set XLA_FLAGS
+before any jax import — jax locks the device count on first init.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k \
+      [--multi-pod] [--spec-mesh] [--out results.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--out dir/]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config, get_shape
+from repro.launch import hlo_analysis, roofline
+from repro.launch.mesh import make_dsi_mesh, make_production_mesh
+from repro.launch.specs import (arch_for_shape, batch_shardings,
+                                cache_shardings, decode_cache_specs,
+                                input_specs, skip_reason)
+from repro.models.model import Model
+from repro.sharding import param_specs, use_mesh
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update
+
+
+def _opt_state_dtype(cfg) -> str:
+    # >=500B params: bf16 moments (DESIGN.md hardware adaptation)
+    return "bfloat16" if cfg.param_count() > 5e11 else "float32"
+
+
+def build_step(model: Model, shape, mesh, dsi_mode: bool = False):
+    """Returns (step_fn, example_args, in_shardings, donate)."""
+    cfg = model.cfg
+    p_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_shard = param_specs(mesh, p_shapes)
+
+    if shape.kind == "train":
+        o_shapes = jax.eval_shape(
+            lambda p: adamw_init(p, state_dtype=_opt_state_dtype(cfg)), p_shapes)
+        o_shard = AdamWState(jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+                             param_specs(mesh, o_shapes.m),
+                             param_specs(mesh, o_shapes.v))
+        b_specs = input_specs(cfg, shape)
+        b_shard = batch_shardings(mesh, b_specs, cfg)
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, batch)
+            params, opt_state, om = adamw_update(params, grads, opt_state)
+            return params, opt_state, loss
+
+        return (train_step, (p_shapes, o_shapes, b_specs),
+                (p_shard, o_shard, b_shard), (0, 1))
+
+    if shape.kind == "prefill":
+        b_specs = input_specs(cfg, shape)
+        b_shard = batch_shardings(mesh, b_specs, cfg)
+
+        def prefill_step(params, batch):
+            logits, cache = model.prefill(params, batch, max_len=shape.seq_len)
+            return logits, cache
+
+        return prefill_step, (p_shapes, b_specs), (p_shard, b_shard), ()
+
+    # decode: one token against a seq_len cache
+    c_specs = decode_cache_specs(model, shape)
+    c_shard = cache_shardings(mesh, c_specs, cfg)
+    b_specs = input_specs(cfg, shape)
+    b_shard = batch_shardings(mesh, b_specs, cfg)
+
+    def serve_step(params, cache, batch):
+        logits, cache = model.decode_step(params, cache, batch["tokens"])
+        return logits, cache
+
+    return serve_step, (p_shapes, c_specs, b_specs), \
+        (p_shard, c_shard, b_shard), (1,)
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            spec_mesh: bool = False, verbose: bool = True) -> dict:
+    shape = get_shape(shape_name)
+    cfg0 = get_config(arch)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "dsi(4,4,16)" if spec_mesh else
+           ("multi(2,16,16)" if multi_pod else "single(16,16)")}
+    why = skip_reason(cfg0, shape)
+    if why:
+        rec.update(status="skip", reason=why)
+        return rec
+    cfg = arch_for_shape(cfg0, shape)
+    if cfg is not cfg0 and verbose:
+        rec["variant"] = f"sliding-window({cfg.window})"
+    model = Model(cfg, remat=(shape.kind == "train"))
+    mesh = make_dsi_mesh() if spec_mesh else make_production_mesh(multi_pod=multi_pod)
+
+    t0 = time.time()
+    try:
+        with use_mesh(mesh):
+            step, args, shardings, donate = build_step(model, shape, mesh)
+            jitted = jax.jit(step, in_shardings=shardings,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = hlo_analysis.analyze(compiled.as_text())
+        rec.update(
+            status="ok", lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory={k: int(getattr(mem, k, 0)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes")},
+            # loop-corrected per-device numbers (launch/hlo_analysis.py)
+            flops=hlo["flops"],
+            bytes_accessed=hlo["hbm_bytes"],
+            move_bytes=hlo["move_bytes"],
+            collectives=hlo["collective_bytes"],
+            # raw XLA cost_analysis (counts while bodies once) for reference
+            xla_cost={"flops": float(cost.get("flops", 0.0)),
+                      "bytes_accessed": float(cost.get("bytes accessed", 0.0))},
+        )
+        rec["roofline"] = roofline.terms(rec, cfg, shape, mesh)
+    except Exception as e:  # noqa: BLE001 - report and continue
+        rec.update(status="fail", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--spec-mesh", action="store_true",
+                    help="DSI (spec,data,model) serving mesh")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    recs = []
+    if args.all:
+        for arch in ARCH_NAMES:
+            for shape in SHAPES:
+                rec = run_one(arch, shape, multi_pod=args.multi_pod)
+                recs.append(rec)
+                print(json.dumps(rec)[:400], flush=True)
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        rec = run_one(args.arch, args.shape, multi_pod=args.multi_pod,
+                      spec_mesh=args.spec_mesh)
+        recs.append(rec)
+        print(json.dumps(rec, indent=2))
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(recs, f, indent=2)
+    bad = [r for r in recs if r["status"] == "fail"]
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

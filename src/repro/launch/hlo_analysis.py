@@ -1,0 +1,482 @@
+"""Loop-aware analysis of partitioned HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so a
+layer-scanned transformer under-reports FLOPs/bytes/collectives by ~the
+layer count. This module parses the partitioned module, recovers while
+trip counts from the loop condition, and accumulates per-computation
+stats multiplicatively:
+
+  flops            — dot/convolution FLOPs (2 · numel(out) · contracted)
+  hbm_bytes        — Σ (operand + output bytes) over memory-touching
+                     top-level instructions (fusion, dot, copy, scatter,
+                     gather, dynamic slices, reduces, collectives…) — a
+                     traffic proxy; fusion internals excluded
+  collective_bytes — per collective kind, max(out, operands) wire bytes
+
+This is also the §Perf "profiler": per-computation breakdowns identify
+redundant collectives and layout churn.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "e4m3": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_MEM_OPS = ("fusion", "dot", "convolution", "copy", "scatter", "gather",
+            "dynamic-slice", "dynamic-update-slice", "reduce",
+            "reduce-window", "sort", "transpose", "reshape", "concatenate",
+            "pad", "slice", "select-and-scatter", "iota", "broadcast",
+            "convert", "rng", "cholesky", "triangular-solve") + _COLLECTIVES
+
+
+def _type_bytes(t: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(t):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(t: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(t)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    out_type: str
+    op: str
+    operands: List[str]
+    attrs: str
+    raw_operands: str = ""
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)  # var -> type
+
+
+def _matching(s: str, start: int) -> int:
+    """Index of the paren matching s[start] ('('); -1 if unbalanced."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+    return -1
+
+
+def _split_top(s: str) -> List[str]:
+    parts, depth, cur = [], 0, ""
+    for c in s:
+        if c in "([{":
+            depth += 1
+        elif c in ")]}":
+            depth -= 1
+        if c == "," and depth == 0:
+            parts.append(cur)
+            cur = ""
+        else:
+            cur += c
+    if cur.strip():
+        parts.append(cur)
+    return parts
+
+
+_NAME_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_OP_RE = re.compile(r"^\s*([\w\-]+)\(")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None or ("=" not in s.split("(")[0] and s.endswith("{")):
+            # possible computation header: %name (params) -> type {
+            m = _NAME_RE.match(s)
+            if m and s.endswith("{") and "->" in s:
+                cur = Computation(m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+                p0 = s.find("(")
+                p1 = _matching(s, p0)
+                if p1 > 0:
+                    for part in _split_top(s[p0 + 1:p1]):
+                        if ":" in part:
+                            pname, ptype = part.split(":", 1)
+                            cur.types[pname.strip().lstrip("%")] = ptype.strip()
+                continue
+        if cur is None:
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if "=" not in s:
+            continue
+        lhs, _, rhs = s.partition(" = ")
+        lhs = lhs.replace("ROOT", "").strip().lstrip("%")
+        if not lhs or " " in lhs:
+            continue
+        # rhs = TYPE opname(operands), attrs ; find the opname as the word
+        # immediately before the first top-level '(' that follows the type.
+        # The type itself may contain parens (tuples) — skip them first.
+        i = 0
+        if rhs.startswith("("):
+            i = _matching(rhs, 0) + 1
+        mo = re.search(r"([\w\-]+)\(", rhs[i:])
+        if not mo:
+            continue
+        op = mo.group(1)
+        out_type = rhs[:i + mo.start()].strip()
+        p0 = i + mo.end() - 1
+        p1 = _matching(rhs, p0)
+        if p1 < 0:
+            continue
+        ops_str = rhs[p0 + 1:p1]
+        attrs = rhs[p1 + 1:]
+        operands = re.findall(r"%([\w.\-]+)", ops_str)
+        inst = Instr(lhs, out_type, op, operands, attrs, ops_str)
+        cur.instrs.append(inst)
+        cur.types[lhs] = inst.out_type
+    return comps, entry
+
+
+def _called(attrs: str, key: str) -> Optional[str]:
+    m = re.search(rf"{key}=%?([\w.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def _trip_count(cond: Computation, comps: Dict[str, Computation]) -> int:
+    """Scan-style loops compare the induction variable against a constant;
+    take the largest integer constant in the condition (following wrapped
+    compare computations one level deep)."""
+    best = 1
+    def scan(c: Computation):
+        nonlocal best
+        for inst in c.instrs:
+            if inst.op == "constant":
+                m = re.search(r"-?\d+", inst.raw_operands)
+                if m:
+                    best = max(best, int(m.group(0)))
+            called = _called(inst.attrs, "to_apply") or \
+                _called(inst.attrs, "calls")
+            if called and called in comps:
+                scan(comps[called])
+    scan(cond)
+    return best
+
+
+_MOVE_OPS = {"parameter", "constant", "convert", "copy", "transpose",
+             "bitcast", "reshape", "broadcast", "dynamic-slice",
+             "dynamic-update-slice", "slice", "concatenate", "select",
+             "compare", "iota", "tuple", "get-tuple-element", "pad",
+             "bitcast-convert"}
+
+
+@dataclass
+class Stats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    move_bytes: float = 0.0  # pure layout/dtype-move traffic (fusions with
+    #   no arithmetic): on the TPU target most of this disappears (bf16 MXU
+    #   needs no fp32 promotion; layouts are chosen natively) — the CPU
+    #   dry-run backend materializes it. Reported separately so the
+    #   roofline can state a TPU-adjusted memory term.
+    collective_bytes: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    collective_counts: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+
+    def add(self, other: "Stats", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.hbm_bytes += mult * other.hbm_bytes
+        self.move_bytes += mult * other.move_bytes
+        for k in _COLLECTIVES:
+            self.collective_bytes[k] += mult * other.collective_bytes[k]
+            self.collective_counts[k] += mult * other.collective_counts[k]
+
+
+def _dot_flops(inst: Instr, types: Dict[str, str]) -> float:
+    out_dims = _shape_dims(inst.out_type) or []
+    numel = 1.0
+    for d in out_dims:
+        numel *= d
+    contract = 1.0
+    lhs_type = types.get(inst.operands[0], "") if inst.operands else ""
+    lhs_dims = _shape_dims(lhs_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.attrs)
+    if lhs_dims and m and m.group(1):
+        for i in m.group(1).split(","):
+            idx = int(i)
+            if idx < len(lhs_dims):
+                contract *= lhs_dims[idx]
+    return 2.0 * numel * contract
+
+
+class Analyzer:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        self._memo: Dict[str, Stats] = {}
+
+    def _io_bytes(self, inst: Instr, types: Dict[str, str]) -> float:
+        """HBM traffic model. Slicing ops move slice-sized data, not the
+        whole operand array; in-place dynamic-update-slice moves ~2× the
+        update region (the enclosing array aliases in place)."""
+        out_b = float(_type_bytes(inst.out_type))
+        ops_b = [float(_type_bytes(types.get(o, ""))) for o in inst.operands]
+
+        fc = None
+        if inst.op == "fusion" or inst.op == "custom-call":
+            sub = _called(inst.attrs, "calls") or _called(inst.attrs, "to_apply")
+            fc = self.comps.get(sub or "")
+        inner_ops = {i.op for i in fc.instrs} if fc else {inst.op}
+
+        if "dynamic-update-slice" in inner_ops:
+            upd_b = 0.0
+            src = fc.instrs if fc else [inst]
+            src_types = fc.types if fc else types
+            for u in src:
+                if u.op == "dynamic-update-slice" and len(u.operands) > 1:
+                    upd_b += _type_bytes(src_types.get(u.operands[1], ""))
+            if ops_b:
+                ops_b.remove(max(ops_b))       # the aliased array
+            return 2.0 * upd_b + sum(ops_b)
+        if inner_ops & {"dynamic-slice", "slice", "gather"}:
+            if ops_b and max(ops_b) > 4 * out_b:
+                ops_b.remove(max(ops_b))       # only the slice is read
+                return 3.0 * out_b + sum(ops_b)
+        return out_b + sum(ops_b)
+
+    def _flops_only(self, cname: str) -> float:
+        comp = self.comps.get(cname)
+        if comp is None:
+            return 0.0
+        total = 0.0
+        for inst in comp.instrs:
+            if inst.op == "dot":
+                total += _dot_flops(inst, comp.types)
+            elif inst.op in ("fusion", "call", "custom-call"):
+                sub = _called(inst.attrs, "calls") or \
+                    _called(inst.attrs, "to_apply")
+                if sub:
+                    total += self._flops_only(sub)
+        return total
+
+    def stats(self, cname: Optional[str] = None) -> Stats:
+        cname = cname or self.entry
+        if cname in self._memo:
+            return self._memo[cname]
+        s = Stats()
+        comp = self.comps.get(cname)
+        if comp is None:
+            self._memo[cname] = s
+            return s
+        for inst in comp.instrs:
+            op = inst.op
+            if op.endswith("-done"):
+                continue  # async pair: -start carries the payload
+            kind = next((k for k in _COLLECTIVES if op.startswith(k)), None)
+            if op == "while":
+                body = _called(inst.attrs, "body")
+                cond = _called(inst.attrs, "condition")
+                trip = _trip_count(self.comps[cond], self.comps) \
+                    if cond in self.comps else 1
+                if body:
+                    s.add(self.stats(body), trip)
+            elif op == "conditional":
+                branches = re.findall(r"%([\w.\-]+)", inst.attrs)
+                sub = [self.stats(b) for b in branches if b in self.comps]
+                if sub:
+                    worst = max(sub, key=lambda st: st.flops + st.hbm_bytes)
+                    s.add(worst)
+            elif op == "call":
+                sub = _called(inst.attrs, "to_apply")
+                if sub:
+                    s.add(self.stats(sub))
+            elif kind is not None:
+                out_b = _type_bytes(inst.out_type)
+                in_b = sum(_type_bytes(comp.types.get(o, ""))
+                           for o in inst.operands)
+                s.collective_bytes[kind] += max(out_b, in_b)
+                s.collective_counts[kind] += 1
+                s.hbm_bytes += self._io_bytes(inst, comp.types)
+            elif op == "dot":
+                s.flops += _dot_flops(inst, comp.types)
+                s.hbm_bytes += self._io_bytes(inst, comp.types)
+            elif op == "fusion" or op == "custom-call":
+                sub = _called(inst.attrs, "calls") or \
+                    _called(inst.attrs, "to_apply")
+                b = self._io_bytes(inst, comp.types)
+                if sub:
+                    s.flops += self._flops_only(sub)
+                    inner = {i.op for i in self.comps[sub].instrs} \
+                        if sub in self.comps else set()
+                    if inner and inner <= _MOVE_OPS:
+                        s.move_bytes += b
+                s.hbm_bytes += b
+            elif op in _MEM_OPS:
+                s.hbm_bytes += self._io_bytes(inst, comp.types)
+        self._memo[cname] = s
+        return s
+
+
+def analyze(text: str) -> dict:
+    a = Analyzer(text)
+    s = a.stats()
+    total_coll = sum(s.collective_bytes.values())
+    return {
+        "flops": s.flops,
+        "hbm_bytes": s.hbm_bytes,
+        "move_bytes": s.move_bytes,
+        "collective_bytes": {"total_bytes": total_coll,
+                             "by_kind": dict(s.collective_bytes),
+                             "counts": dict(s.collective_counts)},
+    }
+
+
+# --------------------------------------------------------------------------
+# §Perf profiling: attribute collective traffic to source ops via the
+# op_name metadata XLA carries, with loop multipliers applied.
+# --------------------------------------------------------------------------
+
+def _comp_multipliers(a: "Analyzer") -> Dict[str, float]:
+    mult: Dict[str, float] = {a.entry: 1.0}
+    order = [a.entry]
+    seen = {a.entry}
+    while order:
+        cname = order.pop(0)
+        comp = a.comps.get(cname)
+        if comp is None:
+            continue
+        m = mult.get(cname, 1.0)
+        for inst in comp.instrs:
+            subs = []
+            if inst.op == "while":
+                body = _called(inst.attrs, "body")
+                cond = _called(inst.attrs, "condition")
+                trip = _trip_count(a.comps[cond], a.comps) \
+                    if cond in a.comps else 1
+                if body:
+                    subs.append((body, m * trip))
+            elif inst.op in ("call", "conditional"):
+                for name in re.findall(r"%([\w.\-]+)", inst.attrs):
+                    if name in a.comps:
+                        subs.append((name, m))
+            for name, mm in subs:
+                mult[name] = max(mult.get(name, 0.0), mm)
+                if name not in seen:
+                    seen.add(name)
+                    order.append(name)
+    return mult
+
+
+def top_hbm(text: str, k: int = 15):
+    """[(scaled_bytes, op, op_name_metadata, count)] — HBM traffic model
+    per source op, loop-scaled."""
+    a = Analyzer(text)
+    mult = _comp_multipliers(a)
+    agg: Dict[tuple, list] = {}
+    for cname, comp in a.comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for inst in comp.instrs:
+            if inst.op.endswith("-done"):
+                continue
+            is_coll = any(inst.op.startswith(c) for c in _COLLECTIVES)
+            if not (inst.op in _MEM_OPS or inst.op == "dot" or is_coll):
+                continue
+            b = a._io_bytes(inst, comp.types)
+            meta = re.search(r'op_name="([^"]+)"', inst.attrs)
+            src = meta.group(1) if meta else inst.name
+            key = (inst.op, src)
+            cur = agg.setdefault(key, [0.0, 0])
+            cur[0] += m * b
+            cur[1] += int(m)
+    ranked = sorted(((v[0], op, src, v[1])
+                     for (op, src), v in agg.items()), reverse=True)
+    return ranked[:k]
+
+
+def top_collectives(text: str, k: int = 12):
+    """[(scaled_bytes, kind, op_name_metadata, count)] descending."""
+    a = Analyzer(text)
+    # multiplier per computation = product of trip counts on the path
+    mult: Dict[str, float] = {a.entry: 1.0}
+    order = [a.entry]
+    seen = {a.entry}
+    while order:
+        cname = order.pop(0)
+        comp = a.comps.get(cname)
+        if comp is None:
+            continue
+        m = mult.get(cname, 1.0)
+        for inst in comp.instrs:
+            subs = []
+            if inst.op == "while":
+                body = _called(inst.attrs, "body")
+                cond = _called(inst.attrs, "condition")
+                trip = _trip_count(a.comps[cond], a.comps) \
+                    if cond in a.comps else 1
+                if body:
+                    subs.append((body, m * trip))
+            elif inst.op in ("call", "fusion", "custom-call", "conditional"):
+                for name in re.findall(r"%([\w.\-]+)", inst.attrs):
+                    if name in a.comps:
+                        subs.append((name, m))
+            for name, mm in subs:
+                mult[name] = max(mult.get(name, 0.0), mm)
+                if name not in seen:
+                    seen.add(name)
+                    order.append(name)
+
+    agg: Dict[tuple, list] = {}
+    for cname, comp in a.comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for inst in comp.instrs:
+            if inst.op.endswith("-done"):
+                continue
+            kind = next((kk for kk in _COLLECTIVES
+                         if inst.op.startswith(kk)), None)
+            if kind is None:
+                continue
+            out_b = _type_bytes(inst.out_type)
+            in_b = sum(_type_bytes(comp.types.get(o, ""))
+                       for o in inst.operands)
+            meta = re.search(r'op_name="([^"]+)"', inst.attrs)
+            src = meta.group(1) if meta else inst.name
+            key = (kind, src)
+            cur = agg.setdefault(key, [0.0, 0])
+            cur[0] += m * max(out_b, in_b)
+            cur[1] += int(m)
+    ranked = sorted(((v[0], kind, src, v[1])
+                     for (kind, src), v in agg.items()), reverse=True)
+    return ranked[:k]

@@ -1,0 +1,38 @@
+"""Production meshes. Functions (not module constants) so importing this
+module never touches jax device state.
+
+  single pod : (16, 16)    -> ("data", "model")        256 chips (v5e pod)
+  multi-pod  : (2, 16, 16) -> ("pod", "data", "model") 512 chips
+
+"pod" composes with "data" as outer data parallelism: gradient all-reduce
+crosses pods (DCN/ICI), activations never do.
+
+A DSI-serving mesh adds a "spec" axis — one slice per paper target server
+(speculation parallelism; DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_dsi_mesh(*, sp: int = 4, data: int = 4, model: int = 16):
+    """Speculation-parallel serving mesh: sp × data × model chips."""
+    return _mk((sp, data, model), ("spec", "data", "model"))
+
+
+def make_host_mesh():
+    """Whatever devices exist right now, as a 1-D data mesh (tests/examples)."""
+    n = len(jax.devices())
+    return _mk((n,), ("data",))

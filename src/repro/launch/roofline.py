@@ -1,0 +1,107 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+  compute term    = HLO_FLOPs / peak_FLOPs            (per-chip: XLA's
+                    cost_analysis on the SPMD-partitioned module reports
+                    per-device numbers)
+  memory term     = HLO_bytes / HBM_bw
+  collective term = collective_wire_bytes / link_bw
+
+collective bytes are parsed from the partitioned HLO text: for each
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+instruction we take max(output bytes, operand bytes) as the per-chip wire
+estimate (ring algorithms move ~that much per participant).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every dtype[shape] group in a type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-collective-kind wire-byte estimates from partitioned HLO."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        out_type, opname = m.group(1), m.group(2)
+        kind = next((k for k in _COLLECTIVES if opname.startswith(k)), None)
+        if kind is None or opname.startswith(f"{kind}-start") and False:
+            continue
+        if opname.endswith("-done"):
+            continue  # async pair: count the -start only
+        out_b = _shape_bytes(out_type)
+        # operand types appear inside the parens
+        args = s[s.index("("):]
+        in_b = _shape_bytes(args)
+        out[kind] += max(out_b, in_b)
+        counts[kind] += 1
+    total = sum(out.values())
+    return {"total_bytes": total, "by_kind": out, "counts": counts}
+
+
+def terms(rec: dict, cfg, shape, mesh) -> dict:
+    """The three roofline terms (seconds) + MODEL_FLOPS sanity ratio."""
+    n_dev = 1
+    for v in dict(mesh.shape).values():
+        n_dev *= v
+    flops = rec.get("flops", 0.0)
+    bytes_acc = rec.get("bytes_accessed", 0.0)
+    move = rec.get("move_bytes", 0.0)
+    coll = rec.get("collectives", {}).get("total_bytes", 0.0)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    # pure layout/dtype-move fusions are mostly CPU-lowering artifacts
+    # (fp32 promotion for dots, layout churn) that the TPU target avoids
+    t_memory_tpu = max(bytes_acc - move, 0.0) / HBM_BW
+    t_collective = coll / LINK_BW
+
+    # MODEL_FLOPS: 6·N_active·D for the step's token count
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    n_active = cfg.active_param_count()
+    model_flops = (6 if shape.kind == "train" else 2) * n_active * tokens
+    model_flops_per_dev = model_flops / n_dev
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_collective)), key=lambda kv: kv[1])[0]
+    return {
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_memory_tpu_adjusted_s": t_memory_tpu,
+        "t_collective_s": t_collective, "dominant": dominant,
+        "model_flops_per_dev": model_flops_per_dev,
+        "useful_flops_ratio": (model_flops_per_dev / flops) if flops else 0.0,
+        "n_devices": n_dev,
+    }

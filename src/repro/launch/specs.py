@@ -1,0 +1,125 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every
+(architecture × input shape) pair — the dry-run's contract.
+
+``input_specs`` returns the exact pytrees each step function consumes,
+with no device allocation. Audio/VLM frontends are stubs per the
+assignment carve-out: frame/patch embeddings of the right shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model
+from repro.sharding.rules import _axis_size, logical_to_spec
+
+LONG_WINDOW = 8192  # sliding-window size for dense archs on long_500k
+
+
+def long_context_variant(cfg: ModelConfig) -> ModelConfig:
+    """Sub-quadratic variant for long_500k: dense full-attention archs get a
+    sliding window (ring KV cache); archs with native window/SSM unchanged."""
+    if cfg.attn and cfg.window is None:
+        return dataclasses.replace(cfg, window=LONG_WINDOW)
+    return cfg
+
+
+def arch_for_shape(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    return long_context_variant(cfg) if shape.name == "long_500k" else cfg
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> str:
+    """Non-empty => this (arch, shape) is skipped, with the DESIGN.md reason."""
+    if not cfg.causal and shape.is_decode:
+        return "encoder-only: no decode step"
+    return ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Stand-ins for the step function's data inputs."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.family == "audio":
+            return {"frames": _sds((b, s, cfg.d_frontend), cfg.dtype),
+                    "labels": _sds((b, s), "int32"),
+                    "mask": _sds((b, s), "int32")}
+        batch = {"tokens": _sds((b, s), "int32"),
+                 "labels": _sds((b, s), "int32")}
+        if cfg.cross_attn_every:
+            batch["image_embeds"] = _sds((b, cfg.num_image_tokens,
+                                          cfg.d_frontend), cfg.dtype)
+        return batch
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            return {"frames": _sds((b, s, cfg.d_frontend), cfg.dtype)}
+        batch = {"tokens": _sds((b, s), "int32")}
+        if cfg.cross_attn_every:
+            batch["image_embeds"] = _sds((b, cfg.num_image_tokens,
+                                          cfg.d_frontend), cfg.dtype)
+        return batch
+    # decode: ONE new token against a seq_len-sized cache
+    return {"tokens": _sds((b, 1), "int32")}
+
+
+def decode_cache_specs(model: Model, shape: ShapeConfig):
+    """ShapeDtypeStructs of a decode cache holding ``seq_len`` tokens."""
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                 filled=shape.seq_len))
+
+
+# ---------------------------------------------------------------- shardings
+
+def _maybe(mesh: Mesh, spec_dims, shape: Tuple[int, ...]) -> P:
+    spec = logical_to_spec(mesh, spec_dims)
+    parts = [p if shape[i] % _axis_size(mesh, p) == 0 else None
+             for i, p in enumerate(spec)]
+    return P(*parts)
+
+
+def batch_shardings(mesh: Mesh, specs, cfg: ModelConfig):
+    def one(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name in ("tokens", "labels", "mask"):
+            dims = ("batch",) + (None,) * (leaf.ndim - 1)
+        elif name in ("frames", "image_embeds"):
+            dims = ("batch", None, None)
+        else:
+            dims = (None,) * leaf.ndim
+        return NamedSharding(mesh, _maybe(mesh, dims, leaf.shape))
+    return jax.tree_util.tree_map_with_path(one, specs)
+
+
+def cache_shardings(mesh: Mesh, cache_specs, cfg: ModelConfig):
+    """KV heads over ``model`` when KV>1; MQA caches context-shard the slot
+    dim over ``model`` instead. Batch over ("pod","data")."""
+    def one(path, leaf):
+        keys = [str(getattr(k, "key", "")) for k in path]
+        name = keys[-1] if keys else ""
+        if name in ("k", "v"):                   # (n, B, clen, KV, D)
+            msize = dict(mesh.shape).get("model", 1)
+            if cfg.num_kv_heads >= msize > 1 and cfg.num_kv_heads % msize == 0:
+                dims = (None, "batch", None, "model", None)
+            else:  # few KV heads: context-shard the slot dim instead
+                dims = (None, "batch", "seq", None, None)
+            return NamedSharding(mesh, _maybe(mesh, dims, leaf.shape))
+        if name in ("cross_k", "cross_v"):       # (nsb, B, T, KV, D)
+            dims = (None, "batch", None, "model", None)
+            return NamedSharding(mesh, _maybe(mesh, dims, leaf.shape))
+        if name == "ssm":                        # (n, B, H, P, N)
+            dims = (None, "batch", "model", None, None)
+            return NamedSharding(mesh, _maybe(mesh, dims, leaf.shape))
+        if name == "conv":                       # (n, B, W-1, C)
+            dims = (None, "batch", None, "model")
+            return NamedSharding(mesh, _maybe(mesh, dims, leaf.shape))
+        return NamedSharding(mesh, P())          # pos, slot arrays
+    return jax.tree_util.tree_map_with_path(one, cache_specs)

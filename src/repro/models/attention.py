@@ -1,0 +1,151 @@
+"""GQA self-attention + cross-attention modules with KV caches.
+
+Cache layout (per layer; the stack stacks a leading L dim):
+  k, v: (B, S_cache, KV, D) — RoPE already applied to k at write time, so
+  ring buffers stay permutation-invariant. ``slot_pos`` (S_cache,) holds
+  each slot's absolute position (-1 = empty); it is shared across batch
+  and layers (lockstep decode) and lives at the Cache top level.
+
+Sharding: q heads over ``model``; KV heads over ``model`` when KV > 1,
+else (MQA) the cache seq dim is context-sharded over ``model``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import attention, attention_ref
+from repro.models.layers import dense, init_dense, rope
+from repro.sharding import cs
+
+
+def init_attn(key, cfg, *, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    d_kv_in = cfg.d_model
+    return {
+        "wq": init_dense(ks[0], cfg.d_model, cfg.q_dim, dt),
+        "wk": init_dense(ks[1], d_kv_in, cfg.kv_dim, dt),
+        "wv": init_dense(ks[2], d_kv_in, cfg.kv_dim, dt),
+        "wo": init_dense(ks[3], cfg.q_dim, cfg.d_model, dt),
+    }
+
+
+def _split_heads(x, n, d):
+    return x.reshape(*x.shape[:-1], n, d)
+
+
+def _kv_head_sharded(cfg) -> bool:
+    """True when KV heads divide the model axis (head-parallel caches);
+    False => context-shard the cache sequence dim instead (GQA with few KV
+    heads / MQA) — padding few heads up to the axis size would replicate
+    or waste multiples of the cache."""
+    from repro.sharding import current_mesh
+    mesh = current_mesh()
+    msize = mesh.shape.get("model", 1) if mesh is not None else 1
+    return cfg.num_kv_heads >= msize > 1 and cfg.num_kv_heads % msize == 0
+
+
+def _kv_cs(x, cfg):
+    if _kv_head_sharded(cfg):
+        return cs(x, "batch", None, "model", None)
+    return cs(x, "batch", "seq", None, None)
+
+
+def _q_cs(x, cfg):
+    """Query sharding must agree with the cache mode: head-parallel q only
+    when the cache is head-parallel; with a context-sharded cache, q heads
+    stay replicated over ``model`` (mismatched specs make GSPMD regather
+    the whole cache every layer — §Perf finding, EXPERIMENTS.md)."""
+    if _kv_head_sharded(cfg):
+        return cs(x, "batch", None, "model", None)
+    return cs(x, "batch", None, None, None)
+
+
+def attn_forward(params: dict, x: jnp.ndarray, positions: jnp.ndarray, cfg, *,
+                 causal: bool, window: Optional[int]
+                 ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Full-sequence attention (train / prefill). Returns (y, (k, v))."""
+    b, s, _ = x.shape
+    q = _split_heads(dense(x, params["wq"]), cfg.num_heads, cfg.head_dim)
+    k = _split_heads(dense(x, params["wk"]), cfg.num_kv_heads, cfg.head_dim)
+    v = _split_heads(dense(x, params["wv"]), cfg.num_kv_heads, cfg.head_dim)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = cs(q, "batch", None, "model", None)
+    # full-seq K/V are transient (not the decode cache). Three regimes
+    # (§Perf iterations on minitron-4b/hymba train_4k — EXPERIMENTS.md):
+    #   kv % msize == 0     -> head-shard K/V (clean TP)
+    #   msize % kv == 0     -> REPLICATE K/V: scores shard over the padded
+    #                          kv dim; beats context-sharding, whose score
+    #                          psum per q-chunk per layer dominated
+    #   otherwise (hymba 5) -> context-shard (replication would multiply
+    #                          attention compute by msize/kv)
+    from repro.sharding import current_mesh
+    mesh = current_mesh()
+    msize = mesh.shape.get("model", 1) if mesh is not None else 1
+    if _kv_head_sharded(cfg):
+        k = cs(k, "batch", None, "model", None)
+        v = cs(v, "batch", None, "model", None)
+    elif msize % max(cfg.num_kv_heads, 1) == 0:
+        k = cs(k, "batch", None, None, None)
+        v = cs(v, "batch", None, None, None)
+    else:
+        k = cs(k, "batch", "seq", None, None)
+        v = cs(v, "batch", "seq", None, None)
+    y = attention(q, k, v, causal=causal, window=window)
+    y = cs(y, "batch", None, "model", None)
+    out = dense(y.reshape(b, s, cfg.q_dim), params["wo"])
+    return cs(out, "batch", None, None), (k, v)
+
+
+def attn_decode(params: dict, x: jnp.ndarray, k_cache: jnp.ndarray,
+                v_cache: jnp.ndarray, slot_pos: jnp.ndarray, pos: jnp.ndarray,
+                cfg, *, window: Optional[int]
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode. x (B,1,d); returns (y, k_cache', v_cache')."""
+    b = x.shape[0]
+    s_cache = k_cache.shape[1]
+    q = _split_heads(dense(x, params["wq"]), cfg.num_heads, cfg.head_dim)
+    k1 = _split_heads(dense(x, params["wk"]), cfg.num_kv_heads, cfg.head_dim)
+    v1 = _split_heads(dense(x, params["wv"]), cfg.num_kv_heads, cfg.head_dim)
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = rope(q, posv, cfg.rope_theta)
+    k1 = rope(k1, posv, cfg.rope_theta)
+    slot = jnp.mod(pos, s_cache)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k1, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v1, slot, axis=1)
+    k_cache = _kv_cs(k_cache, cfg)
+    v_cache = _kv_cs(v_cache, cfg)
+    new_slot_pos = jnp.where(jnp.arange(s_cache) == slot, pos, slot_pos)
+    q = _q_cs(q, cfg)
+    y = attention_ref(q, k_cache, v_cache, causal=True, window=window,
+                      q_offset=pos, kv_positions=new_slot_pos)
+    y = _q_cs(y, cfg)
+    out = dense(y.reshape(b, 1, cfg.q_dim), params["wo"])
+    return cs(out, "batch", None, None), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (VLM): keys/values from projected image embeddings.
+# KV is computed once (prefill) and static through decode.
+# ---------------------------------------------------------------------------
+
+def cross_kv(params: dict, image_x: jnp.ndarray, cfg
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    k = _split_heads(dense(image_x, params["wk"]), cfg.num_kv_heads, cfg.head_dim)
+    v = _split_heads(dense(image_x, params["wv"]), cfg.num_kv_heads, cfg.head_dim)
+    return _kv_cs(k, cfg), _kv_cs(v, cfg)
+
+
+def cross_attn(params: dict, x: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+               cfg) -> jnp.ndarray:
+    b, s, _ = x.shape
+    q = _split_heads(dense(x, params["wq"]), cfg.num_heads, cfg.head_dim)
+    q = cs(q, "batch", None, "model", None)
+    y = attention(q, k, v, causal=False, window=None)
+    y = cs(y, "batch", None, "model", None)
+    out = dense(y.reshape(b, s, cfg.q_dim), params["wo"])
+    return cs(out, "batch", None, None)

@@ -1,0 +1,166 @@
+"""Shared primitive layers: norms, RoPE, MLPs, embeddings.
+
+All layers are pure functions over plain-dict params. Matmuls run in the
+config dtype (bf16 by default) with fp32 accumulation via
+``preferred_element_type``; norms/softmax run in fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import cs
+
+
+def init_dense(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+@jax.custom_vjp
+def dense(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Matmul with fp32 accumulation, model-dtype activations AND
+    cotangents. Plain `dot(...).astype(dtype)` leaves an fp32 cotangent on
+    the dot node, so every backward matmul and gradient collective runs on
+    fp32 tensors — 2× wire/HBM bytes on vocab-sized layers (§Perf finding,
+    minitron-4b train_4k). Standard mixed-precision training semantics:
+    gradients are bf16 (the optimizer upcasts)."""
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _dense_fwd(x, w):
+    return dense(x, w), (x, w)
+
+
+def _dense_bwd(res, g):
+    x, w = res
+    g = g.astype(x.dtype)
+    dx = jax.lax.dot_general(
+        g, w, (((g.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+    # contract over ALL leading dims without reshaping — reshapes that
+    # merge sharded (batch, seq) dims force GSPMD all-gathers
+    lead = tuple(range(x.ndim - 1))
+    dw = jax.lax.dot_general(
+        x, g, ((lead, lead), ((), ())),
+        preferred_element_type=jnp.float32).astype(w.dtype)
+    return dx, dw
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """fp32-internal RMSNorm with model-dtype output AND cotangents.
+
+    Autodiff through the fp32 internals promotes the entire residual
+    stream's backward to fp32, doubling every TP collective in backward
+    (§Perf iteration 5 on minitron-4b train_4k)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def _rmsnorm_fwd(x, w, eps):
+    return rmsnorm(x, w, eps), (x, w)
+
+
+def _rmsnorm_bwd(eps, res, g):
+    x, w = res
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    x_hat = xf * inv
+    gw = gf * wf
+    dx = inv * (gw - x_hat * jnp.mean(gw * x_hat, axis=-1, keepdims=True))
+    dw = (gf * x_hat).sum(axis=tuple(range(x.ndim - 1)))
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x (..., S, H, D); positions (S,) or scalar-broadcast."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs          # (S, half)
+    cos = jnp.cos(ang)[..., None, :]                                # (S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense): swiglu (3 mats) | relu2 / gelu (2 mats)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg) -> dict:
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    p = {"w_up": init_dense(ks[0], cfg.d_model, cfg.d_ff, dt),
+         "w_down": init_dense(ks[1], cfg.d_ff, cfg.d_model, dt)}
+    if cfg.mlp_act == "swiglu":
+        p["w_gate"] = init_dense(ks[2], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def mlp(params: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    h = dense(x, params["w_up"])
+    h = cs(h, "batch", *(None,) * (x.ndim - 2), "model")
+    if act == "swiglu":
+        h = jax.nn.silu(dense(x, params["w_gate"]).astype(jnp.float32)).astype(x.dtype) * h
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    elif act == "gelu":
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    else:
+        raise ValueError(act)
+    out = dense(h, params["w_down"])
+    return cs(out, "batch", *(None,) * (x.ndim - 2), None)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding (padded vocab, sharded over the model axis)
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg) -> dict:
+    ks = jax.random.split(key, 2)
+    dt = jnp.dtype(cfg.dtype)
+    v = cfg.padded_vocab
+    return {
+        "embed": (jax.random.normal(ks[0], (v, cfg.d_model), jnp.float32)
+                  * 0.02).astype(dt),
+        "unembed": init_dense(ks[1], cfg.d_model, v, dt),
+    }
+
+
+def embed(params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    out = jnp.take(params["embed"], tokens, axis=0)
+    return cs(out, "batch", None, None)
+
+
+def unembed(params: dict, x: jnp.ndarray, vocab_size: int) -> jnp.ndarray:
+    # logits stay in the model dtype: a (B,S,V) fp32 tensor (and its
+    # cotangent) doubles the dominant loss-backward collectives on
+    # 256k-vocab models (§Perf finding) — reductions upcast locally.
+    # x must be replicated over `model` going in: left unconstrained,
+    # GSPMD picked a d-contraction strategy with full-vocab fp32 partial
+    # logits + psum (64 GB/dev per direction — §Perf finding).
+    x = cs(x, "batch", None, None)
+    logits = dense(x, params["unembed"])
+    logits = cs(logits, "batch", None, "model")
+    # mask vocab padding
+    if logits.shape[-1] != vocab_size:
+        valid = jnp.arange(logits.shape[-1]) < vocab_size
+        logits = jnp.where(valid, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits

@@ -1,0 +1,273 @@
+"""Mamba2 (SSD — state-space duality) block, chunked algorithm.
+
+Pure-jnp chunked SSD (the kernels/ssd_scan Pallas kernel mirrors the
+intra-chunk compute; this module is the portable path and the oracle's
+substrate). All recurrence math in fp32.
+
+Layout: x (B,S,H,P) heads×head_dim; B/C (B,S,G,N) groups×state; dt (B,S,H).
+Decode carries (ssm_state (B,H,P,N), conv_state (B,W-1,C_conv)).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense, rmsnorm
+from repro.sharding import cs
+
+
+def _conv_channels(cfg) -> int:
+    return cfg.ssm_d_inner + 2 * cfg.ssm.n_groups * cfg.ssm.d_state
+
+
+def init_mamba(key, cfg) -> dict:
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    d, di, h = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_n_heads
+    gn = 2 * cfg.ssm.n_groups * cfg.ssm.d_state
+    ch = _conv_channels(cfg)
+    # in_proj emits [z (di), xBC (di+2GN), dt (H)]
+    p = {
+        "ssm_in": init_dense(ks[0], d, 2 * di + gn + h, dt),
+        "ssm_out": init_dense(ks[1], di, d, dt),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm.conv_width, ch), jnp.float32)
+                   * (1.0 / cfg.ssm.conv_width) ** 0.5).astype(dt),
+        "conv_b": jnp.zeros((ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, h, dtype=jnp.float32))),
+        "gate_norm": jnp.ones((di,), dt),
+    }
+    return p
+
+
+def segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x (..., L) -> (..., L, L); out[i,j] = sum_{k=j+1..i} x[k], -inf above diag."""
+    n = x.shape[-1]
+    csum = jnp.cumsum(x, -1)
+    out = csum[..., :, None] - csum[..., None, :]
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    return jnp.where(i >= j, out, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                b_mat: jnp.ndarray, c_mat: jnp.ndarray, chunk: int,
+                initial_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan. x (B,S,H,P), dt (B,S,H), a (H,), b/c (B,S,G,N).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)). fp32 math.
+    """
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    nc = s // chunk
+
+    f32 = jnp.float32
+    x, dt = x.astype(f32), dt.astype(f32)
+    b_mat, c_mat = b_mat.astype(f32), c_mat.astype(f32)
+    xd = x * dt[..., None]
+
+    def to_chunks(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:])
+
+    xd_c = to_chunks(xd)                                   # (b,c,l,h,p)
+    bh = to_chunks(b_mat)
+    chc = to_chunks(c_mat)
+    if rep > 1:
+        bh = jnp.repeat(bh, rep, axis=3)
+        chc = jnp.repeat(chc, rep, axis=3)                 # (b,c,l,h,n)
+
+    da = jnp.moveaxis(to_chunks(dt * a[None, None, :]), -1, 2)  # (b,c,h,l)
+    da_cum = jnp.cumsum(da, -1)
+
+    # 1) intra-chunk (quadratic-in-chunk "attention" form)
+    decay = jnp.exp(segsum(da))                            # (b,c,h,l,l)
+    y_diag = jnp.einsum("bclhn,bcshn,bchls,bcshp->bclhp", chc, bh, decay, xd_c)
+
+    # 2) per-chunk end states
+    decay_states = jnp.exp(da_cum[..., -1:] - da_cum)      # (b,c,h,l)
+    states = jnp.einsum("bclhn,bchl,bclhp->bchpn", bh, decay_states, xd_c)
+
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(da_cum[..., -1])                 # (b,c,h)
+    init = (initial_state.astype(f32) if initial_state is not None
+            else jnp.zeros((bsz, h, p, n), f32))
+
+    def step(carry, inp):
+        st, dec = inp
+        new = st + carry * dec[..., None, None]
+        return new, carry                                  # emit incoming state
+
+    final, prev = jax.lax.scan(
+        step, init, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev = jnp.moveaxis(prev, 0, 1)                        # (b,c,h,p,n)
+
+    # 4) contribution of incoming chunk states
+    state_decay = jnp.exp(da_cum)                          # (b,c,h,l)
+    y_off = jnp.einsum("bclhn,bchpn,bchl->bclhp", chc, prev, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv over seq. xbc (B,S,C); w (W,C)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)               # (B, S+W-1, C)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return out + b[None, None, :]
+
+
+def _split_in(zxbcdt, cfg):
+    di = cfg.ssm_d_inner
+    gn = 2 * cfg.ssm.n_groups * cfg.ssm.d_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:2 * di + gn]
+    dt_raw = zxbcdt[..., 2 * di + gn:]
+    return z, xbc, dt_raw
+
+
+def _ssm_tensors(xbc, dt_raw, params, cfg):
+    di = cfg.ssm_d_inner
+    g, n = cfg.ssm.n_groups, cfg.ssm.d_state
+    h, p = cfg.ssm_n_heads, cfg.ssm.head_dim
+    lead = xbc.shape[:-1]
+    x = xbc[..., :di].reshape(*lead, h, p)
+    b_mat = xbc[..., di:di + g * n].reshape(*lead, g, n)
+    c_mat = xbc[..., di + g * n:].reshape(*lead, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    return x, b_mat, c_mat, dt
+
+
+def init_mamba_cache(cfg, batch: int, dtype) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(ssm_state (B,H,P,N) fp32, conv_state (B,W-1,C) model-dtype)."""
+    ssm = jnp.zeros((batch, cfg.ssm_n_heads, cfg.ssm.head_dim,
+                     cfg.ssm.d_state), jnp.float32)
+    conv = jnp.zeros((batch, cfg.ssm.conv_width - 1, _conv_channels(cfg)),
+                     jnp.dtype(dtype))
+    return ssm, conv
+
+
+def mamba_forward(params: dict, xin: jnp.ndarray, cfg,
+                  initial_state: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence SSD. xin (B,S,d) -> (y, ssm_state, conv_state)."""
+    bsz, s, _ = xin.shape
+    width = cfg.ssm.conv_width
+    zxbcdt = dense(xin, params["ssm_in"])
+    z, xbc_raw, dt_raw = _split_in(zxbcdt, cfg)
+    # conv state for decode continuation = last W-1 *pre-conv* inputs
+    if s >= width - 1:
+        conv_state = xbc_raw[:, s - (width - 1):, :]
+    else:
+        pad = jnp.zeros((bsz, width - 1 - s, xbc_raw.shape[-1]), xbc_raw.dtype)
+        conv_state = jnp.concatenate([pad, xbc_raw], axis=1)
+    xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(xin.dtype)
+    x, b_mat, c_mat, dt = _ssm_tensors(xbc, dt_raw, params, cfg)
+    x = cs(x, "batch", None, "model", None)
+    a = -jnp.exp(params["A_log"])
+    y, final = ssd_chunked(x, dt, a, b_mat, c_mat, cfg.ssm.chunk,
+                           initial_state=initial_state)
+    y = y + params["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(bsz, s, cfg.ssm_d_inner).astype(xin.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(xin.dtype)
+    y = rmsnorm(y, params["gate_norm"], cfg.norm_eps)
+    out = dense(y, params["ssm_out"])
+    return cs(out, "batch", None, None), final, conv_state
+
+
+def mamba_verify(params: dict, xin: jnp.ndarray, ssm_state: jnp.ndarray,
+                 conv_state: jnp.ndarray, cfg
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Chunk forward from mid-stream state, emitting per-position states for
+    speculative rollback. xin (B,K,d) ->
+      (y (B,K,d), ssm_states (B,K,H,P,N) [state *after* each position],
+       conv_full (B, W-1+K, C) [conv state after position j = conv_full[:, j:j+W-1]]).
+    """
+    bsz, k, _ = xin.shape
+    width = cfg.ssm.conv_width
+    zxbcdt = dense(xin, params["ssm_in"])
+    z, xbc_raw, dt_raw = _split_in(zxbcdt, cfg)
+    conv_full = jnp.concatenate([conv_state.astype(xbc_raw.dtype), xbc_raw], 1)
+    xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"],
+                       state=conv_state)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(xin.dtype)
+    x, b_mat, c_mat, dt = _ssm_tensors(xbc, dt_raw, params, cfg)
+    a = -jnp.exp(params["A_log"])
+    # per-position states via a scan of single-step updates (K is small —
+    # a DSI verification window), y read off each state.
+    f32 = jnp.float32
+    rep = cfg.ssm_n_heads // cfg.ssm.n_groups
+    bh = jnp.repeat(b_mat.astype(f32), rep, axis=2)            # (B,K,H,N)
+    ch = jnp.repeat(c_mat.astype(f32), rep, axis=2)
+    decay = jnp.exp(dt * a[None, None, :])                     # (B,K,H)
+
+    def step(carry, inp):
+        x1, b1, dec, dt1 = inp
+        upd = dt1[..., None, None] * x1[..., :, None] * b1[..., None, :]
+        new = carry * dec[..., None, None] + upd
+        return new, new
+
+    xs = (jnp.moveaxis(x.astype(f32), 1, 0), jnp.moveaxis(bh, 1, 0),
+          jnp.moveaxis(decay, 1, 0), jnp.moveaxis(dt, 1, 0))
+    _, states = jax.lax.scan(step, ssm_state.astype(f32), xs)
+    states = jnp.moveaxis(states, 0, 1)                        # (B,K,H,P,N)
+
+    y = jnp.einsum("bkhpn,bkhn->bkhp", states, ch)
+    y = y + params["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(bsz, k, cfg.ssm_d_inner).astype(xin.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(xin.dtype)
+    y = rmsnorm(y, params["gate_norm"], cfg.norm_eps)
+    out = dense(y, params["ssm_out"])
+    return cs(out, "batch", None, None), states, conv_full
+
+
+def mamba_decode(params: dict, xin: jnp.ndarray, ssm_state: jnp.ndarray,
+                 conv_state: jnp.ndarray, cfg
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token recurrent step. xin (B,1,d) -> (y (B,1,d), states')."""
+    bsz = xin.shape[0]
+    zxbcdt = dense(xin, params["ssm_in"])                  # (B,1,·)
+    z, xbc_raw, dt_raw = _split_in(zxbcdt, cfg)
+    # update conv ring (shift left, append)
+    window = jnp.concatenate([conv_state, xbc_raw], axis=1)  # (B,W,C)
+    w = params["conv_w"]
+    xbc = (window.astype(jnp.float32) * w.astype(jnp.float32)[None]).sum(1)
+    xbc = xbc[:, None, :] + params["conv_b"][None, None].astype(jnp.float32)
+    xbc = jax.nn.silu(xbc).astype(xin.dtype)
+    new_conv_state = window[:, 1:, :]
+
+    x, b_mat, c_mat, dt = _ssm_tensors(xbc, dt_raw, params, cfg)
+    a = -jnp.exp(params["A_log"])                          # (H,)
+    f32 = jnp.float32
+    x1 = x[:, 0].astype(f32)                               # (B,H,P)
+    b1 = b_mat[:, 0].astype(f32)                           # (B,G,N)
+    c1 = c_mat[:, 0].astype(f32)
+    dt1 = dt[:, 0]                                         # (B,H)
+    rep = cfg.ssm_n_heads // cfg.ssm.n_groups
+    bh = jnp.repeat(b1, rep, axis=1)                       # (B,H,N)
+    ch = jnp.repeat(c1, rep, axis=1)
+    decay = jnp.exp(dt1 * a[None, :])                      # (B,H)
+    upd = (dt1[..., None, None] * x1[..., :, None] * bh[..., None, :])
+    new_state = ssm_state * decay[..., None, None] + upd   # (B,H,P,N)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, ch)
+    y = y + params["D"][None, :, None] * x1
+    y = y.reshape(bsz, 1, cfg.ssm_d_inner).astype(xin.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(xin.dtype)
+    y = rmsnorm(y, params["gate_norm"], cfg.norm_eps)
+    out = dense(y, params["ssm_out"])
+    return cs(out, "batch", None, None), new_state, new_conv_state

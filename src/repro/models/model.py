@@ -1,0 +1,551 @@
+"""Composable model assembly: embeddings + scanned layer stack + LM head,
+with train / prefill / decode entry points for every assigned family.
+
+Layer execution is organized into *segments* — maximal runs of layers with
+identical cache geometry — each run as one ``lax.scan`` over stacked params
+(single layers applied directly). This keeps HLO size O(#segments) for
+88-layer models while letting Hymba mix ring-buffer (sliding-window) and
+full-length (global) caches, and lets the VLM scan superblocks of
+(cross_attn_every-1 self + 1 cross) layers.
+
+Cache layout (pytree):
+  {"pos": () int32,
+   "seg<i>": {"k": (n,B,Lc,KV,D), "v": ..., "ssm": (n,B,H,P,N),
+              "conv": (n,B,W-1,C)},        # keys optional per family
+   "slot<i>": (Lc,) int32 absolute positions per cache slot (-1 empty),
+   "cross_k"/"cross_v": (nsb,B,T_img,KV,D)  # VLM only
+  }
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import blocks as blk
+from repro.models.layers import (dense, embed, init_dense, init_embed,
+                                 rmsnorm, unembed)
+from repro.sharding import cs
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+
+def _segments(cfg: ModelConfig):
+    """[(start, end, is_global)] — maximal runs of equal cache geometry."""
+    n = cfg.num_layers
+    glb = set(cfg.global_layers) if cfg.window is not None else set()
+    segs, i = [], 0
+    while i < n:
+        g = i in glb
+        j = i
+        while j < n and (j in glb) == g:
+            j += 1
+        segs.append((i, j, g))
+        i = j
+    return segs
+
+
+class Model:
+    """Functional model: ``params`` pytrees in, arrays out."""
+
+    def __init__(self, cfg: ModelConfig, *, remat: bool = False):
+        self.cfg = cfg
+        self.remat = remat  # activation-checkpoint the layer-scan body
+        self.is_vlm = cfg.cross_attn_every > 0
+        self.segments = None if self.is_vlm else _segments(cfg)
+        if self.is_vlm:
+            assert cfg.num_layers % cfg.cross_attn_every == 0
+            self.n_super = cfg.num_layers // cfg.cross_attn_every
+            self.n_inner = cfg.cross_attn_every - 1  # self layers per superblock
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        k_emb, k_blocks, k_cross, k_proj, k_norm = jax.random.split(rng, 5)
+        params: Params = init_embed(k_emb, cfg)
+        params["final_norm"] = jnp.ones((cfg.d_model,), jnp.dtype(cfg.dtype))
+        if self.is_vlm:
+            n_self = self.n_super * self.n_inner
+            keys = jax.random.split(k_blocks, n_self)
+            stacked = jax.vmap(lambda k: blk.init_block(k, cfg))(keys)
+            params["blocks"] = jax.tree.map(
+                lambda a: a.reshape(self.n_super, self.n_inner, *a.shape[1:]),
+                stacked)
+            ckeys = jax.random.split(k_cross, self.n_super)
+            params["cross_blocks"] = jax.vmap(
+                lambda k: blk.init_block(k, cfg, kind="cross"))(ckeys)
+            params["projector"] = init_dense(k_proj, cfg.d_frontend,
+                                             cfg.d_model, jnp.dtype(cfg.dtype))
+        else:
+            keys = jax.random.split(k_blocks, cfg.num_layers)
+            params["blocks"] = jax.vmap(lambda k: blk.init_block(k, cfg))(keys)
+            if cfg.family == "audio":
+                params["projector"] = init_dense(
+                    k_proj, cfg.d_frontend, cfg.d_model, jnp.dtype(cfg.dtype))
+        return params
+
+    # ----------------------------------------------------------- embeddings
+    def _embed_inputs(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            x = dense(batch["frames"].astype(jnp.dtype(cfg.dtype)),
+                      params["projector"])
+        else:
+            x = embed(params, batch["tokens"])
+        return cs(x, "batch", None, None)
+
+    def _seg_params(self, params: Params, i0: int, i1: int):
+        if i1 - i0 == self.cfg.num_layers:
+            return params["blocks"]
+        return jax.tree.map(lambda a: a[i0:i1], params["blocks"])
+
+    def _seg_window(self, is_global: bool) -> Optional[int]:
+        return None if (self.cfg.window is None or is_global) else self.cfg.window
+
+    # -------------------------------------------------------- full-seq pass
+    def forward(self, params: Params, batch: Dict[str, jnp.ndarray],
+                *, want_cache: bool = False, max_len: Optional[int] = None,
+                window_headroom: int = 0
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Cache]]:
+        """Returns (logits (B,S,V), aux_loss, cache-or-None)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        bsz, s, _ = x.shape
+        positions = jnp.arange(s, dtype=jnp.int32)
+        aux_total = jnp.zeros((), jnp.float32)
+        cache: Cache = {"pos": jnp.asarray(s, jnp.int32)} if want_cache else None
+        max_len = max_len or s
+
+        if self.is_vlm:
+            x, aux_total, cache = self._forward_vlm(params, x, batch, positions,
+                                                    want_cache, max_len,
+                                                    window_headroom)
+        else:
+            for si, (i0, i1, is_global) in enumerate(self.segments):
+                seg_p = self._seg_params(params, i0, i1)
+                window = self._seg_window(is_global)
+
+                def body(carry, p_layer, _window=window):
+                    h, aux = carry
+                    h, c, a = blk.block_forward(p_layer, h, positions, cfg,
+                                                window=_window)
+                    if not want_cache:
+                        c = None
+                    return (h, aux + a), c
+
+                if self.remat:
+                    body = jax.checkpoint(body)
+                if i1 - i0 == 1:
+                    p_layer = jax.tree.map(lambda a: a[i0], params["blocks"])
+                    (x, aux_total), c = body((x, aux_total), p_layer)
+                    caches = jax.tree.map(lambda a: a[None], c) if c else None
+                else:
+                    (x, aux_total), caches = jax.lax.scan(
+                        body, (x, aux_total), seg_p)
+                if want_cache:
+                    clen = max_len if window is None else \
+                        min(window + window_headroom, max_len)
+                    seg_cache, slot = _pack_cache(caches, s, clen, cfg)
+                    cache[f"seg{si}"] = seg_cache
+                    cache[f"slot{si}"] = slot
+
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params, x, cfg.vocab_size)
+        return logits, aux_total, cache
+
+    def _forward_vlm(self, params, x, batch, positions, want_cache, max_len,
+                     window_headroom=0):
+        cfg = self.cfg
+        img = dense(batch["image_embeds"].astype(jnp.dtype(cfg.dtype)),
+                    params["projector"])
+        img = cs(img, "batch", None, None)
+        ck, cv = jax.vmap(
+            lambda p: attn_mod.cross_kv(p["cross"], img, cfg)
+        )(params["cross_blocks"])                     # (nsb,B,T,KV,D)
+        aux = jnp.zeros((), jnp.float32)
+
+        def super_body(carry, xs):
+            h, aux_c = carry
+            p_self, p_cross, k_i, v_i = xs
+
+            def inner(hc, p_layer):
+                hh, c, a = blk.block_forward(p_layer, hc[0], positions, cfg,
+                                             window=cfg.window)
+                if not want_cache:
+                    c = None
+                return (hh, hc[1] + a), c
+
+            (h, aux_c), caches = jax.lax.scan(inner, (h, aux_c), p_self)
+            h = blk.cross_block_forward(p_cross, h, k_i, v_i, cfg)
+            return (h, aux_c), caches
+
+        if self.remat:
+            super_body = jax.checkpoint(super_body)
+        (x, aux), caches = jax.lax.scan(
+            super_body, (x, aux),
+            (params["blocks"], params["cross_blocks"], ck, cv))
+        cache = None
+        if want_cache:
+            s = x.shape[1]
+            caches = jax.tree.map(
+                lambda a: a.reshape(self.n_super * self.n_inner, *a.shape[2:]),
+                caches)
+            clen = max_len if cfg.window is None else \
+                min(cfg.window + window_headroom, max_len)
+            seg_cache, slot = _pack_cache(caches, s, clen, cfg)
+            cache = {"pos": jnp.asarray(s, jnp.int32), "seg0": seg_cache,
+                     "slot0": slot, "cross_k": ck, "cross_v": cv}
+        return x, aux, cache
+
+    # --------------------------------------------------------------- losses
+    def loss(self, params: Params, batch: Dict[str, jnp.ndarray]
+             ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        cfg = self.cfg
+        logits, aux, _ = self.forward(params, batch)
+        labels = batch["labels"]
+        nll = _token_nll(logits, labels)                        # (B,S) f32
+        mask = batch.get("mask")
+        if mask is None:
+            mask = (labels >= 0).astype(jnp.float32)
+        else:
+            mask = mask.astype(jnp.float32)
+        denom = jnp.maximum(mask.sum(), 1.0)
+        ce = (nll * mask).sum() / denom
+        total = ce
+        if cfg.moe is not None:
+            total = total + cfg.moe.router_aux_coef * aux
+        return total, {"ce": ce, "aux": aux,
+                       "ppl_proxy": jnp.exp(jnp.minimum(ce, 20.0))}
+
+    # -------------------------------------------------------------- prefill
+    def prefill(self, params: Params, batch: Dict[str, jnp.ndarray],
+                max_len: int, *, window_headroom: int = 0
+                ) -> Tuple[jnp.ndarray, Cache]:
+        """``window_headroom`` > 0 (engines pass their lookahead) gives ring
+        caches extra slots so a verification chunk that wraps the ring
+        cannot clobber keys still inside the attention window."""
+        logits, _, cache = self.forward(params, batch, want_cache=True,
+                                        max_len=max_len,
+                                        window_headroom=window_headroom)
+        return logits[:, -1], cache
+
+    # ----------------------------------------------------------- init_cache
+    def init_cache(self, batch_size: int, max_len: int,
+                   filled: Optional[int] = None,
+                   window_headroom: int = 0) -> Cache:
+        """Zero cache (dry-run / serving). ``filled`` marks slots < filled
+        as already occupied (decode-shape dry-runs start from a full cache)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        filled = 0 if filled is None else filled
+        cache: Cache = {"pos": jnp.asarray(filled, jnp.int32)}
+        segs = [(0, self.n_super * self.n_inner, False)] if self.is_vlm \
+            else self.segments
+        for si, (i0, i1, is_global) in enumerate(segs):
+            n = i1 - i0
+            window = self._seg_window(is_global)
+            clen = max_len if window is None else \
+                min(window + window_headroom, max_len)
+            seg: Dict[str, jnp.ndarray] = {}
+            if cfg.attn:
+                kv_shape = (n, batch_size, clen, cfg.num_kv_heads, cfg.head_dim)
+                seg["k"] = jnp.zeros(kv_shape, dt)
+                seg["v"] = jnp.zeros(kv_shape, dt)
+            if cfg.ssm is not None:
+                from repro.models.mamba2 import init_mamba_cache
+                ssm, conv = init_mamba_cache(cfg, batch_size, dt)
+                seg["ssm"] = jnp.tile(ssm[None], (n, 1, 1, 1, 1))
+                seg["conv"] = jnp.tile(conv[None], (n, 1, 1, 1))
+            cache[f"seg{si}"] = seg
+            if cfg.attn:
+                slots = jnp.arange(clen, dtype=jnp.int32)
+                # slot i holds the latest position p < filled with
+                # p % clen == i (or -1 if that slot was never written)
+                if filled >= clen:
+                    pos0 = filled - 1 - jnp.mod(filled - 1 - slots, clen)
+                elif filled:
+                    pos0 = jnp.where(slots < filled, slots, -1)
+                else:
+                    pos0 = jnp.full((clen,), -1, jnp.int32)
+                cache[f"slot{si}"] = pos0.astype(jnp.int32)
+            else:
+                cache[f"slot{si}"] = None
+        if self.is_vlm:
+            kv_shape = (self.n_super, batch_size, cfg.num_image_tokens,
+                        cfg.num_kv_heads, cfg.head_dim)
+            cache["cross_k"] = jnp.zeros(kv_shape, dt)
+            cache["cross_v"] = jnp.zeros(kv_shape, dt)
+        return cache
+
+    # ----------------------------------------------------------- decode step
+    def decode_step(self, params: Params, cache: Cache,
+                    tokens: jnp.ndarray) -> Tuple[jnp.ndarray, Cache]:
+        """One token per sequence. tokens (B,1) -> (logits (B,V), cache')."""
+        cfg = self.cfg
+        assert cfg.causal, "encoder-only models have no decode step"
+        pos = cache["pos"]
+        x = embed(params, tokens)
+        x = cs(x, "batch", None, None)
+        new_cache: Cache = {"pos": pos + 1}
+
+        if self.is_vlm:
+            segs = [(0, self.n_super * self.n_inner, False)]
+        else:
+            segs = self.segments
+
+        for si, (i0, i1, is_global) in enumerate(segs):
+            window = self._seg_window(is_global)
+            seg_cache = cache[f"seg{si}"]
+            slot_pos = cache.get(f"slot{si}")
+            if self.is_vlm:
+                x, new_seg = self._decode_vlm_stack(params, x, seg_cache,
+                                                    slot_pos, pos, cache)
+            else:
+                seg_p = self._seg_params(params, i0, i1)
+
+                def body(h, xs, _w=window, _slot=slot_pos):
+                    p_layer, c_layer = xs
+                    h, c2 = blk.block_decode(p_layer, h, c_layer, _slot, pos,
+                                             cfg, window=_w)
+                    return h, c2
+
+                if i1 - i0 == 1:
+                    p_layer = jax.tree.map(lambda a: a[i0], params["blocks"])
+                    c_layer = jax.tree.map(lambda a: a[0], seg_cache)
+                    x, c2 = body(x, (p_layer, c_layer))
+                    new_seg = jax.tree.map(lambda a: a[None], c2)
+                else:
+                    x, new_seg = jax.lax.scan(body, x, (seg_p, seg_cache))
+            new_cache[f"seg{si}"] = new_seg
+            if slot_pos is not None:
+                clen = slot_pos.shape[0]
+                new_cache[f"slot{si}"] = jnp.where(
+                    jnp.arange(clen) == jnp.mod(pos, clen), pos, slot_pos
+                ).astype(jnp.int32)
+            else:
+                new_cache[f"slot{si}"] = None
+        if self.is_vlm:
+            new_cache["cross_k"] = cache["cross_k"]
+            new_cache["cross_v"] = cache["cross_v"]
+
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params, x, cfg.vocab_size)
+        return logits[:, 0], new_cache
+
+    # --------------------------------------------------- verification chunk
+    def verify_chunk(self, params: Params, cache: Cache, tokens: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, Cache]:
+        """Process W tokens starting at ``cache['pos']`` against the cache —
+        the DSI verification forward. Returns (logits (B,W,V), cache') where
+        cache' holds per-position recurrent states (``ssm_states``,
+        ``conv_full``) for rollback via :meth:`commit`; attention kv is
+        written in place (overwrite-safe, no rollback needed) and ``pos`` is
+        *not* advanced (commit does that)."""
+        cfg = self.cfg
+        assert cfg.causal
+        pos = cache["pos"]
+        b, w = tokens.shape
+        x = embed(params, tokens)
+        x = cs(x, "batch", None, None)
+        new_cache: Cache = {"pos": pos}
+
+        segs = [(0, self.n_super * self.n_inner, False)] if self.is_vlm \
+            else self.segments
+        for si, (i0, i1, is_global) in enumerate(segs):
+            window = self._seg_window(is_global)
+            seg_cache = cache[f"seg{si}"]
+            slot_pos = cache.get(f"slot{si}")
+            slot_new = slot_pos
+            if slot_pos is not None:
+                clen = slot_pos.shape[0]
+                positions = pos + jnp.arange(w, dtype=jnp.int32)
+                slots = jnp.mod(positions, clen)
+                slot_new = slot_pos.at[slots].set(positions)
+            new_cache[f"slot{si}"] = slot_new
+            if self.is_vlm:
+                x, new_seg = self._verify_vlm_stack(params, x, seg_cache,
+                                                    slot_new, pos, cache)
+            else:
+                seg_p = self._seg_params(params, i0, i1)
+
+                def body(h, xs, _w=window, _slot=slot_new):
+                    p_layer, c_layer = xs
+                    h, c2 = blk.block_verify(p_layer, h, c_layer, _slot, pos,
+                                             cfg, window=_w)
+                    return h, c2
+
+                if i1 - i0 == 1:
+                    p_layer = jax.tree.map(lambda a: a[i0], params["blocks"])
+                    c_layer = jax.tree.map(lambda a: a[0], seg_cache)
+                    x, c2 = body(x, (p_layer, c_layer))
+                    new_seg = jax.tree.map(lambda a: a[None], c2)
+                else:
+                    x, new_seg = jax.lax.scan(body, x, (seg_p, seg_cache))
+            new_cache[f"seg{si}"] = new_seg
+        if self.is_vlm:
+            new_cache["cross_k"] = cache["cross_k"]
+            new_cache["cross_v"] = cache["cross_v"]
+
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params, x, cfg.vocab_size)
+        return logits, new_cache
+
+    def _verify_vlm_stack(self, params, x, seg_cache, slot_new, pos, cache):
+        cfg = self.cfg
+        seg_cache_s = jax.tree.map(
+            lambda a: a.reshape(self.n_super, self.n_inner, *a.shape[1:]),
+            seg_cache)
+
+        def super_body(h, xs):
+            p_self, p_cross, c_self, k_i, v_i = xs
+
+            def inner(hh, ys):
+                p_layer, c_layer = ys
+                hh, c2 = blk.block_verify(p_layer, hh, c_layer, slot_new, pos,
+                                          cfg, window=cfg.window)
+                return hh, c2
+
+            h, new_c = jax.lax.scan(inner, h, (p_self, c_self))
+            h = blk.cross_block_forward(p_cross, h, k_i, v_i, cfg)
+            return h, new_c
+
+        x, new_seg = jax.lax.scan(
+            super_body, x,
+            (params["blocks"], params["cross_blocks"], seg_cache_s,
+             cache["cross_k"], cache["cross_v"]))
+        new_seg = jax.tree.map(
+            lambda a: a.reshape(self.n_super * self.n_inner, *a.shape[2:]),
+            new_seg)
+        return x, new_seg
+
+    def commit(self, cache_before: Cache, cache_after: Cache,
+               n_advance: jnp.ndarray) -> Cache:
+        """Fold a verify_chunk result into a decode-ready cache, advancing
+        ``pos`` by ``n_advance`` (the accepted prefix length) and selecting
+        the recurrent state at that offset."""
+        cfg = self.cfg
+        out: Cache = {"pos": cache_before["pos"] + n_advance}
+        for key, val in cache_after.items():
+            if key == "pos":
+                continue
+            if not key.startswith("seg"):
+                out[key] = val
+                continue
+            seg = dict(val)
+            if "ssm_states" in seg:
+                before = cache_before[key]["ssm"]               # (n,B,H,P,N)
+                states = seg.pop("ssm_states")                  # (n,B,W,H,P,N)
+                ext = jnp.concatenate([before[:, :, None], states], axis=2)
+                seg["ssm"] = jax.lax.dynamic_index_in_dim(
+                    ext, n_advance, axis=2, keepdims=False)
+                conv_full = seg.pop("conv_full")                # (n,B,W-1+W,C)
+                wconv = cfg.ssm.conv_width - 1
+                seg["conv"] = jax.lax.dynamic_slice_in_dim(
+                    conv_full, n_advance, wconv, axis=2)
+            out[key] = seg
+        return out
+
+    def _decode_vlm_stack(self, params, x, seg_cache, slot_pos, pos, cache):
+        cfg = self.cfg
+        blocks = params["blocks"]  # already (nsb, inner, ...)
+        seg_cache_s = jax.tree.map(
+            lambda a: a.reshape(self.n_super, self.n_inner, *a.shape[1:]),
+            seg_cache)
+
+        def super_body(h, xs):
+            p_self, p_cross, c_self, k_i, v_i = xs
+
+            def inner(hh, ys):
+                p_layer, c_layer = ys
+                hh, c2 = blk.block_decode(p_layer, hh, c_layer, slot_pos, pos,
+                                          cfg, window=cfg.window)
+                return hh, c2
+
+            h, new_c = jax.lax.scan(inner, h, (p_self, c_self))
+            h = blk.cross_block_forward(p_cross, h, k_i, v_i, cfg)
+            return h, new_c
+
+        x, new_seg = jax.lax.scan(
+            super_body, x,
+            (blocks, params["cross_blocks"], seg_cache_s,
+             cache["cross_k"], cache["cross_v"]))
+        new_seg = jax.tree.map(
+            lambda a: a.reshape(self.n_super * self.n_inner, *a.shape[2:]),
+            new_seg)
+        return x, new_seg
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def _token_nll(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Per-token -log p(label) with fp32 reductions over model-dtype logits.
+
+    Custom VJP keeps logits (and their cotangent softmax-minus-onehot) in
+    the model dtype: a plain autodiff CE on fp32 logits materializes fp32
+    (B,S,V) residuals and doubles the vocab-dim collectives in backward
+    (§Perf iteration on minitron-4b train_4k — EXPERIMENTS.md)."""
+    m = jax.lax.stop_gradient(logits.max(-1, keepdims=True))
+    z = jnp.exp((logits - m).astype(jnp.float32)).sum(-1)
+    lse = m[..., 0].astype(jnp.float32) + jnp.log(z)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - ll.astype(jnp.float32)
+
+
+def _token_nll_fwd(logits, labels):
+    m = jax.lax.stop_gradient(logits.max(-1, keepdims=True))
+    z = jnp.exp((logits - m).astype(jnp.float32)).sum(-1)
+    lse = m[..., 0].astype(jnp.float32) + jnp.log(z)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - ll.astype(jnp.float32), (logits, labels, m, z)
+
+
+def _token_nll_bwd(res, g):
+    logits, labels, m, z = res
+    # d nll / d logits = softmax(logits) - onehot(label), in model dtype.
+    # Everything here must stay vocab-sharded: an unconstrained one_hot
+    # made GSPMD replicate the (B,S,V) cotangent over the model axis
+    # (64 GB/dev all-gathers on 256k vocab — §Perf finding).
+    p = jnp.exp((logits - m).astype(jnp.float32)) / z[..., None]
+    p = cs(p, "batch", None, "model")
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    onehot = cs(onehot, "batch", None, "model")
+    dlogits = ((p - onehot) * g[..., None]).astype(logits.dtype)
+    return cs(dlogits, "batch", None, "model"), None
+
+
+_token_nll.defvjp(_token_nll_fwd, _token_nll_bwd)
+
+
+def _pack_cache(caches: Dict[str, jnp.ndarray], s: int, clen: int, cfg):
+    """Convert stacked per-layer prefill caches (L,B,S,KV,D / states) into a
+    decode cache of length ``clen`` (ring layout) + slot positions."""
+    out: Dict[str, jnp.ndarray] = {}
+    slot_pos = None
+    for key, arr in (caches or {}).items():
+        if key in ("ssm", "conv"):
+            out[key] = arr
+            continue
+        # arr (L,B,S,KV,D); keep last clen positions at slots pos % clen
+        if s <= clen:
+            pad = [(0, 0), (0, 0), (0, clen - s), (0, 0), (0, 0)]
+            out[key] = jnp.pad(arr, pad)
+            slot_pos = jnp.concatenate([
+                jnp.arange(s, dtype=jnp.int32),
+                jnp.full((clen - s,), -1, jnp.int32)])
+        else:
+            pos = jnp.arange(s - clen, s, dtype=jnp.int32)
+            slots = jnp.mod(pos, clen)
+            ring = jnp.zeros(arr.shape[:2] + (clen,) + arr.shape[3:], arr.dtype)
+            ring = ring.at[:, :, slots].set(arr[:, :, pos])
+            out[key] = ring
+            slot_pos = jnp.zeros((clen,), jnp.int32).at[slots].set(pos)
+    return out, slot_pos
+
+
+@functools.lru_cache(maxsize=None)
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

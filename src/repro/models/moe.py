@@ -1,0 +1,248 @@
+"""Fine-grained MoE with shared experts (DeepSeek-MoE / Kimi-K2 style).
+
+Expert parallelism: routed experts are sharded over the ``model`` mesh axis
+via ``shard_map``; each device dispatches *its own* tokens (batch-sharded
+over ``data``) to its local experts with a capacity buffer, runs the expert
+matmuls, scatter-adds back, and a single ``psum`` over ``model`` combines
+expert contributions. Expert weights additionally carry an FSDP shard on
+the ff dim over ``data`` (storage); the shard_map boundary all-gathers them
+per layer inside the scan.
+
+The baseline combine is the psum variant; the all-to-all dispatch variant
+(`repro.models.moe_a2a`) is a §Perf iteration.
+
+Without a mesh (or when experts don't divide the axis) a single-device
+reference path with identical semantics runs instead.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import dense, init_dense
+from repro.sharding import cs, current_mesh
+
+_CAP_ROUND = 8
+
+
+def init_moe(key, cfg) -> dict:
+    ks = jax.random.split(key, 7)
+    dt = jnp.dtype(cfg.dtype)
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    scale = (1.0 / d) ** 0.5
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * scale,
+        "experts_up": (jax.random.normal(ks[1], (e, d, ff), jnp.float32) * scale).astype(dt),
+        "experts_gate": (jax.random.normal(ks[2], (e, d, ff), jnp.float32) * scale).astype(dt),
+        "experts_down": (jax.random.normal(ks[3], (e, ff, d), jnp.float32)
+                         * (1.0 / ff) ** 0.5).astype(dt),
+    }
+    ns = cfg.moe.num_shared_experts
+    if ns:
+        p["shared_up"] = init_dense(ks[4], d, ns * ff, dt)
+        p["shared_gate"] = init_dense(ks[5], d, ns * ff, dt)
+        p["shared_down"] = init_dense(ks[6], ns * ff, d, dt)
+    return p
+
+
+def _route(xf: jnp.ndarray, router: jnp.ndarray, top_k: int
+           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (weights (T,k), indices (T,k), aux_loss)."""
+    logits = xf.astype(jnp.float32) @ router
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, top_k)
+    topv = topv / (topv.sum(-1, keepdims=True) + 1e-9)
+    # Switch-style load-balance aux loss.
+    e = router.shape[1]
+    frac_prob = probs.mean(0)                                     # (E,)
+    counts = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(1.0)
+    frac_tok = counts / counts.sum()
+    aux = e * jnp.sum(frac_prob * frac_tok)
+    return topv, topi, aux
+
+
+def _expert_compute(xg: jnp.ndarray, up, gate, down, act: str) -> jnp.ndarray:
+    """xg (E_loc, C, d) -> (E_loc, C, d) through each expert's MLP."""
+    h = jnp.einsum("ecd,edf->ecf", xg, up, preferred_element_type=jnp.float32)
+    if act == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", xg, gate, preferred_element_type=jnp.float32)
+        h = jax.nn.silu(g) * h
+    else:
+        h = jnp.square(jax.nn.relu(h))
+    h = h.astype(xg.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, down, preferred_element_type=jnp.float32
+                      ).astype(xg.dtype)
+
+
+def _dispatch_combine(xf, topv, topi, up, gate, down, *, e_offset: int,
+                      e_local: int, capacity: int, act: str) -> jnp.ndarray:
+    """Capacity-buffer dispatch of local tokens to local experts."""
+    t, d = xf.shape
+    k = topi.shape[1]
+    tk = t * k
+    tok_of = jnp.arange(tk, dtype=jnp.int32) // k
+    e_idx = topi.reshape(-1).astype(jnp.int32) - e_offset
+    mine = (e_idx >= 0) & (e_idx < e_local)
+    e_idx = jnp.where(mine, e_idx, e_local)                        # sentinel
+    onehot = e_idx[:, None] == jnp.arange(e_local, dtype=jnp.int32)[None, :]
+    pos = jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1         # (tk, E_loc)
+    slot = jnp.where(onehot & (pos < capacity), pos, -1)
+    slot_flat = slot.max(axis=1)                                   # (tk,)
+    keep = mine & (slot_flat >= 0)
+    dest = jnp.where(keep, e_idx * capacity + slot_flat, e_local * capacity)
+    buf_tok = jnp.zeros((e_local * capacity + 1,), jnp.int32).at[dest].set(tok_of, mode="drop")
+    buf_w = jnp.zeros((e_local * capacity + 1,), jnp.float32).at[dest].set(
+        jnp.where(keep, topv.reshape(-1), 0.0), mode="drop")
+    disp_tok = buf_tok[:-1].reshape(e_local, capacity)
+    disp_w = buf_w[:-1].reshape(e_local, capacity)
+
+    xg = jnp.take(xf, disp_tok.reshape(-1), axis=0).reshape(e_local, capacity, d)
+    yg = _expert_compute(xg, up, gate, down, act)
+    contrib = (yg.astype(jnp.float32) * disp_w[..., None]).reshape(-1, d)
+    out = jnp.zeros((t, d), jnp.float32).at[disp_tok.reshape(-1)].add(contrib)
+    return out.astype(xf.dtype)
+
+
+def _capacity(tokens: int, top_k: int, n_experts: int, factor: float) -> int:
+    c = int(math.ceil(factor * tokens * top_k / n_experts))
+    return max(_CAP_ROUND, ((c + _CAP_ROUND - 1) // _CAP_ROUND) * _CAP_ROUND)
+
+
+# token-count threshold below which the weight-stationary decode path wins
+# (napkin: gathering tokens costs T·d·2B vs gathering weights 3·E·d·ff·2B/16
+#  per layer — for decode T ≤ a few thousand the token side is ~10⁴× smaller)
+_WS_TOKEN_THRESHOLD = 16384
+
+
+def _moe_weight_stationary(params, x, cfg, cap_f, mesh):
+    """Decode-optimized expert parallelism: weights stay fully sharded
+    (experts over ``model``, ff over ``data``); the *tokens* are
+    all-gathered instead (§Perf iteration — see EXPERIMENTS.md). Every
+    device computes its (expert-shard × ff-shard) contribution for the
+    global token set; one psum over the mesh combines. SwiGLU is
+    elementwise over ff so the ff shard never needs regrouping.
+    """
+    b, s, d = x.shape
+    mcfg = cfg.moe
+    e = mcfg.num_experts
+    m = mesh.shape["model"]
+    e_loc = e // m
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_batch = 1
+    for a in batch_axes:
+        n_batch *= mesh.shape[a]
+    shard_batch = n_batch > 1 and b % n_batch == 0
+    t_glob = b * s
+    cap = _capacity(t_glob, mcfg.top_k, e, cap_f)
+    ff_axes = tuple(a for a in ("data",) if a in mesh.axis_names)
+    ff_shards = mesh.shape["data"] if "data" in mesh.axis_names else 1
+    ff_ok = cfg.d_ff % ff_shards == 0
+
+    def fn(xb, router, up, gate, down):
+        if shard_batch:
+            for ax in reversed(batch_axes):
+                xb = jax.lax.all_gather(xb, ax, axis=0, tiled=True)
+        xf = xb.reshape(t_glob, d)
+        topv, topi, aux = _route(xf, router, mcfg.top_k)
+        e0 = jax.lax.axis_index("model") * e_loc
+        y = _dispatch_combine(xf, topv, topi, up, gate, down,
+                              e_offset=e0, e_local=e_loc, capacity=cap,
+                              act=cfg.mlp_act)
+        y = jax.lax.psum(y, ("model",) + (ff_axes if ff_ok else ()))
+        y = y.reshape(b, s, d)
+        if shard_batch:
+            idx = 0
+            for ax in batch_axes:
+                idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
+            y = jax.lax.dynamic_slice_in_dim(y, idx * (b // n_batch),
+                                             b // n_batch, axis=0)
+        return y, aux
+
+    bspec = P(batch_axes if len(batch_axes) > 1
+              else (batch_axes[0] if batch_axes and shard_batch else None),
+              None, None)
+    if not shard_batch:
+        bspec = P(None, None, None)
+    wspec_up = P("model", None, "data" if ff_ok and ff_shards > 1 else None)
+    wspec_dn = P("model", "data" if ff_ok and ff_shards > 1 else None, None)
+    y, aux = jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(bspec, P(None, None), wspec_up, wspec_up, wspec_dn),
+        out_specs=(bspec, P()),
+        check_vma=False,
+    )(x, params["router"], params["experts_up"], params["experts_gate"],
+      params["experts_down"])
+    return y, aux
+
+
+def moe_apply(params: dict, x: jnp.ndarray, cfg,
+              capacity_factor: Optional[float] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B,S,d) -> (y (B,S,d), aux_loss scalar)."""
+    b, s, d = x.shape
+    mcfg = cfg.moe
+    e = mcfg.num_experts
+    cap_f = capacity_factor or mcfg.capacity_factor
+    mesh = current_mesh()
+    ep = (mesh is not None and "model" in mesh.axis_names
+          and mesh.shape["model"] > 1 and e % mesh.shape["model"] == 0)
+
+    if ep and b * s <= _WS_TOKEN_THRESHOLD:
+        y, aux = _moe_weight_stationary(params, x, cfg, cap_f, mesh)
+    elif ep:
+        m = mesh.shape["model"]
+        e_loc = e // m
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        n_batch_shards = 1
+        for a in batch_axes:
+            n_batch_shards *= mesh.shape[a]
+        if n_batch_shards > 1 and b % n_batch_shards:
+            batch_axes, n_batch_shards = (), 1  # e.g. batch=1 long-decode
+        t_loc = (b // n_batch_shards) * s
+        cap = _capacity(t_loc, mcfg.top_k, e, cap_f)
+
+        def fn(xb, router, up, gate, down):
+            tloc = xb.shape[0] * xb.shape[1]
+            xf = xb.reshape(tloc, d)
+            topv, topi, aux = _route(xf, router, mcfg.top_k)
+            for ax in batch_axes:  # global aux estimate
+                aux = jax.lax.pmean(aux, ax)
+            e0 = jax.lax.axis_index("model") * e_loc
+            y = _dispatch_combine(xf, topv, topi, up, gate, down,
+                                  e_offset=e0, e_local=e_loc, capacity=cap,
+                                  act=cfg.mlp_act)
+            y = jax.lax.psum(y, "model")
+            return y.reshape(xb.shape), aux
+
+        bspec = P(batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None), None, None)
+        y, aux = jax.shard_map(
+            fn, mesh=mesh,
+            in_specs=(bspec, P(None, None), P("model", None, None),
+                      P("model", None, None), P("model", None, None)),
+            out_specs=(bspec, P()),
+            check_vma=False,
+        )(x, params["router"], params["experts_up"], params["experts_gate"],
+          params["experts_down"])
+    else:
+        xf = x.reshape(b * s, d)
+        topv, topi, aux = _route(xf, params["router"], mcfg.top_k)
+        cap = _capacity(b * s, mcfg.top_k, e, cap_f)
+        y = _dispatch_combine(xf, topv, topi, params["experts_up"],
+                              params["experts_gate"], params["experts_down"],
+                              e_offset=0, e_local=e, capacity=cap,
+                              act=cfg.mlp_act)
+        y = y.reshape(b, s, d)
+
+    if mcfg.num_shared_experts:
+        h = dense(x, params["shared_up"])
+        if cfg.mlp_act == "swiglu":
+            g = jax.nn.silu(dense(x, params["shared_gate"]).astype(jnp.float32))
+            h = (g * h.astype(jnp.float32)).astype(x.dtype)
+        else:
+            h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+        y = y + dense(h, params["shared_down"])
+    return cs(y, "batch", None, None), aux

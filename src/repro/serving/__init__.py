@@ -1,0 +1,2 @@
+from repro.serving.engine import ServingEngine, Request  # noqa: F401
+from repro.serving.servers import DSIOrchestrator  # noqa: F401

@@ -1,0 +1,90 @@
+"""Serving engine: request queue + batching over the JAX generation paths.
+
+Modes:
+  "nonsi" — batched autoregressive decoding (throughput path): requests
+            are left-padded into one batch, prefilled once, decoded in
+            lockstep.
+  "si"    — per-stream blocking speculative decoding (SIEngine).
+  "dsi"   — per-stream speculation-parallel decoding (DSIEngine) — the
+            paper's latency path.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dsi_jax import DSIEngine, _softmax
+from repro.core.si_jax import SIEngine, nonsi_generate
+from repro.models.model import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    output: Optional[List[int]] = None
+    stats: Optional[object] = None
+
+
+@dataclass
+class ServingEngine:
+    target: Model
+    params_t: dict
+    drafter: Optional[Model] = None
+    params_d: Optional[dict] = None
+    mode: str = "dsi"
+    lookahead: int = 8
+    rule: str = "exact"
+    max_batch: int = 8
+    _queue: List[Request] = field(default_factory=list)
+    _rid: itertools.count = field(default_factory=itertools.count)
+
+    def submit(self, prompt: List[int], max_new: int) -> Request:
+        req = Request(next(self._rid), list(prompt), max_new)
+        self._queue.append(req)
+        return req
+
+    # --------------------------------------------------------------- run
+    def run(self) -> List[Request]:
+        done: List[Request] = []
+        while self._queue:
+            if self.mode == "nonsi":
+                batch = self._queue[:self.max_batch]
+                del self._queue[:len(batch)]
+                self._run_nonsi_batch(batch)
+                done.extend(batch)
+            else:
+                req = self._queue.pop(0)
+                self._run_spec(req)
+                done.append(req)
+        return done
+
+    def _run_spec(self, req: Request):
+        assert self.drafter is not None and self.params_d is not None
+        cls = DSIEngine if self.mode == "dsi" else SIEngine
+        eng = cls(self.target, self.drafter, lookahead=self.lookahead,
+                  rule=self.rule)
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        out, stats = eng.generate(self.params_t, self.params_d, prompt,
+                                  req.max_new)
+        req.output = np.asarray(out)[0].tolist()
+        req.stats = stats
+
+    def _run_nonsi_batch(self, batch: List[Request]):
+        # left-pad prompts to a common length, decode in lockstep
+        max_p = max(len(r.prompt) for r in batch)
+        max_new = max(r.max_new for r in batch)
+        toks = np.zeros((len(batch), max_p), np.int32)
+        for i, r in enumerate(batch):
+            toks[i, max_p - len(r.prompt):] = r.prompt
+        out = nonsi_generate(self.target, self.params_t,
+                             jnp.asarray(toks), max_new)
+        arr = np.asarray(out)
+        for i, r in enumerate(batch):
+            r.output = arr[i, :r.max_new].tolist()

@@ -1,0 +1,145 @@
+"""The paper's *online* DSI: an OS-thread pool of target servers plus a
+drafter, orchestrated exactly as in §4 ("we implemented DSI as a
+multithreading system … thread pool of targets and a single drafter").
+
+``target_fn``/``drafter_fn`` abstract the servers — they can wrap real JAX
+models (tests do) or latency-model stubs (``make_wait_fns``) that sleep for
+TTFT/TPOT like the paper's single-GPU-extrapolation experiment, incurring
+genuine thread-management costs (context switches, queueing).
+
+Exact-match (greedy) verification; the drafter runs on the calling thread
+(its own "server"), verification tasks go to the SP-sized pool, and a
+rejection cancels all outstanding work beyond the corrected position
+(Algorithm 1 lines 8/10 — realized as epoch-tagged task invalidation).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.core.planner import min_lookahead
+
+# target_fn(prefix_tokens) -> greedy tokens for each position of
+#   prefix_tokens[ctx_len:]  plus one extra (the "next" token): i.e. given
+#   the full context it returns the target's token at every position after
+#   ``verify_from`` — the standard batched verification forward.
+TargetFn = Callable[[Sequence[int], int], List[int]]
+DrafterFn = Callable[[Sequence[int]], int]
+
+
+@dataclass
+class OnlineStats:
+    tasks: int = 0
+    rejections: int = 0
+    accepted: int = 0
+    wall_s: float = 0.0
+    timeline: list = field(default_factory=list)
+
+
+class DSIOrchestrator:
+    def __init__(self, target_fn: TargetFn, drafter_fn: DrafterFn, *,
+                 sp: int, lookahead: Optional[int] = None,
+                 target_latency: Optional[float] = None,
+                 drafter_latency: Optional[float] = None):
+        self.target_fn = target_fn
+        self.drafter_fn = drafter_fn
+        self.sp = sp
+        if lookahead is None:
+            assert target_latency and drafter_latency, \
+                "need latencies to derive the minimal feasible lookahead (Eq. 1)"
+            lookahead = min_lookahead(target_latency, drafter_latency, sp)
+        self.lookahead = lookahead
+
+    def generate(self, prompt: Sequence[int], n_new: int
+                 ) -> Tuple[List[int], OnlineStats]:
+        stats = OnlineStats()
+        t0 = time.monotonic()
+        out = list(prompt)
+        n_prompt = len(prompt)
+        with ThreadPoolExecutor(max_workers=self.sp) as pool:
+            while len(out) - n_prompt < n_new:
+                # one "run": draft ahead, verifying blocks concurrently
+                ctx = list(out)
+                drafts: List[int] = []
+                futures = deque()          # (start_offset, block_len, fut)
+                rejected = False
+                while not rejected:
+                    # draft the next block (the drafter never blocks on
+                    # verification — the pool works in the background)
+                    blk = min(self.lookahead,
+                              max(1, n_new - (len(ctx) + len(drafts) - n_prompt)))
+                    for _ in range(blk):
+                        drafts.append(self.drafter_fn(ctx + drafts))
+                    start = len(drafts) - blk
+                    snapshot = ctx + drafts
+                    fut = pool.submit(self.target_fn, snapshot,
+                                      len(ctx) + start)
+                    futures.append((start, blk, fut))
+                    stats.tasks += 1
+
+                    # drain any completed verifications, in block order
+                    while futures and (futures[0][2].done()
+                                       or len(futures) >= self.sp
+                                       or len(ctx) + len(drafts) - n_prompt
+                                       >= n_new):
+                        f_start, f_blk, f = futures.popleft()
+                        tgt = f.result()   # target tokens for the block + 1
+                        n_ok = 0
+                        for i in range(f_blk):
+                            if drafts[f_start + i] == tgt[i]:
+                                n_ok += 1
+                            else:
+                                break
+                        stats.accepted += n_ok
+                        if n_ok < f_blk:   # rejection => correction token
+                            stats.rejections += 1
+                            out = ctx + drafts[:f_start + n_ok] + [tgt[n_ok]]
+                            stats.timeline.append(
+                                (time.monotonic() - t0, len(out) - n_prompt))
+                            for _, _, g in futures:
+                                g.cancel()
+                            futures.clear()
+                            rejected = True
+                            break
+                        out = ctx + drafts[:f_start + f_blk]
+                        stats.timeline.append(
+                            (time.monotonic() - t0, len(out) - n_prompt))
+                    if len(out) - n_prompt >= n_new:
+                        break
+                if len(out) - n_prompt >= n_new:
+                    break
+        stats.wall_s = time.monotonic() - t0
+        return out[n_prompt:n_prompt + n_new], stats
+
+
+def make_wait_fns(target_tokens: Sequence[int], acceptance: float, *,
+                  target_latency: float, drafter_latency: float,
+                  n_prompt: int = 0, seed: int = 0):
+    """Latency-model servers (the paper's wait-command methodology): the
+    target's greedy stream is fixed; the drafter matches it with prob
+    ``acceptance`` per position; forwards sleep for their latency.
+    Positions are absolute context indices; ``n_prompt`` anchors the
+    stream at the first generated position."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    stream = list(target_tokens)
+
+    def tok_at(pos: int) -> int:
+        rel = pos - n_prompt
+        return stream[rel] if 0 <= rel < len(stream) else 0
+
+    def target_fn(context: Sequence[int], verify_from: int) -> List[int]:
+        time.sleep(target_latency)
+        return [tok_at(i) for i in range(verify_from, len(context) + 1)]
+
+    def drafter_fn(context: Sequence[int]) -> int:
+        time.sleep(drafter_latency)
+        tok = tok_at(len(context))
+        if rng.random() < acceptance:
+            return tok
+        return tok + 1  # deliberately wrong
+
+    return target_fn, drafter_fn

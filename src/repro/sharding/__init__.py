@@ -1,0 +1,3 @@
+from repro.sharding.rules import (  # noqa: F401
+    cs, current_mesh, logical_to_spec, param_specs, use_mesh,
+)

@@ -1,0 +1,156 @@
+"""Logical-axis sharding rules.
+
+Model code annotates activations/params with *logical* axis names; this
+module maps them to physical mesh axes for whatever mesh is active:
+
+  batch  -> ("pod", "data")   (whichever of the two exist in the mesh)
+  model  -> "model"           (tensor/expert parallel)
+  expert -> "model"
+  fsdp   -> "data"            (FSDP'd weight dims: gathered per-layer in scan)
+  seq    -> "model"           (context parallelism: used for MQA decode caches
+                               and as a §Perf iteration for activations)
+  spec   -> "spec"            (DSI speculation-parallel axis, engine meshes)
+
+On a single CPU device (smoke tests) there is no mesh and ``cs`` is the
+identity, so the same model code runs everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+_LOGICAL = {
+    "batch": ("pod", "data"),
+    "model": ("model",),
+    "expert": ("model",),
+    "fsdp": ("data",),
+    # context parallelism: on the DSI serving mesh the spec axis joins the
+    # model axis in sharding cache sequence dims — "more target servers"
+    # (paper §3.1) realized as more shards of the verification attention
+    "seq": ("spec", "model"),
+    "spec": ("spec",),
+}
+
+Logical = Union[str, None, Sequence[str]]
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = current_mesh()
+    _STATE.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _STATE.mesh = prev
+
+
+def _resolve_one(mesh: Mesh, name: str):
+    axes = tuple(a for a in _LOGICAL.get(name, ()) if a in mesh.axis_names)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def logical_to_spec(mesh: Mesh, dims: Sequence[Logical]) -> P:
+    parts = []
+    for d in dims:
+        if d is None:
+            parts.append(None)
+        elif isinstance(d, str):
+            parts.append(_resolve_one(mesh, d))
+        else:  # tuple of logical names mapped onto one tensor dim
+            axes = []
+            for name in d:
+                r = _resolve_one(mesh, name)
+                if r is None:
+                    continue
+                axes.extend(r if isinstance(r, tuple) else (r,))
+            parts.append(tuple(axes) if axes else None)
+    return P(*parts)
+
+
+def _axis_size(mesh: Mesh, part) -> int:
+    if part is None:
+        return 1
+    parts = part if isinstance(part, tuple) else (part,)
+    n = 1
+    for a in parts:
+        n *= mesh.shape[a]
+    return n
+
+
+def cs(x: jax.Array, *dims: Logical) -> jax.Array:
+    """with_sharding_constraint against the active mesh (identity if none).
+
+    Dims smaller than their shard count (e.g. batch=1 long-decode) fall back
+    to replicated; non-divisible-but-larger dims (e.g. 25 heads over 16) are
+    left to GSPMD padding.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    assert len(dims) == x.ndim, f"{dims} vs rank {x.ndim}"
+    spec = logical_to_spec(mesh, dims)
+    parts = [p if _axis_size(mesh, p) <= x.shape[i] else None
+             for i, p in enumerate(spec)]
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*parts)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules, keyed on the param's path inside the params dict.
+# Shapes below exclude the stacked leading layer dim (handled by the caller).
+# ---------------------------------------------------------------------------
+
+_PARAM_RULES = (
+    # (path-substring, logical dims). First match wins — "unembed" must
+    # precede "embed" (substring!).
+    ("unembed", (None, "model")),               # (d, V)
+    ("embed", ("model", None)),                 # (V, d): vocab over model
+    ("projector", (None, "model")),             # (d_frontend, d)
+    ("wq", (None, "model")),
+    ("wk", (None, "model")),
+    ("wv", (None, "model")),
+    ("wo", ("model", None)),
+    ("w_up", (None, "model")),                  # mlp in (d, ff)
+    ("w_gate", (None, "model")),
+    ("w_down", ("model", None)),                # mlp out (ff, d)
+    ("experts_up", ("expert", None, "fsdp")),   # (E, d, ff): FSDP over ff
+    ("experts_gate", ("expert", None, "fsdp")),
+    ("experts_down", ("expert", "fsdp", None)),  # (E, ff, d)
+    ("router", (None, None)),
+    ("ssm_in", (None, "model")),                # (d, zxbcdt)
+    ("ssm_out", ("model", None)),               # (d_inner, d)
+    ("conv_w", (None, "model")),                # (width, channels)
+)
+
+
+def _rule_for(path: str, ndim: int):
+    for key, dims in _PARAM_RULES:
+        if key in path:
+            return dims if len(dims) == ndim else (None,) * (ndim - len(dims)) + tuple(dims)
+    return (None,) * ndim  # norms, biases, scalars: replicated
+
+
+def param_specs(mesh: Mesh, params) -> "jax.tree_util.PyTreeDef":
+    """NamedSharding pytree for a params pytree (stacked layer dims stay
+    unsharded: rules apply to the trailing dims)."""
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        dims = _rule_for(pstr, leaf.ndim)
+        spec = logical_to_spec(mesh, dims)
+        # explicit in_shardings must divide exactly (unlike constraints,
+        # which GSPMD pads) — fall back to replicated otherwise
+        parts = [p if leaf.shape[i] % _axis_size(mesh, p) == 0 else None
+                 for i, p in enumerate(spec)]
+        return NamedSharding(mesh, P(*parts))
+    return jax.tree_util.tree_map_with_path(one, params)

@@ -1,0 +1,1 @@
+from repro.training.optimizer import adamw_init, adamw_update  # noqa: F401

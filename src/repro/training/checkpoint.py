@@ -1,0 +1,68 @@
+"""npz-based checkpointing (no orbax dependency).
+
+Pytrees are flattened to path-keyed arrays; restore rebuilds against a
+template (shapes/dtypes verified) and re-places onto the template's
+shardings when present. Writes are atomic (tmp + rename).
+"""
+from __future__ import annotations
+
+import os
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "||"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "biufc":  # bf16/fp8 etc: npz-unfriendly
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save(path, tree, *, step: int | None = None) -> str:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    tmp = path.with_suffix(".tmp.npz")
+    np.savez(tmp, **flat)
+    os.replace(tmp, path)
+    return str(path)
+
+
+def restore(path, template) -> Any:
+    data = np.load(path, allow_pickle=False)
+    leaves_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for p, leaf in leaves_t:
+        key = _SEP.join(str(getattr(q, "key", getattr(q, "idx", q)))
+                        for q in p)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        arr = jax.numpy.asarray(arr).astype(leaf.dtype)
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None and hasattr(leaf, "addressable_shards"):
+            arr = jax.device_put(arr, sharding)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(path) -> int | None:
+    try:
+        data = np.load(path, allow_pickle=False)
+        return int(data["__step__"]) if "__step__" in data else None
+    except (FileNotFoundError, OSError):
+        return None

@@ -1,0 +1,38 @@
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+from repro.configs import get_config, reduced
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tiny(name: str, *, layers: int = 2, d_model: int = 256,
+         dtype: str = "float32", **kw):
+    """Reduced fp32 config (bit-stable greedy streams for lossless tests)."""
+    cfg = reduced(get_config(name), layers=layers, d_model=d_model, **kw)
+    return dataclasses.replace(cfg, dtype=dtype)
+
+
+def make_batch(cfg, key, batch=2, seq=32):
+    import jax.numpy as jnp
+    out = {}
+    if cfg.family == "audio":
+        out["frames"] = jax.random.normal(key, (batch, seq, cfg.d_frontend))
+        out["labels"] = jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+        out["mask"] = (jax.random.uniform(key, (batch, seq)) < 0.3).astype(jnp.int32)
+        return out
+    out["tokens"] = jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+    out["labels"] = jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+    if cfg.cross_attn_every:
+        out["image_embeds"] = jax.random.normal(
+            key, (batch, cfg.num_image_tokens, cfg.d_frontend))
+    return out

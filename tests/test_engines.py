@@ -1,0 +1,120 @@
+"""End-to-end engine losslessness: DSI and SI greedy streams equal the
+target's autoregressive greedy stream, across model families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.core.dsi_jax import DSIEngine
+from repro.core.si_jax import SIEngine, nonsi_generate
+from repro.models.model import Model
+
+FAMS = ["yi-9b", "deepseek-moe-16b", "mamba2-370m", "hymba-1.5b",
+        "llama-3.2-vision-11b"]
+
+
+def _setup(name, rng):
+    cfg_t = tiny(name)
+    cfg_d = tiny(name, d_model=128)
+    mt, md = Model(cfg_t), Model(cfg_d)
+    pt = mt.init(jax.random.PRNGKey(0))
+    pd = md.init(jax.random.PRNGKey(1))
+    prompt = jax.random.randint(rng, (1, 12), 0, cfg_t.vocab_size)
+    extra = {}
+    if cfg_t.cross_attn_every:
+        extra["image_embeds"] = jax.random.normal(
+            rng, (1, cfg_t.num_image_tokens, cfg_t.d_frontend))
+    return mt, md, pt, pd, prompt, extra
+
+
+@pytest.mark.parametrize("name", FAMS)
+def test_dsi_engine_lossless(name, rng):
+    mt, md, pt, pd, prompt, extra = _setup(name, rng)
+    n_new = 20
+    ref = nonsi_generate(mt, pt, prompt, n_new, extra_inputs=extra)
+    out, stats = DSIEngine(mt, md, lookahead=4, rule="exact").generate(
+        pt, pd, prompt, n_new, extra_inputs=extra)
+    assert np.array_equal(np.asarray(out), np.asarray(ref)), name
+    assert stats.emitted >= n_new
+
+
+@pytest.mark.parametrize("name", ["yi-9b", "mamba2-370m"])
+def test_si_engine_lossless(name, rng):
+    mt, md, pt, pd, prompt, extra = _setup(name, rng)
+    n_new = 20
+    ref = nonsi_generate(mt, pt, prompt, n_new, extra_inputs=extra)
+    out, _ = SIEngine(mt, md, lookahead=4, rule="exact").generate(
+        pt, pd, prompt, n_new, extra_inputs=extra)
+    assert np.array_equal(np.asarray(out), np.asarray(ref)), name
+
+
+def test_perfect_drafter_hides_verification(rng):
+    """Drafter == target => zero rejections; macro steps ≈ n/lookahead —
+    the paper's 'verification latency fully hidden' regime."""
+    cfg = tiny("yi-9b")
+    m = Model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(rng, (1, 8), 0, cfg.vocab_size)
+    out, stats = DSIEngine(m, m, lookahead=4, rule="exact").generate(
+        p, p, prompt, 20)
+    ref = nonsi_generate(m, p, prompt, 20)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+    assert stats.rejections == 0
+    assert stats.macro_steps <= 20 // 4 + 3
+
+
+def test_leviathan_rule_runs_and_emits(rng):
+    cfg_t, cfg_d = tiny("yi-9b"), tiny("yi-9b", d_model=128)
+    mt, md = Model(cfg_t), Model(cfg_d)
+    pt, pd = mt.init(jax.random.PRNGKey(0)), md.init(jax.random.PRNGKey(1))
+    prompt = jax.random.randint(rng, (1, 8), 0, cfg_t.vocab_size)
+    out, stats = DSIEngine(mt, md, lookahead=4, rule="leviathan").generate(
+        pt, pd, prompt, 16, key=jax.random.PRNGKey(5))
+    arr = np.asarray(out)
+    assert arr.shape == (1, 16)
+    assert ((0 <= arr) & (arr < cfg_t.vocab_size)).all()
+
+
+def test_verify_chunk_matches_decode_steps(rng):
+    for name in ("yi-9b", "mamba2-370m", "hymba-1.5b"):
+        cfg = tiny(name)
+        m = Model(cfg)
+        p = m.init(jax.random.PRNGKey(0))
+        prompt = jax.random.randint(rng, (1, 16), 0, cfg.vocab_size)
+        toks = jax.random.randint(rng, (1, 6), 0, cfg.vocab_size)
+        _, cache = m.prefill(p, {"tokens": prompt}, max_len=48)
+        logits_v, cache_v = m.verify_chunk(p, cache, toks)
+        c = cache
+        outs = []
+        for i in range(6):
+            l, c = m.decode_step(p, c, toks[:, i:i + 1])
+            outs.append(l)
+        logits_d = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(logits_v)[..., :cfg.vocab_size],
+            np.asarray(logits_d)[..., :cfg.vocab_size],
+            rtol=2e-4, atol=2e-4, err_msg=name)
+
+
+def test_commit_rolls_recurrent_state(rng):
+    """After commit(n), continuing with decode matches an uninterrupted
+    stream — the SSM rollback correctness core."""
+    cfg = tiny("mamba2-370m")
+    m = Model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(rng, (1, 10), 0, cfg.vocab_size)
+    toks = jax.random.randint(rng, (1, 5), 0, cfg.vocab_size)
+    _, cache0 = m.prefill(p, {"tokens": prompt}, max_len=40)
+    # path A: verify 5, commit only 3, then decode token 3 fresh
+    _, cache_v = m.verify_chunk(p, cache0, toks)
+    cache_c = m.commit(cache0, cache_v, jnp.asarray(3))
+    lA, _ = m.decode_step(p, cache_c, toks[:, 3:4])
+    # path B: plain decode of tokens 0..3
+    c = cache0
+    for i in range(3):
+        _, c = m.decode_step(p, c, toks[:, i:i + 1])
+    lB, _ = m.decode_step(p, c, toks[:, 3:4])
+    np.testing.assert_allclose(np.asarray(lA)[..., :cfg.vocab_size],
+                               np.asarray(lB)[..., :cfg.vocab_size],
+                               rtol=2e-4, atol=2e-4)

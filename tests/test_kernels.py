@@ -1,0 +1,103 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True), sweeping
+shapes/dtypes per the assignment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.spec_verify.ref import spec_verify_ref
+from repro.kernels.spec_verify.spec_verify import spec_verify
+from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+
+
+@pytest.mark.parametrize("b,sq,sk,h,kv,d", [
+    (2, 256, 256, 4, 2, 64),
+    (1, 128, 384, 8, 8, 128),
+    (2, 256, 256, 4, 1, 64),
+    (1, 384, 384, 6, 3, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 128),
+                                           (False, None)])
+def test_flash_attention(b, sq, sk, h, kv, d, dtype, causal, window, rng):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, sk, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, sk, kv, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          q_offset=sk - sq, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window,
+                        q_offset=sk - sq)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_blocked_jnp_path_matches_ref(rng):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (2, 320, 4, 64))
+    k = jax.random.normal(ks[1], (2, 320, 2, 64))
+    v = jax.random.normal(ks[2], (2, 320, 2, 64))
+    out = attention(q, k, v, causal=True, chunk=64, force_pallas=False)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("k,v,bv", [(4, 64, 32), (8, 1000, 256),
+                                    (3, 512, 512), (16, 257, 64),
+                                    (1, 128, 128)])
+def test_spec_verify_kernel(k, v, bv, rng):
+    ks = jax.random.split(rng, 5)
+    dp = jax.nn.softmax(jax.random.normal(ks[0], (k, v)) * 2)
+    tp = jax.nn.softmax(jax.random.normal(ks[1], (k + 1, v)) * 2)
+    dt = jax.random.randint(ks[2], (k,), 0, v)
+    ua = jax.random.uniform(ks[3], (k + 1,))
+    ur = jax.random.uniform(ks[4], (k + 1,))
+    a_ref, t_ref = spec_verify_ref(dt, dp, tp, ua, ur)
+    a_k, t_k = spec_verify(dt, dp, tp, ua, ur, bv=bv, interpret=True)
+    assert np.array_equal(np.asarray(a_k), np.asarray(a_ref))
+    assert np.array_equal(np.asarray(t_k), np.asarray(t_ref))
+
+
+def test_spec_verify_ops_equals_core_verify(rng):
+    """kernel wrapper == core.verify.leviathan_verify given same uniforms."""
+    from repro.kernels.spec_verify.ops import verify_and_sample
+    k, v = 6, 128
+    ks = jax.random.split(rng, 3)
+    dp = jax.nn.softmax(jax.random.normal(ks[0], (k, v)) * 2)
+    tp = jax.nn.softmax(jax.random.normal(ks[1], (k + 1, v)) * 2)
+    dt = jax.random.randint(ks[2], (k,), 0, v)
+    n1, t1 = verify_and_sample(rng, dt, dp, tp, interpret=True)
+    n2, t2 = verify_and_sample(rng, dt, dp, tp, force_pallas=False)
+    assert int(n1) == int(n2)
+    assert int(t1) == int(t2)
+
+
+@pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
+    (2, 128, 4, 64, 1, 16, 32),
+    (1, 256, 8, 64, 2, 32, 64),
+    (2, 96, 4, 32, 4, 16, 48),
+    (1, 64, 2, 64, 1, 128, 64),
+])
+def test_ssd_scan_kernel(b, s, h, p, g, n, chunk, rng):
+    ks = jax.random.split(rng, 6)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bm = jax.random.normal(ks[3], (b, s, g, n))
+    cm = jax.random.normal(ks[4], (b, s, g, n))
+    init = jax.random.normal(ks[5], (b, h, p, n))
+    y_ref, f_ref = ssd_ref(x, dt, a, bm, cm, chunk, initial_state=init)
+    y_k, f_k = ssd_scan(x * dt[..., None], dt * a[None, None, :], bm, cm,
+                        init, chunk=chunk, interpret=True)
+    scale = float(np.abs(np.asarray(y_ref)).max()) + 1.0
+    np.testing.assert_allclose(np.asarray(y_k) / scale,
+                               np.asarray(y_ref) / scale, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(f_k), np.asarray(f_ref),
+                               rtol=1e-4, atol=1e-4)

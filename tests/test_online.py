@@ -1,0 +1,75 @@
+"""The paper's online (OS-thread-pool) orchestrator."""
+import numpy as np
+import pytest
+
+from repro.serving.servers import DSIOrchestrator, make_wait_fns
+
+
+@pytest.mark.parametrize("acceptance", [0.95, 0.6, 0.2])
+def test_online_dsi_lossless(acceptance):
+    stream = list(np.random.default_rng(0).integers(0, 100, size=40))
+    tf, df = make_wait_fns(stream, acceptance=acceptance,
+                           target_latency=0.004, drafter_latency=0.0005,
+                           n_prompt=3, seed=1)
+    orch = DSIOrchestrator(tf, df, sp=4, target_latency=0.004,
+                           drafter_latency=0.0005)
+    out, stats = orch.generate([1, 2, 3], 40)
+    assert out == stream
+    assert stats.tasks >= 1
+
+
+def test_online_dsi_faster_than_nonsi_when_accurate():
+    n = 60
+    stream = list(range(n))
+    t_t, t_d = 0.01, 0.001
+    tf, df = make_wait_fns(stream, acceptance=0.95, target_latency=t_t,
+                           drafter_latency=t_d, n_prompt=1, seed=0)
+    orch = DSIOrchestrator(tf, df, sp=7, target_latency=t_t,
+                           drafter_latency=t_d)
+    out, stats = orch.generate([0], n)
+    assert out == stream
+    nonsi = n * t_t
+    assert stats.wall_s < nonsi  # hides verification latency
+
+
+def test_eq1_lookahead_derived():
+    tf, df = make_wait_fns([1, 2], acceptance=1.0, target_latency=0.2,
+                           drafter_latency=0.01)
+    orch = DSIOrchestrator(tf, df, sp=4, target_latency=0.2,
+                           drafter_latency=0.01)
+    # ceil(0.2 / (L*0.01)) <= 4  =>  L >= 5
+    assert orch.lookahead == 5
+
+
+def test_real_model_online(rng=None):
+    """Thread-pool orchestrator over real JAX models (greedy)."""
+    import jax
+    import jax.numpy as jnp
+    from conftest import tiny
+    from repro.core.si_jax import nonsi_generate
+    from repro.models.model import Model
+
+    cfg_t, cfg_d = tiny("yi-9b"), tiny("yi-9b", d_model=128)
+    mt, md = Model(cfg_t), Model(cfg_d)
+    pt = mt.init(jax.random.PRNGKey(0))
+    pd = md.init(jax.random.PRNGKey(1))
+    prompt = [5, 9, 17, 3]
+    n_new = 12
+    ref = nonsi_generate(mt, pt, jnp.asarray(prompt, jnp.int32)[None], n_new)
+
+    def target_fn(context, verify_from):
+        toks = jnp.asarray(context, jnp.int32)[None]
+        logits, _, _ = mt.forward(pt, {"tokens": toks})
+        greedy = np.asarray(jnp.argmax(logits[0], -1))
+        # token at position i = argmax of logits at i-1
+        return [int(greedy[i - 1]) for i in range(verify_from,
+                                                  len(context) + 1)]
+
+    def drafter_fn(context):
+        toks = jnp.asarray(context, jnp.int32)[None]
+        logits, _, _ = md.forward(pd, {"tokens": toks})
+        return int(jnp.argmax(logits[0, -1]))
+
+    orch = DSIOrchestrator(target_fn, drafter_fn, sp=2, lookahead=3)
+    out, stats = orch.generate(prompt, n_new)
+    assert out == np.asarray(ref)[0].tolist()

@@ -1,0 +1,152 @@
+"""Distribution correctness on fake multi-device CPU (subprocess so the
+device count doesn't leak into other tests), plus HLO analyzer sanity."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(code: str, devices: int = 8) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=500)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_sharded_forward_matches_single_device():
+    out = _run("""
+        import dataclasses, jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config, reduced
+        from repro.models.model import Model
+        from repro.sharding import use_mesh, param_specs
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        for name in ("deepseek-moe-16b", "hymba-1.5b", "yi-9b"):
+            cfg = reduced(get_config(name))
+            cfg = dataclasses.replace(cfg, dtype="float32")
+            if cfg.moe:
+                cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+                    cfg.moe, num_experts=4, capacity_factor=8.0))
+            m = Model(cfg)
+            params = m.init(jax.random.PRNGKey(0))
+            p_sh = jax.device_put(params, param_specs(mesh, params))
+            batch = {"tokens": jax.random.randint(
+                jax.random.PRNGKey(1), (4, 64), 0, cfg.vocab_size)}
+            def fwd(p, b):
+                return m.forward(p, b)[0]
+            with use_mesh(mesh):
+                out = jax.jit(fwd)(p_sh, batch)
+            ref = fwd(params, batch)
+            err = float(np.abs(np.asarray(out) - np.asarray(ref)).max())
+            scale = float(np.abs(np.asarray(ref)).max())
+            assert err < 5e-3 * scale, (name, err, scale)
+            print(name, "ok", err)
+    """)
+    assert out.count("ok") == 3
+
+
+@pytest.mark.slow
+def test_dryrun_entry_small_mesh():
+    """The dry-run driver itself (reduced device count via the same code
+    path the 512-device runs use)."""
+    out = _run("""
+        from repro.launch.dryrun import run_one
+        rec = run_one("yi-9b", "decode_32k")
+        assert rec["status"] == "ok", rec
+        rl = rec["roofline"]
+        assert rl["t_memory_s"] > 0 and rl["dominant"] in (
+            "compute", "memory", "collective")
+        print("dryrun ok", rl["dominant"])
+    """, devices=512)
+    assert "dryrun ok" in out
+
+
+def test_hlo_analyzer_counts_loops():
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.launch.hlo_analysis import analyze
+
+        def body(c, _):
+            return c @ c, None
+
+        def f(x):
+            y, _ = jax.lax.scan(body, x, None, length=7)
+            return y
+
+        comp = jax.jit(f).lower(jnp.ones((64, 64))).compile()
+        res = analyze(comp.as_text())
+        expect = 7 * 2 * 64**3
+        assert abs(res["flops"] - expect) / expect < 0.01, res["flops"]
+        print("analyzer ok", res["flops"])
+    """, devices=1)
+    assert "analyzer ok" in out
+
+
+@pytest.mark.slow
+def test_moe_weight_stationary_matches_ref():
+    """Decode-path MoE (gather tokens, not weights) == reference math."""
+    out = _run("""
+        import dataclasses, jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config, reduced
+        from repro.models import moe as moe_mod
+        from repro.models.model import Model
+        from repro.sharding import use_mesh, param_specs
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        cfg = reduced(get_config("deepseek-moe-16b"))
+        cfg = dataclasses.replace(cfg, dtype="float32",
+                                  moe=dataclasses.replace(
+                                      cfg.moe, num_experts=4,
+                                      capacity_factor=8.0))
+        m = Model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        p_sh = jax.device_put(params, param_specs(mesh, params))
+        for b, s in ((4, 8), (1, 8)):  # sharded + unshardable batch
+            assert b * s <= moe_mod._WS_TOKEN_THRESHOLD
+            batch = {"tokens": jax.random.randint(
+                jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)}
+            def fwd(p, bb):
+                return m.forward(p, bb)[0]
+            with use_mesh(mesh):
+                out = jax.jit(fwd)(p_sh, batch)
+            ref = fwd(params, batch)
+            err = float(np.abs(np.asarray(out) - np.asarray(ref)).max())
+            assert err < 1e-3, (b, s, err)
+            print("ws ok", b, s, err)
+    """)
+    assert out.count("ws ok") == 2
+
+
+def test_param_specs_divisible():
+    out = _run("""
+        import jax
+        from repro.configs import get_config
+        from repro.models.model import Model
+        from repro.sharding import param_specs
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        cfg = get_config("hymba-1.5b")  # awkward dims (25 heads, 6482)
+        shapes = jax.eval_shape(Model(cfg).init, jax.random.PRNGKey(0))
+        specs = param_specs(mesh, shapes)
+        def check(path, leaf, spec):
+            for i, p in enumerate(spec.spec):
+                if p is None:
+                    continue
+                axes = p if isinstance(p, tuple) else (p,)
+                n = 1
+                for a in axes:
+                    n *= dict(mesh.shape)[a]
+                assert leaf.shape[i] % n == 0, (path, leaf.shape, spec)
+        jax.tree_util.tree_map_with_path(check, shapes, specs)
+        print("specs ok")
+    """)
+    assert "specs ok" in out

@@ -1,0 +1,75 @@
+"""Substrate: optimizer, checkpoint, data pipeline, tokenizer, planner."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.planner import plan
+from repro.data import ByteTokenizer, SyntheticLM, TokenPipeline
+from repro.training import checkpoint
+from repro.training.optimizer import adamw_init, adamw_update, cosine_lr
+
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.array([3.0, -2.0])}
+    opt = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - 1.0) ** 2)
+
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(params, g, opt, lr=5e-2,
+                                      weight_decay=0.0)
+    assert float(loss(params)) < 1e-3
+
+
+def test_cosine_schedule_shape():
+    assert float(cosine_lr(0, peak=1.0, warmup=10, total=100)) < 0.2
+    assert abs(float(cosine_lr(10, peak=1.0, warmup=10, total=100)) - 1.0) < 0.15
+    assert float(cosine_lr(100, peak=1.0, warmup=10, total=100)) < 0.05
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+            "b": jnp.ones((4,), jnp.bfloat16)}
+    path = tmp_path / "ckpt.npz"
+    checkpoint.save(path, tree, step=7)
+    restored = checkpoint.restore(path, jax.tree.map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert checkpoint.latest_step(path) == 7
+
+
+def test_tokenizer_roundtrip():
+    tok = ByteTokenizer()
+    s = "DSI hides verification latency ✓"
+    assert tok.decode(tok.encode(s)) == s
+
+
+def test_pipeline_shapes_and_labels():
+    pipe = TokenPipeline(SyntheticLM(100), batch=4, seq_len=16)
+    b = next(pipe)
+    assert b["tokens"].shape == (4, 16) and b["labels"].shape == (4, 16)
+    # labels are next-token shifted
+    flat = next(pipe)
+    assert (flat["tokens"][:, 1:] == flat["labels"][:, :-1]).all()
+
+
+def test_synthetic_stream_learnable():
+    """Bigram structure: successor entropy far below uniform."""
+    src = SyntheticLM(64, seed=1)
+    it = src.stream()
+    toks = [next(it) for _ in range(20_000)]
+    pair_counts = {}
+    for a, b in zip(toks, toks[1:]):
+        pair_counts.setdefault(a, []).append(b)
+    distinct = np.mean([len(set(v)) for v in pair_counts.values()
+                        if len(v) > 50])
+    assert distinct < 30  # far fewer than 64 uniform successors
+
+
+def test_planner_respects_budget():
+    p = plan(1.0, 0.05, n_processors=8)
+    assert p.total_servers <= 8
+    assert p.sp >= 1 and p.lookahead >= 1

@@ -1,0 +1,77 @@
+"""Lossless verification rules: distribution preservation + forced prefix."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.verify import batched_verify, exact_verify, leviathan_verify
+
+
+def test_exact_verify_prefix():
+    tp = jax.nn.one_hot(jnp.array([3, 1, 2, 0]), 5)  # greedy targets 3,1,2 / bonus 0
+    n, nxt = exact_verify(jnp.array([3, 1, 9]), tp)
+    assert int(n) == 2 and int(nxt) == 2
+    n, nxt = exact_verify(jnp.array([3, 1, 2]), tp)
+    assert int(n) == 3 and int(nxt) == 0  # all accepted -> bonus
+
+
+def test_exact_verify_forced():
+    tp = jax.nn.one_hot(jnp.array([3, 1, 2, 0]), 5)
+    n, _ = exact_verify(jnp.array([9, 1, 2]), tp, n_forced=1)
+    assert int(n) == 3  # first token force-accepted
+
+
+def test_leviathan_marginal_preserved(rng):
+    """Monte Carlo: first output token ~ target marginal (losslessness)."""
+    v, k, n = 5, 2, 30_000
+    p_d = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(1), (k, v)) * 1.5)
+    p_t = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(2), (k + 1, v)) * 1.5)
+
+    def one(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        d0 = jax.random.categorical(k1, jnp.log(p_d[0]))
+        d1 = jax.random.categorical(k2, jnp.log(p_d[1]))
+        n_acc, nxt = leviathan_verify(k3, jnp.stack([d0, d1]), p_d, p_t)
+        return jnp.where(n_acc >= 1, d0, nxt)
+
+    toks = jax.vmap(one)(jax.random.split(rng, n))
+    emp = np.bincount(np.asarray(toks), minlength=v) / n
+    np.testing.assert_allclose(emp, np.asarray(p_t[0]), atol=0.02)
+
+
+def test_leviathan_identical_models_accept_everything(rng):
+    v, k = 16, 6
+    p = jax.nn.softmax(jax.random.normal(rng, (k + 1, v)))
+    drafts = jnp.argmax(p[:k], -1)
+    for s in range(20):
+        n, _ = leviathan_verify(jax.random.PRNGKey(s), drafts, p[:k], p)
+        assert int(n) == k  # ratio p_t/p_d = 1 => u < 1 always
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(1, 8), v=st.integers(2, 64), seed=st.integers(0, 999))
+def test_batched_verify_bounds(k, v, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    dp = jax.nn.softmax(jax.random.normal(ks[0], (3, k, v)))
+    tp = jax.nn.softmax(jax.random.normal(ks[1], (3, k + 1, v)))
+    dt = jax.random.randint(ks[2], (3, k), 0, v)
+    n, nxt = batched_verify(key, dt, dp, tp)
+    assert ((0 <= np.asarray(n)) & (np.asarray(n) <= k)).all()
+    assert ((0 <= np.asarray(nxt)) & (np.asarray(nxt) < v)).all()
+
+
+def test_residual_sampling_never_returns_impossible_token(rng):
+    """Correction token must have positive target probability."""
+    v, k = 8, 1
+    p_t = jnp.array([[0.5, 0.5, 0, 0, 0, 0, 0, 0],
+                     [0.25] * 4 + [0.0] * 4])
+    p_d = jnp.array([[0, 0, 0.5, 0.5, 0, 0, 0, 0.]])
+    for s in range(50):
+        n, nxt = leviathan_verify(jax.random.PRNGKey(s),
+                                  jnp.array([2]), p_d, p_t)
+        if int(n) == 0:
+            assert float(p_t[0, int(nxt)]) > 0
+        else:
+            assert float(p_t[1, int(nxt)]) > 0
