@@ -8,6 +8,11 @@ chunk + overlap; one SI iteration = one blocking target chunk + blocking
 drafting; non-SI = one target forward per token. DSI latency-relevant
 steps exclude hidden verifications per the paper (§3.1): only macro-steps
 containing a rejection surface target latency beyond the drafting floor.
+
+A second section measures *serving throughput*: a mixed queue of
+heterogeneous requests through the continuous-batching slot table vs the
+one-request-at-a-time loop, in jitted-engine-invocation counts (the
+serving cost unit) plus per-request acceptance/bubble stats.
 """
 from __future__ import annotations
 
@@ -21,6 +26,7 @@ from repro.configs import get_config, reduced
 from repro.core.dsi_jax import DSIEngine
 from repro.core.si_jax import SIEngine, nonsi_generate
 from repro.models.model import Model
+from repro.serving.engine import ServingEngine
 
 
 def noisy_params(params, scale: float, key):
@@ -32,20 +38,13 @@ def noisy_params(params, scale: float, key):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def main():
-    cfg = dataclasses.replace(reduced(get_config("yi-9b"), layers=4,
-                                      d_model=256), dtype="float32")
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+def _sweep(model, params, cfg, n_new: int, la: int, noises) -> None:
     prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0,
                                 cfg.vocab_size)
-    n_new = 32
-    la = 4
     ref = nonsi_generate(model, params, prompt, n_new)
-
     print("name,noise,acceptance,dsi_steps,dsi_rejections,si_iters,"
           "nonsi_steps,dsi_lossless,si_lossless")
-    for noise in (0.0, 0.02, 0.05, 0.1, 0.3, 1.0):
+    for noise in noises:
         pd = noisy_params(params, noise, jax.random.PRNGKey(7)) \
             if noise else params
         out_d, st_d = DSIEngine(model, model, lookahead=la, rule="exact"
@@ -60,6 +59,51 @@ def main():
               f"{st_d.rejections},{st_s.macro_steps},{n_new},"
               f"{ok_d},{ok_s}")
         assert ok_d and ok_s, "losslessness must hold at every drafter quality"
+
+
+def _serving(model, params, pd, cfg, *, n_requests: int, max_batch: int,
+             la: int) -> None:
+    rng = np.random.default_rng(0)
+    reqs = [(rng.integers(0, cfg.vocab_size,
+                          size=int(rng.integers(6, 14))).tolist(),
+             int(rng.integers(8, 24))) for _ in range(n_requests)]
+
+    def run(batch_slots: int):
+        eng = ServingEngine(target=model, params_t=params, drafter=model,
+                            params_d=pd, mode="dsi", lookahead=la,
+                            max_batch=batch_slots)
+        for p, m in reqs:
+            eng.submit(p, m)
+        done = eng.run()
+        return eng, done
+
+    eng_seq, done_seq = run(1)
+    eng_cb, done_cb = run(max_batch)
+    by_rid = {r.rid: r for r in done_seq}
+    assert all(r.output == by_rid[r.rid].output for r in done_cb), \
+        "continuous batching must be lossless vs sequential serving"
+    acc = np.mean([r.stats.acceptance_rate for r in done_cb])
+    bub = sum(r.stats.bubbles for r in done_cb)
+    print("name,requests,slots,invocations_sequential,"
+          "invocations_batched,mean_acceptance,total_bubbles")
+    print(f"serving,{n_requests},{max_batch},{eng_seq.engine_invocations},"
+          f"{eng_cb.engine_invocations},{acc:.2f},{bub}")
+
+
+def main(smoke: bool = False) -> None:
+    layers, d_model = (2, 192) if smoke else (4, 256)
+    cfg = dataclasses.replace(reduced(get_config("yi-9b"), layers=layers,
+                                      d_model=d_model), dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    la = 4
+    noises = (0.0, 0.1) if smoke else (0.0, 0.02, 0.05, 0.1, 0.3, 1.0)
+    _sweep(model, params, cfg, n_new=16 if smoke else 32, la=la,
+           noises=noises)
+    pd = noisy_params(params, 0.05, jax.random.PRNGKey(7))
+    _serving(model, params, pd, cfg,
+             n_requests=4 if smoke else 10,
+             max_batch=2 if smoke else 4, la=la)
 
 
 if __name__ == "__main__":

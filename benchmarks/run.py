@@ -1,5 +1,10 @@
 """Benchmark aggregator — one function per paper table/figure.
-Prints ``name,...`` CSV sections. ``python -m benchmarks.run [--quick]``."""
+Prints ``name,...`` CSV sections.
+
+  python -m benchmarks.run            # everything
+  python -m benchmarks.run --quick    # skip the slow figures
+  python -m benchmarks.run --smoke    # CI perf canary: smallest subset
+"""
 from __future__ import annotations
 
 import sys
@@ -7,8 +12,17 @@ import sys
 
 def main() -> None:
     quick = "--quick" in sys.argv
+    smoke = "--smoke" in sys.argv
     from benchmarks import (bench_kernels, engine_stats, fig2_heatmaps,
                             fig7_lookahead5, table1_timeline, table2_speedups)
+    if smoke:
+        # minimal end-to-end canary: one timeline row + the serving-engine
+        # economics on tiny real models (exercises batched DSI + scheduler)
+        print("== Table 1: token-count timeline ==")
+        table1_timeline.main()
+        print("== Engine-level drafter-quality sweep (real models) ==")
+        engine_stats.main(smoke=True)
+        return
     print("== Table 1: token-count timeline ==")
     table1_timeline.main()
     print("== Table 2: DSI vs SI speedups (paper rows) ==")

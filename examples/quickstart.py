@@ -1,4 +1,6 @@
-"""Quickstart: lossless DSI speculation on a tiny model pair.
+"""Quickstart: lossless DSI speculation on a tiny model pair — one latency
+stream, then a batch of four independent streams through the same jitted
+macro-step (speculation parallelism × batch parallelism).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -39,3 +41,27 @@ print(f"tokens           : {stats.emitted}")
 print("Each macro step overlaps one target verification with one drafter "
       "window — with an accurate drafter, verification latency is hidden "
       "(paper §3.1).")
+
+# ----------------------------------------------------------------- batched
+# Four streams, different contents and different lengths, one jitted step:
+# every stream advances independently (per-stream windows, bubbles, cache
+# positions) and each equals its own greedy reference.
+b = 4
+prompts = jax.random.randint(jax.random.PRNGKey(3), (b, 16), 0,
+                             cfg_t.vocab_size)
+n_new_per_stream = [32, 20, 28, 24]
+batched_ref = nonsi_generate(target, params_t, prompts,
+                             max(n_new_per_stream))
+batched_out, batched_stats = engine.generate(params_t, params_d, prompts,
+                                             n_new_per_stream)
+for i in range(b):
+    n = n_new_per_stream[i]
+    assert np.array_equal(np.asarray(batched_out)[i, :n],
+                          np.asarray(batched_ref)[i, :n]), i
+print(f"\nbatched: {b} streams lossless in {batched_stats.macro_steps} "
+      "macro steps (vs "
+      f"{sum(p.macro_steps for p in batched_stats.per_stream)} if run "
+      "one-at-a-time)")
+for i, p in enumerate(batched_stats.per_stream):
+    print(f"  stream {i}: emitted={p.emitted:3d} "
+          f"acceptance={p.acceptance_rate:.2f} bubbles={p.bubbles}")

@@ -10,40 +10,62 @@ paper "target server"):
   step s:   verify window w_s (target, W positions)   ∥   draft W more
             tokens (drafter, speculative continuation of w_s)
 
-Pipeline invariants at step start (B = 1 stream):
-  * ``window`` — W tokens at positions [tp, tp+W) where tp = target cache
-    pos; ``forced`` of its leading tokens are already confirmed (a
-    correction token re-entering the pipeline).
-  * ``carry``  — the target's distribution for position tp (from the
-    previous verification's last row, or the prefill logits).
-  * ``prefetch`` — the draft for position tp+W (drafted last step).
-  * drafter cache sits at position tp+W (it produced the window + prefetch).
+The macro-step is *batched*: B independent streams advance through the
+same jitted step (speculation parallelism × batch parallelism). All
+pipeline state is per-stream, so stream i can be mid-window while stream
+j is in a rejection bubble:
 
-Outcomes:
-  * full accept — window += drafts; no target latency surfaced (paper §3.1:
-    verification is hidden).
+  * ``active``  (B,) — stream occupies a live slot. Inactive slots run the
+    same computation on garbage (lockstep SPMD) but never emit, never
+    reject, and are force-bubbled every step; admission overwrites them.
+  * ``window`` (B,W) — per-stream W tokens at [tp_b, tp_b+W) where tp_b is
+    stream b's target cache pos; ``forced[b]`` of its leading tokens are
+    already confirmed (a correction token re-entering the pipeline).
+  * ``have_window`` (B,) — stream b's window is live this step (False ⇒
+    this step is a drafting-only *bubble* for that stream).
+  * ``carry`` (B,V) — the target's distribution for position tp_b (from
+    the previous verification's last accepted row, or the prefill logits).
+  * ``prefetch`` (B,) — the draft for position tp_b+W (drafted last step).
+  * drafter cache sits at position tp_b+W (it produced window + prefetch);
+    caches track per-stream positions (``cache["pos"]`` is (B,)).
+
+Outcomes, independently per stream:
+  * full accept — window += drafts; no target latency surfaced (paper
+    §3.1: verification is hidden).
   * rejection at offset j — commit j tokens + the correction token c*; the
     speculative drafts are dead and the next step is a pipeline *bubble*
-    (draft-only), exactly the paper's restart cost. Drafter recurrent state
-    rolls back via the per-position state history collected during
-    drafting; attention caches are overwrite-safe and need no rollback.
+    (draft-only) for that stream only, exactly the paper's restart cost.
+    Drafter recurrent state rolls back via the per-position state history
+    collected during drafting (gathered at each stream's own offset);
+    attention caches are overwrite-safe and need no rollback.
 
-Losslessness: ``rule="exact"`` ⇒ output equals the target's greedy
-decoding token-for-token; ``rule="leviathan"`` ⇒ output follows the target
-distribution (core/verify.py).
+For continuous-batching serving, the engine exposes a slot-table API on
+top of the same jitted step: ``init_slots`` builds an empty B-slot state,
+``admit`` prefills one request (any prompt length) and scatters it into a
+free slot mid-flight, ``retire`` frees a finished slot. See
+docs/serving.md.
+
+Losslessness: ``rule="exact"`` ⇒ every stream's output equals the
+target's greedy decoding token-for-token; ``rule="leviathan"`` ⇒ output
+follows the target distribution (core/verify.py).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.verify import batched_verify
-from repro.models.model import Model
+from repro.models.model import Model, cache_set_row
 
 State = Dict[str, Any]
+
+#: default bound on EngineStats.history — serving loops run indefinitely,
+#: so per-step history must not grow without bound.
+DEFAULT_HISTORY_CAP = 1024
 
 
 def _softmax(logits):
@@ -68,6 +90,21 @@ def _restore_states(cache, states):
         cache[seg] = dict(cache[seg])
         cache[seg][kk] = val
     return cache
+
+
+def _gather_hist(h: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Per-stream gather along a history's leading time axis.
+
+    h (T, n, B, ...), idx (B,) -> (n, B, ...) with out[:, b] = h[idx[b], :, b].
+    """
+    i = idx.reshape((1, 1, -1) + (1,) * (h.ndim - 3))
+    return jnp.take_along_axis(h, i, axis=0)[0]
+
+
+def _where_b(mask: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Per-stream select over cache leaves (n, B, ...); mask (B,)."""
+    m = mask.reshape((1, -1) + (1,) * (a.ndim - 2))
+    return jnp.where(m, a, b)
 
 
 def draft_scan(model: Model, params, cache, t_in, n: int, key, greedy: bool):
@@ -101,12 +138,38 @@ def draft_scan(model: Model, params, cache, t_in, n: int, key, greedy: bool):
 
 @dataclass
 class EngineStats:
+    """Per-stream (or aggregate) speculation accounting.
+
+    ``history`` holds (n_accepted, rejected, n_out) per recorded macro-step
+    and is bounded by ``max_history`` (oldest entries dropped) so serving
+    loops cannot grow it without bound. Counters are never trimmed, and
+    ``acceptance_rate`` is derived from the counters, so it stays exact
+    even after history trimming.
+    """
     macro_steps: int = 0
     bubbles: int = 0
     accepted_drafts: int = 0
     rejections: int = 0
     emitted: int = 0
+    max_history: Optional[int] = DEFAULT_HISTORY_CAP
     history: list = field(default_factory=list)
+    per_stream: Optional[List["EngineStats"]] = None
+
+    def record(self, n_acc: int, rejected: bool, n_out: int,
+               bubble: Optional[bool] = None) -> None:
+        """``bubble`` defaults to ``rejected`` (DSI: a rejection forces a
+        draft-only restart step); blocking SI passes ``bubble=False`` —
+        its rejections cost nothing beyond the iteration itself."""
+        self.macro_steps += 1
+        self.accepted_drafts += int(n_acc)
+        if rejected:
+            self.rejections += 1
+        if rejected if bubble is None else bubble:
+            self.bubbles += 1  # the following step is draft-only
+        self.emitted = int(n_out)
+        self.history.append((int(n_acc), bool(rejected), int(n_out)))
+        if self.max_history is not None and len(self.history) > self.max_history:
+            del self.history[:len(self.history) - self.max_history]
 
     @property
     def acceptance_rate(self) -> float:
@@ -115,7 +178,12 @@ class EngineStats:
 
 
 class DSIEngine:
-    """Target + drafter pair generating with speculation parallelism."""
+    """Target + drafter pair generating with speculation parallelism.
+
+    Batched: ``generate`` advances B streams inside one jitted macro-step;
+    the ``init_slots``/``admit``/``retire`` API drives the same step as a
+    continuous-batching slot table (serving/engine.py).
+    """
 
     def __init__(self, target: Model, drafter: Model, *, lookahead: int = 8,
                  rule: str = "exact"):
@@ -124,19 +192,23 @@ class DSIEngine:
         self.w = lookahead
         self.rule = rule
         self._jit_step = jax.jit(self._macro_step)
+        self._jit_admit = jax.jit(self._admit_row)
+        self.table_max_len: Optional[int] = None
+        self._admissions = 0  # decorrelates sampled bootstraps across admits
 
     # ---------------------------------------------------------- macro-step
     def _macro_step(self, params_t, params_d, state: State) -> State:
         w = self.w
         greedy = self.rule == "exact"
         key, k_draft, k_verify = jax.random.split(state["key"], 3)
+        active = state["active"]
 
-        # (a) drafter: W speculative continuation steps
+        # (a) drafter: W speculative continuation steps (all streams)
         d_toks, d_probs, d_cache, d_hist = draft_scan(
             self.drafter, params_d, state["d_cache"], state["prefetch"], w,
             k_draft, greedy)
 
-        # (b) target: verify the current window (discarded when bubble)
+        # (b) target: verify the current window (discarded where bubble)
         logits, t_post = self.target.verify_chunk(params_t, state["t_cache"],
                                                   state["window"])
         rows = _softmax(logits)                                   # (B,W,V)
@@ -144,12 +216,12 @@ class DSIEngine:
         n_acc, nxt = batched_verify(k_verify, state["window"],
                                     state["window_probs"], target_probs,
                                     n_forced=state["forced"], rule=self.rule)
-        have = state["have_window"]
+        have = state["have_window"] & active
         n_acc = jnp.where(have, n_acc, 0)
         full = have & (n_acc == w)
         rejected = have & (n_acc < w)
 
-        t_cache = self.target.commit(state["t_cache"], t_post, n_acc[0])
+        t_cache = self.target.commit(state["t_cache"], t_post, n_acc)
 
         # (c) emit accepted non-forced window tokens (+ correction if rejected)
         buf, n_out = state["out"], state["n_out"]
@@ -165,16 +237,16 @@ class DSIEngine:
                         nxt[:, None], buf)
         n_out = n_out + rejected.astype(jnp.int32)
 
-        # (d) drafter bookkeeping
+        # (d) drafter bookkeeping, per stream
         # on rejection: roll recurrent state to offset n_acc of the *window*
         # range — the PREVIOUS scan's history covers positions tp-1..tp+W-1.
-        rolled = jax.tree.map(
-            lambda h: jax.lax.dynamic_index_in_dim(h, n_acc[0], 0, False),
-            state["d_hist_prev"])
-        d_cache_rej = _restore_states(d_cache, rolled)
-        d_cache = jax.tree.map(
-            lambda a, b: jnp.where(rejected[0], a, b), d_cache_rej, d_cache)
-        d_cache["pos"] = jnp.where(rejected[0], t_cache["pos"],
+        cur_states = _extract_states(d_cache)
+        rolled = {path: _gather_hist(h, n_acc)
+                  for path, h in state["d_hist_prev"].items()}
+        merged = {path: _where_b(rejected, rolled[path], cur_states[path])
+                  for path in cur_states}
+        d_cache = _restore_states(d_cache, merged)
+        d_cache["pos"] = jnp.where(rejected, t_cache["pos"],
                                    state["d_cache_pos0"] + w)
 
         # (e) assemble next pipeline state
@@ -187,13 +259,15 @@ class DSIEngine:
         pprob_next = jnp.where(rejected[:, None], onehot_nxt,
                                d_probs[:, w - 1])
         # bubble after a rejection; otherwise the assembled window is live
-        have_next = ~rejected
+        # (inactive slots stay bubbled forever)
+        have_next = active & ~rejected
         forced_next = jnp.where(rejected, 1, jnp.zeros_like(state["forced"]))
         forced_next = jnp.where(have, forced_next, state["forced"])
         carry_next = jnp.where(full[:, None], rows[:, w - 1], state["carry"])
 
         return {
-            "key": key, "window": window_next, "window_probs": wprobs_next,
+            "key": key, "active": active,
+            "window": window_next, "window_probs": wprobs_next,
             "have_window": have_next, "forced": forced_next,
             "carry": carry_next, "prefetch": prefetch_next,
             "prefetch_prob": pprob_next, "t_cache": t_cache,
@@ -202,17 +276,41 @@ class DSIEngine:
             "n_acc": n_acc, "rejected": rejected,
         }
 
+    # ------------------------------------------------- stream bootstrapping
+    def _bootstrap(self, d_logits, key):
+        """Initial prefetch (+ distribution) from the drafter's prefill
+        logits; returns (prefetch (B,), prefetch_prob (B,V), key')."""
+        d_prob0 = _softmax(d_logits)
+        if self.rule == "exact":
+            prefetch = jnp.argmax(d_prob0, -1).astype(jnp.int32)
+        else:
+            key, k0 = jax.random.split(key)
+            prefetch = jax.random.categorical(
+                k0, jnp.log(d_prob0 + 1e-30), axis=-1).astype(jnp.int32)
+        return prefetch, d_prob0, key
+
+    @staticmethod
+    def _zero_hist(d_cache, w):
+        states = _extract_states(d_cache)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (w + 1,) + a.shape), states)
+
     # ------------------------------------------------------------ generate
-    def generate(self, params_t, params_d, prompt: jnp.ndarray, n_new: int,
+    def generate(self, params_t, params_d, prompt: jnp.ndarray, n_new,
                  key: Optional[jax.Array] = None, max_len: Optional[int] = None,
                  extra_inputs: Optional[Dict[str, jnp.ndarray]] = None
                  ) -> Tuple[jnp.ndarray, EngineStats]:
-        assert prompt.shape[0] == 1, "DSI engine is a single-stream latency path"
+        """Generate for B streams in lockstep. ``prompt`` (B,S) — streams
+        share a prompt length but not content; ``n_new`` is an int or a
+        per-stream (B,) sequence. Returns (tokens (B, max(n_new)), stats)
+        with ``stats.per_stream[b]`` holding stream b's accounting."""
         b, s = prompt.shape
         w = self.w
+        n_arr = np.broadcast_to(np.asarray(n_new, np.int32), (b,))
+        n_max = int(n_arr.max())
         key = key if key is not None else jax.random.PRNGKey(0)
-        max_len = max_len or (s + n_new + 2 * w + 2)
-        cap = n_new + w + 1
+        max_len = max_len or (s + n_max + 2 * w + 2)
+        cap = n_max + w + 1
 
         batch = {"tokens": prompt, **(extra_inputs or {})}
         t_logits, t_cache = self.target.prefill(params_t, batch,
@@ -221,19 +319,11 @@ class DSIEngine:
         d_logits, d_cache = self.drafter.prefill(params_d, batch,
                                                  max_len=max_len,
                                                  window_headroom=w)
-        d_prob0 = _softmax(d_logits)
-        if self.rule == "exact":
-            prefetch = jnp.argmax(d_prob0, -1).astype(jnp.int32)
-        else:
-            key, k0 = jax.random.split(key)
-            prefetch = jax.random.categorical(
-                k0, jnp.log(d_prob0 + 1e-30), axis=-1).astype(jnp.int32)
+        prefetch, d_prob0, key = self._bootstrap(d_logits, key)
 
-        zero_states = _extract_states(d_cache)
-        hist0 = jax.tree.map(
-            lambda a: jnp.broadcast_to(a[None], (w + 1,) + a.shape), zero_states)
         state: State = {
             "key": key,
+            "active": jnp.ones((b,), bool),
             "window": jnp.zeros((b, w), jnp.int32),
             "window_probs": jnp.zeros((b, w, self.target.cfg.padded_vocab),
                                       jnp.float32),
@@ -243,23 +333,139 @@ class DSIEngine:
             "prefetch": prefetch, "prefetch_prob": d_prob0,
             "t_cache": t_cache, "d_cache": d_cache,
             "d_cache_pos0": d_cache["pos"],
-            "d_hist_prev": hist0,
+            "d_hist_prev": self._zero_hist(d_cache, w),
             "out": jnp.zeros((b, cap), jnp.int32),
             "n_out": jnp.zeros((b,), jnp.int32),
             "n_acc": jnp.zeros((b,), jnp.int32),
             "rejected": jnp.zeros((b,), bool),
         }
 
-        stats = EngineStats()
-        while int(state["n_out"][0]) < n_new:
+        per = [EngineStats() for _ in range(b)]
+        steps = 0
+        n_out = np.zeros((b,), np.int32)
+        while (n_out < n_arr).any():
+            unfinished = n_out < n_arr
             state = self._jit_step(params_t, params_d, state)
-            stats.macro_steps += 1
-            n_acc = int(state["n_acc"][0])
-            rej = bool(state["rejected"][0])
-            if rej:
-                stats.rejections += 1
-                stats.bubbles += 1  # the following step is draft-only
-            stats.accepted_drafts += n_acc
-            stats.history.append((n_acc, rej, int(state["n_out"][0])))
-        stats.emitted = int(state["n_out"][0])
-        return state["out"][:, :n_new], stats
+            steps += 1
+            n_acc = np.asarray(state["n_acc"])
+            rej = np.asarray(state["rejected"])
+            n_out = np.asarray(state["n_out"])
+            for i in range(b):
+                if unfinished[i]:
+                    per[i].record(int(n_acc[i]), bool(rej[i]), int(n_out[i]))
+        stats = _aggregate(per, steps)
+        return state["out"][:, :n_max], stats
+
+    # ------------------------------------------- continuous-batching slots
+    def init_slots(self, n_slots: int, cap: int, max_len: int,
+                   key: Optional[jax.Array] = None) -> State:
+        """Empty slot-table state: ``n_slots`` inactive streams, each with
+        room for ``cap`` emitted tokens and caches of ``max_len`` positions.
+        All later ``admit`` calls must use the same geometry (they do — the
+        engine remembers ``max_len``)."""
+        b, w = n_slots, self.w
+        v = self.target.cfg.padded_vocab
+        self.table_max_len = max_len
+        t_cache = self.target.init_cache(b, max_len, window_headroom=w)
+        d_cache = self.drafter.init_cache(b, max_len, window_headroom=w)
+        return {
+            "key": key if key is not None else jax.random.PRNGKey(0),
+            "active": jnp.zeros((b,), bool),
+            "window": jnp.zeros((b, w), jnp.int32),
+            "window_probs": jnp.zeros((b, w, v), jnp.float32),
+            "have_window": jnp.zeros((b,), bool),
+            "forced": jnp.zeros((b,), jnp.int32),
+            "carry": jnp.zeros((b, v), jnp.float32),
+            "prefetch": jnp.zeros((b,), jnp.int32),
+            "prefetch_prob": jnp.zeros((b, v), jnp.float32),
+            "t_cache": t_cache, "d_cache": d_cache,
+            "d_cache_pos0": d_cache["pos"],
+            "d_hist_prev": self._zero_hist(d_cache, w),
+            "out": jnp.zeros((b, cap), jnp.int32),
+            "n_out": jnp.zeros((b,), jnp.int32),
+            "n_acc": jnp.zeros((b,), jnp.int32),
+            "rejected": jnp.zeros((b,), bool),
+        }
+
+    def _admit_row(self, state: State, slot, t_row, d_row, carry, prefetch,
+                   pprob, hist_row) -> State:
+        """Scatter one prefilled stream into slot ``slot`` (jitted; one
+        compilation regardless of prompt length — prefill rows are
+        S-independent ring caches)."""
+        w, cap = self.w, state["out"].shape[1]
+        v = state["carry"].shape[1]
+
+        def set0(arr, val):
+            val = jnp.asarray(val)
+            return jax.lax.dynamic_update_slice_in_dim(
+                arr, val.astype(arr.dtype), slot, axis=0)
+
+        s = dict(state)
+        s["t_cache"] = cache_set_row(state["t_cache"], t_row, slot)
+        s["d_cache"] = cache_set_row(state["d_cache"], d_row, slot)
+        s["d_cache_pos0"] = set0(state["d_cache_pos0"],
+                                 jnp.reshape(d_row["pos"], (1,)))
+        s["d_hist_prev"] = jax.tree.map(
+            lambda a, r: jax.lax.dynamic_update_slice_in_dim(
+                a, r.astype(a.dtype), slot, axis=2),
+            state["d_hist_prev"], hist_row)
+        s["carry"] = set0(state["carry"], carry)
+        s["prefetch"] = set0(state["prefetch"], prefetch)
+        s["prefetch_prob"] = set0(state["prefetch_prob"], pprob)
+        s["window"] = set0(state["window"], jnp.zeros((1, w), jnp.int32))
+        s["window_probs"] = set0(state["window_probs"],
+                                 jnp.zeros((1, w, v), jnp.float32))
+        s["have_window"] = set0(state["have_window"], jnp.zeros((1,), bool))
+        s["forced"] = set0(state["forced"], jnp.zeros((1,), jnp.int32))
+        s["out"] = set0(state["out"], jnp.zeros((1, cap), jnp.int32))
+        s["n_out"] = set0(state["n_out"], jnp.zeros((1,), jnp.int32))
+        s["n_acc"] = set0(state["n_acc"], jnp.zeros((1,), jnp.int32))
+        s["rejected"] = set0(state["rejected"], jnp.zeros((1,), bool))
+        s["active"] = set0(state["active"], jnp.ones((1,), bool))
+        return s
+
+    def admit(self, params_t, params_d, state: State, slot: int,
+              prompt: jnp.ndarray, *,
+              extra_inputs: Optional[Dict[str, jnp.ndarray]] = None) -> State:
+        """Prefill one request (prompt (1,S), any S) and install it in
+        ``slot`` mid-flight — the continuous-batching admission path."""
+        assert self.table_max_len is not None, "call init_slots first"
+        w = self.w
+        batch = {"tokens": prompt, **(extra_inputs or {})}
+        t_logits, t_row = self.target.prefill(params_t, batch,
+                                              max_len=self.table_max_len,
+                                              window_headroom=w)
+        d_logits, d_row = self.drafter.prefill(params_d, batch,
+                                               max_len=self.table_max_len,
+                                               window_headroom=w)
+        self._admissions += 1
+        k_boot = jax.random.fold_in(state["key"], self._admissions)
+        prefetch, d_prob0, _ = self._bootstrap(d_logits, k_boot)
+        hist_row = self._zero_hist(d_row, w)
+        return self._jit_admit(state, slot, t_row, d_row,
+                               _softmax(t_logits), prefetch, d_prob0,
+                               hist_row)
+
+    @staticmethod
+    def retire(state: State, slot: int) -> State:
+        """Free a finished slot: the stream stops emitting immediately."""
+        return dict(state, active=state["active"].at[slot].set(False))
+
+    def step(self, params_t, params_d, state: State) -> State:
+        """Advance every active stream by one jitted macro-step."""
+        return self._jit_step(params_t, params_d, state)
+
+
+def _aggregate(per: List[EngineStats], steps: int) -> EngineStats:
+    """Fold per-stream stats into one EngineStats (B=1 keeps the seed's
+    single-stream semantics: aggregate == the stream's own stats)."""
+    agg = EngineStats(
+        macro_steps=steps,
+        bubbles=sum(p.bubbles for p in per),
+        accepted_drafts=sum(p.accepted_drafts for p in per),
+        rejections=sum(p.rejections for p in per),
+        emitted=sum(p.emitted for p in per),
+        history=list(per[0].history) if len(per) == 1 else [],
+        per_stream=per,
+    )
+    return agg

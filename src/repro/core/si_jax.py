@@ -6,16 +6,21 @@ iteration drafts ``lookahead`` tokens (blocking), verifies them with one
 target chunk forward (blocking), and only then drafts again — the paper's
 Figure-1 "SI" lane. The first window token each iteration is the previous
 iteration's bonus/correction token (forced-accepted).
+
+Like DSI, the iteration is batched: B streams draft/verify in lockstep
+with per-stream accepted-prefix commits and drafter rollbacks, so SI and
+batched DSI benchmark apples-to-apples at any batch size.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import numpy as np
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.dsi_jax import EngineStats, _softmax, draft_scan
+from repro.core.dsi_jax import (EngineStats, _aggregate, _gather_hist,
+                                _restore_states, _softmax, draft_scan)
 from repro.core.verify import batched_verify
 from repro.models.model import Model
 
@@ -54,7 +59,7 @@ class SIEngine:
         n_acc, nxt = batched_verify(
             k_verify, window, wprobs, target_probs,
             n_forced=jnp.ones((window.shape[0],), jnp.int32), rule=self.rule)
-        t_cache = self.target.commit(state["t_cache"], t_post, n_acc[0])
+        t_cache = self.target.commit(state["t_cache"], t_post, n_acc)
 
         # emit accepted drafts (excluding forced pending) + bonus/correction
         buf, n_out = state["out"], state["n_out"]
@@ -71,11 +76,8 @@ class SIEngine:
         carry = jnp.take_along_axis(
             target_probs, n_acc[:, None, None].repeat(v, -1), axis=1)[:, 0]
         # drafter restarts from the committed frontier every iteration:
-        # roll recurrent state back to the accepted offset
-        from repro.core.dsi_jax import _restore_states
-        rolled = jax.tree.map(
-            lambda h: jax.lax.dynamic_index_in_dim(h, n_acc[0], 0, False),
-            d_hist)
+        # roll recurrent state back to each stream's own accepted offset
+        rolled = {path: _gather_hist(h, n_acc) for path, h in d_hist.items()}
         d_cache = _restore_states(d_cache, rolled)
         d_cache["pos"] = t_cache["pos"]
         return {
@@ -84,15 +86,20 @@ class SIEngine:
             "out": buf, "n_out": n_out, "n_acc": n_acc,
         }
 
-    def generate(self, params_t, params_d, prompt: jnp.ndarray, n_new: int,
+    def generate(self, params_t, params_d, prompt: jnp.ndarray, n_new,
                  key: Optional[jax.Array] = None,
                  max_len: Optional[int] = None,
                  extra_inputs: Optional[dict] = None
                  ) -> Tuple[jnp.ndarray, EngineStats]:
+        """Batched blocking-SI generation. ``prompt`` (B,S); ``n_new`` int
+        or per-stream (B,). Returns (tokens (B, max(n_new)), stats) with
+        ``stats.per_stream[b]`` holding stream b's accounting."""
         b, s = prompt.shape
+        n_arr = np.broadcast_to(np.asarray(n_new, np.int32), (b,))
+        n_max = int(n_arr.max())
         key = key if key is not None else jax.random.PRNGKey(0)
-        max_len = max_len or (s + n_new + 2 * self.w + 2)
-        cap = n_new + self.w + 1
+        max_len = max_len or (s + n_max + 2 * self.w + 2)
+        cap = n_max + self.w + 1
         batch = {"tokens": prompt, **(extra_inputs or {})}
         t_logits, t_cache = self.target.prefill(params_t, batch,
                                                 max_len=max_len,
@@ -113,15 +120,26 @@ class SIEngine:
                  "t_cache": t_cache, "d_cache": d_cache, "out": out,
                  "n_out": jnp.ones((b,), jnp.int32),
                  "n_acc": jnp.zeros((b,), jnp.int32)}
-        stats = EngineStats()
-        while int(state["n_out"][0]) < n_new:
+        per = [EngineStats() for _ in range(b)]
+        steps = 0
+        n_out = np.ones((b,), np.int32)
+        while (n_out < n_arr).any():
+            unfinished = n_out < n_arr
             state = self._jit_step(params_t, params_d, state)
-            stats.macro_steps += 1
-            stats.accepted_drafts += int(state["n_acc"][0]) - 1
-            stats.history.append((int(state["n_acc"][0]),
-                                  int(state["n_out"][0])))
-        stats.emitted = int(state["n_out"][0])
-        return state["out"][:, :n_new], stats
+            steps += 1
+            n_acc = np.asarray(state["n_acc"])
+            n_out = np.asarray(state["n_out"])
+            for i in range(b):
+                if unfinished[i]:
+                    # n_acc includes the forced pending token; a short
+                    # accept (< full window) means a draft was rejected.
+                    # Blocking SI has no pipeline bubbles (bubble=False).
+                    per[i].record(int(n_acc[i]) - 1,
+                                  int(n_acc[i]) < self.w, int(n_out[i]),
+                                  bubble=False)
+        for i in range(b):
+            per[i].emitted = max(per[i].emitted, 1)  # the prefill token
+        return state["out"][:, :n_max], _aggregate(per, steps)
 
 
 def nonsi_generate(model: Model, params, prompt: jnp.ndarray, n_new: int, *,

@@ -3,12 +3,15 @@
 Layout convention everywhere in this repo:
   q: (B, Sq, H, D)   k/v: (B, Sk, KV, D)   with H % KV == 0.
 
-``q_offset`` is the absolute position of q[0] (prefill chunks / decode).
+``q_offset`` is the absolute position of q[0] (prefill chunks / decode);
+scalar, or (B,) for streams decoding at per-stream positions.
 ``window`` (if set) allows attending only to keys with
 ``q_pos - window < k_pos <= q_pos`` (plus causality).
 ``kv_positions`` gives per-slot absolute key positions (ring-buffer caches;
-slots with position < 0 are invalid). Defaults to ``arange(Sk)``.
-``kv_len`` masks out slots with position >= kv_len (padded decode caches).
+slots with position < 0 are invalid); (Sk,) shared across batch or (B, Sk)
+per-stream. Defaults to ``arange(Sk)``.
+``kv_len`` masks out slots with position >= kv_len (padded decode caches);
+scalar or (B,).
 """
 from __future__ import annotations
 
@@ -37,19 +40,26 @@ def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                         preferred_element_type=jnp.float32)
     scores = scores / jnp.sqrt(d).astype(jnp.float32)
 
-    q_pos = jnp.asarray(q_offset) + jnp.arange(sq)[:, None]        # (sq, 1)
+    qo = jnp.asarray(q_offset, jnp.int32)
+    qo = qo[None] if qo.ndim == 0 else qo                          # (1|B,)
+    q_pos = qo[:, None, None] + jnp.arange(sq)[None, :, None]      # (·,sq,1)
     if kv_positions is None:
-        k_pos = jnp.arange(sk)[None, :]                            # (1, sk)
+        k_pos = jnp.arange(sk)[None, None, :]                      # (1,1,sk)
     else:
-        k_pos = jnp.asarray(kv_positions, jnp.int32)[None, :]
+        k_pos = jnp.asarray(kv_positions, jnp.int32)
+        k_pos = k_pos[None] if k_pos.ndim == 1 else k_pos
+        k_pos = k_pos[:, None, :]                                  # (·,1,sk)
     valid = k_pos >= 0
     if causal:
         valid = valid & (k_pos <= q_pos)
     if window is not None:
         valid = valid & (k_pos > q_pos - window)
     if kv_len is not None:
-        valid = valid & (k_pos < jnp.asarray(kv_len))
-    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+        kl = jnp.asarray(kv_len, jnp.int32)
+        kl = kl[None] if kl.ndim == 0 else kl
+        valid = valid & (k_pos < kl[:, None, None])
+    # valid (1|B, sq, sk) broadcasts over the kv/g score dims
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
 
     m = scores.max(-1, keepdims=True)
     probs = jnp.exp(scores - m)

@@ -115,6 +115,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older JAX: one dict per device
+            cost = cost[0] if cost else {}
         hlo = hlo_analysis.analyze(compiled.as_text())
         rec.update(
             status="ok", lower_s=round(t_lower, 1),

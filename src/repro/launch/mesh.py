@@ -13,12 +13,22 @@ A DSI-serving mesh adds a "spec" axis — one slice per paper target server
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 exposes explicit axis types; older releases default to Auto
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
 
 
-def _mk(shape, axes):
+def make_mesh(shape, axes):
+    """Version-tolerant ``jax.make_mesh`` (Auto axis types where supported)."""
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
     return jax.make_mesh(shape, axes,
                          axis_types=(AxisType.Auto,) * len(axes))
+
+
+_mk = make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -2,9 +2,11 @@
 
 Cache layout (per layer; the stack stacks a leading L dim):
   k, v: (B, S_cache, KV, D) — RoPE already applied to k at write time, so
-  ring buffers stay permutation-invariant. ``slot_pos`` (S_cache,) holds
-  each slot's absolute position (-1 = empty); it is shared across batch
-  and layers (lockstep decode) and lives at the Cache top level.
+  ring buffers stay permutation-invariant. ``slot_pos`` (B, S_cache) holds
+  each slot's absolute position (-1 = empty), per stream (batched
+  speculative decode advances streams independently); it is shared across
+  layers and lives at the Cache top level. A 1-D (S_cache,) slot array is
+  accepted and broadcast.
 
 Sharding: q heads over ``model``; KV heads over ``model`` when KV > 1,
 else (MQA) the cache seq dim is context-sharded over ``model``.
@@ -17,7 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import attention, attention_ref
-from repro.models.layers import dense, init_dense, rope
+from repro.models.layers import (batched_pos, batched_slots, dense,
+                                 init_dense, rope)
 from repro.sharding import cs
 
 
@@ -105,24 +108,30 @@ def attn_decode(params: dict, x: jnp.ndarray, k_cache: jnp.ndarray,
                 v_cache: jnp.ndarray, slot_pos: jnp.ndarray, pos: jnp.ndarray,
                 cfg, *, window: Optional[int]
                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """One-token decode. x (B,1,d); returns (y, k_cache', v_cache')."""
+    """One-token decode. x (B,1,d); ``pos`` scalar or per-stream (B,);
+    ``slot_pos`` (S_cache,) shared or per-stream (B,S_cache).
+    Returns (y, k_cache', v_cache')."""
     b = x.shape[0]
     s_cache = k_cache.shape[1]
+    pos_b = batched_pos(pos, b)                                 # (B,)
+    slot_b = batched_slots(slot_pos, b)                         # (B,Sc)
     q = _split_heads(dense(x, params["wq"]), cfg.num_heads, cfg.head_dim)
     k1 = _split_heads(dense(x, params["wk"]), cfg.num_kv_heads, cfg.head_dim)
     v1 = _split_heads(dense(x, params["wv"]), cfg.num_kv_heads, cfg.head_dim)
-    posv = jnp.full((1,), pos, jnp.int32)
+    posv = pos_b[:, None]                                       # (B,1)
     q = rope(q, posv, cfg.rope_theta)
     k1 = rope(k1, posv, cfg.rope_theta)
-    slot = jnp.mod(pos, s_cache)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k1, slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v1, slot, axis=1)
+    slot = jnp.mod(pos_b, s_cache)                              # (B,)
+    rows = jnp.arange(b)[:, None]
+    k_cache = k_cache.at[rows, slot[:, None]].set(k1)
+    v_cache = v_cache.at[rows, slot[:, None]].set(v1)
     k_cache = _kv_cs(k_cache, cfg)
     v_cache = _kv_cs(v_cache, cfg)
-    new_slot_pos = jnp.where(jnp.arange(s_cache) == slot, pos, slot_pos)
+    new_slot_pos = jnp.where(jnp.arange(s_cache)[None] == slot[:, None],
+                             pos_b[:, None], slot_b)
     q = _q_cs(q, cfg)
     y = attention_ref(q, k_cache, v_cache, causal=True, window=window,
-                      q_offset=pos, kv_positions=new_slot_pos)
+                      q_offset=pos_b, kv_positions=new_slot_pos)
     y = _q_cs(y, cfg)
     out = dense(y.reshape(b, 1, cfg.q_dim), params["wo"])
     return cs(out, "batch", None, None), k_cache, v_cache

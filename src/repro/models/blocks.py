@@ -131,7 +131,8 @@ def block_decode(p: dict, x: jnp.ndarray, cache: dict, slot_pos, pos, cfg, *,
 def _attn_verify(p_attn, xn, cache, slot_pos_new, pos, cfg, *, window):
     """Chunk attention against a cache: write K new kv slots, then attend
     with absolute-position masking (within-chunk causality falls out of
-    slot positions)."""
+    slot positions). ``pos`` scalar or per-stream (B,); ``slot_pos_new``
+    (S_cache,) or per-stream (B,S_cache)."""
     import jax
     from repro.kernels.flash_attention import attention_ref
     from repro.models.layers import dense
@@ -139,22 +140,25 @@ def _attn_verify(p_attn, xn, cache, slot_pos_new, pos, cfg, *, window):
 
     b, k_len, _ = xn.shape
     s_cache = cache["k"].shape[1]
+    from repro.models.layers import batched_pos
+    pos_b = batched_pos(pos, b)
     q = attn_mod._split_heads(dense(xn, p_attn["wq"]), cfg.num_heads, cfg.head_dim)
     kn = attn_mod._split_heads(dense(xn, p_attn["wk"]), cfg.num_kv_heads, cfg.head_dim)
     vn = attn_mod._split_heads(dense(xn, p_attn["wv"]), cfg.num_kv_heads, cfg.head_dim)
-    positions = pos + jnp.arange(k_len, dtype=jnp.int32)
+    positions = pos_b[:, None] + jnp.arange(k_len, dtype=jnp.int32)[None]
     from repro.models.layers import rope
     q = rope(q, positions, cfg.rope_theta)
     kn = rope(kn, positions, cfg.rope_theta)
-    slots = jnp.mod(positions, s_cache)
-    k_cache = cache["k"].at[:, slots].set(kn)
-    v_cache = cache["v"].at[:, slots].set(vn)
+    slots = jnp.mod(positions, s_cache)                         # (B,K)
+    rows = jnp.arange(b)[:, None]
+    k_cache = cache["k"].at[rows, slots].set(kn)
+    v_cache = cache["v"].at[rows, slots].set(vn)
     if attn_mod._kv_head_sharded(cfg):
         q = cs(q, "batch", None, "model", None)
     else:
         q = cs(q, "batch", None, None, None)
     y = attention_ref(q, k_cache, v_cache, causal=True, window=window,
-                      q_offset=pos, kv_positions=slot_pos_new)
+                      q_offset=pos_b, kv_positions=slot_pos_new)
     if attn_mod._kv_head_sharded(cfg):
         y = cs(y, "batch", None, "model", None)
     else:

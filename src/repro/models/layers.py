@@ -14,6 +14,23 @@ import jax.numpy as jnp
 from repro.sharding import cs
 
 
+def batched_pos(pos, batch: int) -> jnp.ndarray:
+    """Normalize a cache position — scalar or (B,) — to (B,) int32.
+
+    Single source of truth for the scalar-compat rule: batched speculative
+    engines track per-stream positions, older callers pass scalars."""
+    p = jnp.asarray(pos, jnp.int32)
+    return jnp.broadcast_to(p.reshape(-1), (batch,))
+
+
+def batched_slots(slot_pos, batch: int):
+    """Normalize slot positions — (Lc,) shared or (B,Lc) — to (B,Lc)."""
+    if slot_pos is None:
+        return None
+    s = jnp.asarray(slot_pos, jnp.int32)
+    return jnp.broadcast_to(jnp.atleast_2d(s), (batch, s.shape[-1]))
+
+
 def init_dense(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
     scale = (1.0 / d_in) ** 0.5
     return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)

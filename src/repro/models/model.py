@@ -9,12 +9,17 @@ full-length (global) caches, and lets the VLM scan superblocks of
 (cross_attn_every-1 self + 1 cross) layers.
 
 Cache layout (pytree):
-  {"pos": () int32,
+  {"pos": (B,) int32 per-stream decode positions,
    "seg<i>": {"k": (n,B,Lc,KV,D), "v": ..., "ssm": (n,B,H,P,N),
               "conv": (n,B,W-1,C)},        # keys optional per family
-   "slot<i>": (Lc,) int32 absolute positions per cache slot (-1 empty),
+   "slot<i>": (B,Lc) int32 absolute positions per cache slot (-1 empty),
    "cross_k"/"cross_v": (nsb,B,T_img,KV,D)  # VLM only
   }
+
+``pos``/``slot<i>`` are per-stream so batched speculative engines can
+advance streams independently (each stream accepts a different number of
+drafts per macro-step). Scalar ``pos`` / (Lc,) slot arrays from older
+callers are normalized on entry to every decode/verify path.
 """
 from __future__ import annotations
 
@@ -27,12 +32,36 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import attention as attn_mod
 from repro.models import blocks as blk
-from repro.models.layers import (dense, embed, init_dense, init_embed,
-                                 rmsnorm, unembed)
+from repro.models.layers import (batched_pos, batched_slots, dense, embed,
+                                 init_dense, init_embed, rmsnorm, unembed)
 from repro.sharding import cs
 
 Params = Dict[str, Any]
 Cache = Dict[str, Any]
+
+
+def cache_set_row(cache: Cache, row: Cache, b) -> Cache:
+    """Scatter a single-stream cache (batch dim 1) into row ``b`` of a
+    batched cache — the per-slot-prefill admission primitive for the
+    continuous-batching engines. Both caches must share geometry (same
+    ``max_len``/headroom)."""
+    out: Cache = {}
+    for key, val in cache.items():
+        rv = row[key]
+        if key == "pos":
+            out[key] = jax.lax.dynamic_update_slice_in_dim(
+                val, jnp.reshape(jnp.asarray(rv, jnp.int32), (1,)), b, axis=0)
+        elif key.startswith("slot"):
+            if val is None:
+                out[key] = None
+            else:
+                out[key] = jax.lax.dynamic_update_slice_in_dim(
+                    val, jnp.atleast_2d(rv), b, axis=0)
+        else:  # seg<i> dicts and cross_k/v: leaves (n|nsb, B, ...)
+            out[key] = jax.tree.map(
+                lambda a, r: jax.lax.dynamic_update_slice_in_dim(
+                    a, r.astype(a.dtype), b, axis=1), val, rv)
+    return out
 
 
 def _segments(cfg: ModelConfig):
@@ -118,7 +147,8 @@ class Model:
         bsz, s, _ = x.shape
         positions = jnp.arange(s, dtype=jnp.int32)
         aux_total = jnp.zeros((), jnp.float32)
-        cache: Cache = {"pos": jnp.asarray(s, jnp.int32)} if want_cache else None
+        cache: Cache = {"pos": jnp.full((bsz,), s, jnp.int32)} \
+            if want_cache else None
         max_len = max_len or s
 
         if self.is_vlm:
@@ -152,7 +182,7 @@ class Model:
                         min(window + window_headroom, max_len)
                     seg_cache, slot = _pack_cache(caches, s, clen, cfg)
                     cache[f"seg{si}"] = seg_cache
-                    cache[f"slot{si}"] = slot
+                    cache[f"slot{si}"] = batched_slots(slot, bsz)
 
         x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
         logits = unembed(params, x, cfg.vocab_size)
@@ -191,15 +221,16 @@ class Model:
             (params["blocks"], params["cross_blocks"], ck, cv))
         cache = None
         if want_cache:
-            s = x.shape[1]
+            bsz, s = x.shape[0], x.shape[1]
             caches = jax.tree.map(
                 lambda a: a.reshape(self.n_super * self.n_inner, *a.shape[2:]),
                 caches)
             clen = max_len if cfg.window is None else \
                 min(cfg.window + window_headroom, max_len)
             seg_cache, slot = _pack_cache(caches, s, clen, cfg)
-            cache = {"pos": jnp.asarray(s, jnp.int32), "seg0": seg_cache,
-                     "slot0": slot, "cross_k": ck, "cross_v": cv}
+            cache = {"pos": jnp.full((bsz,), s, jnp.int32), "seg0": seg_cache,
+                     "slot0": batched_slots(slot, bsz),
+                     "cross_k": ck, "cross_v": cv}
         return x, aux, cache
 
     # --------------------------------------------------------------- losses
@@ -243,7 +274,7 @@ class Model:
         cfg = self.cfg
         dt = jnp.dtype(cfg.dtype)
         filled = 0 if filled is None else filled
-        cache: Cache = {"pos": jnp.asarray(filled, jnp.int32)}
+        cache: Cache = {"pos": jnp.full((batch_size,), filled, jnp.int32)}
         segs = [(0, self.n_super * self.n_inner, False)] if self.is_vlm \
             else self.segments
         for si, (i0, i1, is_global) in enumerate(segs):
@@ -272,7 +303,7 @@ class Model:
                     pos0 = jnp.where(slots < filled, slots, -1)
                 else:
                     pos0 = jnp.full((clen,), -1, jnp.int32)
-                cache[f"slot{si}"] = pos0.astype(jnp.int32)
+                cache[f"slot{si}"] = batched_slots(pos0, batch_size)
             else:
                 cache[f"slot{si}"] = None
         if self.is_vlm:
@@ -288,7 +319,8 @@ class Model:
         """One token per sequence. tokens (B,1) -> (logits (B,V), cache')."""
         cfg = self.cfg
         assert cfg.causal, "encoder-only models have no decode step"
-        pos = cache["pos"]
+        bsz = tokens.shape[0]
+        pos = batched_pos(cache["pos"], bsz)                    # (B,)
         x = embed(params, tokens)
         x = cs(x, "batch", None, None)
         new_cache: Cache = {"pos": pos + 1}
@@ -301,7 +333,7 @@ class Model:
         for si, (i0, i1, is_global) in enumerate(segs):
             window = self._seg_window(is_global)
             seg_cache = cache[f"seg{si}"]
-            slot_pos = cache.get(f"slot{si}")
+            slot_pos = batched_slots(cache.get(f"slot{si}"), bsz)
             if self.is_vlm:
                 x, new_seg = self._decode_vlm_stack(params, x, seg_cache,
                                                     slot_pos, pos, cache)
@@ -323,10 +355,10 @@ class Model:
                     x, new_seg = jax.lax.scan(body, x, (seg_p, seg_cache))
             new_cache[f"seg{si}"] = new_seg
             if slot_pos is not None:
-                clen = slot_pos.shape[0]
+                clen = slot_pos.shape[-1]
                 new_cache[f"slot{si}"] = jnp.where(
-                    jnp.arange(clen) == jnp.mod(pos, clen), pos, slot_pos
-                ).astype(jnp.int32)
+                    jnp.arange(clen)[None] == jnp.mod(pos, clen)[:, None],
+                    pos[:, None], slot_pos).astype(jnp.int32)
             else:
                 new_cache[f"slot{si}"] = None
         if self.is_vlm:
@@ -348,8 +380,8 @@ class Model:
         *not* advanced (commit does that)."""
         cfg = self.cfg
         assert cfg.causal
-        pos = cache["pos"]
         b, w = tokens.shape
+        pos = batched_pos(cache["pos"], b)                      # (B,)
         x = embed(params, tokens)
         x = cs(x, "batch", None, None)
         new_cache: Cache = {"pos": pos}
@@ -359,13 +391,14 @@ class Model:
         for si, (i0, i1, is_global) in enumerate(segs):
             window = self._seg_window(is_global)
             seg_cache = cache[f"seg{si}"]
-            slot_pos = cache.get(f"slot{si}")
+            slot_pos = batched_slots(cache.get(f"slot{si}"), b)
             slot_new = slot_pos
             if slot_pos is not None:
-                clen = slot_pos.shape[0]
-                positions = pos + jnp.arange(w, dtype=jnp.int32)
-                slots = jnp.mod(positions, clen)
-                slot_new = slot_pos.at[slots].set(positions)
+                clen = slot_pos.shape[-1]
+                positions = pos[:, None] + jnp.arange(w, dtype=jnp.int32)[None]
+                slots = jnp.mod(positions, clen)                # (B,W)
+                slot_new = slot_pos.at[
+                    jnp.arange(b)[:, None], slots].set(positions)
             new_cache[f"slot{si}"] = slot_new
             if self.is_vlm:
                 x, new_seg = self._verify_vlm_stack(params, x, seg_cache,
@@ -427,9 +460,12 @@ class Model:
                n_advance: jnp.ndarray) -> Cache:
         """Fold a verify_chunk result into a decode-ready cache, advancing
         ``pos`` by ``n_advance`` (the accepted prefix length) and selecting
-        the recurrent state at that offset."""
+        the recurrent state at that offset. ``n_advance`` is a scalar or a
+        per-stream (B,) array (batched engines commit a different prefix per
+        stream)."""
         cfg = self.cfg
-        out: Cache = {"pos": cache_before["pos"] + n_advance}
+        n_adv = jnp.asarray(n_advance, jnp.int32)
+        out: Cache = {"pos": cache_before["pos"] + n_adv}
         for key, val in cache_after.items():
             if key == "pos":
                 continue
@@ -441,12 +477,21 @@ class Model:
                 before = cache_before[key]["ssm"]               # (n,B,H,P,N)
                 states = seg.pop("ssm_states")                  # (n,B,W,H,P,N)
                 ext = jnp.concatenate([before[:, :, None], states], axis=2)
-                seg["ssm"] = jax.lax.dynamic_index_in_dim(
-                    ext, n_advance, axis=2, keepdims=False)
                 conv_full = seg.pop("conv_full")                # (n,B,W-1+W,C)
                 wconv = cfg.ssm.conv_width - 1
-                seg["conv"] = jax.lax.dynamic_slice_in_dim(
-                    conv_full, n_advance, wconv, axis=2)
+                if n_adv.ndim == 0:
+                    seg["ssm"] = jax.lax.dynamic_index_in_dim(
+                        ext, n_adv, axis=2, keepdims=False)
+                    seg["conv"] = jax.lax.dynamic_slice_in_dim(
+                        conv_full, n_adv, wconv, axis=2)
+                else:   # per-stream offsets: gather along the chunk axis
+                    idx = n_adv.reshape((1, -1) + (1,) * (ext.ndim - 3))
+                    seg["ssm"] = jnp.take_along_axis(
+                        ext, idx[..., None], axis=2)[:, :, 0]
+                    win = (n_adv[None, :, None]
+                           + jnp.arange(wconv, dtype=jnp.int32)[None, None])
+                    seg["conv"] = jnp.take_along_axis(
+                        conv_full, win[..., None], axis=2)
             out[key] = seg
         return out
 

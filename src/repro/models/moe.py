@@ -26,6 +26,18 @@ from jax.sharding import PartitionSpec as P
 from repro.models.layers import dense, init_dense
 from repro.sharding import cs, current_mesh
 
+
+def _shard_map(fn, *, mesh, in_specs, out_specs):
+    """Version-tolerant shard_map (top-level ``jax.shard_map`` with
+    ``check_vma`` on new JAX; the experimental API with ``check_rep`` on
+    older releases)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
 _CAP_ROUND = 8
 
 
@@ -169,11 +181,10 @@ def _moe_weight_stationary(params, x, cfg, cap_f, mesh):
         bspec = P(None, None, None)
     wspec_up = P("model", None, "data" if ff_ok and ff_shards > 1 else None)
     wspec_dn = P("model", "data" if ff_ok and ff_shards > 1 else None, None)
-    y, aux = jax.shard_map(
+    y, aux = _shard_map(
         fn, mesh=mesh,
         in_specs=(bspec, P(None, None), wspec_up, wspec_up, wspec_dn),
         out_specs=(bspec, P()),
-        check_vma=False,
     )(x, params["router"], params["experts_up"], params["experts_gate"],
       params["experts_down"])
     return y, aux
@@ -219,12 +230,11 @@ def moe_apply(params: dict, x: jnp.ndarray, cfg,
             return y.reshape(xb.shape), aux
 
         bspec = P(batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None), None, None)
-        y, aux = jax.shard_map(
+        y, aux = _shard_map(
             fn, mesh=mesh,
             in_specs=(bspec, P(None, None), P("model", None, None),
                       P("model", None, None), P("model", None, None)),
             out_specs=(bspec, P()),
-            check_vma=False,
         )(x, params["router"], params["experts_up"], params["experts_gate"],
           params["experts_down"])
     else:

@@ -1,2 +1,2 @@
 from repro.serving.engine import ServingEngine, Request  # noqa: F401
-from repro.serving.servers import DSIOrchestrator  # noqa: F401
+from repro.serving.servers import DSIOrchestrator, serve_queue  # noqa: F401

@@ -2,11 +2,20 @@
 
 Modes:
   "nonsi" — batched autoregressive decoding (throughput path): requests
-            are left-padded into one batch, prefilled once, decoded in
-            lockstep.
+            are bucketed by prompt length (unmasked padding would change
+            shorter prompts' context), prefilled once per bucket, decoded
+            in lockstep.
   "si"    — per-stream blocking speculative decoding (SIEngine).
-  "dsi"   — per-stream speculation-parallel decoding (DSIEngine) — the
-            paper's latency path.
+  "dsi"   — continuous-batching speculation-parallel decoding: a
+            fixed-size slot table over DSIEngine's batched macro-step.
+            Finished streams are retired and queued requests admitted
+            mid-flight via per-slot prefill, so one jitted step advances
+            up to ``max_batch`` heterogeneous requests at once — the
+            paper's latency path at serving throughput (docs/serving.md).
+
+Per-request ``EngineStats`` (macro-steps, acceptance rate, bubbles) are
+attached to each Request; ``engine_invocations`` counts jitted engine
+steps across the whole run (the serving cost unit).
 """
 from __future__ import annotations
 
@@ -14,11 +23,10 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dsi_jax import DSIEngine, _softmax
+from repro.core.dsi_jax import DSIEngine, EngineStats
 from repro.core.si_jax import SIEngine, nonsi_generate
 from repro.models.model import Model
 
@@ -28,8 +36,9 @@ class Request:
     rid: int
     prompt: List[int]
     max_new: int
+    extra_inputs: Optional[Dict[str, jnp.ndarray]] = None
     output: Optional[List[int]] = None
-    stats: Optional[object] = None
+    stats: Optional[EngineStats] = None
 
 
 @dataclass
@@ -42,49 +51,126 @@ class ServingEngine:
     lookahead: int = 8
     rule: str = "exact"
     max_batch: int = 8
+    history_cap: int = 256       # per-request EngineStats.history bound
+    engine_invocations: int = 0  # jitted engine steps across run() calls
     _queue: List[Request] = field(default_factory=list)
     _rid: itertools.count = field(default_factory=itertools.count)
+    _engine: Optional[object] = None  # cached jitted engine across run()s
 
-    def submit(self, prompt: List[int], max_new: int) -> Request:
-        req = Request(next(self._rid), list(prompt), max_new)
+    def submit(self, prompt: List[int], max_new: int,
+               extra_inputs: Optional[Dict[str, jnp.ndarray]] = None
+               ) -> Request:
+        req = Request(next(self._rid), list(prompt), max_new, extra_inputs)
         self._queue.append(req)
         return req
 
     # --------------------------------------------------------------- run
     def run(self) -> List[Request]:
         done: List[Request] = []
+        if self.mode == "dsi":
+            return self._run_dsi_slots()
+        if self.mode == "nonsi":
+            # lockstep decode is exact only for equal-length prompts
+            # (left-padding without a mask changes shorter prompts'
+            # context), so bucket the queue by prompt length
+            by_len: Dict[int, List[Request]] = {}
+            for r in self._queue:
+                by_len.setdefault(len(r.prompt), []).append(r)
+            self._queue.clear()
+            for _, group in sorted(by_len.items()):
+                for i in range(0, len(group), self.max_batch):
+                    batch = group[i:i + self.max_batch]
+                    self._run_nonsi_batch(batch)
+                    done.extend(batch)
+            return done
         while self._queue:
-            if self.mode == "nonsi":
-                batch = self._queue[:self.max_batch]
-                del self._queue[:len(batch)]
-                self._run_nonsi_batch(batch)
-                done.extend(batch)
-            else:
-                req = self._queue.pop(0)
-                self._run_spec(req)
-                done.append(req)
+            req = self._queue.pop(0)
+            self._run_spec(req)
+            done.append(req)
         return done
+
+    # ----------------------------------------------- continuous batching
+    def _run_dsi_slots(self) -> List[Request]:
+        """Slot-table scheduler over DSIEngine's batched macro-step.
+
+        A fixed table of ``max_batch`` streams advances in one jitted step
+        per iteration; finished streams retire and waiting requests are
+        admitted into their slots mid-flight (per-slot prefill), so the
+        target/drafter never idle while work is queued."""
+        assert self.drafter is not None and self.params_d is not None
+        if not self._queue:
+            return []
+        eng = self._spec_engine(DSIEngine)
+        w = self.lookahead
+        n_slots = min(self.max_batch, len(self._queue))
+        cap = max(r.max_new for r in self._queue) + w + 1
+        max_len = (max(len(r.prompt) for r in self._queue)
+                   + max(r.max_new for r in self._queue) + 2 * w + 2)
+        state = eng.init_slots(n_slots, cap, max_len)
+
+        slots: List[Optional[Request]] = [None] * n_slots
+        slot_stats: List[Optional[EngineStats]] = [None] * n_slots
+        done: List[Request] = []
+        while self._queue or any(r is not None for r in slots):
+            # admit queued requests into free slots (late admissions enter
+            # mid-flight; the other streams keep their pipeline state)
+            for b in range(n_slots):
+                if slots[b] is None and self._queue:
+                    req = self._queue.pop(0)
+                    prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+                    state = eng.admit(self.params_t, self.params_d, state, b,
+                                      prompt, extra_inputs=req.extra_inputs)
+                    slots[b] = req
+                    slot_stats[b] = EngineStats(max_history=self.history_cap)
+
+            state = eng.step(self.params_t, self.params_d, state)
+            self.engine_invocations += 1
+            n_acc = np.asarray(state["n_acc"])
+            rej = np.asarray(state["rejected"])
+            n_out = np.asarray(state["n_out"])
+            retired = [b for b, req in enumerate(slots)
+                       if req is not None and n_out[b] >= req.max_new]
+            out = np.asarray(state["out"]) if retired else None
+            for b, req in enumerate(slots):
+                if req is None:
+                    continue
+                slot_stats[b].record(int(n_acc[b]), bool(rej[b]),
+                                     int(n_out[b]))
+                if b in retired:
+                    req.output = out[b, :req.max_new].tolist()
+                    req.stats = slot_stats[b]
+                    state = eng.retire(state, b)
+                    slots[b], slot_stats[b] = None, None
+                    done.append(req)
+        return done
+
+    def _spec_engine(self, cls):
+        """One engine per ServingEngine: its jit cache persists across
+        run() calls, so repeated serving rounds with the same geometry
+        never recompile the macro-step."""
+        if self._engine is None or type(self._engine) is not cls:
+            self._engine = cls(self.target, self.drafter,
+                               lookahead=self.lookahead, rule=self.rule)
+        return self._engine
 
     def _run_spec(self, req: Request):
         assert self.drafter is not None and self.params_d is not None
-        cls = DSIEngine if self.mode == "dsi" else SIEngine
-        eng = cls(self.target, self.drafter, lookahead=self.lookahead,
-                  rule=self.rule)
+        eng = self._spec_engine(DSIEngine if self.mode == "dsi" else SIEngine)
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]
         out, stats = eng.generate(self.params_t, self.params_d, prompt,
-                                  req.max_new)
-        req.output = np.asarray(out)[0].tolist()
+                                  req.max_new,
+                                  extra_inputs=req.extra_inputs)
+        self.engine_invocations += stats.macro_steps
+        req.output = np.asarray(out)[0, :req.max_new].tolist()
         req.stats = stats
 
     def _run_nonsi_batch(self, batch: List[Request]):
-        # left-pad prompts to a common length, decode in lockstep
-        max_p = max(len(r.prompt) for r in batch)
+        # equal-length prompts (run() buckets by length), lockstep decode
+        toks = np.asarray([r.prompt for r in batch], np.int32)
         max_new = max(r.max_new for r in batch)
-        toks = np.zeros((len(batch), max_p), np.int32)
-        for i, r in enumerate(batch):
-            toks[i, max_p - len(r.prompt):] = r.prompt
         out = nonsi_generate(self.target, self.params_t,
                              jnp.asarray(toks), max_new)
+        self.engine_invocations += max_new
         arr = np.asarray(out)
         for i, r in enumerate(batch):
             r.output = arr[i, :r.max_new].tolist()

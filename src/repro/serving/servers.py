@@ -18,9 +18,38 @@ import time
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.planner import min_lookahead
+
+
+def serve_queue(engine, requests: Sequence[Tuple[Sequence[int], int]]
+                ) -> List[Dict[str, object]]:
+    """Front-end over ``serving.engine.ServingEngine``: submit a request
+    list, run the (continuous-batching) scheduler, and surface per-request
+    ``EngineStats`` as flat telemetry rows — the serving endpoint's
+    response metadata. Returns one dict per request, in completion order,
+    each carrying this run's ``engine_invocations`` (the shared serving
+    cost, excluding prior runs on a reused engine) next to the request's
+    own speculation accounting."""
+    for prompt, max_new in requests:
+        engine.submit(list(prompt), max_new)
+    before = engine.engine_invocations
+    done = engine.run()
+    run_invocations = engine.engine_invocations - before
+    rows: List[Dict[str, object]] = []
+    for r in done:
+        st = r.stats
+        rows.append({
+            "rid": r.rid,
+            "tokens": len(r.output or []),
+            "macro_steps": st.macro_steps if st else None,
+            "acceptance_rate": st.acceptance_rate if st else None,
+            "bubbles": st.bubbles if st else None,
+            "rejections": st.rejections if st else None,
+            "engine_invocations": run_invocations,
+        })
+    return rows
 
 # target_fn(prefix_tokens) -> greedy tokens for each position of
 #   prefix_tokens[ctx_len:]  plus one extra (the "next" token): i.e. given

@@ -39,6 +39,57 @@ def test_dsi_engine_lossless(name, rng):
     assert stats.emitted >= n_new
 
 
+@pytest.mark.parametrize("name", ["yi-9b", "mamba2-370m",
+                                  "llama-3.2-vision-11b"])
+def test_dsi_engine_batched_lossless(name, rng):
+    """B>1 streams with heterogeneous content and per-stream n_new: every
+    stream of the batched macro-step equals its own non-SI greedy
+    reference (covers the attention, recurrent-rollback and extra-inputs
+    paths)."""
+    cfg_t = tiny(name)
+    cfg_d = tiny(name, d_model=128)
+    mt, md = Model(cfg_t), Model(cfg_d)
+    pt = mt.init(jax.random.PRNGKey(0))
+    pd = md.init(jax.random.PRNGKey(1))
+    b = 4
+    prompt = jax.random.randint(rng, (b, 10), 0, cfg_t.vocab_size)
+    extra = {}
+    if cfg_t.cross_attn_every:
+        extra["image_embeds"] = jax.random.normal(
+            rng, (b, cfg_t.num_image_tokens, cfg_t.d_frontend))
+    n_new = [12, 7, 15, 9]
+    ref = nonsi_generate(mt, pt, prompt, max(n_new), extra_inputs=extra)
+    out, stats = DSIEngine(mt, md, lookahead=4, rule="exact").generate(
+        pt, pd, prompt, n_new, extra_inputs=extra)
+    for i in range(b):
+        assert np.array_equal(np.asarray(out)[i, :n_new[i]],
+                              np.asarray(ref)[i, :n_new[i]]), (name, i)
+        assert stats.per_stream[i].emitted >= n_new[i]
+    assert stats.macro_steps > 0
+    assert len(stats.per_stream) == b
+
+
+@pytest.mark.parametrize("name", ["yi-9b", "mamba2-370m"])
+def test_si_engine_batched_lossless(name, rng):
+    """Batched blocking SI matches per-stream non-SI references (the
+    apples-to-apples baseline for batched DSI benchmarks)."""
+    cfg_t = tiny(name)
+    cfg_d = tiny(name, d_model=128)
+    mt, md = Model(cfg_t), Model(cfg_d)
+    pt = mt.init(jax.random.PRNGKey(0))
+    pd = md.init(jax.random.PRNGKey(1))
+    b = 3
+    prompt = jax.random.randint(rng, (b, 9), 0, cfg_t.vocab_size)
+    n_new = [11, 6, 14]
+    ref = nonsi_generate(mt, pt, prompt, max(n_new))
+    out, stats = SIEngine(mt, md, lookahead=4, rule="exact").generate(
+        pt, pd, prompt, n_new)
+    for i in range(b):
+        assert np.array_equal(np.asarray(out)[i, :n_new[i]],
+                              np.asarray(ref)[i, :n_new[i]]), (name, i)
+    assert len(stats.per_stream) == b
+
+
 @pytest.mark.parametrize("name", ["yi-9b", "mamba2-370m"])
 def test_si_engine_lossless(name, rng):
     mt, md, pt, pd, prompt, extra = _setup(name, rng)

@@ -1,6 +1,15 @@
-"""Hypothesis property tests for the paper's theorems and invariants."""
+"""Property tests for the paper's theorems and invariants.
+
+``hypothesis`` is an optional dev dependency: when it is installed the
+randomized property tests explore the parameter space; without it the
+module still collects and the deterministic tests at the bottom pin every
+theorem/invariant (Thm 1/2, Prop 1, Eq. 1, estimator convergence,
+simulator-vs-analytic, timelines) on a fixed grid, so clean environments
+— including CI, which deliberately omits hypothesis — still exercise each
+invariant at least at a few points.
+"""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core import (dsi_expected_latency, max_useful_sp, min_lookahead,
                         min_sp, nonsi_latency, si_expected_latency,
@@ -9,99 +18,126 @@ from repro.core import (dsi_expected_latency, max_useful_sp, min_lookahead,
 from repro.core.acceptance import (acceptance_rate_from_matches,
                                    expected_accepted_per_iter, match_length)
 
-lat = st.floats(0.05, 1.0)
-acc = st.floats(0.0, 1.0)
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # clean environments: fall back to the grid tests below
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    lat = st.floats(0.05, 1.0)
+    acc = st.floats(0.0, 1.0)
+
+    @settings(max_examples=60, deadline=None)
+    @given(t_d=lat, p=acc, n=st.integers(2, 80), seed=st.integers(0, 10_000))
+    def test_thm1_dsi_never_slower_than_nonsi(t_d, p, n, seed):
+        """Theorem 1: DSI (unbounded processors) <= non-SI, for every sample."""
+        t_m = 1.0
+        r = simulate_dsi_unbounded([min(t_d, t_m), t_m], [p], n, seed=seed)
+        assert r.latency <= nonsi_latency(t_m, n) + 1e-9
+
+    @settings(max_examples=25, deadline=None)
+    @given(t_d=st.floats(0.05, 0.5), p=acc, la=st.integers(1, 10),
+           n=st.integers(10, 60))
+    def test_thm2_dsi_pool_beats_si_in_expectation(t_d, p, la, n):
+        """Theorem 2: E[DSI] <= E[SI] with Eq.1-feasible SP."""
+        t_m = 1.0
+        sp = min_sp(t_m, t_d, la)
+        dsi = np.mean([simulate_dsi_pool(t_m, t_d, p, la, sp, n, seed=s).latency
+                       for s in range(60)])
+        si = np.mean([simulate_si(t_m, t_d, p, la, n, seed=s).latency
+                      for s in range(60)])
+        assert dsi <= si * 1.02 + 1e-9  # small MC slack
+
+    @settings(max_examples=40, deadline=None)
+    @given(t_d=st.floats(0.05, 0.9), p=acc, n=st.integers(2, 60))
+    def test_prop1_expected_bound(t_d, p, n):
+        """Prop. 1: E[DSI latency] <= t1·p·(N-1) + t2·((1-p)(N-1)+1)."""
+        t_m = 1.0
+        mean = np.mean([simulate_dsi_unbounded([t_d, t_m], [p], n, seed=s).latency
+                        for s in range(120)])
+        bound = dsi_expected_latency(t_m, t_d, p, n)
+        assert mean <= bound + 0.25 * np.sqrt(n)  # MC slack
+
+    @settings(max_examples=80, deadline=None)
+    @given(t_d=st.floats(0.01, 0.99), sp=st.integers(1, 16))
+    def test_eq1_lookahead_feasibility(t_d, sp):
+        """Eq. 1: the returned lookahead satisfies the inequality and is minimal."""
+        t_m = 1.0
+        la = min_lookahead(t_m, t_d, sp)
+        assert int(np.ceil(t_m / (la * t_d))) <= sp
+        if la > 1:
+            assert int(np.ceil(t_m / ((la - 1) * t_d))) > sp
+
+    @settings(max_examples=50, deadline=None)
+    @given(t_d=st.floats(0.01, 0.99))
+    def test_max_useful_sp_consistent(t_d):
+        sp = max_useful_sp(1.0, t_d)
+        assert min_lookahead(1.0, t_d, sp) == 1
+
+    @settings(max_examples=30, deadline=None)
+    @given(p=st.floats(0.01, 0.95), n=st.integers(300, 1200),
+           seed=st.integers(0, 100))
+    def test_geometric_acceptance_estimator(p, n, seed):
+        """App F.2.1: fitted geometric rate converges to the true rate."""
+        rng = np.random.default_rng(seed)
+        matches = rng.geometric(1 - p, size=n) - 1  # accepted before 1st reject
+        est = acceptance_rate_from_matches(matches)
+        assert abs(est - p) < 0.08
+
+    @settings(max_examples=60, deadline=None)
+    @given(p=st.floats(0.0, 1.0), la=st.integers(1, 20))
+    def test_expected_accepted_bounds(p, la):
+        e = expected_accepted_per_iter(p, la)
+        assert 0.0 <= e <= la + 1e-9
+        # matches direct summation
+        direct = sum(p ** i for i in range(1, la + 1))
+        assert abs(e - direct) < 1e-6
+
+    @settings(max_examples=20, deadline=None)
+    @given(p=st.floats(0.1, 0.95), la=st.integers(1, 8), n=st.integers(20, 60))
+    def test_si_simulator_matches_analytic(p, la, n):
+        sim = np.mean([simulate_si(1.0, 0.1, p, la, n, seed=s).latency
+                       for s in range(150)])
+        exp = si_expected_latency(1.0, 0.1, p, la, n)
+        # the analytic form uses a continuous iteration count; the simulator
+        # quantizes to whole iterations — allow one iteration of slack + 10% MC
+        iter_cost = la * 0.1 + 1.0
+        assert abs(sim - exp) <= 0.10 * exp + iter_cost
+
+    @settings(max_examples=15, deadline=None)
+    @given(t_d=st.floats(0.05, 0.5), p=st.floats(0.0, 0.98),
+           n=st.integers(10, 40))
+    def test_pool_matches_unbounded_at_lookahead_one(t_d, p, n):
+        """With L=1 and an unconstrained pool, the deployed simulator should
+        approach the abstract Algorithm-1 simulator (same latency structure)."""
+        pool = np.mean([simulate_dsi_pool(1.0, t_d, p, 1, 64, n, seed=s).latency
+                        for s in range(80)])
+        unb = np.mean([simulate_dsi_unbounded([t_d, 1.0], [p], n, seed=s).latency
+                       for s in range(80)])
+        # same structure up to block-detection granularity: one target latency
+        assert abs(pool - unb) <= 0.15 * unb + 1.0
+
+    @settings(max_examples=20, deadline=None)
+    @given(t_d=st.floats(0.05, 0.9), p=st.floats(0.0, 1.0),
+           la=st.integers(1, 10), n=st.integers(5, 50))
+    def test_dsi_pool_timeline_monotone_and_complete(t_d, p, la, n):
+        r = simulate_dsi_pool(1.0, t_d, p, la, 8, n, seed=3)
+        times = [t for t, _ in r.timeline]
+        counts = [c for _, c in r.timeline]
+        assert times == sorted(times)
+        assert max(counts) == n
+        assert r.latency == times[-1]
 
 
-@settings(max_examples=60, deadline=None)
-@given(t_d=lat, p=acc, n=st.integers(2, 80), seed=st.integers(0, 10_000))
-def test_thm1_dsi_never_slower_than_nonsi(t_d, p, n, seed):
-    """Theorem 1: DSI (unbounded processors) <= non-SI, for every sample."""
-    t_m = 1.0
-    r = simulate_dsi_unbounded([min(t_d, t_m), t_m], [p], n, seed=seed)
-    assert r.latency <= nonsi_latency(t_m, n) + 1e-9
-
-
-@settings(max_examples=25, deadline=None)
-@given(t_d=st.floats(0.05, 0.5), p=acc, la=st.integers(1, 10),
-       n=st.integers(10, 60))
-def test_thm2_dsi_pool_beats_si_in_expectation(t_d, p, la, n):
-    """Theorem 2: E[DSI] <= E[SI] with Eq.1-feasible SP."""
-    t_m = 1.0
-    sp = min_sp(t_m, t_d, la)
-    dsi = np.mean([simulate_dsi_pool(t_m, t_d, p, la, sp, n, seed=s).latency
-                   for s in range(60)])
-    si = np.mean([simulate_si(t_m, t_d, p, la, n, seed=s).latency
-                  for s in range(60)])
-    assert dsi <= si * 1.02 + 1e-9  # small MC slack
-
-
-@settings(max_examples=40, deadline=None)
-@given(t_d=st.floats(0.05, 0.9), p=acc, n=st.integers(2, 60))
-def test_prop1_expected_bound(t_d, p, n):
-    """Prop. 1: E[DSI latency] <= t1·p·(N-1) + t2·((1-p)(N-1)+1)."""
-    t_m = 1.0
-    mean = np.mean([simulate_dsi_unbounded([t_d, t_m], [p], n, seed=s).latency
-                    for s in range(120)])
-    bound = dsi_expected_latency(t_m, t_d, p, n)
-    assert mean <= bound + 0.25 * np.sqrt(n)  # MC slack
-
-
-@settings(max_examples=80, deadline=None)
-@given(t_d=st.floats(0.01, 0.99), sp=st.integers(1, 16))
-def test_eq1_lookahead_feasibility(t_d, sp):
-    """Eq. 1: the returned lookahead satisfies the inequality and is minimal."""
-    t_m = 1.0
-    la = min_lookahead(t_m, t_d, sp)
-    assert int(np.ceil(t_m / (la * t_d))) <= sp
-    if la > 1:
-        assert int(np.ceil(t_m / ((la - 1) * t_d))) > sp
-
-
-@settings(max_examples=50, deadline=None)
-@given(t_d=st.floats(0.01, 0.99))
-def test_max_useful_sp_consistent(t_d):
-    sp = max_useful_sp(1.0, t_d)
-    assert min_lookahead(1.0, t_d, sp) == 1
-
-
-@settings(max_examples=30, deadline=None)
-@given(p=st.floats(0.01, 0.95), n=st.integers(300, 1200),
-       seed=st.integers(0, 100))
-def test_geometric_acceptance_estimator(p, n, seed):
-    """App F.2.1: fitted geometric rate converges to the true rate."""
-    rng = np.random.default_rng(seed)
-    matches = rng.geometric(1 - p, size=n) - 1  # accepted before 1st reject
-    est = acceptance_rate_from_matches(matches)
-    assert abs(est - p) < 0.08
-
-
-@settings(max_examples=60, deadline=None)
-@given(p=st.floats(0.0, 1.0), la=st.integers(1, 20))
-def test_expected_accepted_bounds(p, la):
-    e = expected_accepted_per_iter(p, la)
-    assert 0.0 <= e <= la + 1e-9
-    # matches direct summation
-    direct = sum(p ** i for i in range(1, la + 1))
-    assert abs(e - direct) < 1e-6
-
+# ---------------------------------------------------------------------------
+# Deterministic tests — always run, with or without hypothesis.
+# ---------------------------------------------------------------------------
 
 def test_match_length():
     assert match_length([1, 2, 3], [1, 2, 4]) == 2
     assert match_length([1], [2]) == 0
     assert match_length([5, 6], [5, 6]) == 2
-
-
-@settings(max_examples=20, deadline=None)
-@given(p=st.floats(0.1, 0.95), la=st.integers(1, 8), n=st.integers(20, 60))
-def test_si_simulator_matches_analytic(p, la, n):
-    sim = np.mean([simulate_si(1.0, 0.1, p, la, n, seed=s).latency
-                   for s in range(150)])
-    exp = si_expected_latency(1.0, 0.1, p, la, n)
-    # the analytic form uses a continuous iteration count; the simulator
-    # quantizes to whole iterations — allow one iteration of slack + 10% MC
-    iter_cost = la * 0.1 + 1.0
-    assert abs(sim - exp) <= 0.10 * exp + iter_cost
 
 
 def test_nonsi_timeline_monotone():
@@ -111,27 +147,87 @@ def test_nonsi_timeline_monotone():
     assert r.timeline[-1][1] == 10
 
 
-@settings(max_examples=15, deadline=None)
-@given(t_d=st.floats(0.05, 0.5), p=st.floats(0.0, 0.98),
-       n=st.integers(10, 40))
-def test_pool_matches_unbounded_at_lookahead_one(t_d, p, n):
-    """With L=1 and an unconstrained pool, the deployed simulator should
-    approach the abstract Algorithm-1 simulator (same latency structure)."""
-    pool = np.mean([simulate_dsi_pool(1.0, t_d, p, 1, 64, n, seed=s).latency
-                    for s in range(80)])
-    unb = np.mean([simulate_dsi_unbounded([t_d, 1.0], [p], n, seed=s).latency
-                   for s in range(80)])
-    # same structure up to block-detection granularity: one target latency
-    assert abs(pool - unb) <= 0.15 * unb + 1.0
+@pytest.mark.parametrize("t_d,p,n,seed", [
+    (0.1, 0.0, 20, 0), (0.1, 0.5, 40, 1), (0.5, 0.9, 60, 2),
+    (0.9, 1.0, 30, 3), (0.05, 0.25, 15, 4),
+])
+def test_thm1_grid_dsi_never_slower_than_nonsi(t_d, p, n, seed):
+    """Theorem 1 on a fixed grid (fallback for the hypothesis variant)."""
+    t_m = 1.0
+    r = simulate_dsi_unbounded([min(t_d, t_m), t_m], [p], n, seed=seed)
+    assert r.latency <= nonsi_latency(t_m, n) + 1e-9
 
 
-@settings(max_examples=20, deadline=None)
-@given(t_d=st.floats(0.05, 0.9), p=st.floats(0.0, 1.0), la=st.integers(1, 10),
-       n=st.integers(5, 50))
-def test_dsi_pool_timeline_monotone_and_complete(t_d, p, la, n):
+@pytest.mark.parametrize("t_d,sp", [
+    (0.01, 1), (0.1, 4), (0.33, 2), (0.5, 8), (0.99, 16),
+])
+def test_eq1_grid_lookahead_feasibility(t_d, sp):
+    """Eq. 1 feasibility/minimality on a fixed grid."""
+    t_m = 1.0
+    la = min_lookahead(t_m, t_d, sp)
+    assert int(np.ceil(t_m / (la * t_d))) <= sp
+    if la > 1:
+        assert int(np.ceil(t_m / ((la - 1) * t_d))) > sp
+    assert min_lookahead(t_m, t_d, max_useful_sp(t_m, t_d)) == 1
+
+
+@pytest.mark.parametrize("p,la", [(0.0, 1), (0.3, 4), (0.7, 8), (1.0, 20)])
+def test_expected_accepted_grid(p, la):
+    """E[accepted/iter] bounds + closed form on a fixed grid."""
+    e = expected_accepted_per_iter(p, la)
+    assert 0.0 <= e <= la + 1e-9
+    direct = sum(p ** i for i in range(1, la + 1))
+    assert abs(e - direct) < 1e-6
+
+
+@pytest.mark.parametrize("t_d,p,la,n", [
+    (0.1, 0.3, 4, 30), (0.25, 0.8, 2, 40), (0.4, 0.0, 6, 20),
+])
+def test_thm2_grid_dsi_pool_beats_si_in_expectation(t_d, p, la, n):
+    """Theorem 2 on a fixed grid: E[DSI] <= E[SI] at Eq.1-feasible SP."""
+    t_m = 1.0
+    sp = min_sp(t_m, t_d, la)
+    dsi = np.mean([simulate_dsi_pool(t_m, t_d, p, la, sp, n, seed=s).latency
+                   for s in range(60)])
+    si = np.mean([simulate_si(t_m, t_d, p, la, n, seed=s).latency
+                  for s in range(60)])
+    assert dsi <= si * 1.02 + 1e-9
+
+
+@pytest.mark.parametrize("t_d,p,n", [(0.1, 0.5, 25), (0.5, 0.9, 40)])
+def test_prop1_grid_expected_bound(t_d, p, n):
+    """Prop. 1 bound on a fixed grid."""
+    t_m = 1.0
+    mean = np.mean([simulate_dsi_unbounded([t_d, t_m], [p], n, seed=s).latency
+                    for s in range(120)])
+    assert mean <= dsi_expected_latency(t_m, t_d, p, n) + 0.25 * np.sqrt(n)
+
+
+@pytest.mark.parametrize("p,la,n", [(0.3, 4, 40), (0.8, 2, 30)])
+def test_si_simulator_matches_analytic_grid(p, la, n):
+    """SI simulator vs closed form on a fixed grid (one-iteration slack)."""
+    sim = np.mean([simulate_si(1.0, 0.1, p, la, n, seed=s).latency
+                   for s in range(150)])
+    exp = si_expected_latency(1.0, 0.1, p, la, n)
+    assert abs(sim - exp) <= 0.10 * exp + (la * 0.1 + 1.0)
+
+
+@pytest.mark.parametrize("t_d,p,la,n", [
+    (0.1, 0.5, 4, 30), (0.5, 0.0, 1, 10), (0.3, 1.0, 8, 25),
+])
+def test_dsi_pool_timeline_grid(t_d, p, la, n):
+    """Pool-simulator timeline monotonicity/completeness on a fixed grid."""
     r = simulate_dsi_pool(1.0, t_d, p, la, 8, n, seed=3)
     times = [t for t, _ in r.timeline]
     counts = [c for _, c in r.timeline]
     assert times == sorted(times)
     assert max(counts) == n
     assert r.latency == times[-1]
+
+
+def test_geometric_acceptance_estimator_grid():
+    """App F.2.1 estimator convergence at a fixed rate/sample size."""
+    rng = np.random.default_rng(0)
+    for p in (0.2, 0.5, 0.8):
+        matches = rng.geometric(1 - p, size=800) - 1
+        assert abs(acceptance_rate_from_matches(matches) - p) < 0.08

@@ -1,0 +1,154 @@
+"""Continuous-batching scheduler: heterogeneous requests through the
+slot-table DSI serving path, plus EngineStats accounting regressions."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.core.dsi_jax import DEFAULT_HISTORY_CAP, DSIEngine, EngineStats
+from repro.core.si_jax import nonsi_generate
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def models():
+    cfg_t = tiny("yi-9b")
+    cfg_d = tiny("yi-9b", d_model=128)
+    mt, md = Model(cfg_t), Model(cfg_d)
+    pt = mt.init(jax.random.PRNGKey(0))
+    pd = md.init(jax.random.PRNGKey(1))
+    return cfg_t, mt, md, pt, pd
+
+
+def _mixed_queue(cfg, n=8, seed=0):
+    """Heterogeneous prompts (length 5..13) and max_new (5..14)."""
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, cfg.vocab_size,
+                          size=int(rng.integers(5, 14))).tolist(),
+             int(rng.integers(5, 15))) for _ in range(n)]
+
+
+def test_continuous_batching_lossless_and_fewer_invocations(models):
+    """A mixed queue of 8 requests through max_batch=3 slots: streams
+    retire early, late requests are admitted mid-flight, every output
+    matches its own sequential greedy reference, and the whole queue takes
+    fewer jitted engine steps than running requests one at a time."""
+    cfg, mt, md, pt, pd = models
+    reqs = _mixed_queue(cfg, n=8)
+    eng = ServingEngine(target=mt, params_t=pt, drafter=md, params_d=pd,
+                        mode="dsi", lookahead=4, max_batch=3)
+    for p, m in reqs:
+        eng.submit(p, m)
+    done = eng.run()
+    assert len(done) == len(reqs)
+    sequential_steps = 0
+    for r in done:
+        ref = nonsi_generate(mt, pt, jnp.asarray(r.prompt, jnp.int32)[None],
+                             r.max_new)
+        assert r.output == np.asarray(ref)[0].tolist(), r.rid
+        assert len(r.output) == r.max_new
+        # per-request stats are populated by the scheduler
+        assert r.stats is not None
+        assert r.stats.macro_steps > 0
+        assert r.stats.emitted >= r.max_new
+        assert len(r.stats.history) > 0
+        sequential_steps += r.stats.macro_steps
+    # continuous batching advances up to max_batch streams per invocation
+    assert eng.engine_invocations < sequential_steps
+
+
+def test_scheduler_single_slot_degenerates_to_sequential(models):
+    """With one slot the scheduler is the seed's one-at-a-time loop and
+    must still be lossless."""
+    cfg, mt, md, pt, pd = models
+    reqs = _mixed_queue(cfg, n=3, seed=1)
+    eng = ServingEngine(target=mt, params_t=pt, drafter=md, params_d=pd,
+                        mode="dsi", lookahead=4, max_batch=1)
+    for p, m in reqs:
+        eng.submit(p, m)
+    for r in eng.run():
+        ref = nonsi_generate(mt, pt, jnp.asarray(r.prompt, jnp.int32)[None],
+                             r.max_new)
+        assert r.output == np.asarray(ref)[0].tolist(), r.rid
+
+
+def test_slot_table_direct_admission(models):
+    """Engine-level slot API: admit two requests, retire one, admit a
+    third into the freed slot mid-flight; all remain lossless."""
+    cfg, mt, md, pt, pd = models
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, size=s).tolist()
+               for s in (6, 9, 7)]
+    n_new = 8
+    eng = DSIEngine(mt, md, lookahead=4, rule="exact")
+    state = eng.init_slots(2, cap=n_new + 5, max_len=48)
+    state = eng.admit(pt, pd, state, 0, jnp.asarray(prompts[0])[None])
+    state = eng.admit(pt, pd, state, 1, jnp.asarray(prompts[1])[None])
+    third_admitted = False
+    outs = {}
+    for _ in range(80):
+        state = eng.step(pt, pd, state)
+        n_out = np.asarray(state["n_out"])
+        act = np.asarray(state["active"])
+        for b in range(2):
+            if act[b] and n_out[b] >= n_new:
+                outs[len(outs)] = (b, np.asarray(state["out"])[b, :n_new])
+                state = eng.retire(state, b)
+                if not third_admitted:
+                    state = eng.admit(pt, pd, state, b,
+                                      jnp.asarray(prompts[2])[None])
+                    third_admitted = True
+        if len(outs) == 3:
+            break
+    assert len(outs) == 3 and third_admitted
+    # map each completed stream back to its prompt via lossless reference
+    refs = [np.asarray(nonsi_generate(mt, pt, jnp.asarray(p)[None], n_new))[0]
+            for p in prompts]
+    got = sorted(tuple(v.tolist()) for _, v in outs.values())
+    want = sorted(tuple(r.tolist()) for r in refs)
+    assert got == want
+
+
+# ---------------------------------------------------------------- stats
+def test_engine_stats_history_bounded_and_consistent():
+    """Regression: history must not grow per macro-step without bound, and
+    acceptance_rate must agree with the (untrimmed) history."""
+    st = EngineStats(max_history=16)
+    for i in range(100):
+        st.record(n_acc=i % 4, rejected=(i % 3 == 0), n_out=i)
+    assert len(st.history) == 16
+    assert st.macro_steps == 100           # counters are never trimmed
+    assert st.accepted_drafts == sum(i % 4 for i in range(100))
+    assert st.rejections == sum(1 for i in range(100) if i % 3 == 0)
+    assert st.acceptance_rate == pytest.approx(
+        st.accepted_drafts / (st.accepted_drafts + st.rejections))
+    # untrimmed stats: history and counters agree exactly
+    st2 = EngineStats(max_history=None)
+    for i in range(50):
+        st2.record(n_acc=2, rejected=(i % 5 == 0), n_out=i)
+    assert len(st2.history) == 50
+    assert sum(h[0] for h in st2.history) == st2.accepted_drafts
+    assert sum(1 for h in st2.history if h[1]) == st2.rejections
+    assert EngineStats().max_history == DEFAULT_HISTORY_CAP
+
+
+def test_serving_stats_are_per_request_and_bounded(models):
+    """Serving mode: each request carries its own EngineStats, bounded by
+    the engine's history_cap, consistent with its counters."""
+    cfg, mt, md, pt, pd = models
+    eng = ServingEngine(target=mt, params_t=pt, drafter=md, params_d=pd,
+                        mode="dsi", lookahead=4, max_batch=2, history_cap=4)
+    for p, m in _mixed_queue(cfg, n=4, seed=3):
+        eng.submit(p, m)
+    for r in eng.run():
+        assert r.stats.max_history == 4
+        assert len(r.stats.history) <= 4
+        assert r.stats.macro_steps >= len(r.stats.history)
+        if r.stats.macro_steps <= 4:  # untrimmed: exact agreement
+            assert sum(h[0] for h in r.stats.history) == r.stats.accepted_drafts
+        rate = r.stats.acceptance_rate
+        assert 0.0 <= rate <= 1.0

@@ -28,8 +28,8 @@ def test_sharded_forward_matches_single_device():
         from repro.configs import get_config, reduced
         from repro.models.model import Model
         from repro.sharding import use_mesh, param_specs
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         for name in ("deepseek-moe-16b", "hymba-1.5b", "yi-9b"):
             cfg = reduced(get_config(name))
             cfg = dataclasses.replace(cfg, dtype="float32")
@@ -100,8 +100,8 @@ def test_moe_weight_stationary_matches_ref():
         from repro.models import moe as moe_mod
         from repro.models.model import Model
         from repro.sharding import use_mesh, param_specs
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         cfg = reduced(get_config("deepseek-moe-16b"))
         cfg = dataclasses.replace(cfg, dtype="float32",
                                   moe=dataclasses.replace(
@@ -132,8 +132,8 @@ def test_param_specs_divisible():
         from repro.configs import get_config
         from repro.models.model import Model
         from repro.sharding import param_specs
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         cfg = get_config("hymba-1.5b")  # awkward dims (25 heads, 6482)
         shapes = jax.eval_shape(Model(cfg).init, jax.random.PRNGKey(0))
         specs = param_specs(mesh, shapes)

@@ -3,9 +3,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.verify import batched_verify, exact_verify, leviathan_verify
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
 def test_exact_verify_prefix():
@@ -49,9 +54,7 @@ def test_leviathan_identical_models_accept_everything(rng):
         assert int(n) == k  # ratio p_t/p_d = 1 => u < 1 always
 
 
-@settings(max_examples=20, deadline=None)
-@given(k=st.integers(1, 8), v=st.integers(2, 64), seed=st.integers(0, 999))
-def test_batched_verify_bounds(k, v, seed):
+def _check_batched_verify_bounds(k, v, seed):
     key = jax.random.PRNGKey(seed)
     ks = jax.random.split(key, 3)
     dp = jax.nn.softmax(jax.random.normal(ks[0], (3, k, v)))
@@ -60,6 +63,18 @@ def test_batched_verify_bounds(k, v, seed):
     n, nxt = batched_verify(key, dt, dp, tp)
     assert ((0 <= np.asarray(n)) & (np.asarray(n) <= k)).all()
     assert ((0 <= np.asarray(nxt)) & (np.asarray(nxt) < v)).all()
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(k=st.integers(1, 8), v=st.integers(2, 64), seed=st.integers(0, 999))
+    def test_batched_verify_bounds(k, v, seed):
+        _check_batched_verify_bounds(k, v, seed)
+else:
+    @pytest.mark.parametrize("k,v,seed",
+                             [(1, 2, 0), (4, 16, 7), (8, 64, 999)])
+    def test_batched_verify_bounds(k, v, seed):
+        _check_batched_verify_bounds(k, v, seed)
 
 
 def test_residual_sampling_never_returns_impossible_token(rng):
