@@ -1,14 +1,29 @@
-"""Kernel micro-bench: wall time of the portable paths on this host (the
-Pallas kernels target TPU; interpret mode is correctness-only, so we time
-the jnp fallbacks that share the same math) + oracle agreement."""
+"""Kernel micro-bench: wall time of the dispatchable paths on this host +
+oracle agreement, emitted both as CSV lines and as machine-readable rows
+(``main(json_path=...)`` writes BENCH_kernels.json — the perf trajectory
+tracked by CI via ``benchmarks/run.py --smoke``).
+
+The decode/verify-attention section times the DSI hot path three ways:
+  * ref      — attention_ref, the dense jnp oracle,
+  * blocked  — the dispatcher's portable path (ring_decode_ref packed
+               GEMMs; what non-TPU hosts actually run),
+  * pallas-interpret — the ring-decode kernel's interpret build
+               (correctness-only: interpreter overhead dominates, timed on
+               a small cache just to keep the row in the trajectory).
+On TPU the dispatcher row times the compiled Pallas kernel instead.
+"""
 from __future__ import annotations
 
+import json
 import time
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention.ops import attention
+from repro.kernels.flash_attention.ops import attention, decode_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.ring_decode import ring_slot_map
 from repro.kernels.spec_verify.ref import spec_verify_ref
 from repro.kernels.ssd_scan.ref import ssd_ref
 
@@ -23,9 +38,73 @@ def _time(fn, *args, reps=5, **kw):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def main():
+def _time_interleaved(fns, *args, rounds=24):
+    """Median per-call us for several fns, alternating calls each round —
+    robust against thermal/noisy-neighbour drift that makes sequential
+    A-then-B timings lie on small shared hosts."""
+    for fn in fns.values():
+        jax.block_until_ready(fn(*args))
+    acc = {name: [] for name in fns}
+    for _ in range(rounds):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            acc[name].append(time.perf_counter() - t0)
+    return {name: sorted(ts)[len(ts) // 2] * 1e6 for name, ts in acc.items()}
+
+
+def _row(rows: List[dict], op: str, shape: str, us: float,
+         tokens: Optional[int] = None, note: str = "") -> None:
+    tps = tokens / (us * 1e-6) if tokens else None
+    rows.append({"op": op, "shape": shape, "ms": round(us / 1e3, 4),
+                 "tokens_per_s": None if tps is None else round(tps, 1)})
+    derived = f"{tps:.0f}tok/s" if tps else note
+    print(f"{op}_{shape},{us:.0f},{derived}")
+
+
+def bench_decode_attention(rows: List[dict], smoke: bool = False) -> None:
+    """DSI decode (W=1) and verify-window (W=8) attention over ring caches:
+    the ref/blocked comparison is the acceptance gate (blocked must win at
+    S_cache >= 2048 on the benchmark host)."""
     key = jax.random.PRNGKey(0)
-    print("name,us_per_call,derived")
+    on_tpu = jax.default_backend() == "tpu"
+    shapes = [(4, 1, 8, 2, 64, 2048), (4, 8, 8, 2, 64, 2048)]
+    if not smoke:
+        shapes.append((4, 8, 8, 2, 64, 4096))
+    for b, w, h, kv, d, s in shapes:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, w, h, d))
+        k = jax.random.normal(ks[1], (b, s, kv, d))
+        v = jax.random.normal(ks[2], (b, s, kv, d))
+        pos = jnp.full((b,), s + 3, jnp.int32)          # wrapped ring
+        slot = ring_slot_map(pos + w, s)
+        shape = f"B{b}W{w}H{h}KV{kv}D{d}S{s}"
+        f_ref = jax.jit(lambda q, k, v, sl, p: attention_ref(
+            q, k, v, causal=True, q_offset=p, kv_positions=sl))
+        f_disp = jax.jit(lambda q, k, v, sl, p: decode_attention(
+            q, k, v, sl, p, force_pallas=on_tpu or None))
+        op = "decode_attn_pallas" if on_tpu else "decode_attn_blocked"
+        med = _time_interleaved({"ref": f_ref, "disp": f_disp},
+                                q, k, v, slot, pos)
+        _row(rows, "decode_attn_ref", shape, med["ref"], tokens=b * w)
+        _row(rows, op, shape, med["disp"], tokens=b * w)
+    if not on_tpu:
+        # interpret build: correctness-only, small cache, one rep
+        b, w, h, kv, d, s = 2, 8, 8, 2, 64, 512
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, w, h, d))
+        k = jax.random.normal(ks[1], (b, s, kv, d))
+        v = jax.random.normal(ks[2], (b, s, kv, d))
+        pos = jnp.full((b,), s + 3, jnp.int32)
+        slot = ring_slot_map(pos + w, s)
+        f_int = jax.jit(lambda q, k, v, sl, p: decode_attention(
+            q, k, v, sl, p, force_pallas=True, interpret=True))
+        _row(rows, "decode_attn_pallas_interpret", f"B{b}W{w}H{h}KV{kv}D{d}S{s}",
+             _time(f_int, q, k, v, slot, pos, reps=1), tokens=b * w)
+
+
+def bench_prefill_attention(rows: List[dict]) -> None:
+    key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 3)
     q = jax.random.normal(ks[0], (1, 2048, 8, 128), jnp.bfloat16)
     k = jax.random.normal(ks[1], (1, 2048, 2, 128), jnp.bfloat16)
@@ -34,26 +113,51 @@ def main():
                                           force_pallas=False))
     us = _time(f, q, k, v)
     flops = 4 * 2048 * 2048 * 8 * 128 / 2  # causal half
-    print(f"bench_attention_2k,{us:.0f},{flops / (us * 1e-6) / 1e9:.1f}GFLOP/s")
+    _row(rows, "prefill_attn_blocked", "B1S2048H8D128", us,
+         note=f"{flops / (us * 1e-6) / 1e9:.1f}GFLOP/s")
 
+
+def bench_spec_verify(rows: List[dict]) -> None:
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
     dp = jax.nn.softmax(jax.random.normal(ks[0], (8, 32000)))
     tp = jax.nn.softmax(jax.random.normal(ks[1], (9, 32000)))
     dt = jax.random.randint(ks[2], (8,), 0, 32000)
     ua = jax.random.uniform(ks[0], (9,))
     ur = jax.random.uniform(ks[1], (9,))
     f2 = jax.jit(spec_verify_ref)
-    us = _time(f2, dt, dp, tp, ua, ur)
-    print(f"bench_spec_verify_32k_vocab,{us:.0f},K=8")
+    _row(rows, "spec_verify_ref", "K8V32000", _time(f2, dt, dp, tp, ua, ur),
+         note="K=8")
 
+
+def bench_ssd(rows: List[dict]) -> None:
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
     x = jax.random.normal(ks[0], (2, 1024, 8, 64))
     dtm = jax.nn.softplus(jax.random.normal(ks[1], (2, 1024, 8)))
     a = -jnp.exp(jax.random.normal(ks[2], (8,)))
     bm = jax.random.normal(ks[0], (2, 1024, 1, 64))
     cm = jax.random.normal(ks[1], (2, 1024, 1, 64))
     f3 = jax.jit(lambda *a_: ssd_ref(*a_, 128))
-    us = _time(f3, x, dtm, a, bm, cm)
-    print(f"bench_ssd_1k,{us:.0f},chunk=128")
+    _row(rows, "ssd_ref", "B2S1024H8", _time(f3, x, dtm, a, bm, cm),
+         note="chunk=128")
+
+
+def main(smoke: bool = False, json_path: Optional[str] = None) -> List[dict]:
+    rows: List[dict] = []
+    print("name,us_per_call,derived")
+    bench_decode_attention(rows, smoke=smoke)
+    bench_prefill_attention(rows)
+    bench_spec_verify(rows)
+    if not smoke:
+        bench_ssd(rows)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"backend": jax.default_backend(), "rows": rows}, f,
+                      indent=1)
+        print(f"wrote {json_path} ({len(rows)} rows)")
+    return rows
 
 
 if __name__ == "__main__":
-    main()
+    main(json_path="BENCH_kernels.json")

@@ -18,10 +18,13 @@ def main() -> None:
     if smoke:
         # minimal end-to-end canary: one timeline row + the serving-engine
         # economics on tiny real models (exercises batched DSI + scheduler)
+        # + the kernel micro-bench with its machine-readable trajectory
         print("== Table 1: token-count timeline ==")
         table1_timeline.main()
         print("== Engine-level drafter-quality sweep (real models) ==")
         engine_stats.main(smoke=True)
+        print("== Kernel micro-benchmarks ==")
+        bench_kernels.main(smoke=True, json_path="BENCH_kernels.json")
         return
     print("== Table 1: token-count timeline ==")
     table1_timeline.main()
@@ -35,7 +38,7 @@ def main() -> None:
         print("== Engine-level drafter-quality sweep (real models) ==")
         engine_stats.main()
     print("== Kernel micro-benchmarks ==")
-    bench_kernels.main()
+    bench_kernels.main(json_path="BENCH_kernels.json")
 
 
 if __name__ == "__main__":

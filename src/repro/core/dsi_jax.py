@@ -115,6 +115,11 @@ def draft_scan(model: Model, params, cache, t_in, n: int, key, greedy: bool):
     input at each position* — entry i = state after position pos0+i-1 for
     i>=1, entry 0 = state before the scan — enabling exact rollback to any
     offset inside the drafted range.
+
+    Each scanned ``decode_step`` (and the target's ``verify_chunk`` it
+    overlaps with) runs its cache attention through the ring-decode kernel
+    dispatch (kernels/flash_attention/ops.py) — Pallas on TPU, packed-GEMM
+    jnp elsewhere.
     """
     init_states = _extract_states(cache)
 
@@ -223,18 +228,22 @@ class DSIEngine:
 
         t_cache = self.target.commit(state["t_cache"], t_post, n_acc)
 
-        # (c) emit accepted non-forced window tokens (+ correction if rejected)
+        # (c) emit accepted non-forced window tokens (+ correction if
+        # rejected) as one batched scatter — invalid lanes point one past
+        # the buffer edge and are dropped, so no masked full-buffer passes.
         buf, n_out = state["out"], state["n_out"]
-        pos_idx = jnp.arange(buf.shape[1])[None]
-        for i in range(w):
-            put = have & (i >= state["forced"]) & (i < n_acc)
-            tgt_slot = n_out + i - state["forced"]
-            buf = jnp.where(put[:, None] & (pos_idx == tgt_slot[:, None]),
-                            state["window"][:, i:i + 1], buf)
+        bsz, cap = buf.shape
+        offs = jnp.arange(w, dtype=jnp.int32)[None]                  # (1,W)
+        put = (have[:, None] & (offs >= state["forced"][:, None])
+               & (offs < n_acc[:, None]))                            # (B,W)
+        idx = jnp.where(put, n_out[:, None] + offs - state["forced"][:, None],
+                        cap)
+        stream = jnp.arange(bsz)[:, None]
+        buf = buf.at[stream, idx].set(state["window"], mode="drop")
         n_emit = jnp.where(have, n_acc - state["forced"], 0)
         n_out = n_out + n_emit
-        buf = jnp.where(rejected[:, None] & (pos_idx == n_out[:, None]),
-                        nxt[:, None], buf)
+        corr_idx = jnp.where(rejected, n_out, cap)
+        buf = buf.at[jnp.arange(bsz), corr_idx].set(nxt, mode="drop")
         n_out = n_out + rejected.astype(jnp.int32)
 
         # (d) drafter bookkeeping, per stream

@@ -62,15 +62,17 @@ class SIEngine:
         t_cache = self.target.commit(state["t_cache"], t_post, n_acc)
 
         # emit accepted drafts (excluding forced pending) + bonus/correction
+        # as one batched scatter (same shape as DSI's — invalid lanes point
+        # past the buffer edge and are dropped)
         buf, n_out = state["out"], state["n_out"]
-        pos_idx = jnp.arange(buf.shape[1])[None]
-        for i in range(1, w):
-            put = (i < n_acc)
-            slot = n_out + i - 1
-            buf = jnp.where(put[:, None] & (pos_idx == slot[:, None]),
-                            window[:, i:i + 1], buf)
+        bsz, cap = buf.shape
+        offs = jnp.arange(w, dtype=jnp.int32)[None]                  # (1,W)
+        put = (offs >= 1) & (offs < n_acc[:, None])                  # (B,W)
+        idx = jnp.where(put, n_out[:, None] + offs - 1, cap)
+        stream = jnp.arange(bsz)[:, None]
+        buf = buf.at[stream, idx].set(window, mode="drop")
         n_out = n_out + n_acc - 1
-        buf = jnp.where(pos_idx == n_out[:, None], nxt[:, None], buf)
+        buf = buf.at[jnp.arange(bsz), n_out].set(nxt, mode="drop")
         n_out = n_out + 1
 
         carry = jnp.take_along_axis(

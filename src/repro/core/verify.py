@@ -18,7 +18,7 @@ draft i; row K is the bonus/next-position distribution. Batched use is
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -68,14 +68,32 @@ def leviathan_verify(key, draft_tokens: jnp.ndarray, draft_probs: jnp.ndarray,
 
 def batched_verify(key, draft_tokens: jnp.ndarray, draft_probs: jnp.ndarray,
                    target_probs: jnp.ndarray, n_forced=None, *,
-                   rule: str = "leviathan"
+                   rule: str = "leviathan",
+                   use_kernel: Optional[bool] = None,
+                   interpret: Optional[bool] = None
                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """(B,K)/(B,K,V)/(B,K+1,V) -> (n_accepted (B,), next_token (B,))."""
+    """(B,K)/(B,K,V)/(B,K+1,V) -> (n_accepted (B,), next_token (B,)).
+
+    ``leviathan`` routes through the fused Pallas spec_verify kernel
+    (vmapped over streams) on TPU — or wherever ``pallas_override`` /
+    ``use_kernel`` forces it — and falls back to the jnp rule elsewhere.
+    ``n_accepted`` is bit-identical across routes (same per-stream key
+    split and uniforms); the correction/bonus token is sampled by
+    inverse-CDF in the kernel route vs gumbel in the jnp route — same
+    distribution, so losslessness is preserved either way.
+    """
     b = draft_tokens.shape[0]
     if n_forced is None:
         n_forced = jnp.zeros((b,), jnp.int32)
     if rule == "exact":
         return jax.vmap(exact_verify)(draft_tokens, target_probs, n_forced)
+    from repro.kernels.dispatch import resolve_pallas
+    use_pallas, interp = resolve_pallas(use_kernel, interpret)
+    if use_pallas or interp:
+        from repro.kernels.spec_verify.ops import batched_verify_and_sample
+        return batched_verify_and_sample(
+            key, draft_tokens, draft_probs, target_probs, n_forced,
+            force_pallas=use_pallas or None, interpret=interp)
     keys = jax.random.split(key, b)
     return jax.vmap(leviathan_verify)(keys, draft_tokens, draft_probs,
                                       target_probs, n_forced)

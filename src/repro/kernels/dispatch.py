@@ -1,0 +1,46 @@
+"""Backend dispatch shared by every Pallas kernel wrapper.
+
+Each kernel family (flash_attention, ring_decode, spec_verify) exposes a
+jit'd wrapper that picks between the Pallas kernel (TPU, or its
+``interpret=True`` build anywhere) and a portable jnp path. The decision
+is resolved here so tests and benchmarks can force a path process-wide
+without threading flags through the model stack:
+
+    with pallas_override(force_pallas=True, interpret=True):
+        engine = DSIEngine(target, drafter, ...)   # traces with kernels on
+        out, stats = engine.generate(...)
+
+The override is consulted at *trace time*: build engines / jitted
+functions inside the context. Already-traced functions keep whatever path
+they were traced with.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+import jax
+
+_override = {"force_pallas": None, "interpret": None}
+
+
+@contextlib.contextmanager
+def pallas_override(force_pallas: Optional[bool] = None,
+                    interpret: Optional[bool] = None):
+    """Force kernel-dispatch decisions for the dynamic extent of the block."""
+    prev = dict(_override)
+    _override.update(force_pallas=force_pallas, interpret=interpret)
+    try:
+        yield
+    finally:
+        _override.update(prev)
+
+
+def resolve_pallas(force_pallas: Optional[bool] = None,
+                   interpret: Optional[bool] = None) -> Tuple[bool, bool]:
+    """(use_pallas, interpret): explicit args > active override > backend."""
+    fp = force_pallas if force_pallas is not None else _override["force_pallas"]
+    it = interpret if interpret is not None else _override["interpret"]
+    if fp is None:
+        fp = jax.default_backend() == "tpu"
+    return bool(fp), bool(it)

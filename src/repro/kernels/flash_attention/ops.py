@@ -1,23 +1,37 @@
 """Attention entry point used by the model stack.
 
-Dispatch:
-  * TPU backend (or ``force_pallas``): the Pallas flash kernel.
-  * elsewhere: a memory-bounded blocked-jnp path (lax.scan over query
-    chunks, full-precision softmax) — never materializes (Sq, Sk) scores
-    for large Sq, so 32k-token prefill lowers with bounded live memory.
+Dispatch (see docs/kernels.md for the full table):
+  * ring/decode calls (``kv_positions`` given — drafter decode steps, DSI
+    verify windows, sliding-window ring caches):
+      - TPU (or ``force_pallas``/``pallas_override``): the Pallas
+        ring-decode kernel (ring_decode.py) — GQA-packed split-K
+        flash-decode over the ring cache.
+      - elsewhere: ``ring_decode_ref`` — the same GQA packing as two
+        batched GEMMs (beats ``attention_ref`` wall-clock on CPU at
+        S_cache >= 2048; benchmarks/bench_kernels.py).
+  * prefill/train calls (no ``kv_positions``):
+      - TPU: the Pallas flash kernel; short query chunks (Sq < 128, e.g.
+        a W-token window against a linear cache) are padded up to one
+        q-block instead of silently dropping to the jnp path.
+      - elsewhere: a memory-bounded blocked-jnp path (lax.scan over query
+        chunks, full-precision softmax) — never materializes (Sq, Sk)
+        scores for large Sq, so 32k-token prefill lowers with bounded
+        live memory.
 
 Semantics match ``ref.attention_ref`` bit-for-bit up to fp accumulation
 order; tests sweep shapes/dtypes against the oracle.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import resolve_pallas
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.ring_decode import (ring_decode_attention,
+                                                       ring_decode_ref)
 
 _DEFAULT_CHUNK = 1024
 
@@ -29,21 +43,22 @@ def _pick_chunk(sq: int, chunk: int) -> int:
     return c
 
 
-def _blocked(q, k, v, *, causal, window, q_offset, kv_len, kv_positions, chunk):
+def _blocked(q, k, v, *, causal, window, q_offset, kv_len, chunk):
+    """Linear-cache path only — ring calls (kv_positions) dispatch to
+    ring_decode before reaching here."""
     b, sq, h, d = q.shape
     c = _pick_chunk(sq, chunk)
     n = sq // c
     if n == 1:
         return attention_ref(q, k, v, causal=causal, window=window,
-                             q_offset=q_offset, kv_len=kv_len,
-                             kv_positions=kv_positions)
+                             q_offset=q_offset, kv_len=kv_len)
     qc = q.reshape(b, n, c, h, d).swapaxes(0, 1)  # (n, B, c, H, D)
 
     def body(_, xs):
         qi, i = xs
         out = attention_ref(qi, k, v, causal=causal, window=window,
                             q_offset=jnp.asarray(q_offset) + i * c,
-                            kv_len=kv_len, kv_positions=kv_positions)
+                            kv_len=kv_len)
         return None, out
 
     _, outs = jax.lax.scan(body, None, (qc, jnp.arange(n)))
@@ -58,25 +73,44 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
               kv_positions: Optional[jnp.ndarray] = None,
               chunk: int = _DEFAULT_CHUNK,
               force_pallas: Optional[bool] = None,
-              interpret: bool = False) -> jnp.ndarray:
+              interpret: Optional[bool] = None) -> jnp.ndarray:
     """GQA attention. q (B,Sq,H,D); k/v (B,Sk,KV,D). See ref.py for masks."""
-    use_pallas = force_pallas
-    if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
-    if use_pallas and kv_positions is None and q.shape[1] >= 128:
+    use_pallas, interp = resolve_pallas(force_pallas, interpret)
+    use_pallas = use_pallas or interp   # interpret-only override still forces
+    if kv_positions is not None:        # the kernel path (matches spec_verify)
+        if use_pallas:
+            return ring_decode_attention(q, k, v, kv_positions, q_offset,
+                                         causal=causal, window=window,
+                                         kv_len=kv_len, interpret=interp)
+        return ring_decode_ref(q, k, v, kv_positions, q_offset,
+                               causal=causal, window=window, kv_len=kv_len)
+    bq = 128
+    sq, sk = q.shape[1], k.shape[1]
+    if (use_pallas and sk % bq == 0 and jnp.ndim(q_offset) == 0
+            and (kv_len is None or jnp.ndim(kv_len) == 0)):
         from repro.kernels.flash_attention.flash_attention import flash_attention
-        return flash_attention(q, k, v, causal=causal, window=window,
-                               q_offset=q_offset, kv_len=kv_len,
-                               interpret=interpret)
+        pad = -sq % bq
+        if pad:   # short-query chunk: pad Sq up to one q-block, slice after
+            q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset, kv_len=kv_len,
+                              interpret=interp)
+        return out[:, :sq] if pad else out
     return _blocked(q, k, v, causal=causal, window=window, q_offset=q_offset,
-                    kv_len=kv_len, kv_positions=kv_positions, chunk=chunk)
+                    kv_len=kv_len, chunk=chunk)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window"))
 def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      kv_positions: jnp.ndarray, pos: jnp.ndarray, *,
                      causal: bool = True,
-                     window: Optional[int] = None) -> jnp.ndarray:
-    """Single-step decode: q (B,1,H,D) against a (ring or linear) cache."""
-    return attention_ref(q, k, v, causal=causal, window=window, q_offset=pos,
-                         kv_positions=kv_positions)
+                     window: Optional[int] = None,
+                     kv_len: Optional[jnp.ndarray] = None,
+                     force_pallas: Optional[bool] = None,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Decode/verify attention: q (B,W,H,D) against a (ring or linear)
+    cache. Thin alias of :func:`attention` with ``kv_positions`` required;
+    not jit'd itself (every caller sits inside a jitted step, and the
+    dispatch decision must be re-resolved per trace)."""
+    return attention(q, k, v, causal=causal, window=window, q_offset=pos,
+                     kv_positions=kv_positions, kv_len=kv_len,
+                     force_pallas=force_pallas, interpret=interpret)

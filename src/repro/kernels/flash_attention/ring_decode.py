@@ -1,0 +1,273 @@
+"""Pallas TPU flash-decode kernel for ring-buffer KV caches — the DSI
+decode/verify hot path (drafter single-token decode, target W-token
+verification windows, sliding-window layers) on the MXU.
+
+The prefill flash kernel cannot serve this path: ring caches address keys
+by per-slot absolute position (``slot_pos``), not by contiguous index, and
+a decode/verify query is 1..W rows — far below an MXU-aligned q-block.
+
+TPU-native design (mirrors flash_attention.py's persistent-scratch
+pattern):
+  * grid = (B, KV, nk); nk (KV-cache blocks) is the innermost,
+    sequentially-executed dim so the online-softmax running state
+    (m/l rescale + output accumulator) lives in VMEM scratch across
+    k-steps — split-K partials combined in-register, nothing spilled.
+  * GQA packing: the G query heads sharing one KV head and the W window
+    rows are packed together into the matmul M-dim (row r = g·W + i), so
+    even Sq ∈ {1..W} feeds the MXU a (G·W, bk) score tile instead of W
+    one-row matvecs. M is padded to a sublane multiple; pad rows are
+    sliced off outside.
+  * per-stream scalars (``pos`` (B,), ``kv_len`` (B,)) ride in SMEM via
+    ``PrefetchScalarGridSpec``; the per-stream ``slot_pos`` ring map is a
+    vector per KV block, so it streams through VMEM (1, bk) tiles next to
+    the k/v tiles it masks.
+  * masking is computed from absolute slot positions (slot >= 0, causal
+    slot <= pos + r%W, sliding window slot > pos + r%W - window, padded
+    decode caches slot < kv_len), so one kernel serves single-token
+    decode, the W-token verify window, and sliding-window layers; KV
+    blocks whose slots are all dead are skipped with pl.when.
+
+Oracle: ref.attention_ref (q_offset=pos, kv_positions=slot_pos);
+validated via interpret=True on CPU.
+
+``ring_decode_ref`` is the portable jnp path with the same GQA packing:
+two (B·KV)-batched GEMMs instead of the oracle's 5-D einsum — measurably
+faster than ``attention_ref`` on CPU at S_cache >= 2048 (see
+benchmarks/bench_kernels.py) and the non-TPU dispatch default.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pack_q(q: jnp.ndarray, kv: int) -> jnp.ndarray:
+    """(B, W, H, D) -> (B, KV, G*W, D), row r = g*W + i (g-major)."""
+    b, w, h, d = q.shape
+    g = h // kv
+    qp = q.reshape(b, w, kv, g, d).transpose(0, 2, 3, 1, 4)
+    return qp.reshape(b, kv, g * w, d)
+
+
+def _unpack_o(o: jnp.ndarray, w: int, h: int) -> jnp.ndarray:
+    """(B, KV, G*W, D) -> (B, W, H, D) — inverse of _pack_q."""
+    b, kv, m, d = o.shape
+    g = h // kv
+    return o.reshape(b, kv, g, w, d).transpose(0, 3, 1, 2, 4).reshape(b, w, h, d)
+
+
+def ring_slot_map(pos, s_cache: int) -> jnp.ndarray:
+    """Per-stream ring map for a cache filled up to ``pos`` ((B,) or
+    scalar): slot i holds the latest position p < pos with
+    p % s_cache == i, else -1 — mirrors Model.init_cache/_pack_cache.
+    Shared by the kernel tests and benchmarks."""
+    slots = jnp.arange(s_cache)
+
+    def one(p):
+        full = p - 1 - jnp.mod(p - 1 - slots, s_cache)
+        part = jnp.where(slots < p, slots, -1)
+        return jnp.where(p >= s_cache, full, part).astype(jnp.int32)
+
+    return jax.vmap(one)(jnp.asarray(pos, jnp.int32).reshape(-1))
+
+
+def _norm_pos(pos, b: int) -> jnp.ndarray:
+    p = jnp.asarray(pos, jnp.int32)
+    return jnp.broadcast_to(p.reshape(-1), (b,))
+
+
+def _norm_slots(slot_pos, b: int) -> jnp.ndarray:
+    s = jnp.asarray(slot_pos, jnp.int32)
+    return jnp.broadcast_to(jnp.atleast_2d(s), (b, s.shape[-1]))
+
+
+def _kernel(scalars_ref,               # SMEM (B, 2): [pos, kv_len] per stream
+            q_ref, k_ref, v_ref,       # VMEM tiles
+            slot_ref,                  # VMEM (1, bk) absolute slot positions
+            o_ref,
+            m_scr, l_scr, acc_scr,     # VMEM online-softmax scratch
+            *, bm: int, bk: int, nk: int, w: int, causal: bool,
+            window: Optional[int], scale: float):
+    bi = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = scalars_ref[bi, 0]
+    kv_len = scalars_ref[bi, 1]
+    slots = slot_ref[...]                                       # (1, bk)
+
+    # Block skip: a KV block is dead when no slot can be seen by ANY window
+    # row (rows span absolute positions [pos, pos + w - 1]).
+    s_ok = (slots >= 0) & (slots < kv_len)
+    if causal:
+        s_ok = jnp.logical_and(s_ok, slots <= pos + (w - 1))
+    if window is not None:
+        s_ok = jnp.logical_and(s_ok, slots > pos - window)
+
+    @pl.when(jnp.any(s_ok))
+    def _block():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)               # (bm, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)               # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        # row r packs (g, i): its query sits at absolute position pos + r%W
+        row = jax.lax.broadcasted_iota(jnp.int32, (bm, bk), 0)
+        q_pos = pos + (jnp.remainder(row, w) if w > 1 else 0)
+        k_pos = jnp.broadcast_to(slots, (bm, bk))
+        mask = (k_pos >= 0) & (k_pos < kv_len)
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bk",
+                                             "interpret"))
+def ring_decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                          slot_pos: jnp.ndarray, pos, *,
+                          causal: bool = True,
+                          window: Optional[int] = None,
+                          kv_len=None,
+                          bk: int = 128,
+                          interpret: bool = False) -> jnp.ndarray:
+    """q (B,W,H,D) against a ring cache k/v (B,S,KV,D) with per-slot
+    absolute positions ``slot_pos`` ((S,) or (B,S); -1 = empty) and window
+    start ``pos`` (scalar or (B,)). Semantics == attention_ref with
+    ``q_offset=pos, kv_positions=slot_pos``."""
+    b, w, h, d = q.shape
+    _, s, kv, _ = k.shape
+    assert h % kv == 0, (h, kv)
+    g = h // kv
+    m = g * w
+    bm = _round_up(m, 16)                 # sublane-aligned for f32 and bf16
+    qp = _pack_q(q, kv)
+    if bm != m:
+        qp = jnp.pad(qp, ((0, 0), (0, 0), (0, bm - m), (0, 0)))
+
+    slot_b = _norm_slots(slot_pos, b)
+    pos_b = _norm_pos(pos, b)
+    kl_b = (jnp.full((b,), _INT32_MAX, jnp.int32) if kv_len is None
+            else _norm_pos(kv_len, b))
+    scalars = jnp.stack([pos_b, kl_b], axis=1)                  # (B, 2)
+
+    bk = min(bk, _round_up(s, 16))
+    spad = _round_up(s, bk)
+    if spad != s:
+        kvpad = ((0, 0), (0, spad - s), (0, 0), (0, 0))
+        k = jnp.pad(k, kvpad)
+        v = jnp.pad(v, kvpad)
+        slot_b = jnp.pad(slot_b, ((0, 0), (0, spad - s)), constant_values=-1)
+    nk = spad // bk
+
+    kernel = functools.partial(_kernel, bm=bm, bk=bk, nk=nk, w=w,
+                               causal=causal, window=window,
+                               scale=1.0 / float(d) ** 0.5)
+    grid = (b, kv, nk)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, bm, d), lambda bi, hi, ki, *_: (bi, hi, 0, 0)),
+                pl.BlockSpec((1, bk, 1, d), lambda bi, hi, ki, *_: (bi, ki, hi, 0)),
+                pl.BlockSpec((1, bk, 1, d), lambda bi, hi, ki, *_: (bi, ki, hi, 0)),
+                pl.BlockSpec((1, bk), lambda bi, hi, ki, *_: (bi, ki)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, bm, d),
+                                   lambda bi, hi, ki, *_: (bi, hi, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bm,), jnp.float32),
+                pltpu.VMEM((bm,), jnp.float32),
+                pltpu.VMEM((bm, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kv, bm, d), q.dtype),
+        interpret=interpret,
+    )(scalars, qp, k, v, slot_b)
+    return _unpack_o(out[:, :, :m], w, h)
+
+
+def ring_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    slot_pos: jnp.ndarray, pos, *,
+                    causal: bool = True,
+                    window: Optional[int] = None,
+                    kv_len=None) -> jnp.ndarray:
+    """Portable decode path with the kernel's GQA packing: two
+    (B·KV)-batched GEMMs on (G·W, D)/(G·W, S) tiles — XLA:CPU dispatches
+    these to real GEMMs where the oracle's 5-D einsum stays in generic
+    loop fusion. bf16 probabilities feed the second GEMM in the cache
+    dtype (flash convention; fp32 probs would materialize an fp32 copy of
+    the value cache per step)."""
+    b, w, h, d = q.shape
+    _, s, kv, _ = k.shape
+    assert h % kv == 0, (h, kv)
+    g = h // kv
+    m = g * w
+    if k.dtype != q.dtype:
+        k = k.astype(q.dtype)
+        v = v.astype(q.dtype)
+    qp = _pack_q(q, kv).reshape(b * kv, m, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+    scores = jax.lax.dot_general(qp, kt, (((2,), (2,)), ((0,), (0,))),
+                                 preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(d).astype(jnp.float32)           # (B·KV,M,S)
+
+    pos_b = _norm_pos(pos, b)
+    row = jnp.arange(m, dtype=jnp.int32) % w
+    q_pos = pos_b[:, None] + row[None]                          # (B, M)
+    k_pos = _norm_slots(slot_pos, b)[:, None, :]                # (B, 1, S)
+    valid = k_pos >= 0
+    if causal:
+        valid = valid & (k_pos <= q_pos[:, :, None])
+    if window is not None:
+        valid = valid & (k_pos > q_pos[:, :, None] - window)
+    if kv_len is not None:
+        kl = _norm_pos(kv_len, b)
+        valid = valid & (k_pos < kl[:, None, None])
+    valid = jnp.broadcast_to(valid[:, None],
+                             (b, kv, m, s)).reshape(b * kv, m, s)
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    mx = scores.max(-1, keepdims=True)
+    probs = jnp.exp(scores - mx)
+    probs = probs / (probs.sum(-1, keepdims=True) + 1e-30)
+    out = jax.lax.dot_general(probs.astype(vt.dtype), vt,
+                              (((2,), (1,)), ((0,), (0,))),
+                              preferred_element_type=jnp.float32)
+    return _unpack_o(out.astype(q.dtype).reshape(b, kv, m, d), w, h)

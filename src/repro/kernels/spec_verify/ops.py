@@ -1,5 +1,7 @@
 """Jit'd wrapper: kernel (TPU / interpret) or jnp fallback, reduced to the
-(n_accepted, next_token) the engines consume."""
+(n_accepted, next_token) the engines consume. ``batched_verify_and_sample``
+vmaps the whole decision over B streams (the kernel's grid picks up a
+batch dim) — core.verify.batched_verify routes here on TPU."""
 from __future__ import annotations
 
 from typing import Optional, Tuple
@@ -7,13 +9,14 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import resolve_pallas
 from repro.kernels.spec_verify.ref import spec_verify_ref
 
 
 def verify_and_sample(key, draft_tokens: jnp.ndarray,
                       draft_probs: jnp.ndarray, target_probs: jnp.ndarray,
                       n_forced=0, *, force_pallas: Optional[bool] = None,
-                      interpret: bool = False
+                      interpret: Optional[bool] = None
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Single stream. draft_tokens (K,), draft_probs (K,V),
     target_probs (K+1,V) -> (n_accepted, next_token). Equivalent to
@@ -24,14 +27,11 @@ def verify_and_sample(key, draft_tokens: jnp.ndarray,
         [jax.random.uniform(ka, (k,)), jnp.zeros((1,))])
     u_resample = jax.random.uniform(kr, (k + 1,))
 
-    use_pallas = force_pallas
-    if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
-    if use_pallas or interpret:
+    use_pallas, interp = resolve_pallas(force_pallas, interpret)
+    if use_pallas or interp:
         from repro.kernels.spec_verify.spec_verify import spec_verify
         accept, tokens = spec_verify(draft_tokens, draft_probs, target_probs,
-                                     u_accept, u_resample,
-                                     interpret=interpret)
+                                     u_accept, u_resample, interpret=interp)
     else:
         accept, tokens = spec_verify_ref(draft_tokens, draft_probs,
                                          target_probs, u_accept, u_resample)
@@ -40,3 +40,24 @@ def verify_and_sample(key, draft_tokens: jnp.ndarray,
     n_acc = acc_prefix.sum().astype(jnp.int32)
     nxt = tokens[n_acc]
     return n_acc, nxt
+
+
+def batched_verify_and_sample(key, draft_tokens: jnp.ndarray,
+                              draft_probs: jnp.ndarray,
+                              target_probs: jnp.ndarray, n_forced=None, *,
+                              force_pallas: Optional[bool] = None,
+                              interpret: Optional[bool] = None
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(B,K)/(B,K,V)/(B,K+1,V) -> (n_accepted (B,), next_token (B,)).
+    Per-stream keys are split exactly like core.verify.batched_verify, so
+    ``n_accepted`` is bit-identical across the kernel and jnp routes."""
+    b = draft_tokens.shape[0]
+    if n_forced is None:
+        n_forced = jnp.zeros((b,), jnp.int32)
+    keys = jax.random.split(key, b)
+    return jax.vmap(
+        lambda kk, dt, dp, tp, nf: verify_and_sample(
+            kk, dt, dp, tp, nf, force_pallas=force_pallas,
+            interpret=interpret)
+    )(keys, draft_tokens, draft_probs, target_probs,
+      jnp.asarray(n_forced, jnp.int32))

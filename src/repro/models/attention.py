@@ -18,7 +18,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention import attention, attention_ref
+from repro.kernels.flash_attention import attention, decode_attention
 from repro.models.layers import (batched_pos, batched_slots, dense,
                                  init_dense, rope)
 from repro.sharding import cs
@@ -130,8 +130,10 @@ def attn_decode(params: dict, x: jnp.ndarray, k_cache: jnp.ndarray,
     new_slot_pos = jnp.where(jnp.arange(s_cache)[None] == slot[:, None],
                              pos_b[:, None], slot_b)
     q = _q_cs(q, cfg)
-    y = attention_ref(q, k_cache, v_cache, causal=True, window=window,
-                      q_offset=pos_b, kv_positions=new_slot_pos)
+    # dispatcher: Pallas ring-decode kernel on TPU, packed-GEMM jnp path
+    # elsewhere (kernels/flash_attention/ops.py)
+    y = decode_attention(q, k_cache, v_cache, new_slot_pos, pos_b,
+                         window=window)
     y = _q_cs(y, cfg)
     out = dense(y.reshape(b, 1, cfg.q_dim), params["wo"])
     return cs(out, "batch", None, None), k_cache, v_cache

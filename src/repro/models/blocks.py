@@ -134,7 +134,7 @@ def _attn_verify(p_attn, xn, cache, slot_pos_new, pos, cfg, *, window):
     slot positions). ``pos`` scalar or per-stream (B,); ``slot_pos_new``
     (S_cache,) or per-stream (B,S_cache)."""
     import jax
-    from repro.kernels.flash_attention import attention_ref
+    from repro.kernels.flash_attention import decode_attention
     from repro.models.layers import dense
     from repro.sharding import cs
 
@@ -157,8 +157,10 @@ def _attn_verify(p_attn, xn, cache, slot_pos_new, pos, cfg, *, window):
         q = cs(q, "batch", None, "model", None)
     else:
         q = cs(q, "batch", None, None, None)
-    y = attention_ref(q, k_cache, v_cache, causal=True, window=window,
-                      q_offset=pos_b, kv_positions=slot_pos_new)
+    # dispatcher: Pallas ring-decode kernel on TPU (W rows × G heads packed
+    # into one MXU tile), packed-GEMM jnp path elsewhere
+    y = decode_attention(q, k_cache, v_cache, slot_pos_new, pos_b,
+                         window=window)
     if attn_mod._kv_head_sharded(cfg):
         y = cs(y, "batch", None, "model", None)
     else:

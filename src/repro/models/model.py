@@ -316,7 +316,10 @@ class Model:
     # ----------------------------------------------------------- decode step
     def decode_step(self, params: Params, cache: Cache,
                     tokens: jnp.ndarray) -> Tuple[jnp.ndarray, Cache]:
-        """One token per sequence. tokens (B,1) -> (logits (B,V), cache')."""
+        """One token per sequence. tokens (B,1) -> (logits (B,V), cache').
+
+        Attention routes through the kernel dispatcher (Pallas ring-decode
+        kernel on TPU, packed-GEMM jnp elsewhere — kernels/flash_attention)."""
         cfg = self.cfg
         assert cfg.causal, "encoder-only models have no decode step"
         bsz = tokens.shape[0]
@@ -377,7 +380,9 @@ class Model:
         cache' holds per-position recurrent states (``ssm_states``,
         ``conv_full``) for rollback via :meth:`commit`; attention kv is
         written in place (overwrite-safe, no rollback needed) and ``pos`` is
-        *not* advanced (commit does that)."""
+        *not* advanced (commit does that). The W-row attention routes
+        through the same ring-decode kernel dispatch as :meth:`decode_step`
+        (W rows × GQA group packed into one MXU tile)."""
         cfg = self.cfg
         assert cfg.causal
         b, w = tokens.shape

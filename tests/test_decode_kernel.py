@@ -1,0 +1,200 @@
+"""Ring-cache decode/verify attention kernel vs the jnp oracle, plus the
+dispatcher routing and an end-to-end DSI run with the kernels forced on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.kernels.dispatch import pallas_override
+from repro.kernels.flash_attention.ops import attention, decode_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.ring_decode import (ring_decode_attention,
+                                                       ring_decode_ref,
+                                                       ring_slot_map)
+
+
+def _inputs(rng, b, w, h, kv, d, s, dtype, pos):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (b, w, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, d), dtype)
+    # decode-path invariant: the window's own keys are already written,
+    # so every query row sees at least one valid slot
+    slot = ring_slot_map(pos + w, s)
+    return q, k, v, slot
+
+
+@pytest.mark.parametrize("h,kv", [(4, 2), (8, 8), (4, 1), (6, 3)])
+@pytest.mark.parametrize("w", [1, 8])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ring_decode_kernel_parity(h, kv, w, dtype, rng):
+    """interpret=True kernel vs attention_ref across GQA/MQA head counts,
+    with heterogeneous per-stream pos including a ring-wrap (pos > S)."""
+    b, d, s = 2, 64, 96
+    pos = jnp.array([s + 5, 17], jnp.int32)      # wrapped + partially filled
+    q, k, v, slot = _inputs(rng, b, w, h, kv, d, s, dtype, pos)
+    out = ring_decode_attention(q, k, v, slot, pos, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, q_offset=pos, kv_positions=slot)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("impl", ["kernel", "fallback"])
+def test_ring_decode_sliding_window(impl, rng):
+    b, w, h, kv, d, s, win = 3, 8, 6, 3, 64, 40, 16
+    pos = jnp.array([s + 9, 17, 3], jnp.int32)
+    q, k, v, slot = _inputs(rng, b, w, h, kv, d, s, jnp.float32, pos)
+    if impl == "kernel":
+        out = ring_decode_attention(q, k, v, slot, pos, window=win,
+                                    interpret=True)
+    else:
+        out = ring_decode_ref(q, k, v, slot, pos, window=win)
+    ref = attention_ref(q, k, v, causal=True, window=win, q_offset=pos,
+                        kv_positions=slot)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["kernel", "fallback"])
+def test_ring_decode_kv_len(impl, rng):
+    """Padded decode caches: slots with position >= kv_len are masked."""
+    b, w, h, kv, d, s = 2, 4, 4, 2, 64, 96
+    pos = jnp.array([s + 5, 30], jnp.int32)
+    q, k, v, slot = _inputs(rng, b, w, h, kv, d, s, jnp.float32, pos)
+    kv_len = pos + w
+    if impl == "kernel":
+        out = ring_decode_attention(q, k, v, slot, pos, kv_len=kv_len,
+                                    interpret=True)
+    else:
+        out = ring_decode_ref(q, k, v, slot, pos, kv_len=kv_len)
+    ref = attention_ref(q, k, v, causal=True, q_offset=pos,
+                        kv_positions=slot, kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("h,kv,w,dtype", [
+    (4, 2, 8, jnp.float32), (8, 8, 1, jnp.float32),
+    (4, 1, 8, jnp.bfloat16), (6, 3, 4, jnp.float32)])
+def test_ring_decode_fallback_parity(h, kv, w, dtype, rng):
+    """The packed-GEMM jnp path (non-TPU dispatch default) vs the oracle."""
+    b, d, s = 2, 64, 96
+    pos = jnp.array([s + 5, 17], jnp.int32)
+    q, k, v, slot = _inputs(rng, b, w, h, kv, d, s, dtype, pos)
+    out = ring_decode_ref(q, k, v, slot, pos)
+    ref = attention_ref(q, k, v, causal=True, q_offset=pos, kv_positions=slot)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_dispatcher_routes_ring_calls(rng, monkeypatch):
+    """attention()/decode_attention() with kv_positions never reach the
+    blocked jnp path; forced-Pallas reaches the ring kernel."""
+    from repro.kernels.flash_attention import ops as ops_mod
+    b, w, h, kv, d, s = 2, 8, 4, 2, 64, 96
+    pos = jnp.array([s + 5, 17], jnp.int32)
+    q, k, v, slot = _inputs(rng, b, w, h, kv, d, s, jnp.float32, pos)
+    ref = attention_ref(q, k, v, causal=True, q_offset=pos, kv_positions=slot)
+
+    def boom(*a, **kw):
+        raise AssertionError("ring call fell through to the blocked path")
+
+    monkeypatch.setattr(ops_mod, "_blocked", boom)
+    out_cpu = decode_attention(q, k, v, slot, pos, force_pallas=False)
+    out_pal = attention(q, k, v, causal=True, q_offset=pos, kv_positions=slot,
+                        force_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_cpu), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(out_pal), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_short_query_prefill_reaches_flash(rng, monkeypatch):
+    """A W-token chunk against a linear cache (no kv_positions) pads Sq up
+    to one q-block instead of silently dropping to the jnp path."""
+    from repro.kernels.flash_attention import ops as ops_mod
+    ks = jax.random.split(rng, 3)
+    b, sq, sk, h, kv, d = 2, 8, 256, 4, 2, 64
+    q = jax.random.normal(ks[0], (b, sq, h, d))
+    k = jax.random.normal(ks[1], (b, sk, kv, d))
+    v = jax.random.normal(ks[2], (b, sk, kv, d))
+
+    def boom(*a, **kw):
+        raise AssertionError("short-query prefill fell through to blocked")
+
+    monkeypatch.setattr(ops_mod, "_blocked", boom)
+    out = attention(q, k, v, causal=True, q_offset=sk - sq,
+                    force_pallas=True, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, q_offset=sk - sq)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_batched_verify_kernel_parity(rng):
+    """Kernel route (interpret) == ref-fallback route bit-for-bit (same
+    uniforms), and n_accepted == the legacy jnp leviathan rule."""
+    from repro.core.verify import batched_verify
+    from repro.kernels.spec_verify.ops import batched_verify_and_sample
+    b, k, v = 3, 5, 64
+    ks = jax.random.split(rng, 3)
+    dp = jax.nn.softmax(jax.random.normal(ks[0], (b, k, v)) * 2)
+    tp = jax.nn.softmax(jax.random.normal(ks[1], (b, k + 1, v)) * 2)
+    dt = jax.random.randint(ks[2], (b, k), 0, v)
+    n_forced = jnp.array([0, 1, 0], jnp.int32)
+    n_k, t_k = batched_verify_and_sample(rng, dt, dp, tp, n_forced,
+                                         interpret=True)
+    n_r, t_r = batched_verify_and_sample(rng, dt, dp, tp, n_forced,
+                                         force_pallas=False)
+    assert np.array_equal(np.asarray(n_k), np.asarray(n_r))
+    assert np.array_equal(np.asarray(t_k), np.asarray(t_r))
+    n_j, t_j = batched_verify(rng, dt, dp, tp, n_forced, rule="leviathan",
+                              use_kernel=False)
+    assert np.array_equal(np.asarray(n_k), np.asarray(n_j))
+    assert ((0 <= np.asarray(t_k)) & (np.asarray(t_k) < v)).all()
+    assert np.asarray(t_j).shape == np.asarray(t_k).shape
+
+
+def test_dsi_generate_with_kernels_forced(rng):
+    """End-to-end: DSIEngine.generate with the ring-decode kernel (and the
+    flash prefill padding) forced on equals the plain greedy reference."""
+    from repro.core.dsi_jax import DSIEngine
+    from repro.core.si_jax import nonsi_generate
+    from repro.models.model import Model
+    cfg_t = tiny("yi-9b")
+    cfg_d = tiny("yi-9b", d_model=128)
+    mt, md = Model(cfg_t), Model(cfg_d)
+    pt = mt.init(jax.random.PRNGKey(0))
+    pd = md.init(jax.random.PRNGKey(1))
+    prompt = jax.random.randint(rng, (2, 9), 0, cfg_t.vocab_size)
+    n_new = 12
+    with pallas_override(force_pallas=True, interpret=True):
+        ref = nonsi_generate(mt, pt, prompt, n_new)
+        out, stats = DSIEngine(mt, md, lookahead=4, rule="exact").generate(
+            pt, pd, prompt, n_new)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+    assert stats.emitted >= n_new
+
+
+def test_dsi_leviathan_with_kernels_forced(rng):
+    """Leviathan rule with both the ring-decode and spec-verify kernels
+    forced on emits in-range tokens (exercises the vmapped kernel route
+    inside the jitted macro-step)."""
+    from repro.core.dsi_jax import DSIEngine
+    from repro.models.model import Model
+    cfg_t = tiny("yi-9b")
+    cfg_d = tiny("yi-9b", d_model=128)
+    mt, md = Model(cfg_t), Model(cfg_d)
+    pt = mt.init(jax.random.PRNGKey(0))
+    pd = md.init(jax.random.PRNGKey(1))
+    prompt = jax.random.randint(rng, (1, 8), 0, cfg_t.vocab_size)
+    with pallas_override(force_pallas=True, interpret=True):
+        out, _ = DSIEngine(mt, md, lookahead=4, rule="leviathan").generate(
+            pt, pd, prompt, 10, key=jax.random.PRNGKey(5))
+    arr = np.asarray(out)
+    assert arr.shape == (1, 10)
+    assert ((0 <= arr) & (arr < cfg_t.vocab_size)).all()
