@@ -1,0 +1,124 @@
+"""Serving benchmark: shared-prefix workload through the continuous-
+batching scheduler, dense ring caches vs the paged KV cache with prefix
+reuse (docs/cache.md).
+
+Reports the serving-trajectory numbers the CI canary tracks in
+``BENCH_serving.json``:
+  * tokens/s end-to-end (wall clock over the whole queue),
+  * admission prefill tokens (the FLOPs proxy prefix reuse cuts: the
+    dense path prefills every prompt twice — target + drafter),
+  * prefix-hit rate and page-level sharing counters,
+  * losslessness cross-check (paged outputs == dense outputs).
+
+    PYTHONPATH=src python -m benchmarks.bench_serving          # section
+    PYTHONPATH=src python -m benchmarks.run --smoke            # CI canary
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.cache import PagedSpec
+from repro.configs import get_config, reduced
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+
+
+def _workload(cfg, *, n_requests: int, prefix_len: int, seed: int = 0):
+    """Requests sharing one long prompt prefix (the RAG / system-prompt
+    shape that prefix caching targets) with distinct tails."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, size=prefix_len).tolist()
+    return [(prefix + rng.integers(0, cfg.vocab_size,
+                                   size=int(rng.integers(3, 8))).tolist(),
+             int(rng.integers(8, 16))) for _ in range(n_requests)]
+
+
+def _run(model, params, drafter, params_d, reqs, *, max_batch, la,
+         paged: Optional[PagedSpec]):
+    eng = ServingEngine(target=model, params_t=params, drafter=drafter,
+                        params_d=params_d, mode="dsi", lookahead=la,
+                        max_batch=max_batch, paged=paged)
+    for p, m in reqs:
+        eng.submit(p, m)
+    t0 = time.monotonic()
+    done = eng.run()
+    wall = time.monotonic() - t0
+    toks = sum(len(r.output) for r in done)
+    row = {
+        "requests": len(done),
+        "tokens": toks,
+        "wall_s": round(wall, 4),
+        "tokens_per_s": round(toks / wall, 2),
+        "engine_invocations": eng.engine_invocations,
+        "prefill_tokens": eng.prefill_tokens,
+    }
+    if eng.cache_manager is not None:
+        st = eng.cache_manager.stats()
+        row["prefix_hit_rate"] = round(st["prefix_hit_rate"], 4)
+        row["pages_shared"] = st["pages_shared"]
+        row["pages_peak"] = st["pages_peak"]
+        row["cow_copies"] = st["cow_copies"]
+        row["deferrals"] = st["deferrals"]
+    return eng, done, row
+
+
+def main(smoke: bool = False, json_path: Optional[str] = None) -> None:
+    from benchmarks.engine_stats import noisy_params
+    layers, d_model = (2, 192) if smoke else (4, 256)
+    cfg = dataclasses.replace(reduced(get_config("yi-9b"), layers=layers,
+                                      d_model=d_model), dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pd = noisy_params(params, 0.05, jax.random.PRNGKey(7))
+    la = 4
+    n_req = 6 if smoke else 12
+    prefix_len = 24 if smoke else 48
+    page = 8 if smoke else 16
+    reqs = _workload(cfg, n_requests=n_req, prefix_len=prefix_len)
+
+    _, done_dense, dense = _run(model, params, model, pd, reqs,
+                                max_batch=2 if smoke else 4, la=la,
+                                paged=None)
+    _, done_paged, paged = _run(model, params, model, pd, reqs,
+                                max_batch=2 if smoke else 4, la=la,
+                                paged=PagedSpec(page_size=page))
+    by_rid = {r.rid: r.output for r in done_dense}
+    lossless = all(r.output == by_rid[r.rid] for r in done_paged)
+    assert lossless, "paged serving must match dense serving token-for-token"
+    assert paged["prefill_tokens"] < dense["prefill_tokens"], \
+        "prefix reuse must cut admission prefill work on a shared-prefix queue"
+
+    print("name,mode,requests,tokens,tokens_per_s,invocations,"
+          "prefill_tokens,prefix_hit_rate,pages_shared,lossless")
+    print(f"serving,dense,{dense['requests']},{dense['tokens']},"
+          f"{dense['tokens_per_s']},{dense['engine_invocations']},"
+          f"{dense['prefill_tokens']},0.0,0,{lossless}")
+    print(f"serving,paged,{paged['requests']},{paged['tokens']},"
+          f"{paged['tokens_per_s']},{paged['engine_invocations']},"
+          f"{paged['prefill_tokens']},{paged['prefix_hit_rate']},"
+          f"{paged['pages_shared']},{lossless}")
+
+    if json_path:
+        out = {
+            "workload": {"n_requests": n_req, "prefix_len": prefix_len,
+                         "page_size": page, "lookahead": la,
+                         "layers": layers, "d_model": d_model},
+            "dense": dense,
+            "paged": paged,
+            "lossless": lossless,
+            "prefill_tokens_saved": (dense["prefill_tokens"]
+                                     - paged["prefill_tokens"]),
+        }
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"[bench_serving] wrote {json_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -63,15 +63,24 @@ def _sweep(model, params, cfg, n_new: int, la: int, noises) -> None:
 
 def _serving(model, params, pd, cfg, *, n_requests: int, max_batch: int,
              la: int) -> None:
+    from repro.cache import PagedSpec
     rng = np.random.default_rng(0)
-    reqs = [(rng.integers(0, cfg.vocab_size,
-                          size=int(rng.integers(6, 14))).tolist(),
-             int(rng.integers(8, 24))) for _ in range(n_requests)]
+    # half the queue shares a prompt prefix (the shape prefix caching
+    # targets); the rest is independent
+    prefix = rng.integers(0, cfg.vocab_size, size=8).tolist()
+    reqs = []
+    for i in range(n_requests):
+        tail = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(3, 8))).tolist()
+        prompt = (prefix + tail) if i % 2 == 0 else \
+            rng.integers(0, cfg.vocab_size,
+                         size=int(rng.integers(6, 14))).tolist()
+        reqs.append((prompt, int(rng.integers(8, 24))))
 
-    def run(batch_slots: int):
+    def run(batch_slots: int, paged=None):
         eng = ServingEngine(target=model, params_t=params, drafter=model,
                             params_d=pd, mode="dsi", lookahead=la,
-                            max_batch=batch_slots)
+                            max_batch=batch_slots, paged=paged)
         for p, m in reqs:
             eng.submit(p, m)
         done = eng.run()
@@ -79,15 +88,26 @@ def _serving(model, params, pd, cfg, *, n_requests: int, max_batch: int,
 
     eng_seq, done_seq = run(1)
     eng_cb, done_cb = run(max_batch)
+    eng_pg, done_pg = run(max_batch, paged=PagedSpec(page_size=8))
     by_rid = {r.rid: r for r in done_seq}
     assert all(r.output == by_rid[r.rid].output for r in done_cb), \
         "continuous batching must be lossless vs sequential serving"
+    assert all(r.output == by_rid[r.rid].output for r in done_pg), \
+        "paged serving must be lossless vs sequential serving"
     acc = np.mean([r.stats.acceptance_rate for r in done_cb])
     bub = sum(r.stats.bubbles for r in done_cb)
     print("name,requests,slots,invocations_sequential,"
           "invocations_batched,mean_acceptance,total_bubbles")
     print(f"serving,{n_requests},{max_batch},{eng_seq.engine_invocations},"
           f"{eng_cb.engine_invocations},{acc:.2f},{bub}")
+    # paged-KV cache-memory telemetry (pages + prefix reuse)
+    st = eng_pg.cache_manager.stats()
+    print("name,slots,prefill_tokens_dense,prefill_tokens_paged,"
+          "prefix_hit_rate,pages_peak,pages_shared,cow_copies,evictions")
+    print(f"serving_paged,{max_batch},{eng_cb.prefill_tokens},"
+          f"{eng_pg.prefill_tokens},{st['prefix_hit_rate']:.2f},"
+          f"{st['pages_peak']},{st['pages_shared']},{st['cow_copies']},"
+          f"{st['evictions']}")
 
 
 def main(smoke: bool = False) -> None:

@@ -13,16 +13,19 @@ import sys
 def main() -> None:
     quick = "--quick" in sys.argv
     smoke = "--smoke" in sys.argv
-    from benchmarks import (bench_kernels, engine_stats, fig2_heatmaps,
-                            fig7_lookahead5, table1_timeline, table2_speedups)
+    from benchmarks import (bench_kernels, bench_serving, engine_stats,
+                            fig2_heatmaps, fig7_lookahead5, table1_timeline,
+                            table2_speedups)
     if smoke:
         # minimal end-to-end canary: one timeline row + the serving-engine
         # economics on tiny real models (exercises batched DSI + scheduler)
-        # + the kernel micro-bench with its machine-readable trajectory
+        # + the kernel and serving benches with machine-readable trajectories
         print("== Table 1: token-count timeline ==")
         table1_timeline.main()
         print("== Engine-level drafter-quality sweep (real models) ==")
         engine_stats.main(smoke=True)
+        print("== Serving: dense vs paged KV (shared-prefix workload) ==")
+        bench_serving.main(smoke=True, json_path="BENCH_serving.json")
         print("== Kernel micro-benchmarks ==")
         bench_kernels.main(smoke=True, json_path="BENCH_kernels.json")
         return
@@ -37,6 +40,8 @@ def main() -> None:
         fig7_lookahead5.main()
         print("== Engine-level drafter-quality sweep (real models) ==")
         engine_stats.main()
+    print("== Serving: dense vs paged KV (shared-prefix workload) ==")
+    bench_serving.main(json_path="BENCH_serving.json")
     print("== Kernel micro-benchmarks ==")
     bench_kernels.main(json_path="BENCH_kernels.json")
 

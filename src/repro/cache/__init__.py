@@ -1,0 +1,11 @@
+"""Paged KV-cache subsystem: refcounted page allocator, radix prefix
+index, block-table cache layout, and the serving admission manager.
+See docs/cache.md for the systems view."""
+from repro.cache.allocator import (TRASH_PAGE, CacheCapacityError,  # noqa: F401
+                                   CacheOOM, PageAllocator)
+from repro.cache.manager import AdmissionTicket, CacheManager  # noqa: F401
+from repro.cache.paged import (PagedSpec, dense_to_paged,  # noqa: F401
+                               gather_pages, interleaved_block_tables,
+                               is_paged, paged_from_dense, reset_block_rows,
+                               round_up)
+from repro.cache.prefix import RadixPrefixIndex  # noqa: F401

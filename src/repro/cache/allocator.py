@@ -1,0 +1,89 @@
+"""Host-side refcounted page allocator for the paged KV cache.
+
+Physical KV pages live in per-(model, segment) device pools
+(``(n_layers, num_pages, page_size, KV, D)``); this allocator hands out
+*page ids* into those pools and tracks sharing. A page's refcount counts
+every holder — live streams whose block tables point at it plus the radix
+prefix index (`cache/prefix.py`) — and the page returns to the free list
+only when the count reaches zero, so releasing a retired stream can never
+free a prompt-prefix page another stream still reads.
+
+Page 0 is reserved as the *trash page*: inactive slots in the lockstep
+serving step keep executing garbage decode writes (docs/serving.md), and
+after retire their block tables are pointed at page 0 so those writes can
+never land in a page that has been recycled to a newly admitted stream.
+
+All accounting is host-side Python (the serving scheduler is a host loop
+already); nothing here touches device memory.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+#: reserved garbage-write page (see module docstring)
+TRASH_PAGE = 0
+
+
+class CacheOOM(RuntimeError):
+    """The page pool cannot satisfy an allocation right now; the request
+    should stay queued until a retire/eviction frees pages."""
+
+
+class CacheCapacityError(ValueError):
+    """The request can *never* fit the configured cache geometry (its
+    positions would wrap a non-sliding-window ring and silently drop
+    context) — a sizing error, not transient pressure."""
+
+
+class PageAllocator:
+    """Fixed pool of ``num_pages`` refcounted pages (page 0 reserved)."""
+
+    def __init__(self, num_pages: int, *, reserved: int = 1):
+        assert num_pages > reserved, (num_pages, reserved)
+        self.num_pages = num_pages
+        self.reserved = reserved
+        self.refs = [0] * num_pages
+        # pop() yields low ids first — keeps tests deterministic
+        self._free = list(range(num_pages - 1, reserved - 1, -1))
+        self.total_allocated = 0
+        self.peak_in_use = 0
+
+    # ------------------------------------------------------------- stats
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - self.reserved - len(self._free)
+
+    # --------------------------------------------------------------- ops
+    def alloc(self, n: int) -> List[int]:
+        """Allocate ``n`` fresh pages (refcount 1) or raise CacheOOM with
+        the pool untouched."""
+        if n > len(self._free):
+            raise CacheOOM(f"need {n} pages, {len(self._free)} free "
+                           f"of {self.num_pages}")
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self.refs[p] = 1
+        self.total_allocated += n
+        self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
+        return pages
+
+    def incref(self, pages: Iterable[int]) -> None:
+        for p in pages:
+            assert self.refs[p] > 0, f"incref of free page {p}"
+            self.refs[p] += 1
+
+    def decref(self, pages: Iterable[int]) -> List[int]:
+        """Drop one reference per page; pages reaching zero return to the
+        free list. Returns the list of pages actually freed."""
+        freed = []
+        for p in pages:
+            assert self.refs[p] > 0, f"decref of free page {p}"
+            self.refs[p] -= 1
+            if self.refs[p] == 0:
+                self._free.append(p)
+                freed.append(p)
+        return freed

@@ -1,0 +1,317 @@
+"""CacheManager: the paged-KV admission/retire control plane for a DSI
+(target, drafter) model pair.
+
+Ties together the refcounted `PageAllocator` (one per (model, segment)
+pool), the `RadixPrefixIndex` (token-content → prefix pages, shared
+between *both* models' pools), and the device pools living inside the
+engine's slot-table state. The serving scheduler drives it host-side
+between jitted steps:
+
+  admit(prompt, slot, max_new)  — match the prompt against the prefix
+      index, take references on shared prefix pages (full pages directly;
+      a trailing partial page via copy-on-write), allocate right-sized
+      fresh pages for the rest of the request (evicting LRU prefix
+      entries under pressure), and return an AdmissionTicket. Raises
+      CacheOOM (leave the request queued) when pages are short, or
+      CacheCapacityError when the request can never fit the geometry.
+  apply_cow / row_cache / register — execute the ticket against the
+      device state: duplicate shared partial pages, build the B=1 cache
+      views (shared pools + this stream's block/slot rows) that
+      `Model.prefill_paged` chunk-prefills the *uncached suffix* into,
+      then publish the prompt's pages into the prefix index.
+  release(slot) — drop the retired stream's page references; pages shared
+      with the index or other streams survive.
+
+Prefix sharing is gated per model to attention-only, full-attention
+configs (recurrent state cannot be restored at an arbitrary prefix
+offset; sliding-window rings recycle slots, so their pages are never
+content-stable). Non-shareable models still get paged memory management —
+``n_cached`` is simply 0.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache.allocator import (TRASH_PAGE, CacheCapacityError, CacheOOM,
+                                   PageAllocator)
+from repro.cache.paged import PagedSpec, copy_page
+from repro.cache.prefix import RadixPrefixIndex
+
+PoolKey = Tuple[str, int]        # ("t"|"d", segment index)
+
+
+@dataclass
+class AdmissionTicket:
+    """Everything one admission decided host-side."""
+    slot: int
+    prompt_len: int
+    n_cached: Dict[str, int]                     # tokens reused, per model
+    block_rows: Dict[PoolKey, np.ndarray]        # (np_stream,) page ids
+    cow: List[Tuple[str, int, int, int]] = field(default_factory=list)
+    cow_src_refs: List[Tuple[PoolKey, int]] = field(default_factory=list)
+    pages_shared: int = 0                        # existing pages referenced
+    pages_allocated: int = 0                     # fresh pages allocated
+
+    def prefill_tokens(self) -> int:
+        """Prompt tokens actually pushed through prefill (both models) —
+        the admission-cost unit the dense path pays twice in full."""
+        return sum(self.prompt_len - m for m in self.n_cached.values())
+
+
+class CacheManager:
+    def __init__(self, target, drafter, spec: PagedSpec, *, n_slots: int,
+                 max_len: int, lookahead: int, prefix_sharing: bool = True):
+        self.spec = spec
+        self.ps = spec.page_size
+        self.models = {"t": target, "d": drafter}
+        self.lookahead = lookahead
+        self.slack = 2 * lookahead + 2           # verify/draft overshoot
+        self.max_len = max_len
+        self.geom: Dict[PoolKey, Tuple[int, int, bool]] = {}
+        self.alloc: Dict[PoolKey, PageAllocator] = {}
+        for mk, model in self.models.items():
+            for si, clen_p, n_pages, windowed in model.paged_geometry(
+                    max_len, self.ps, window_headroom=lookahead):
+                self.geom[(mk, si)] = (clen_p, n_pages, windowed)
+                self.alloc[(mk, si)] = PageAllocator(
+                    spec.pool_pages(n_slots, n_pages))
+        self.sharing = {mk: prefix_sharing and self._shareable(m)
+                        for mk, m in self.models.items()}
+        self.index = RadixPrefixIndex(self.ps)
+        self._slot_refs: Dict[int, Dict[PoolKey, List[int]]] = {}
+        self.last_ticket: Optional[AdmissionTicket] = None
+        # telemetry
+        self.admissions = 0
+        self.deferrals = 0
+        self.evictions = 0
+        self.cow_copies = 0
+        self.prefix_hit_tokens = 0
+        self.prompt_tokens = 0
+        self.pages_shared = 0
+        self.pages_allocated = 0
+
+    @staticmethod
+    def _shareable(model) -> bool:
+        cfg = model.cfg
+        if not cfg.attn or cfg.ssm is not None or model.is_vlm:
+            return False
+        return all(w is None for w in model.seg_windows())
+
+    def _segs(self, mk: str) -> List[int]:
+        return [si for (m, si) in self.geom if m == mk]
+
+    def _ns(self, mk: str, si: int) -> str:
+        return f"{mk}{si}"
+
+    def _ns_key(self, ns: str) -> PoolKey:
+        return (ns[0], int(ns[1:]))
+
+    # -------------------------------------------------------------- admit
+    def admit(self, tokens: Sequence[int], slot: int,
+              max_new: Optional[int] = None) -> AdmissionTicket:
+        tokens = [int(t) for t in tokens]
+        s = len(tokens)
+        shared_models = [mk for mk in self.models if self.sharing[mk]]
+        namespaces = [self._ns(mk, si) for mk in shared_models
+                      for si in self._segs(mk)]
+        n_full, full_pages, partial = (0, {}, None)
+        if namespaces:
+            # keep >= 1 suffix token: the admission bootstrap needs the
+            # last prompt position's logits, which only a forward produces
+            n_full, full_pages, partial = self.index.match(
+                tokens[:s - 1], namespaces)
+        m = n_full + (partial[0] if partial else 0)
+        ticket = AdmissionTicket(
+            slot=slot, prompt_len=s,
+            n_cached={mk: (m if self.sharing[mk] else 0)
+                      for mk in self.models},
+            block_rows={})
+
+        # 1) reference shared pages up front so LRU eviction during the
+        #    fresh allocation below cannot reclaim them mid-admission
+        undo: List[Tuple[PoolKey, List[int]]] = []
+        try:
+            shared_full: Dict[PoolKey, List[int]] = {}
+            for key in self.geom:
+                mk, si = key
+                pages = (list(full_pages.get(self._ns(mk, si), []))
+                         if self.sharing[mk] else [])
+                shared_full[key] = pages
+                if pages:
+                    self.alloc[key].incref(pages)
+                    undo.append((key, pages))
+                if self.sharing[mk] and partial:
+                    src = partial[1][self._ns(mk, si)]
+                    self.alloc[key].incref([src])
+                    undo.append((key, [src]))
+                    ticket.cow_src_refs.append((key, src))
+
+            # 2) fresh pages (right-sized to the request), evicting LRU
+            #    prefix entries under pressure
+            refs: Dict[PoolKey, List[int]] = {}
+            for key, (clen_p, n_pages, windowed) in self.geom.items():
+                mk, si = key
+                f = len(shared_full[key])
+                n_req = n_pages
+                if not windowed and max_new is not None:
+                    need = s + max_new + self.slack
+                    if need > clen_p:
+                        raise CacheCapacityError(
+                            f"request needs {need} cache positions, pool "
+                            f"segment ({mk},{si}) holds {clen_p}")
+                    n_req = -(-need // self.ps)
+                capacity = self.alloc[key].num_pages - self.alloc[key].reserved
+                if n_req > capacity:
+                    # can NEVER fit, even into an empty pool: a sizing
+                    # error, not transient pressure — don't leave the
+                    # request queued forever
+                    raise CacheCapacityError(
+                        f"request needs {n_req} pages in pool ({mk},{si}) "
+                        f"of {capacity} allocatable pages")
+                fresh = self._alloc_with_evict(key, n_req - f)
+                undo.append((key, fresh))
+                row = np.full((n_pages,), TRASH_PAGE, np.int32)
+                row[:f] = shared_full[key]
+                row[f:n_req] = fresh
+                ticket.block_rows[key] = row
+                refs[key] = shared_full[key] + fresh
+                ticket.pages_shared += f
+                ticket.pages_allocated += len(fresh)
+                if self.sharing[mk] and partial:
+                    src = partial[1][self._ns(mk, si)]
+                    ticket.cow.append((mk, si, src, int(row[f])))
+        except (CacheOOM, CacheCapacityError):
+            for key, pages in undo:
+                self.alloc[key].decref(pages)
+            raise
+
+        self._slot_refs[slot] = refs
+        self.admissions += 1
+        self.prefix_hit_tokens += sum(ticket.n_cached.values())
+        self.prompt_tokens += s * len(self.models)
+        self.pages_shared += ticket.pages_shared
+        self.pages_allocated += ticket.pages_allocated
+        self.last_ticket = ticket
+        return ticket
+
+    def _alloc_with_evict(self, key: PoolKey, n: int) -> List[int]:
+        a = self.alloc[key]
+
+        def only_index_holds(pairs) -> bool:
+            return all(self.alloc[self._ns_key(ns)].refs[p] == 1
+                       for ns, p in pairs)
+
+        while a.free_pages < n:
+            # evict only entries whose pages the index alone references —
+            # evicting a stream-pinned entry frees nothing and destroys a
+            # still-useful cache entry
+            released = self.index.evict_lru(reclaimable=only_index_holds)
+            if not released:
+                break
+            for ns, page in released:
+                self.alloc[self._ns_key(ns)].decref([page])
+            self.evictions += 1
+        return a.alloc(n)
+
+    # ----------------------------------------------------- device-side ops
+    def apply_cow(self, state: Dict, ticket: AdmissionTicket) -> Dict:
+        """Duplicate shared partial-prefix pages into the admitted
+        stream's own pages (copy-on-write: its first divergent token lands
+        in the copy), then drop the temporary source references."""
+        if not ticket.cow:
+            return state
+        state = dict(state)
+        for mk, si, src, dst in ticket.cow:
+            ck = "t_cache" if mk == "t" else "d_cache"
+            cache = dict(state[ck])
+            seg = dict(cache[f"seg{si}"])
+            for kk in ("k", "v"):
+                seg[kk] = copy_page(seg[kk], src, dst)
+            cache[f"seg{si}"] = seg
+            state[ck] = cache
+            self.cow_copies += 1
+        for key, src in ticket.cow_src_refs:
+            self.alloc[key].decref([src])
+        ticket.cow_src_refs = []
+        return state
+
+    def row_cache(self, cache: Dict, mk: str, ticket: AdmissionTicket) -> Dict:
+        """B=1 cache view for the admitted stream: the live shared pools,
+        this stream's block/slot rows, fresh recurrent state, and ``pos``
+        at the reused-prefix frontier — the input to
+        ``Model.prefill_paged``."""
+        model = self.models[mk]
+        m = ticket.n_cached[mk]
+        template = model.init_cache(1, 1)        # recurrent-state shapes
+        row: Dict = {"pos": jnp.full((1,), m, jnp.int32)}
+        for key, val in cache.items():
+            if not key.startswith("seg"):
+                continue
+            si = key[len("seg"):]
+            seg: Dict = {}
+            for kk in ("ssm", "conv"):
+                if kk in template[key]:
+                    seg[kk] = template[key][kk]
+            if cache.get(f"block{si}") is not None:
+                seg["k"], seg["v"] = val["k"], val["v"]
+                clen_p, _, _ = self.geom[(mk, int(si))]
+                ar = jnp.arange(clen_p, dtype=jnp.int32)
+                row[f"slot{si}"] = jnp.where(ar < m, ar, -1)[None]
+                row[f"block{si}"] = jnp.asarray(
+                    ticket.block_rows[(mk, int(si))])[None]
+            else:
+                row[f"slot{si}"] = None
+                row[f"block{si}"] = None
+            row[key] = seg
+        return row
+
+    def register(self, ticket: AdmissionTicket,
+                 tokens: Sequence[int]) -> None:
+        """Publish the admitted prompt's (now fully prefilled) pages into
+        the prefix index so later admissions can share them."""
+        tokens = [int(t) for t in tokens]
+        s = len(tokens)
+        chunk_pages = {}
+        partial_pages = {}
+        for mk in self.models:
+            if not self.sharing[mk]:
+                continue
+            for si in self._segs(mk):
+                row = ticket.block_rows[(mk, si)]
+                ns = self._ns(mk, si)
+                chunk_pages[ns] = [int(p) for p in row[:s // self.ps]]
+                if s % self.ps:
+                    partial_pages[ns] = int(row[s // self.ps])
+        if not chunk_pages and not partial_pages:
+            return
+        new_refs = self.index.insert(tokens, chunk_pages,
+                                     partial_pages or None)
+        for ns, page in new_refs:
+            self.alloc[self._ns_key(ns)].incref([page])
+
+    # ------------------------------------------------------------ release
+    def release(self, slot: int) -> None:
+        """Drop a retired stream's page references (engine `retire` must
+        also point the slot's device block tables at the trash page)."""
+        for key, pages in self._slot_refs.pop(slot, {}).items():
+            self.alloc[key].decref(pages)
+
+    # ---------------------------------------------------------- telemetry
+    def stats(self) -> Dict[str, float]:
+        in_use = sum(a.pages_in_use for a in self.alloc.values())
+        free = sum(a.free_pages for a in self.alloc.values())
+        peak = sum(a.peak_in_use for a in self.alloc.values())
+        return {
+            "pages_in_use": in_use, "pages_free": free, "pages_peak": peak,
+            "pages_allocated": self.pages_allocated,
+            "pages_shared": self.pages_shared,
+            "admissions": self.admissions, "deferrals": self.deferrals,
+            "evictions": self.evictions, "cow_copies": self.cow_copies,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_hit_rate": (self.prefix_hit_tokens /
+                                max(self.prompt_tokens, 1)),
+        }

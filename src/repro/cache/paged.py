@@ -1,0 +1,164 @@
+"""Device-side paged KV-cache layout and conversion helpers.
+
+Layout (vs the dense ring cache in models/model.py):
+
+  dense:  seg<i>.k/v  (n_layers, B, clen, KV, D)      per-stream rows
+  paged:  seg<i>.k/v  (n_layers, P, page, KV, D)      one shared pool
+          block<i>    (B, clen_p // page) int32       per-stream block table
+          slot<i>     (B, clen_p) int32               unchanged semantics
+
+The *logical* cache keeps the dense ring's addressing: position ``p`` of
+stream ``b`` lives at logical slot ``s = p % clen_p``, whose physical home
+is ``(block[b, s // page], s % page)`` in the pool. ``slot<i>`` still maps
+logical slots to absolute positions (-1 = empty), so the attention masking
+(causal / sliding-window / kv_len — kernels/flash_attention) is *identical*
+to the dense path and paged generation is lossless by construction.
+
+``clen_p`` is the dense ring length rounded up to a page multiple; the
+extra logical slots are never written (slot = -1 ⇒ masked). Block-table
+entries always hold a valid page id: unmapped logical pages point at the
+reserved trash page (`allocator.TRASH_PAGE`), whose contents are garbage
+but invisible (their slots are -1 or owned by inactive lockstep streams).
+
+This module is import-light (jax only); models/model.py builds pools via
+`Model.init_cache(paged=...)` and converts with `dense_to_paged`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.cache.allocator import TRASH_PAGE
+
+
+@dataclass(frozen=True)
+class PagedSpec:
+    """Geometry of a paged KV cache. ``num_pages`` bounds each segment's
+    physical pool (memory pressure is real: admission queues/rejects when
+    the pool is full); None sizes the pool to fit every stream densely
+    (B · pages-per-stream + 1 trash page) — paging still enables prefix
+    sharing and right-sized per-request allocation."""
+    page_size: int = 64
+    num_pages: Optional[int] = None
+
+    def pool_pages(self, batch: int, pages_per_stream: int) -> int:
+        return self.num_pages if self.num_pages is not None \
+            else batch * pages_per_stream + 1
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def interleaved_block_tables(batch: int, pages_per_stream: int) -> jnp.ndarray:
+    """Deliberately non-contiguous block tables for the lockstep
+    ``generate`` path: stream b's logical page i maps to physical page
+    ``1 + i·B + b`` (page 0 = trash). Striding across streams means any
+    block-table indexing bug produces cross-stream corruption the
+    losslessness tests catch, rather than silently degenerating to the
+    dense layout."""
+    i = jnp.arange(pages_per_stream, dtype=jnp.int32)[None]
+    b = jnp.arange(batch, dtype=jnp.int32)[:, None]
+    return 1 + i * batch + b
+
+
+def gather_pages(pool: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:
+    """Materialize the logical per-stream view: pool (P, page, KV, D) +
+    block table (B, n) -> (B, n·page, KV, D). The portable (non-Pallas)
+    attention path; the TPU kernel gathers pages in its index_map
+    instead (kernels/flash_attention/ring_decode.py)."""
+    g = pool[block_table]                       # (B, n, page, KV, D)
+    return g.reshape(block_table.shape[0], -1, *pool.shape[2:])
+
+
+def copy_page(pool: jnp.ndarray, src: int, dst: int) -> jnp.ndarray:
+    """Copy-on-write: duplicate physical page ``src`` into ``dst`` across
+    all layers of a pool (n, P, page, KV, D)."""
+    return pool.at[:, dst].set(pool[:, src])
+
+
+def dense_to_paged(dense_cache: dict, paged_cache: dict) -> dict:
+    """Scatter a dense ring cache into an (already block-mapped) paged
+    cache. Ring slots re-index from ``p % clen`` to ``p % clen_p``; the
+    positions present in a ring span < clen consecutive values, so the
+    re-indexing is injective and the paged ring holds exactly the dense
+    ring's (position -> KV) mapping."""
+    out = dict(paged_cache)
+    out["pos"] = dense_cache["pos"]
+    for key in ("cross_k", "cross_v"):
+        if key in dense_cache:
+            out[key] = dense_cache[key]
+    for key, pseg in paged_cache.items():
+        if not key.startswith("seg"):
+            continue
+        si = key[len("seg"):]
+        block = paged_cache.get(f"block{si}")
+        dseg = dense_cache[key]
+        if block is None:                       # attention-free segment
+            out[key] = dseg
+            if f"slot{si}" in dense_cache:
+                out[f"slot{si}"] = dense_cache[f"slot{si}"]
+            continue
+        pseg = dict(pseg)
+        slot_d = dense_cache[f"slot{si}"]                     # (B, clen)
+        bsz = slot_d.shape[0]
+        clen_p = paged_cache[f"slot{si}"].shape[-1]
+        n_pages, ps = pseg["k"].shape[1], pseg["k"].shape[2]
+        # target logical slot per dense slot (sentinel clen_p => dropped)
+        tgt = jnp.where(slot_d >= 0, slot_d % clen_p, clen_p)
+        rows = jnp.arange(bsz)[:, None]
+        out[f"slot{si}"] = jnp.full((bsz, clen_p), -1, jnp.int32
+                                    ).at[rows, tgt].set(slot_d, mode="drop")
+        pages = jnp.take_along_axis(block, jnp.minimum(tgt, clen_p - 1) // ps,
+                                    axis=1)
+        pages = jnp.where(tgt < clen_p, pages, n_pages)       # OOB => drop
+        offs = tgt % ps
+        for kk in ("k", "v"):
+            pseg[kk] = pseg[kk].at[:, pages, offs].set(
+                dseg[kk], mode="drop")
+        for kk in ("ssm", "conv"):
+            if kk in dseg:
+                pseg[kk] = dseg[kk]
+        out[key] = pseg
+    return out
+
+
+def paged_from_dense(model, dense_cache: dict, spec: PagedSpec,
+                     max_len: int, *, window_headroom: int = 0) -> dict:
+    """Lockstep-``generate`` entry: build a paged cache with interleaved
+    per-stream block tables and scatter a dense prefill cache into it.
+    (The serving path never does this — admission chunk-prefills straight
+    into pages via `CacheManager`; this converter serves the research
+    `DSIEngine.generate`/`SIEngine.generate` APIs and the parity tests.)"""
+    b = dense_cache["pos"].shape[0]
+    paged = model.init_cache(b, max_len, window_headroom=window_headroom,
+                             paged=spec)
+    for key, val in paged.items():
+        if key.startswith("block") and val is not None:
+            n_pages = val.shape[1]
+            pool = paged[f"seg{key[len('block'):]}"]["k"].shape[1]
+            assert pool >= 1 + b * n_pages, \
+                f"pool of {pool} pages cannot back {b}x{n_pages} streams"
+            paged[key] = interleaved_block_tables(b, n_pages)
+    return dense_to_paged(dense_cache, paged)
+
+
+def reset_block_rows(cache: dict, slot) -> dict:
+    """Point one stream's block tables at the trash page and clear its
+    slot maps — the retire step that keeps the freed pages safe from the
+    inactive slot's continuing lockstep garbage writes."""
+    out = dict(cache)
+    for key, val in cache.items():
+        if key.startswith("block") and val is not None:
+            out[key] = val.at[slot].set(TRASH_PAGE)
+            skey = "slot" + key[len("block"):]
+            if cache.get(skey) is not None:
+                out[skey] = cache[skey].at[slot].set(-1)
+    return out
+
+
+def is_paged(cache: dict) -> bool:
+    return any(k.startswith("block") and v is not None
+               for k, v in cache.items())

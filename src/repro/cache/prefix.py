@@ -1,0 +1,182 @@
+"""Radix-style prefix index: cached prompt-prefix pages keyed by token
+content, so `ServingEngine.admit` reuses KV pages instead of re-prefilling
+shared prefixes (for the target *and* the drafter — DSI pays prefill twice
+per request otherwise).
+
+Structure: a trie whose edges are *page-sized token chunks*. A node
+reached through chunks ``c_0..c_{k-1}`` stores, per namespace (one
+namespace per (model, segment) pool, e.g. ``"t0"``/``"d0"``), the physical
+page holding that chunk's KV. A node may additionally hold one *partial*
+entry — a trailing sub-page chunk with its (partially filled) page — which
+is shared by copy-on-write: a new stream matching ``j`` of its tokens gets
+a fresh copy of the page (`CacheManager.apply_cow`) and writes its first
+divergent token into the copy, never the shared original.
+
+The index itself is a page holder: every stored page carries one index
+reference (`allocator.PageAllocator` refcounts). ``evict_lru`` releases
+the least-recently-touched leaf so the manager can reclaim pages under
+memory pressure; pages still referenced by live streams survive until
+those streams retire.
+
+Host-side only; device pools are untouched here.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class _Node:
+    __slots__ = ("children", "pages", "partial", "stamp")
+
+    def __init__(self):
+        self.children: Dict[Tuple[int, ...], "_Node"] = {}
+        self.pages: Dict[str, int] = {}
+        # (tail_tokens, {ns: page}) — a trailing sub-page chunk
+        self.partial: Optional[Tuple[Tuple[int, ...], Dict[str, int]]] = None
+        self.stamp = 0
+
+
+class RadixPrefixIndex:
+    def __init__(self, page_size: int):
+        assert page_size > 0
+        self.page_size = page_size
+        self.root = _Node()
+        self._clock = 0
+        self.hits = 0
+        self.lookups = 0
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    # ------------------------------------------------------------- match
+    def match(self, tokens: Sequence[int], namespaces: Sequence[str]
+              ) -> Tuple[int, Dict[str, List[int]],
+                         Optional[Tuple[int, Dict[str, int]]]]:
+        """Longest cached prefix of ``tokens`` available in *all*
+        ``namespaces``. Returns ``(n_full_tokens, full_pages, partial)``:
+        ``full_pages[ns]`` lists one page per matched full chunk;
+        ``partial`` is ``(n_tail_tokens, {ns: page})`` when a stored
+        partial chunk extends the match (caller must copy-on-write)."""
+        self.lookups += 1
+        ps = self.page_size
+        node, i = self.root, 0
+        full: Dict[str, List[int]] = {ns: [] for ns in namespaces}
+        while True:
+            chunk = tuple(tokens[i:i + ps])
+            if len(chunk) < ps:
+                break
+            child = node.children.get(chunk)
+            if child is None or any(ns not in child.pages
+                                    for ns in namespaces):
+                break
+            child.stamp = self._tick()
+            for ns in namespaces:
+                full[ns].append(child.pages[ns])
+            node, i = child, i + ps
+        partial = None
+        if node.partial is not None:
+            tail, pages = node.partial
+            if all(ns in pages for ns in namespaces):
+                rem = tokens[i:]
+                j = 0
+                while j < len(tail) and j < len(rem) and tail[j] == rem[j]:
+                    j += 1
+                if j > 0:
+                    node.stamp = self._tick()
+                    partial = (j, {ns: pages[ns] for ns in namespaces})
+        if i > 0 or partial is not None:
+            self.hits += 1
+        return i, full, partial
+
+    # ------------------------------------------------------------ insert
+    def insert(self, tokens: Sequence[int],
+               chunk_pages: Dict[str, Sequence[int]],
+               partial_pages: Optional[Dict[str, int]] = None
+               ) -> List[Tuple[str, int]]:
+        """Insert ``tokens``' full chunks (``chunk_pages[ns][c]`` = page of
+        chunk ``c``) plus an optional trailing partial chunk. Existing
+        entries win (first inserter's pages are kept). Returns the
+        ``(ns, page)`` pairs the index now newly holds a reference to —
+        the caller must ``incref`` exactly these."""
+        ps = self.page_size
+        n_full = len(tokens) // ps
+        new_refs: List[Tuple[str, int]] = []
+        node = self.root
+        for c in range(n_full):
+            chunk = tuple(tokens[c * ps:(c + 1) * ps])
+            child = node.children.get(chunk)
+            if child is None:
+                child = _Node()
+                node.children[chunk] = child
+            for ns, pages in chunk_pages.items():
+                if ns not in child.pages:
+                    child.pages[ns] = pages[c]
+                    new_refs.append((ns, pages[c]))
+            child.stamp = self._tick()
+            node = child
+        tail = tuple(tokens[n_full * ps:])
+        if tail and partial_pages:
+            if node.partial is None:
+                node.partial = (tail, dict(partial_pages))
+                node.stamp = self._tick()
+                new_refs.extend(partial_pages.items())
+            elif node.partial[0] == tail:
+                # same tail from another namespace (e.g. the drafter's
+                # pool): merge instead of dropping
+                for ns, page in partial_pages.items():
+                    if ns not in node.partial[1]:
+                        node.partial[1][ns] = page
+                        new_refs.append((ns, page))
+                node.stamp = self._tick()
+        return new_refs
+
+    # ------------------------------------------------------------- evict
+    @staticmethod
+    def _leaf_pages(leaf: _Node) -> List[Tuple[str, int]]:
+        released = list(leaf.pages.items())
+        if leaf.partial is not None:
+            released.extend(leaf.partial[1].items())
+        return released
+
+    def evict_lru(self, reclaimable=None) -> List[Tuple[str, int]]:
+        """Drop the least-recently-touched leaf (its chunk pages and any
+        partial entry) and return the released ``(ns, page)`` pairs for
+        the caller to ``decref``. ``reclaimable(pairs)`` (optional)
+        filters candidates — the manager passes "all pages only
+        index-referenced", so entries pinned by live streams are never
+        destroyed for nothing (evicting them frees no pages *and* loses
+        the cache entry). Returns ``[]`` when no candidate is left."""
+        best: Optional[Tuple[_Node, Tuple[int, ...], _Node]] = None
+
+        def walk(node: _Node):
+            nonlocal best
+            for key, child in node.children.items():
+                if child.children:
+                    walk(child)
+                elif ((best is None or child.stamp < best[2].stamp)
+                      and (reclaimable is None
+                           or reclaimable(self._leaf_pages(child)))):
+                    best = (node, key, child)
+
+        walk(self.root)
+        if best is None:
+            if self.root.partial is not None:
+                _, pages = self.root.partial
+                pairs = list(pages.items())
+                if reclaimable is None or reclaimable(pairs):
+                    self.root.partial = None
+                    return pairs
+            return []
+        parent, key, leaf = best
+        del parent.children[key]
+        return self._leaf_pages(leaf)
+
+    def __len__(self) -> int:
+        n = 0
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            n += len(node.children)
+            stack.extend(node.children.values())
+        return n

@@ -58,6 +58,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache import (CacheCapacityError, PagedSpec, paged_from_dense,
+                         reset_block_rows)
 from repro.core.verify import batched_verify
 from repro.models.model import Model, cache_set_row
 
@@ -159,6 +161,12 @@ class EngineStats:
     max_history: Optional[int] = DEFAULT_HISTORY_CAP
     history: list = field(default_factory=list)
     per_stream: Optional[List["EngineStats"]] = None
+    # paged-KV cache accounting (filled by the serving admission path;
+    # zeros on the dense path — docs/cache.md)
+    prompt_tokens: int = 0
+    prefix_hit_tokens: int = 0   # prompt tokens served from shared pages
+    pages_allocated: int = 0     # fresh pages this request allocated
+    pages_shared: int = 0        # existing pages this request referenced
 
     def record(self, n_acc: int, rejected: bool, n_out: int,
                bubble: Optional[bool] = None) -> None:
@@ -181,6 +189,13 @@ class EngineStats:
         tot = self.accepted_drafts + self.rejections
         return self.accepted_drafts / tot if tot else 0.0
 
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of this request's prompt tokens whose KV came from
+        shared prefix pages instead of being re-prefilled."""
+        return (self.prefix_hit_tokens / self.prompt_tokens
+                if self.prompt_tokens else 0.0)
+
 
 class DSIEngine:
     """Target + drafter pair generating with speculation parallelism.
@@ -191,11 +206,12 @@ class DSIEngine:
     """
 
     def __init__(self, target: Model, drafter: Model, *, lookahead: int = 8,
-                 rule: str = "exact"):
+                 rule: str = "exact", paged: Optional[PagedSpec] = None):
         assert rule in ("exact", "leviathan")
         self.target, self.drafter = target, drafter
         self.w = lookahead
         self.rule = rule
+        self.paged = paged   # block-table KV caches instead of dense rings
         self._jit_step = jax.jit(self._macro_step)
         self._jit_admit = jax.jit(self._admit_row)
         self.table_max_len: Optional[int] = None
@@ -318,6 +334,8 @@ class DSIEngine:
         n_arr = np.broadcast_to(np.asarray(n_new, np.int32), (b,))
         n_max = int(n_arr.max())
         key = key if key is not None else jax.random.PRNGKey(0)
+        _check_capacity(self.target, s, n_max, 2 * w + 2, max_len)
+        _check_capacity(self.drafter, s, n_max, 2 * w + 2, max_len)
         max_len = max_len or (s + n_max + 2 * w + 2)
         cap = n_max + w + 1
 
@@ -328,6 +346,11 @@ class DSIEngine:
         d_logits, d_cache = self.drafter.prefill(params_d, batch,
                                                  max_len=max_len,
                                                  window_headroom=w)
+        if self.paged is not None:
+            t_cache = paged_from_dense(self.target, t_cache, self.paged,
+                                       max_len, window_headroom=w)
+            d_cache = paged_from_dense(self.drafter, d_cache, self.paged,
+                                       max_len, window_headroom=w)
         prefetch, d_prob0, key = self._bootstrap(d_logits, key)
 
         state: State = {
@@ -375,8 +398,10 @@ class DSIEngine:
         b, w = n_slots, self.w
         v = self.target.cfg.padded_vocab
         self.table_max_len = max_len
-        t_cache = self.target.init_cache(b, max_len, window_headroom=w)
-        d_cache = self.drafter.init_cache(b, max_len, window_headroom=w)
+        t_cache = self.target.init_cache(b, max_len, window_headroom=w,
+                                         paged=self.paged)
+        d_cache = self.drafter.init_cache(b, max_len, window_headroom=w,
+                                          paged=self.paged)
         return {
             "key": key if key is not None else jax.random.PRNGKey(0),
             "active": jnp.zeros((b,), bool),
@@ -435,18 +460,38 @@ class DSIEngine:
 
     def admit(self, params_t, params_d, state: State, slot: int,
               prompt: jnp.ndarray, *,
-              extra_inputs: Optional[Dict[str, jnp.ndarray]] = None) -> State:
+              extra_inputs: Optional[Dict[str, jnp.ndarray]] = None,
+              manager=None, max_new: Optional[int] = None) -> State:
         """Prefill one request (prompt (1,S), any S) and install it in
-        ``slot`` mid-flight — the continuous-batching admission path."""
+        ``slot`` mid-flight — the continuous-batching admission path.
+
+        With a ``CacheManager`` the caches are paged: the manager matches
+        the prompt against its prefix index and reserves pages (raising
+        ``CacheOOM`` under memory pressure — the caller leaves the request
+        queued), and only the *uncached suffix* is prefilled, straight
+        into this stream's pages. The manager's ``last_ticket`` carries
+        the admission's page/prefix accounting."""
         assert self.table_max_len is not None, "call init_slots first"
         w = self.w
         batch = {"tokens": prompt, **(extra_inputs or {})}
-        t_logits, t_row = self.target.prefill(params_t, batch,
-                                              max_len=self.table_max_len,
-                                              window_headroom=w)
-        d_logits, d_row = self.drafter.prefill(params_d, batch,
-                                               max_len=self.table_max_len,
-                                               window_headroom=w)
+        if manager is not None:
+            tokens = np.asarray(prompt)[0].tolist()
+            ticket = manager.admit(tokens, slot, max_new=max_new)
+            state = manager.apply_cow(state, ticket)
+            t_row = manager.row_cache(state["t_cache"], "t", ticket)
+            d_row = manager.row_cache(state["d_cache"], "d", ticket)
+            t_logits, t_row = self.target.prefill_paged(
+                params_t, batch, t_row, ticket.n_cached["t"])
+            d_logits, d_row = self.drafter.prefill_paged(
+                params_d, batch, d_row, ticket.n_cached["d"])
+            manager.register(ticket, tokens)
+        else:
+            t_logits, t_row = self.target.prefill(params_t, batch,
+                                                  max_len=self.table_max_len,
+                                                  window_headroom=w)
+            d_logits, d_row = self.drafter.prefill(params_d, batch,
+                                                   max_len=self.table_max_len,
+                                                   window_headroom=w)
         self._admissions += 1
         k_boot = jax.random.fold_in(state["key"], self._admissions)
         prefetch, d_prob0, _ = self._bootstrap(d_logits, k_boot)
@@ -457,12 +502,39 @@ class DSIEngine:
 
     @staticmethod
     def retire(state: State, slot: int) -> State:
-        """Free a finished slot: the stream stops emitting immediately."""
-        return dict(state, active=state["active"].at[slot].set(False))
+        """Free a finished slot: the stream stops emitting immediately.
+        Paged caches additionally re-point the slot's block tables at the
+        trash page — the slot keeps executing lockstep garbage writes
+        while inactive, and its freed pages may be recycled to a new
+        stream at any time."""
+        state = dict(state, active=state["active"].at[slot].set(False))
+        for ck in ("t_cache", "d_cache"):
+            if any(k.startswith("block") and v is not None
+                   for k, v in state[ck].items()):
+                state[ck] = reset_block_rows(state[ck], slot)
+        return state
 
     def step(self, params_t, params_d, state: State) -> State:
         """Advance every active stream by one jitted macro-step."""
         return self._jit_step(params_t, params_d, state)
+
+
+def _check_capacity(model: Model, s: int, n_new: int, slack: int,
+                    max_len: Optional[int]) -> None:
+    """Explicit cache-overflow guard. Attention caches address slots by
+    ``pos % clen``, so generating past a *non-sliding-window* ring's
+    capacity silently overwrites the oldest context (lossy!). Engines
+    refuse such a run up front instead; sliding-window-only models wrap
+    by design and are exempt. ``slack`` is the engine's write overshoot
+    beyond the emitted tokens (2·lookahead+2 for speculative engines)."""
+    if max_len is None or not model.has_unbounded_cache:
+        return
+    need = s + n_new + slack
+    if max_len < need:
+        raise CacheCapacityError(
+            f"max_len={max_len} cannot hold prompt ({s}) + n_new ({n_new}) "
+            f"+ engine headroom ({slack}): positions would wrap the cache "
+            f"ring and drop context; need max_len >= {need}")
 
 
 def _aggregate(per: List[EngineStats], steps: int) -> EngineStats:

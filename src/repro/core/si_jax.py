@@ -19,18 +19,22 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.dsi_jax import (EngineStats, _aggregate, _gather_hist,
-                                _restore_states, _softmax, draft_scan)
+from repro.cache import PagedSpec, paged_from_dense
+from repro.core.dsi_jax import (EngineStats, _aggregate, _check_capacity,
+                                _gather_hist, _restore_states, _softmax,
+                                draft_scan)
 from repro.core.verify import batched_verify
 from repro.models.model import Model
 
 
 class SIEngine:
     def __init__(self, target: Model, drafter: Model, *, lookahead: int = 8,
-                 rule: str = "exact"):
+                 rule: str = "exact",
+                 paged: Optional[PagedSpec] = None):
         self.target, self.drafter = target, drafter
         self.w = lookahead
         self.rule = rule
+        self.paged = paged
         self._jit_step = jax.jit(self._iteration)
 
     def _iteration(self, params_t, params_d, state):
@@ -100,6 +104,8 @@ class SIEngine:
         n_arr = np.broadcast_to(np.asarray(n_new, np.int32), (b,))
         n_max = int(n_arr.max())
         key = key if key is not None else jax.random.PRNGKey(0)
+        _check_capacity(self.target, s, n_max, 2 * self.w + 2, max_len)
+        _check_capacity(self.drafter, s, n_max, 2 * self.w + 2, max_len)
         max_len = max_len or (s + n_max + 2 * self.w + 2)
         cap = n_max + self.w + 1
         batch = {"tokens": prompt, **(extra_inputs or {})}
@@ -108,6 +114,11 @@ class SIEngine:
                                                 window_headroom=self.w)
         _, d_cache = self.drafter.prefill(params_d, batch, max_len=max_len,
                                           window_headroom=self.w)
+        if self.paged is not None:
+            t_cache = paged_from_dense(self.target, t_cache, self.paged,
+                                       max_len, window_headroom=self.w)
+            d_cache = paged_from_dense(self.drafter, d_cache, self.paged,
+                                       max_len, window_headroom=self.w)
         carry = _softmax(t_logits)
         if self.rule == "exact":
             pending = jnp.argmax(carry, -1).astype(jnp.int32)
@@ -151,6 +162,7 @@ def nonsi_generate(model: Model, params, prompt: jnp.ndarray, n_new: int, *,
     """Plain autoregressive decoding (the non-SI baseline)."""
     b, s = prompt.shape
     key = key if key is not None else jax.random.PRNGKey(0)
+    _check_capacity(model, s, n_new, 0, max_len)
     max_len = max_len or (s + n_new + 2)
     batch = {"tokens": prompt, **(extra_inputs or {})}
     logits, cache = model.prefill(params, batch, max_len=max_len)

@@ -1,4 +1,5 @@
 from repro.kernels.flash_attention.ops import attention, decode_attention  # noqa: F401
 from repro.kernels.flash_attention.ref import attention_ref  # noqa: F401
 from repro.kernels.flash_attention.ring_decode import (  # noqa: F401
-    ring_decode_attention, ring_decode_ref)
+    paged_decode_attention, paged_decode_ref, ring_decode_attention,
+    ring_decode_ref)

@@ -1,6 +1,10 @@
 """Attention entry point used by the model stack.
 
 Dispatch (see docs/kernels.md for the full table):
+  * paged ring calls (``block_tables`` + ``kv_positions`` — the paged KV
+    serving cache, docs/cache.md): the block-table Pallas kernel on TPU
+    (physical pages picked in the index maps), page-gather + packed-GEMM
+    jnp elsewhere.
   * ring/decode calls (``kv_positions`` given — drafter decode steps, DSI
     verify windows, sliding-window ring caches):
       - TPU (or ``force_pallas``/``pallas_override``): the Pallas
@@ -30,7 +34,9 @@ import jax.numpy as jnp
 
 from repro.kernels.dispatch import resolve_pallas
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.flash_attention.ring_decode import (ring_decode_attention,
+from repro.kernels.flash_attention.ring_decode import (paged_decode_attention,
+                                                       paged_decode_ref,
+                                                       ring_decode_attention,
                                                        ring_decode_ref)
 
 _DEFAULT_CHUNK = 1024
@@ -71,12 +77,26 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
               q_offset=0,
               kv_len: Optional[jnp.ndarray] = None,
               kv_positions: Optional[jnp.ndarray] = None,
+              block_tables: Optional[jnp.ndarray] = None,
               chunk: int = _DEFAULT_CHUNK,
               force_pallas: Optional[bool] = None,
               interpret: Optional[bool] = None) -> jnp.ndarray:
-    """GQA attention. q (B,Sq,H,D); k/v (B,Sk,KV,D). See ref.py for masks."""
+    """GQA attention. q (B,Sq,H,D); k/v (B,Sk,KV,D). See ref.py for masks.
+
+    With ``block_tables`` (B, n_pages), k/v are a shared physical page
+    pool (P, page, KV, D) and ``kv_positions`` maps *logical* slots
+    (paged ring cache — docs/cache.md)."""
     use_pallas, interp = resolve_pallas(force_pallas, interpret)
     use_pallas = use_pallas or interp   # interpret-only override still forces
+    if block_tables is not None:        # paged ring cache
+        assert kv_positions is not None, "paged calls need kv_positions"
+        if use_pallas:
+            return paged_decode_attention(q, k, v, block_tables,
+                                          kv_positions, q_offset,
+                                          causal=causal, window=window,
+                                          kv_len=kv_len, interpret=interp)
+        return paged_decode_ref(q, k, v, block_tables, kv_positions, q_offset,
+                                causal=causal, window=window, kv_len=kv_len)
     if kv_positions is not None:        # the kernel path (matches spec_verify)
         if use_pallas:
             return ring_decode_attention(q, k, v, kv_positions, q_offset,
@@ -105,12 +125,15 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      causal: bool = True,
                      window: Optional[int] = None,
                      kv_len: Optional[jnp.ndarray] = None,
+                     block_tables: Optional[jnp.ndarray] = None,
                      force_pallas: Optional[bool] = None,
                      interpret: Optional[bool] = None) -> jnp.ndarray:
     """Decode/verify attention: q (B,W,H,D) against a (ring or linear)
-    cache. Thin alias of :func:`attention` with ``kv_positions`` required;
-    not jit'd itself (every caller sits inside a jitted step, and the
-    dispatch decision must be re-resolved per trace)."""
+    cache — paged when ``block_tables`` is given (k/v are then the shared
+    page pool). Thin alias of :func:`attention` with ``kv_positions``
+    required; not jit'd itself (every caller sits inside a jitted step,
+    and the dispatch decision must be re-resolved per trace)."""
     return attention(q, k, v, causal=causal, window=window, q_offset=pos,
                      kv_positions=kv_positions, kv_len=kv_len,
+                     block_tables=block_tables,
                      force_pallas=force_pallas, interpret=interpret)

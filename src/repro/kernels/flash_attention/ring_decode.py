@@ -34,6 +34,11 @@ validated via interpret=True on CPU.
 two (B·KV)-batched GEMMs instead of the oracle's 5-D einsum — measurably
 faster than ``attention_ref`` on CPU at S_cache >= 2048 (see
 benchmarks/bench_kernels.py) and the non-TPU dispatch default.
+
+``paged_decode_attention`` / ``paged_decode_ref`` are the block-table
+variants for the paged KV serving cache (docs/cache.md): the same kernel
+body over a shared physical page pool, with the per-stream block table
+resolved in the scalar-prefetched BlockSpec index maps.
 """
 from __future__ import annotations
 
@@ -220,6 +225,112 @@ def ring_decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         interpret=interpret,
     )(scalars, qp, k, v, slot_b)
     return _unpack_o(out[:, :, :m], w, h)
+
+
+def _paged_kernel(scalars_ref, bt_ref,     # SMEM: per-stream scalars + block tables
+                  q_ref, k_ref, v_ref, slot_ref, o_ref,
+                  m_scr, l_scr, acc_scr, **kw):
+    """Block-table variant: identical math to ``_kernel`` — the page
+    gather happened in the k/v index_maps (``bt_ref`` picked the physical
+    page for this grid step), so the body only ever sees one page tile
+    plus its logical slot map."""
+    _kernel(scalars_ref, q_ref, k_ref, v_ref, slot_ref, o_ref,
+            m_scr, l_scr, acc_scr, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, block_tables: jnp.ndarray,
+                           slot_pos: jnp.ndarray, pos, *,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           kv_len=None,
+                           interpret: bool = False) -> jnp.ndarray:
+    """Paged flash-decode: q (B,W,H,D) against a *shared* physical page
+    pool k/v (P, page, KV, D) addressed through per-stream block tables
+    (B, n_pages). Logical slot ``s`` of stream ``b`` lives at
+    ``(block_tables[b, s // page], s % page)``; ``slot_pos`` (B, n·page)
+    maps logical slots to absolute positions exactly as in the ring
+    kernel, so masking (and therefore decode/verify/sliding-window
+    semantics) is unchanged — only the KV addressing differs.
+
+    The grid is (B, KV, n_pages) with the page index innermost: the k/v
+    BlockSpec index_maps read the scalar-prefetched block table to DMA the
+    right physical page per step, the vLLM-style TPU paged-attention
+    pattern. Semantics == ``ring_decode_attention`` on the gathered dense
+    view ``pool[block_tables].reshape(B, n·page, KV, D)``."""
+    b, w, h, d = q.shape
+    p_pages, page, kv, _ = k_pool.shape
+    n_pages = block_tables.shape[-1]
+    assert h % kv == 0, (h, kv)
+    assert slot_pos.shape[-1] == n_pages * page, \
+        (slot_pos.shape, n_pages, page)
+    g = h // kv
+    m = g * w
+    bm = _round_up(m, 16)
+    qp = _pack_q(q, kv)
+    if bm != m:
+        qp = jnp.pad(qp, ((0, 0), (0, 0), (0, bm - m), (0, 0)))
+
+    slot_b = _norm_slots(slot_pos, b)
+    pos_b = _norm_pos(pos, b)
+    kl_b = (jnp.full((b,), _INT32_MAX, jnp.int32) if kv_len is None
+            else _norm_pos(kv_len, b))
+    scalars = jnp.stack([pos_b, kl_b], axis=1)                  # (B, 2)
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    kernel = functools.partial(_paged_kernel, bm=bm, bk=page, nk=n_pages,
+                               w=w, causal=causal, window=window,
+                               scale=1.0 / float(d) ** 0.5)
+    grid = (b, kv, n_pages)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,      # [pos, kv_len] + block tables
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, bm, d),
+                             lambda bi, hi, ki, *_: (bi, hi, 0, 0)),
+                # physical page pick: the block table maps (stream,
+                # logical page) -> pool page at DMA-schedule time
+                pl.BlockSpec((1, page, 1, d),
+                             lambda bi, hi, ki, scal, tab: (tab[bi, ki], 0,
+                                                            hi, 0)),
+                pl.BlockSpec((1, page, 1, d),
+                             lambda bi, hi, ki, scal, tab: (tab[bi, ki], 0,
+                                                            hi, 0)),
+                # the logical slot->position map is dense per stream
+                pl.BlockSpec((1, page), lambda bi, hi, ki, *_: (bi, ki)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, bm, d),
+                                   lambda bi, hi, ki, *_: (bi, hi, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bm,), jnp.float32),
+                pltpu.VMEM((bm,), jnp.float32),
+                pltpu.VMEM((bm, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kv, bm, d), q.dtype),
+        interpret=interpret,
+    )(scalars, bt, qp, k_pool, v_pool, slot_b)
+    return _unpack_o(out[:, :, :m], w, h)
+
+
+def paged_decode_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
+                     v_pool: jnp.ndarray, block_tables: jnp.ndarray,
+                     slot_pos: jnp.ndarray, pos, *,
+                     causal: bool = True,
+                     window: Optional[int] = None,
+                     kv_len=None) -> jnp.ndarray:
+    """Portable paged twin: gather each stream's pages into the logical
+    dense view, then run the packed-GEMM ring path. Bit-identical to the
+    ring path on an equivalent dense cache (the gather only permutes
+    storage, and masked slots contribute exact zeros)."""
+    from repro.cache.paged import gather_pages
+    k = gather_pages(k_pool, block_tables)
+    v = gather_pages(v_pool, block_tables)
+    return ring_decode_ref(q, k, v, slot_pos, pos, causal=causal,
+                           window=window, kv_len=kv_len)
 
 
 def ring_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

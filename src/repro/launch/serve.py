@@ -26,6 +26,11 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--lookahead", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="> 0 serves over the paged KV cache with prefix "
+                         "sharing (docs/cache.md)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="bound the page pool (0 = size to the slot table)")
     args = ap.parse_args(argv)
 
     cfg_t = reduced(get_config(args.arch), layers=4, d_model=256)
@@ -34,9 +39,14 @@ def main(argv=None):
     params_t = target.init(jax.random.PRNGKey(0))
     params_d = drafter.init(jax.random.PRNGKey(1))
 
+    paged = None
+    if args.page_size:
+        from repro.cache import PagedSpec
+        paged = PagedSpec(page_size=args.page_size,
+                          num_pages=args.num_pages or None)
     eng = ServingEngine(target=target, params_t=params_t, drafter=drafter,
                         params_d=params_d, mode=args.mode,
-                        lookahead=args.lookahead)
+                        lookahead=args.lookahead, paged=paged)
     rng = np.random.default_rng(0)
     for _ in range(args.requests):
         prompt = rng.integers(0, cfg_t.vocab_size,
@@ -53,6 +63,12 @@ def main(argv=None):
         print(f"req {req.rid}: {len(req.output)} tokens{extra}")
     print(f"mode={args.mode} total {wall:.2f}s "
           f"({wall / args.requests:.2f}s/request)")
+    if eng.cache_manager is not None:
+        st = eng.cache_manager.stats()
+        print(f"paged cache: prefix_hit_rate={st['prefix_hit_rate']:.2f} "
+              f"pages_peak={st['pages_peak']} "
+              f"pages_shared={st['pages_shared']} "
+              f"deferrals={st['deferrals']}")
 
 
 if __name__ == "__main__":

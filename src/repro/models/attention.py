@@ -106,15 +106,22 @@ def attn_forward(params: dict, x: jnp.ndarray, positions: jnp.ndarray, cfg, *,
 
 def attn_decode(params: dict, x: jnp.ndarray, k_cache: jnp.ndarray,
                 v_cache: jnp.ndarray, slot_pos: jnp.ndarray, pos: jnp.ndarray,
-                cfg, *, window: Optional[int]
+                cfg, *, window: Optional[int],
+                block_table: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One-token decode. x (B,1,d); ``pos`` scalar or per-stream (B,);
     ``slot_pos`` (S_cache,) shared or per-stream (B,S_cache).
-    Returns (y, k_cache', v_cache')."""
+    Returns (y, k_cache', v_cache').
+
+    With ``block_table`` (B, n_pages) the caches are shared physical page
+    pools (P, page, KV, D): logical ring slot ``s`` of stream ``b`` lives
+    at ``(block_table[b, s // page], s % page)`` — writes scatter into
+    the stream's own pages (docs/cache.md) and attention dispatches to
+    the paged kernel/ref."""
     b = x.shape[0]
-    s_cache = k_cache.shape[1]
-    pos_b = batched_pos(pos, b)                                 # (B,)
     slot_b = batched_slots(slot_pos, b)                         # (B,Sc)
+    s_cache = slot_b.shape[-1] if block_table is not None else k_cache.shape[1]
+    pos_b = batched_pos(pos, b)                                 # (B,)
     q = _split_heads(dense(x, params["wq"]), cfg.num_heads, cfg.head_dim)
     k1 = _split_heads(dense(x, params["wk"]), cfg.num_kv_heads, cfg.head_dim)
     v1 = _split_heads(dense(x, params["wv"]), cfg.num_kv_heads, cfg.head_dim)
@@ -122,18 +129,34 @@ def attn_decode(params: dict, x: jnp.ndarray, k_cache: jnp.ndarray,
     q = rope(q, posv, cfg.rope_theta)
     k1 = rope(k1, posv, cfg.rope_theta)
     slot = jnp.mod(pos_b, s_cache)                              # (B,)
-    rows = jnp.arange(b)[:, None]
-    k_cache = k_cache.at[rows, slot[:, None]].set(k1)
-    v_cache = v_cache.at[rows, slot[:, None]].set(v1)
-    k_cache = _kv_cs(k_cache, cfg)
-    v_cache = _kv_cs(v_cache, cfg)
+    if block_table is not None:
+        page = k_cache.shape[1]
+        pages = jnp.take_along_axis(block_table, (slot // page)[:, None],
+                                    axis=1)[:, 0]               # (B,)
+        offs = slot % page
+        # streams own their write pages exclusively (COW/admission
+        # invariant), so the per-stream scatter cannot collide
+        k_cache = k_cache.at[pages, offs].set(k1[:, 0])
+        v_cache = v_cache.at[pages, offs].set(v1[:, 0])
+        # keep the shared pool's KV-head axis model-sharded (pool dims
+        # (P, page, KV, D)); without a constraint GSPMD may replicate the
+        # largest tensor in serving on every device
+        if _kv_head_sharded(cfg):
+            k_cache = cs(k_cache, None, None, "model", None)
+            v_cache = cs(v_cache, None, None, "model", None)
+    else:
+        rows = jnp.arange(b)[:, None]
+        k_cache = k_cache.at[rows, slot[:, None]].set(k1)
+        v_cache = v_cache.at[rows, slot[:, None]].set(v1)
+        k_cache = _kv_cs(k_cache, cfg)
+        v_cache = _kv_cs(v_cache, cfg)
     new_slot_pos = jnp.where(jnp.arange(s_cache)[None] == slot[:, None],
                              pos_b[:, None], slot_b)
     q = _q_cs(q, cfg)
-    # dispatcher: Pallas ring-decode kernel on TPU, packed-GEMM jnp path
-    # elsewhere (kernels/flash_attention/ops.py)
+    # dispatcher: Pallas ring/paged-decode kernel on TPU, packed-GEMM jnp
+    # path elsewhere (kernels/flash_attention/ops.py)
     y = decode_attention(q, k_cache, v_cache, new_slot_pos, pos_b,
-                         window=window)
+                         window=window, block_tables=block_table)
     y = _q_cs(y, cfg)
     out = dense(y.reshape(b, 1, cfg.q_dim), params["wo"])
     return cs(out, "batch", None, None), k_cache, v_cache

@@ -65,11 +65,13 @@ def _mixer_full(p, xn, positions, cfg, *, window, initial_state=None):
     return y, cache
 
 
-def _mixer_decode(p, xn, cache, slot_pos, pos, cfg, *, window):
+def _mixer_decode(p, xn, cache, slot_pos, pos, cfg, *, window,
+                  block_table=None):
     new_cache = dict(cache)
     if cfg.attn and cfg.ssm is not None:
         a, k, v = attn_mod.attn_decode(p["attn"], xn, cache["k"], cache["v"],
-                                       slot_pos, pos, cfg, window=window)
+                                       slot_pos, pos, cfg, window=window,
+                                       block_table=block_table)
         s, ssm_state, conv_state = mamba2.mamba_decode(
             p["mamba"], xn, cache["ssm"], cache["conv"], cfg)
         y = 0.5 * (rmsnorm(a, p["branch_norm_a"], cfg.norm_eps)
@@ -77,7 +79,8 @@ def _mixer_decode(p, xn, cache, slot_pos, pos, cfg, *, window):
         new_cache.update(k=k, v=v, ssm=ssm_state, conv=conv_state)
     elif cfg.attn:
         y, k, v = attn_mod.attn_decode(p["attn"], xn, cache["k"], cache["v"],
-                                       slot_pos, pos, cfg, window=window)
+                                       slot_pos, pos, cfg, window=window,
+                                       block_table=block_table)
         new_cache.update(k=k, v=v)
     else:
         y, ssm_state, conv_state = mamba2.mamba_decode(
@@ -120,26 +123,32 @@ def block_forward(p: dict, x: jnp.ndarray, positions: jnp.ndarray, cfg, *,
 
 
 def block_decode(p: dict, x: jnp.ndarray, cache: dict, slot_pos, pos, cfg, *,
-                 window: Optional[int]) -> Tuple[jnp.ndarray, dict]:
+                 window: Optional[int],
+                 block_table=None) -> Tuple[jnp.ndarray, dict]:
     xn = rmsnorm(x, p["norm1"], cfg.norm_eps)
-    y, new_cache = _mixer_decode(p, xn, cache, slot_pos, pos, cfg, window=window)
+    y, new_cache = _mixer_decode(p, xn, cache, slot_pos, pos, cfg,
+                                 window=window, block_table=block_table)
     x = x + y
     x, _ = _channel_mix(p, x, cfg)
     return x, new_cache
 
 
-def _attn_verify(p_attn, xn, cache, slot_pos_new, pos, cfg, *, window):
+def _attn_verify(p_attn, xn, cache, slot_pos_new, pos, cfg, *, window,
+                 block_table=None):
     """Chunk attention against a cache: write K new kv slots, then attend
     with absolute-position masking (within-chunk causality falls out of
     slot positions). ``pos`` scalar or per-stream (B,); ``slot_pos_new``
-    (S_cache,) or per-stream (B,S_cache)."""
+    (S_cache,) or per-stream (B,S_cache). With ``block_table`` the cache
+    is a shared page pool and logical slots route through the stream's
+    pages (docs/cache.md)."""
     import jax
     from repro.kernels.flash_attention import decode_attention
     from repro.models.layers import dense
     from repro.sharding import cs
 
     b, k_len, _ = xn.shape
-    s_cache = cache["k"].shape[1]
+    paged = block_table is not None
+    s_cache = slot_pos_new.shape[-1] if paged else cache["k"].shape[1]
     from repro.models.layers import batched_pos
     pos_b = batched_pos(pos, b)
     q = attn_mod._split_heads(dense(xn, p_attn["wq"]), cfg.num_heads, cfg.head_dim)
@@ -150,9 +159,19 @@ def _attn_verify(p_attn, xn, cache, slot_pos_new, pos, cfg, *, window):
     q = rope(q, positions, cfg.rope_theta)
     kn = rope(kn, positions, cfg.rope_theta)
     slots = jnp.mod(positions, s_cache)                         # (B,K)
-    rows = jnp.arange(b)[:, None]
-    k_cache = cache["k"].at[rows, slots].set(kn)
-    v_cache = cache["v"].at[rows, slots].set(vn)
+    if paged:
+        page = cache["k"].shape[1]
+        pages = jnp.take_along_axis(block_table, slots // page, axis=1)
+        offs = slots % page
+        k_cache = cache["k"].at[pages, offs].set(kn)
+        v_cache = cache["v"].at[pages, offs].set(vn)
+        if attn_mod._kv_head_sharded(cfg):   # pool dims (P, page, KV, D)
+            k_cache = cs(k_cache, None, None, "model", None)
+            v_cache = cs(v_cache, None, None, "model", None)
+    else:
+        rows = jnp.arange(b)[:, None]
+        k_cache = cache["k"].at[rows, slots].set(kn)
+        v_cache = cache["v"].at[rows, slots].set(vn)
     if attn_mod._kv_head_sharded(cfg):
         q = cs(q, "batch", None, "model", None)
     else:
@@ -160,7 +179,7 @@ def _attn_verify(p_attn, xn, cache, slot_pos_new, pos, cfg, *, window):
     # dispatcher: Pallas ring-decode kernel on TPU (W rows × G heads packed
     # into one MXU tile), packed-GEMM jnp path elsewhere
     y = decode_attention(q, k_cache, v_cache, slot_pos_new, pos_b,
-                         window=window)
+                         window=window, block_tables=block_table)
     if attn_mod._kv_head_sharded(cfg):
         y = cs(y, "batch", None, "model", None)
     else:
@@ -170,7 +189,8 @@ def _attn_verify(p_attn, xn, cache, slot_pos_new, pos, cfg, *, window):
 
 
 def block_verify(p: dict, x: jnp.ndarray, cache: dict, slot_pos_new, pos,
-                 cfg, *, window: Optional[int]) -> Tuple[jnp.ndarray, dict]:
+                 cfg, *, window: Optional[int],
+                 block_table=None) -> Tuple[jnp.ndarray, dict]:
     """Verification-chunk block: processes K tokens against the cache and
     emits rollback-ready state ("ssm_states"/"conv_full" for recurrent
     layers; attention kv is overwrite-safe and needs no rollback)."""
@@ -178,7 +198,7 @@ def block_verify(p: dict, x: jnp.ndarray, cache: dict, slot_pos_new, pos,
     new_cache = dict(cache)
     if cfg.attn and cfg.ssm is not None:
         a, k, v = _attn_verify(p["attn"], xn, cache, slot_pos_new, pos, cfg,
-                               window=window)
+                               window=window, block_table=block_table)
         s, states, conv_full = mamba2.mamba_verify(
             p["mamba"], xn, cache["ssm"], cache["conv"], cfg)
         y = 0.5 * (rmsnorm(a, p["branch_norm_a"], cfg.norm_eps)
@@ -186,7 +206,7 @@ def block_verify(p: dict, x: jnp.ndarray, cache: dict, slot_pos_new, pos,
         new_cache.update(k=k, v=v, ssm_states=states, conv_full=conv_full)
     elif cfg.attn:
         y, k, v = _attn_verify(p["attn"], xn, cache, slot_pos_new, pos, cfg,
-                               window=window)
+                               window=window, block_table=block_table)
         new_cache.update(k=k, v=v)
     else:
         y, states, conv_full = mamba2.mamba_verify(

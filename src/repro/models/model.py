@@ -44,19 +44,34 @@ def cache_set_row(cache: Cache, row: Cache, b) -> Cache:
     """Scatter a single-stream cache (batch dim 1) into row ``b`` of a
     batched cache — the per-slot-prefill admission primitive for the
     continuous-batching engines. Both caches must share geometry (same
-    ``max_len``/headroom)."""
+    ``max_len``/headroom).
+
+    Paged caches (``block<i>`` present): k/v leaves are *shared pools*
+    with no batch dim — the row view already wrote the admitted stream's
+    pages in place, so the row's pool is taken wholesale; only the
+    per-stream leaves (pos, slot/block rows, recurrent state) scatter."""
     out: Cache = {}
     for key, val in cache.items():
         rv = row[key]
         if key == "pos":
             out[key] = jax.lax.dynamic_update_slice_in_dim(
                 val, jnp.reshape(jnp.asarray(rv, jnp.int32), (1,)), b, axis=0)
-        elif key.startswith("slot"):
+        elif key.startswith("slot") or key.startswith("block"):
             if val is None:
                 out[key] = None
             else:
                 out[key] = jax.lax.dynamic_update_slice_in_dim(
-                    val, jnp.atleast_2d(rv), b, axis=0)
+                    val, jnp.atleast_2d(rv).astype(val.dtype), b, axis=0)
+        elif key.startswith("seg") and \
+                cache.get(f"block{key[len('seg'):]}") is not None:
+            seg: Dict[str, jnp.ndarray] = {}
+            for kk, a in val.items():
+                if kk in ("k", "v"):       # shared pool: row holds the update
+                    seg[kk] = rv[kk]
+                else:                      # per-stream recurrent leaves
+                    seg[kk] = jax.lax.dynamic_update_slice_in_dim(
+                        a, rv[kk].astype(a.dtype), b, axis=1)
+            out[key] = seg
         else:  # seg<i> dicts and cross_k/v: leaves (n|nsb, B, ...)
             out[key] = jax.tree.map(
                 lambda a, r: jax.lax.dynamic_update_slice_in_dim(
@@ -265,15 +280,60 @@ class Model:
                                         window_headroom=window_headroom)
         return logits[:, -1], cache
 
+    def prefill_paged(self, params: Params, batch: Dict[str, jnp.ndarray],
+                      cache: Cache, n_cached: int
+                      ) -> Tuple[jnp.ndarray, Cache]:
+        """Chunk-prefill the *uncached suffix* of a prompt against a paged
+        cache row that already holds ``n_cached`` prefix positions (pages
+        reused from the prefix index — the admission path that makes
+        prefix sharing save prefill FLOPs). The suffix runs as
+        verify_chunks (within-chunk causality falls out of absolute slot
+        positions), each committed in full. Returns (last-token logits
+        (B,V), advanced cache).
+
+        Sliding-window segments bound the chunk size: a verify_chunk
+        writes all its keys before attending, so writing more than the
+        ring's headroom (clen - window) per chunk would evict keys still
+        inside an earlier row's attention window (the same invariant that
+        caps the engines' verify windows at ``window_headroom``)."""
+        toks = batch["tokens"]
+        s = toks.shape[1]
+        assert s - n_cached >= 1, "need >= 1 uncached token for logits"
+        # chunk size bound: the smallest windowed ring's headroom
+        chunk = s - n_cached
+        if self.cfg.attn:
+            for si, window in enumerate(self.seg_windows()):
+                slot = cache.get(f"slot{si}")
+                if window is not None and slot is not None:
+                    chunk = min(chunk, max(1, slot.shape[-1] - window))
+        logits = None
+        pos = n_cached
+        while pos < s:
+            piece = toks[:, pos:min(pos + chunk, s)]
+            logits, post = self.verify_chunk(params, cache, piece)
+            cache = self.commit(cache, post,
+                                jnp.asarray(piece.shape[1], jnp.int32))
+            pos += piece.shape[1]
+        return logits[:, -1], cache
+
     # ----------------------------------------------------------- init_cache
     def init_cache(self, batch_size: int, max_len: int,
                    filled: Optional[int] = None,
-                   window_headroom: int = 0) -> Cache:
+                   window_headroom: int = 0,
+                   paged=None) -> Cache:
         """Zero cache (dry-run / serving). ``filled`` marks slots < filled
-        as already occupied (decode-shape dry-runs start from a full cache)."""
+        as already occupied (decode-shape dry-runs start from a full cache).
+
+        ``paged`` (a ``repro.cache.PagedSpec``) switches attention
+        segments to the paged layout: shared ``(n, P, page, KV, D)``
+        pools plus per-stream ``block<i>`` tables initialized to the
+        reserved trash page (docs/cache.md). Callers assign real pages
+        (engine/`CacheManager`) before positions become visible."""
         cfg = self.cfg
         dt = jnp.dtype(cfg.dtype)
         filled = 0 if filled is None else filled
+        assert paged is None or (filled == 0 and not self.is_vlm), \
+            "paged caches start empty; VLM cross-attention stays dense"
         cache: Cache = {"pos": jnp.full((batch_size,), filled, jnp.int32)}
         segs = [(0, self.n_super * self.n_inner, False)] if self.is_vlm \
             else self.segments
@@ -284,9 +344,22 @@ class Model:
                 min(window + window_headroom, max_len)
             seg: Dict[str, jnp.ndarray] = {}
             if cfg.attn:
-                kv_shape = (n, batch_size, clen, cfg.num_kv_heads, cfg.head_dim)
+                if paged is not None:
+                    from repro.cache.paged import round_up
+                    clen = round_up(clen, paged.page_size)
+                    n_pages = clen // paged.page_size
+                    pool = paged.pool_pages(batch_size, n_pages)
+                    kv_shape = (n, pool, paged.page_size,
+                                cfg.num_kv_heads, cfg.head_dim)
+                    cache[f"block{si}"] = jnp.zeros(
+                        (batch_size, n_pages), jnp.int32)     # trash page
+                else:
+                    kv_shape = (n, batch_size, clen,
+                                cfg.num_kv_heads, cfg.head_dim)
                 seg["k"] = jnp.zeros(kv_shape, dt)
                 seg["v"] = jnp.zeros(kv_shape, dt)
+            elif paged is not None:
+                cache[f"block{si}"] = None
             if cfg.ssm is not None:
                 from repro.models.mamba2 import init_mamba_cache
                 ssm, conv = init_mamba_cache(cfg, batch_size, dt)
@@ -313,6 +386,40 @@ class Model:
             cache["cross_v"] = jnp.zeros(kv_shape, dt)
         return cache
 
+    # ------------------------------------------------------ paged geometry
+    def seg_windows(self):
+        """Effective sliding window per cache segment (None = full
+        attention) — the single segment/window enumeration shared by the
+        cache-geometry helpers below and the serving ``CacheManager``."""
+        segs = [(0, self.n_super * self.n_inner, False)] if self.is_vlm \
+            else self.segments
+        return [self._seg_window(g) for _, _, g in segs]
+
+    def paged_geometry(self, max_len: int, page_size: int,
+                       window_headroom: int = 0):
+        """Per-attention-segment paged-cache geometry:
+        ``[(si, clen_padded, pages_per_stream, windowed)]`` — the single
+        source of truth shared by ``init_cache(paged=...)`` and the
+        serving ``CacheManager`` so pool shapes always agree."""
+        from repro.cache.paged import round_up
+        if not self.cfg.attn:
+            return []
+        out = []
+        for si, window in enumerate(self.seg_windows()):
+            clen = max_len if window is None else \
+                min(window + window_headroom, max_len)
+            clen_p = round_up(clen, page_size)
+            out.append((si, clen_p, clen_p // page_size, window is not None))
+        return out
+
+    @property
+    def has_unbounded_cache(self) -> bool:
+        """True when some attention segment keeps the full history (no
+        sliding window): generating past its cache capacity would wrap the
+        ring and silently drop context — engines guard against it
+        (`repro.cache.CacheCapacityError`)."""
+        return self.cfg.attn and any(w is None for w in self.seg_windows())
+
     # ----------------------------------------------------------- decode step
     def decode_step(self, params: Params, cache: Cache,
                     tokens: jnp.ndarray) -> Tuple[jnp.ndarray, Cache]:
@@ -337,16 +444,17 @@ class Model:
             window = self._seg_window(is_global)
             seg_cache = cache[f"seg{si}"]
             slot_pos = batched_slots(cache.get(f"slot{si}"), bsz)
+            block = cache.get(f"block{si}")
             if self.is_vlm:
                 x, new_seg = self._decode_vlm_stack(params, x, seg_cache,
                                                     slot_pos, pos, cache)
             else:
                 seg_p = self._seg_params(params, i0, i1)
 
-                def body(h, xs, _w=window, _slot=slot_pos):
+                def body(h, xs, _w=window, _slot=slot_pos, _blk=block):
                     p_layer, c_layer = xs
                     h, c2 = blk.block_decode(p_layer, h, c_layer, _slot, pos,
-                                             cfg, window=_w)
+                                             cfg, window=_w, block_table=_blk)
                     return h, c2
 
                 if i1 - i0 == 1:
@@ -357,6 +465,8 @@ class Model:
                 else:
                     x, new_seg = jax.lax.scan(body, x, (seg_p, seg_cache))
             new_cache[f"seg{si}"] = new_seg
+            if f"block{si}" in cache:
+                new_cache[f"block{si}"] = block
             if slot_pos is not None:
                 clen = slot_pos.shape[-1]
                 new_cache[f"slot{si}"] = jnp.where(
@@ -397,6 +507,7 @@ class Model:
             window = self._seg_window(is_global)
             seg_cache = cache[f"seg{si}"]
             slot_pos = batched_slots(cache.get(f"slot{si}"), b)
+            block = cache.get(f"block{si}")
             slot_new = slot_pos
             if slot_pos is not None:
                 clen = slot_pos.shape[-1]
@@ -405,16 +516,18 @@ class Model:
                 slot_new = slot_pos.at[
                     jnp.arange(b)[:, None], slots].set(positions)
             new_cache[f"slot{si}"] = slot_new
+            if f"block{si}" in cache:
+                new_cache[f"block{si}"] = block
             if self.is_vlm:
                 x, new_seg = self._verify_vlm_stack(params, x, seg_cache,
                                                     slot_new, pos, cache)
             else:
                 seg_p = self._seg_params(params, i0, i1)
 
-                def body(h, xs, _w=window, _slot=slot_new):
+                def body(h, xs, _w=window, _slot=slot_new, _blk=block):
                     p_layer, c_layer = xs
                     h, c2 = blk.block_verify(p_layer, h, c_layer, _slot, pos,
-                                             cfg, window=_w)
+                                             cfg, window=_w, block_table=_blk)
                     return h, c2
 
                 if i1 - i0 == 1:

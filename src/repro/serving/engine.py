@@ -26,6 +26,8 @@ from typing import Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache import (CacheCapacityError, CacheManager, CacheOOM,
+                         PagedSpec)
 from repro.core.dsi_jax import DSIEngine, EngineStats
 from repro.core.si_jax import SIEngine, nonsi_generate
 from repro.models.model import Model
@@ -39,6 +41,10 @@ class Request:
     extra_inputs: Optional[Dict[str, jnp.ndarray]] = None
     output: Optional[List[int]] = None
     stats: Optional[EngineStats] = None
+    #: admission rejection (e.g. a request that can never fit the page
+    #: pool): the request completes with ``output=None`` instead of
+    #: aborting the whole run
+    error: Optional[str] = None
 
 
 @dataclass
@@ -52,7 +58,16 @@ class ServingEngine:
     rule: str = "exact"
     max_batch: int = 8
     history_cap: int = 256       # per-request EngineStats.history bound
+    # paged-KV serving (docs/cache.md): block-table caches + prefix reuse.
+    # ``max_len`` caps the per-stream cache geometry (None = size to the
+    # queue); with it set, oversized requests are rejected at submit()
+    # instead of silently wrapping the cache ring.
+    paged: Optional[PagedSpec] = None
+    prefix_sharing: bool = True
+    max_len: Optional[int] = None
     engine_invocations: int = 0  # jitted engine steps across run() calls
+    prefill_tokens: int = 0      # prompt tokens pushed through prefill
+    cache_manager: Optional[CacheManager] = None  # live during paged run()
     _queue: List[Request] = field(default_factory=list)
     _rid: itertools.count = field(default_factory=itertools.count)
     _engine: Optional[object] = None  # cached jitted engine across run()s
@@ -60,6 +75,19 @@ class ServingEngine:
     def submit(self, prompt: List[int], max_new: int,
                extra_inputs: Optional[Dict[str, jnp.ndarray]] = None
                ) -> Request:
+        if self.max_len is not None:
+            # speculative modes overshoot by up to 2*lookahead+2 positions
+            # (verify window + drafter prefetch); plain decode does not
+            slack = 0 if self.mode == "nonsi" else 2 * self.lookahead + 2
+            models = [self.target] + ([self.drafter]
+                                      if self.drafter is not None else [])
+            if any(m.has_unbounded_cache for m in models):
+                need = len(prompt) + max_new + slack
+                if need > self.max_len:
+                    raise CacheCapacityError(
+                        f"request needs {need} cache positions "
+                        f"(prompt {len(prompt)} + max_new {max_new} + "
+                        f"engine headroom {slack}), max_len={self.max_len}")
         req = Request(next(self._rid), list(prompt), max_new, extra_inputs)
         self._queue.append(req)
         return req
@@ -96,7 +124,13 @@ class ServingEngine:
         A fixed table of ``max_batch`` streams advances in one jitted step
         per iteration; finished streams retire and waiting requests are
         admitted into their slots mid-flight (per-slot prefill), so the
-        target/drafter never idle while work is queued."""
+        target/drafter never idle while work is queued.
+
+        Paged mode adds a `CacheManager` between queue and slots:
+        admission reserves refcounted pages (reusing shared prompt-prefix
+        pages for target *and* drafter) and can *defer* — a request stays
+        queued under memory pressure until a retiring stream releases
+        pages, instead of corrupting live streams."""
         assert self.drafter is not None and self.params_d is not None
         if not self._queue:
             return []
@@ -104,9 +138,17 @@ class ServingEngine:
         w = self.lookahead
         n_slots = min(self.max_batch, len(self._queue))
         cap = max(r.max_new for r in self._queue) + w + 1
-        max_len = (max(len(r.prompt) for r in self._queue)
-                   + max(r.max_new for r in self._queue) + 2 * w + 2)
+        max_len = self.max_len or (max(len(r.prompt) for r in self._queue)
+                                   + max(r.max_new for r in self._queue)
+                                   + 2 * w + 2)
         state = eng.init_slots(n_slots, cap, max_len)
+        mgr = None
+        if self.paged is not None:
+            mgr = CacheManager(self.target, self.drafter, self.paged,
+                               n_slots=n_slots, max_len=max_len,
+                               lookahead=w,
+                               prefix_sharing=self.prefix_sharing)
+            self.cache_manager = mgr
 
         slots: List[Optional[Request]] = [None] * n_slots
         slot_stats: List[Optional[EngineStats]] = [None] * n_slots
@@ -116,12 +158,43 @@ class ServingEngine:
             # mid-flight; the other streams keep their pipeline state)
             for b in range(n_slots):
                 if slots[b] is None and self._queue:
-                    req = self._queue.pop(0)
+                    req = self._queue[0]
                     prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-                    state = eng.admit(self.params_t, self.params_d, state, b,
-                                      prompt, extra_inputs=req.extra_inputs)
+                    try:
+                        state = eng.admit(self.params_t, self.params_d,
+                                          state, b, prompt,
+                                          extra_inputs=req.extra_inputs,
+                                          manager=mgr, max_new=req.max_new)
+                    except CacheCapacityError as e:
+                        # can never fit the pool: reject this request
+                        # alone and keep serving the rest of the queue
+                        self._queue.pop(0)
+                        req.error = str(e)
+                        done.append(req)
+                        continue
+                    except CacheOOM:
+                        # transient pressure: leave the request queued (in
+                        # FIFO order — no overtaking) until a retiring
+                        # stream releases pages. With zero live streams
+                        # nothing ever will: defensive raise (never-fits
+                        # requests are rejected above before this).
+                        mgr.deferrals += 1
+                        if not any(r is not None for r in slots):
+                            raise
+                        break
+                    self._queue.pop(0)
                     slots[b] = req
-                    slot_stats[b] = EngineStats(max_history=self.history_cap)
+                    slot_stats[b] = st = EngineStats(
+                        max_history=self.history_cap)
+                    st.prompt_tokens = len(req.prompt)
+                    if mgr is not None:
+                        t = mgr.last_ticket
+                        st.prefix_hit_tokens = t.n_cached["t"]
+                        st.pages_allocated = t.pages_allocated
+                        st.pages_shared = t.pages_shared
+                        self.prefill_tokens += t.prefill_tokens()
+                    else:
+                        self.prefill_tokens += 2 * len(req.prompt)
 
             state = eng.step(self.params_t, self.params_d, state)
             self.engine_invocations += 1
@@ -140,6 +213,8 @@ class ServingEngine:
                     req.output = out[b, :req.max_new].tolist()
                     req.stats = slot_stats[b]
                     state = eng.retire(state, b)
+                    if mgr is not None:
+                        mgr.release(b)
                     slots[b], slot_stats[b] = None, None
                     done.append(req)
         return done
@@ -150,7 +225,8 @@ class ServingEngine:
         never recompile the macro-step."""
         if self._engine is None or type(self._engine) is not cls:
             self._engine = cls(self.target, self.drafter,
-                               lookahead=self.lookahead, rule=self.rule)
+                               lookahead=self.lookahead, rule=self.rule,
+                               paged=self.paged)
         return self._engine
 
     def _run_spec(self, req: Request):

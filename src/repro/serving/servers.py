@@ -38,6 +38,8 @@ def serve_queue(engine, requests: Sequence[Tuple[Sequence[int], int]]
     done = engine.run()
     run_invocations = engine.engine_invocations - before
     rows: List[Dict[str, object]] = []
+    cache_stats = (engine.cache_manager.stats()
+                   if getattr(engine, "cache_manager", None) else None)
     for r in done:
         st = r.stats
         rows.append({
@@ -48,6 +50,11 @@ def serve_queue(engine, requests: Sequence[Tuple[Sequence[int], int]]
             "bubbles": st.bubbles if st else None,
             "rejections": st.rejections if st else None,
             "engine_invocations": run_invocations,
+            # paged-KV cache-memory telemetry (zeros on the dense path)
+            "pages_allocated": st.pages_allocated if st else None,
+            "pages_shared": st.pages_shared if st else None,
+            "prefix_hit_rate": st.prefix_hit_rate if st else None,
+            "cache": cache_stats,
         })
     return rows
 

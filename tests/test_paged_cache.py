@@ -1,0 +1,406 @@
+"""Paged KV-cache subsystem: allocator/prefix-index units, paged-vs-dense
+losslessness (exact + leviathan, ring wrap, kernels forced), the
+block-table kernel variant, prefix-sharing admission (incl. copy-on-write
+and mid-flight admission onto a shared prefix), memory-pressure
+deferral/eviction, and the engine-level capacity guards."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.cache import (CacheCapacityError, CacheOOM, PagedSpec,
+                         PageAllocator, RadixPrefixIndex, gather_pages)
+from repro.core.dsi_jax import DSIEngine
+from repro.core.si_jax import SIEngine, nonsi_generate
+from repro.kernels.dispatch import pallas_override
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+
+PS = PagedSpec(page_size=8)
+
+
+@pytest.fixture(scope="module")
+def models():
+    cfg_t = tiny("yi-9b")
+    cfg_d = tiny("yi-9b", d_model=128)
+    mt, md = Model(cfg_t), Model(cfg_d)
+    pt = mt.init(jax.random.PRNGKey(0))
+    pd = md.init(jax.random.PRNGKey(1))
+    return cfg_t, mt, md, pt, pd
+
+
+# ------------------------------------------------------------- allocator
+def test_page_allocator_refcount_and_oom():
+    a = PageAllocator(6)                       # page 0 reserved (trash)
+    p1 = a.alloc(2)
+    p2 = a.alloc(3)
+    assert a.free_pages == 0 and a.pages_in_use == 5
+    with pytest.raises(CacheOOM):
+        a.alloc(1)
+    a.incref(p1)                               # second holder (e.g. index)
+    assert a.decref(p1) == []                  # still referenced
+    assert sorted(a.decref(p1)) == sorted(p1)  # now freed
+    assert a.free_pages == 2
+    a.decref(p2)
+    assert a.pages_in_use == 0
+    assert 0 not in p1 + p2                    # trash page never handed out
+
+
+def test_radix_prefix_match_insert_evict():
+    idx = RadixPrefixIndex(4)
+    toks = list(range(10))                     # 2 full chunks + tail [8, 9]
+    refs = idx.insert(toks, {"t0": [11, 12]}, {"t0": 13})
+    assert ("t0", 11) in refs and ("t0", 13) in refs
+    n, full, partial = idx.match(toks, ["t0"])
+    assert n == 8 and full["t0"] == [11, 12]
+    assert partial == (2, {"t0": 13})          # both tail tokens match
+    # divergence mid-tail: only the shared part of the partial matches
+    n, full, partial = idx.match(toks[:9] + [99, 100], ["t0"])
+    assert n == 8 and partial == (1, {"t0": 13})
+    # divergence mid-chunk: only whole chunks match
+    n, full, partial = idx.match([0, 1, 2, 3, 9, 9, 9, 9, 9], ["t0"])
+    assert n == 4 and full["t0"] == [11] and partial is None
+    # missing namespace => no match
+    n, full, partial = idx.match(toks, ["d0"])
+    assert n == 0 and partial is None
+    # eviction releases the LRU leaf's pages (chunk + partial together)
+    released = idx.evict_lru()
+    assert sorted(released) == [("t0", 12), ("t0", 13)]
+    released = idx.evict_lru()
+    assert released == [("t0", 11)]
+    assert idx.evict_lru() == []
+
+
+# ------------------------------------------------------ kernel parity
+@pytest.mark.parametrize("impl", ["kernel", "fallback"])
+@pytest.mark.parametrize("window", [None, 16])
+def test_paged_decode_kernel_parity(impl, window, rng):
+    """Block-table kernel/ref vs the oracle on the gathered dense view,
+    with non-contiguous per-stream page maps and a ring-wrapped stream."""
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.kernels.flash_attention.ring_decode import (
+        paged_decode_attention, paged_decode_ref, ring_slot_map)
+    b, w, h, kv, d, page, n_pages = 2, 4, 4, 2, 64, 16, 6
+    s = page * n_pages
+    pos = jnp.array([s + 5, 17], jnp.int32)    # wrapped + partially filled
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (b, w, h, d))
+    pool = 1 + b * n_pages
+    kp = jax.random.normal(ks[1], (pool, page, kv, d))
+    vp = jax.random.normal(ks[2], (pool, page, kv, d))
+    bt = 1 + jnp.arange(n_pages)[None] * b + jnp.arange(b)[:, None]
+    slot = ring_slot_map(pos + w, s)
+    ref = attention_ref(q, gather_pages(kp, bt), gather_pages(vp, bt),
+                        causal=True, window=window, q_offset=pos,
+                        kv_positions=slot)
+    if impl == "kernel":
+        out = paged_decode_attention(q, kp, vp, bt, slot, pos, window=window,
+                                     interpret=True)
+    else:
+        out = paged_decode_ref(q, kp, vp, bt, slot, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------- paged-vs-dense parity
+def test_paged_dsi_generate_lossless(models, rng):
+    """DSI generation over block-table caches is token-identical to the
+    dense ring-cache path (and the greedy reference), B>1 heterogeneous
+    streams, non-page-aligned prompt."""
+    cfg, mt, md, pt, pd = models
+    prompt = jax.random.randint(rng, (3, 11), 0, cfg.vocab_size)
+    n_new = [13, 7, 10]
+    ref = nonsi_generate(mt, pt, prompt, max(n_new))
+    out, stats = DSIEngine(mt, md, lookahead=4, paged=PS).generate(
+        pt, pd, prompt, n_new)
+    for i in range(3):
+        assert np.array_equal(np.asarray(out)[i, :n_new[i]],
+                              np.asarray(ref)[i, :n_new[i]]), i
+    assert stats.per_stream[0].emitted >= n_new[0]
+
+
+def test_paged_si_generate_lossless(models, rng):
+    cfg, mt, md, pt, pd = models
+    prompt = jax.random.randint(rng, (2, 9), 0, cfg.vocab_size)
+    ref = nonsi_generate(mt, pt, prompt, 12)
+    out, _ = SIEngine(mt, md, lookahead=4, paged=PS).generate(
+        pt, pd, prompt, 12)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_paged_dsi_windowed_ring_wrap(rng):
+    """Sliding-window model generating far past the window: the paged
+    logical ring wraps (page-size-rounded clen) and must stay token-
+    identical to the dense ring path."""
+    cfg = dataclasses.replace(tiny("yi-9b", layers=2, d_model=128),
+                              window=16)
+    m = Model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(rng, (1, 8), 0, cfg.vocab_size)
+    n_new = 40                                 # several ring wraps
+    ref, _ = DSIEngine(m, m, lookahead=4).generate(p, p, prompt, n_new)
+    out, _ = DSIEngine(m, m, lookahead=4,
+                       paged=PagedSpec(page_size=8)).generate(
+        p, p, prompt, n_new)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_paged_dsi_leviathan_token_identical(models):
+    """Same key, leviathan rule: the paged path must reproduce the dense
+    path's sampled stream exactly (global caches gather to the identical
+    logical view, so verification sees bit-identical probabilities)."""
+    cfg, mt, md, pt, pd = models
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0,
+                                cfg.vocab_size)
+    key = jax.random.PRNGKey(5)
+    ref, _ = DSIEngine(mt, md, lookahead=4, rule="leviathan").generate(
+        pt, pd, prompt, 14, key=key)
+    out, _ = DSIEngine(mt, md, lookahead=4, rule="leviathan",
+                       paged=PS).generate(pt, pd, prompt, 14, key=key)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_paged_dsi_kernels_forced(models, rng):
+    """End-to-end with the paged Pallas kernel (interpret build) forced on
+    through the dispatcher."""
+    cfg, mt, md, pt, pd = models
+    prompt = jax.random.randint(rng, (2, 9), 0, cfg.vocab_size)
+    with pallas_override(force_pallas=True, interpret=True):
+        ref = nonsi_generate(mt, pt, prompt, 10)
+        out, _ = DSIEngine(mt, md, lookahead=4, paged=PS).generate(
+            pt, pd, prompt, 10)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+# --------------------------------------------------- serving + prefix reuse
+def _shared_prefix_queue(cfg, n=5, prefix_len=11, seed=0):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, size=prefix_len).tolist()
+    return [(prefix + rng.integers(0, cfg.vocab_size,
+                                   size=int(rng.integers(2, 6))).tolist(),
+             int(rng.integers(5, 12))) for _ in range(n)]
+
+
+def _serve(mt, md, pt, pd, reqs, **kw):
+    eng = ServingEngine(target=mt, params_t=pt, drafter=md, params_d=pd,
+                        mode="dsi", lookahead=4, **kw)
+    for p, m in reqs:
+        eng.submit(p, m)
+    return eng, eng.run()
+
+
+def test_serving_paged_prefix_sharing_lossless_and_cheaper(models):
+    """Shared-prefix queue through the paged scheduler: every output is
+    lossless (mid-flight admissions land on shared prefix pages), later
+    requests hit the prefix index, and admission prefill work drops vs
+    the dense path."""
+    cfg, mt, md, pt, pd = models
+    reqs = _shared_prefix_queue(cfg)
+    eng_d, done_d = _serve(mt, md, pt, pd, reqs, max_batch=2)
+    eng_p, done_p = _serve(mt, md, pt, pd, reqs, max_batch=2,
+                           paged=PagedSpec(page_size=4))
+    by_rid = {r.rid: r for r in done_d}
+    hits = 0
+    for r in done_p:
+        ref = nonsi_generate(mt, pt, jnp.asarray(r.prompt, jnp.int32)[None],
+                             r.max_new)
+        assert r.output == np.asarray(ref)[0].tolist(), r.rid
+        assert r.output == by_rid[r.rid].output, r.rid
+        hits += r.stats.prefix_hit_tokens
+        assert r.stats.pages_allocated > 0
+    assert hits > 0                            # prefix pages were reused
+    assert eng_p.prefill_tokens < eng_d.prefill_tokens
+    st = eng_p.cache_manager.stats()
+    assert st["pages_shared"] > 0
+    assert 0 < st["prefix_hit_rate"] < 1
+    assert st["pages_in_use"] >= 0
+
+
+def test_serving_paged_copy_on_write(models):
+    """Prompts diverging mid-page: the second admission shares the partial
+    prefix page via copy-on-write (first divergent token lands in the
+    copy, the original stays intact for its owner) and stays lossless."""
+    cfg, mt, md, pt, pd = models
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab_size, size=10).tolist()  # 8 + 2 tail
+    reqs = [(shared + rng.integers(0, cfg.vocab_size, size=4).tolist(), 6)
+            for _ in range(3)]
+    eng, done = _serve(mt, md, pt, pd, reqs, max_batch=1,
+                       paged=PagedSpec(page_size=8, num_pages=12))
+    for r in done:
+        ref = nonsi_generate(mt, pt, jnp.asarray(r.prompt, jnp.int32)[None],
+                             r.max_new)
+        assert r.output == np.asarray(ref)[0].tolist(), r.rid
+    st = eng.cache_manager.stats()
+    assert st["cow_copies"] > 0
+    # the COW admissions reused the full page AND the partial-page tokens
+    hit = [r.stats.prefix_hit_tokens for r in sorted(done, key=lambda r: r.rid)]
+    assert hit[0] == 0 and all(h == 10 for h in hit[1:])
+
+
+def test_serving_paged_memory_pressure_defers_admission(models):
+    """A pool too small for all slots at once: admission must defer (keep
+    requests queued, never corrupt live streams) until retiring streams
+    release pages, and the whole queue still completes losslessly."""
+    cfg, mt, md, pt, pd = models
+    reqs = _shared_prefix_queue(cfg, n=6, seed=3)
+    # per-stream need ~ceil((16+11+10)/4)=10 pages; 14 pages can hold one
+    # stream (+index refs) but not two => slot 1 admissions defer
+    eng, done = _serve(mt, md, pt, pd, reqs, max_batch=2,
+                       paged=PagedSpec(page_size=4, num_pages=14),
+                       prefix_sharing=False)
+    assert len(done) == len(reqs)
+    for r in done:
+        ref = nonsi_generate(mt, pt, jnp.asarray(r.prompt, jnp.int32)[None],
+                             r.max_new)
+        assert r.output == np.asarray(ref)[0].tolist(), r.rid
+    assert eng.cache_manager.deferrals > 0
+
+
+def test_serving_paged_eviction_under_pressure(models):
+    """Prefix-index pages are evicted (LRU) to make room for admissions
+    instead of deferring forever; outputs stay lossless."""
+    cfg, mt, md, pt, pd = models
+    reqs = _shared_prefix_queue(cfg, n=5, seed=4)
+    eng, done = _serve(mt, md, pt, pd, reqs, max_batch=1,
+                       paged=PagedSpec(page_size=4, num_pages=16))
+    assert len(done) == len(reqs)
+    for r in done:
+        ref = nonsi_generate(mt, pt, jnp.asarray(r.prompt, jnp.int32)[None],
+                             r.max_new)
+        assert r.output == np.asarray(ref)[0].tolist(), r.rid
+    assert eng.cache_manager.evictions > 0
+
+
+def test_serving_paged_impossible_request_rejected_not_fatal(models):
+    """A request that can never fit the pool is rejected per-request
+    (``Request.error``) — it must neither hang the scheduler nor abort
+    the rest of the queue."""
+    cfg, mt, md, pt, pd = models
+    reqs = _shared_prefix_queue(cfg, n=2, seed=5)
+    eng, done = _serve(mt, md, pt, pd, reqs, max_batch=2,
+                       paged=PagedSpec(page_size=4, num_pages=4))
+    assert len(done) == len(reqs)
+    assert all(r.output is None and "pages" in r.error for r in done)
+
+
+def test_retired_slot_garbage_writes_cannot_corrupt_recycled_pages(models):
+    """Engine-level recycling hazard: slot A retires and its pages are
+    reallocated to a NEW stream admitted into a different slot while A
+    sits inactive (still executing lockstep garbage writes). retire()
+    must re-point A's block tables at the trash page so stream C's pages
+    stay intact."""
+    cfg, mt, md, pt, pd = models
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab_size, size=s).tolist()
+               for s in (6, 9, 7)]
+    n_new = 8
+    # pool sized so C's admission must reuse A's freed pages
+    spec = PagedSpec(page_size=4, num_pages=2 * 8 + 1)
+    eng = DSIEngine(mt, md, lookahead=4, paged=spec)
+    from repro.cache import CacheManager
+    state = eng.init_slots(3, cap=n_new + 5, max_len=30)
+    mgr = CacheManager(mt, md, spec, n_slots=3, max_len=30, lookahead=4)
+    state = eng.admit(pt, pd, state, 0, jnp.asarray(prompts[0])[None],
+                      manager=mgr, max_new=n_new)
+    state = eng.admit(pt, pd, state, 1, jnp.asarray(prompts[1])[None],
+                      manager=mgr, max_new=n_new)
+    outs = {}
+    admitted_c = False
+    for _ in range(80):
+        state = eng.step(pt, pd, state)
+        n_out = np.asarray(state["n_out"])
+        act = np.asarray(state["active"])
+        for b in range(3):
+            if act[b] and n_out[b] >= n_new:
+                outs[b] = np.asarray(state["out"])[b, :n_new].tolist()
+                state = eng.retire(state, b)
+                mgr.release(b)
+                if not admitted_c:
+                    # slot b is now inactive-but-stepping; admit C into
+                    # slot 2 so it recycles b's freed pages
+                    state = eng.admit(pt, pd, state, 2,
+                                      jnp.asarray(prompts[2])[None],
+                                      manager=mgr, max_new=n_new)
+                    admitted_c = True
+        if len(outs) == 3:
+            break
+    assert admitted_c and len(outs) == 3
+    refs = {i: np.asarray(nonsi_generate(
+        mt, pt, jnp.asarray(p)[None], n_new))[0].tolist()
+        for i, p in enumerate(prompts)}
+    assert outs[0] == refs[0]
+    assert outs[1] == refs[1]
+    assert outs[2] == refs[2]
+
+
+def test_serving_paged_windowed_model_long_prompt_lossless(rng):
+    """Regression: paged admission chunk-prefills a sliding-window model
+    whose ring is shorter than the prompt suffix. A single verify_chunk
+    over the whole suffix would collide slot writes inside the ring
+    (positions % clen wraps mid-chunk) and corrupt the KV; prefill_paged
+    must bound chunks by the ring headroom."""
+    cfg = dataclasses.replace(tiny("yi-9b", layers=2, d_model=128),
+                              window=16)
+    m = Model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    nprng = np.random.default_rng(1)
+    prompt = nprng.integers(0, cfg.vocab_size, size=40).tolist()
+    eng, done = _serve(m, m, p, p, [(prompt, 8)], max_batch=1,
+                       paged=PagedSpec(page_size=8))
+    ref = nonsi_generate(m, p, jnp.asarray(prompt, jnp.int32)[None], 8)
+    assert done[0].output == np.asarray(ref)[0].tolist()
+
+
+# --------------------------------------------------------- capacity guards
+def test_generate_capacity_guard(models, rng):
+    cfg, mt, md, pt, pd = models
+    prompt = jax.random.randint(rng, (1, 10), 0, cfg.vocab_size)
+    with pytest.raises(CacheCapacityError):
+        DSIEngine(mt, md, lookahead=4).generate(pt, pd, prompt, 30,
+                                                max_len=20)
+    with pytest.raises(CacheCapacityError):
+        SIEngine(mt, md, lookahead=4).generate(pt, pd, prompt, 30,
+                                               max_len=20)
+    with pytest.raises(CacheCapacityError):
+        nonsi_generate(mt, pt, prompt, 30, max_len=20)
+    # sliding-window models wrap by design: no guard
+    cfgw = dataclasses.replace(tiny("yi-9b", layers=2, d_model=128),
+                               window=16)
+    mw = Model(cfgw)
+    pw = mw.init(jax.random.PRNGKey(0))
+    prw = jax.random.randint(rng, (1, 8), 0, cfgw.vocab_size)
+    nonsi_generate(mw, pw, prw, 40, max_len=32)   # wraps, allowed
+
+
+def test_generate_capacity_guard_covers_drafter(models, rng):
+    """A full-attention drafter behind a sliding-window target must still
+    be guarded: its ring would wrap silently otherwise."""
+    cfg, mt, md, pt, pd = models
+    cfgw = dataclasses.replace(tiny("yi-9b", layers=2, d_model=128),
+                               window=16)
+    mw = Model(cfgw)                              # windowed target
+    pw = mw.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(rng, (1, 10), 0, cfgw.vocab_size)
+    assert not mw.has_unbounded_cache and md.has_unbounded_cache
+    with pytest.raises(CacheCapacityError):
+        DSIEngine(mw, md, lookahead=4).generate(pw, pd, prompt, 30,
+                                                max_len=20)
+
+
+def test_serving_capacity_guard_at_submit(models):
+    cfg, mt, md, pt, pd = models
+    eng = ServingEngine(target=mt, params_t=pt, drafter=md, params_d=pd,
+                        mode="dsi", lookahead=4, max_batch=2, max_len=24)
+    eng.submit(list(range(8)), 5)                 # fits
+    with pytest.raises(CacheCapacityError):
+        eng.submit(list(range(10)), 20)           # would wrap the ring
+    # nonsi mode never uses speculative headroom: the same request fits
+    eng_n = ServingEngine(target=mt, params_t=pt, mode="nonsi",
+                          lookahead=4, max_batch=2, max_len=24)
+    eng_n.submit(list(range(10)), 14)             # 10+14+0 <= 24: allowed
+    with pytest.raises(CacheCapacityError):
+        eng_n.submit(list(range(10)), 20)
