@@ -1,0 +1,112 @@
+"""Speculation-parallelism benchmark: the resource-vs-latency tradeoff
+(paper §3) on real reduced models.
+
+Sweeps the SP degree R ∈ {1, 2, 4} on two drafter regimes — perfect
+(drafter == target: the latency ceiling, zero rejections) and noisy (the
+realistic acceptance regime) — and reports, per R:
+
+  * steps-to-N-tokens (orchestrator ticks: the latency unit — one tick =
+    one overlapped draft-block ∥ verify-block round), which must be
+    monotonically non-increasing in R,
+  * wall-clock (informational on CPU: the R replicas are real concurrent
+    window verifications only when a spec-axis mesh maps them to
+    devices),
+  * acceptance/preemption accounting (the wasted-verify resource cost
+    that buys the step reduction),
+  * losslessness cross-check (every R emits the non-SI greedy stream).
+
+Writes ``BENCH_orchestrator.json`` for the CI trajectory artifact.
+
+    PYTHONPATH=src python -m benchmarks.bench_orchestrator
+    PYTHONPATH=src python -m benchmarks.run --smoke            # CI canary
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core.si_jax import nonsi_generate
+from repro.models.model import Model
+from repro.orchestrator import SPOrchestrator
+
+SP_DEGREES = (1, 2, 4)
+
+
+def _run_sweep(target, drafter, params_t, params_d, prompt, n_new, la,
+               ref) -> list:
+    rows = []
+    for r in SP_DEGREES:
+        orch = SPOrchestrator(target, drafter, lookahead=la, sp=r,
+                              rule="exact")
+        out, stats = orch.generate(params_t, params_d, prompt, n_new)
+        t0 = time.monotonic()
+        out, stats = orch.generate(params_t, params_d, prompt, n_new)
+        wall = time.monotonic() - t0                 # post-compile pass
+        lossless = bool(np.array_equal(np.asarray(out), np.asarray(ref)))
+        preempted = sum(x.windows_preempted for x in stats.replicas)
+        verified = sum(x.windows_verified for x in stats.replicas)
+        rows.append({
+            "sp": r,
+            "steps": stats.macro_steps,
+            "wall_s": round(wall, 4),
+            "tokens": int(n_new),
+            "tokens_per_step": round(n_new / stats.macro_steps, 3),
+            "rejections": stats.rejections,
+            "windows_verified": verified,
+            "windows_preempted": preempted,
+            "lossless": lossless,
+        })
+    return rows
+
+
+def main(smoke: bool = False, json_path: Optional[str] = None) -> None:
+    from benchmarks.engine_stats import noisy_params
+    layers, d_model = (2, 192) if smoke else (4, 256)
+    cfg = dataclasses.replace(reduced(get_config("yi-9b"), layers=layers,
+                                      d_model=d_model), dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    la = 4
+    n_new = 24 if smoke else 48
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0,
+                                cfg.vocab_size)
+    ref = nonsi_generate(model, params, prompt, n_new)
+
+    regimes = {}
+    print("name,regime,sp,steps,tokens_per_step,rejections,"
+          "windows_preempted,wall_s,lossless")
+    for regime, pd in (("perfect", params),
+                       ("noisy", noisy_params(params, 0.05,
+                                              jax.random.PRNGKey(7)))):
+        rows = _run_sweep(model, model, params, pd, prompt, n_new, la, ref)
+        regimes[regime] = rows
+        for row in rows:
+            print(f"orchestrator,{regime},{row['sp']},{row['steps']},"
+                  f"{row['tokens_per_step']},{row['rejections']},"
+                  f"{row['windows_preempted']},{row['wall_s']},"
+                  f"{row['lossless']}")
+        steps = [row["steps"] for row in rows]
+        assert all(row["lossless"] for row in rows), \
+            "every SP degree must emit the greedy reference stream"
+        assert all(a >= b for a, b in zip(steps, steps[1:])), \
+            f"steps-to-N must be non-increasing in SP degree, got {steps}"
+
+    if json_path:
+        out = {
+            "workload": {"n_new": n_new, "lookahead": la, "layers": layers,
+                         "d_model": d_model, "sp_degrees": list(SP_DEGREES)},
+            **regimes,
+        }
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"[bench_orchestrator] wrote {json_path}")
+
+
+if __name__ == "__main__":
+    main(json_path="BENCH_orchestrator.json")

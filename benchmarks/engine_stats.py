@@ -94,8 +94,12 @@ def _serving(model, params, pd, cfg, *, n_requests: int, max_batch: int,
         "continuous batching must be lossless vs sequential serving"
     assert all(r.output == by_rid[r.rid].output for r in done_pg), \
         "paged serving must be lossless vs sequential serving"
-    acc = np.mean([r.stats.acceptance_rate for r in done_cb])
-    bub = sum(r.stats.bubbles for r in done_cb)
+    # robust to requests that retired before their first verify (or were
+    # rejected at admission, stats=None): mean over an empty list is 0.0,
+    # never a nan/ZeroDivisionError
+    rates = [r.stats.acceptance_rate for r in done_cb if r.stats is not None]
+    acc = float(np.mean(rates)) if rates else 0.0
+    bub = sum(r.stats.bubbles for r in done_cb if r.stats is not None)
     print("name,requests,slots,invocations_sequential,"
           "invocations_batched,mean_acceptance,total_bubbles")
     print(f"serving,{n_requests},{max_batch},{eng_seq.engine_invocations},"
@@ -108,6 +112,28 @@ def _serving(model, params, pd, cfg, *, n_requests: int, max_batch: int,
           f"{eng_pg.prefill_tokens},{st['prefix_hit_rate']:.2f},"
           f"{st['pages_peak']},{st['pages_shared']},{st['cow_copies']},"
           f"{st['evictions']}")
+
+    # speculation-parallel serving: same queue through the SP orchestrator,
+    # with per-replica verifier accounting (docs/orchestrator.md)
+    def run_sp(sp):
+        eng = ServingEngine(target=model, params_t=params, drafter=model,
+                            params_d=pd, mode="dsi", lookahead=la,
+                            max_batch=max_batch, sp_degree=sp)
+        for p, m in reqs:
+            eng.submit(p, m)
+        return eng, eng.run()
+
+    eng_sp, done_sp = run_sp(2)
+    assert all(r.output == by_rid[r.rid].output for r in done_sp), \
+        "speculation-parallel serving must be lossless vs sequential"
+    print("name,sp,replica,windows_verified,windows_preempted,"
+          "tokens_accepted,rejections,utilization")
+    for rs in eng_sp.replica_stats:
+        d = rs.as_dict()
+        print(f"serving_sp,{eng_sp.sp_degree},{d['replica']},"
+              f"{d['windows_verified']},"
+              f"{d['windows_preempted']},{d['tokens_accepted']},"
+              f"{d['rejections']},{d['utilization']}")
 
 
 def main(smoke: bool = False) -> None:

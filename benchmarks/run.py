@@ -13,9 +13,9 @@ import sys
 def main() -> None:
     quick = "--quick" in sys.argv
     smoke = "--smoke" in sys.argv
-    from benchmarks import (bench_kernels, bench_serving, engine_stats,
-                            fig2_heatmaps, fig7_lookahead5, table1_timeline,
-                            table2_speedups)
+    from benchmarks import (bench_kernels, bench_orchestrator, bench_serving,
+                            engine_stats, fig2_heatmaps, fig7_lookahead5,
+                            table1_timeline, table2_speedups)
     if smoke:
         # minimal end-to-end canary: one timeline row + the serving-engine
         # economics on tiny real models (exercises batched DSI + scheduler)
@@ -26,6 +26,9 @@ def main() -> None:
         engine_stats.main(smoke=True)
         print("== Serving: dense vs paged KV (shared-prefix workload) ==")
         bench_serving.main(smoke=True, json_path="BENCH_serving.json")
+        print("== Speculation parallelism: steps-to-N vs SP degree ==")
+        bench_orchestrator.main(smoke=True,
+                                json_path="BENCH_orchestrator.json")
         print("== Kernel micro-benchmarks ==")
         bench_kernels.main(smoke=True, json_path="BENCH_kernels.json")
         return
@@ -42,6 +45,8 @@ def main() -> None:
         engine_stats.main()
     print("== Serving: dense vs paged KV (shared-prefix workload) ==")
     bench_serving.main(json_path="BENCH_serving.json")
+    print("== Speculation parallelism: steps-to-N vs SP degree ==")
+    bench_orchestrator.main(json_path="BENCH_orchestrator.json")
     print("== Kernel micro-benchmarks ==")
     bench_kernels.main(json_path="BENCH_kernels.json")
 

@@ -6,6 +6,7 @@ from repro.cache.allocator import (TRASH_PAGE, CacheCapacityError,  # noqa: F401
 from repro.cache.manager import AdmissionTicket, CacheManager  # noqa: F401
 from repro.cache.paged import (PagedSpec, dense_to_paged,  # noqa: F401
                                gather_pages, interleaved_block_tables,
-                               is_paged, paged_from_dense, reset_block_rows,
-                               round_up)
+                               is_paged, paged_from_dense,
+                               replica_scratch_slots, reset_block_rows,
+                               round_up, shared_prefix_pages)
 from repro.cache.prefix import RadixPrefixIndex  # noqa: F401

@@ -145,6 +145,42 @@ def paged_from_dense(model, dense_cache: dict, spec: PagedSpec,
     return dense_to_paged(dense_cache, paged)
 
 
+def replica_scratch_slots(pos: int, clen_p: int, page_size: int,
+                          lookahead: int, sp: int):
+    """Per-verifier-replica scratch-tail layout for the SP orchestrator
+    (orchestrator/engine.py): replica ``j`` verifies draft window ``j``,
+    writing logical slots ``[pos + j·W, pos + (j+1)·W) mod clen_p``.
+    Returns, per replica, ``(slots, logical_pages)`` — slot indices are
+    always pairwise disjoint across replicas (the block spans < clen_p),
+    and the logical page sets are pairwise disjoint whenever
+    ``page_size`` divides ``lookahead`` (page-aligned tails: the layout a
+    multi-controller deployment needs for fully independent per-replica
+    page writes; physical pages follow via the stream's block table).
+    Committed prefix pages (``shared_prefix_pages``) stay read-only under
+    the block write."""
+    assert sp * lookahead < clen_p, "speculative block must fit the ring"
+    import numpy as np
+    out = []
+    for j in range(sp):
+        sl = np.arange(pos + j * lookahead,
+                       pos + (j + 1) * lookahead, dtype=np.int64) % clen_p
+        out.append((sl, np.unique(sl // page_size)))
+    return out
+
+
+def shared_prefix_pages(slot_map, pos: int, page_size: int):
+    """Logical pages of one stream's cache row that hold *only* committed
+    positions (< ``pos``): the replica-shared read-only prefix. ``slot_map``
+    is the row's (clen_p,) absolute-position map (-1 = empty). Pages with
+    any empty or speculative slot are excluded — they are (or may become)
+    scratch."""
+    import numpy as np
+    sm = np.asarray(slot_map).reshape(-1)
+    pages = sm.reshape(-1, page_size)
+    live = pages >= 0
+    return np.nonzero(live.all(axis=1) & (pages < pos).all(axis=1))[0]
+
+
 def reset_block_rows(cache: dict, slot) -> dict:
     """Point one stream's block tables at the trash page and clear its
     slot maps — the retire step that keeps the freed pages safe from the

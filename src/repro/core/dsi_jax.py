@@ -143,6 +143,87 @@ def draft_scan(model: Model, params, cache, t_in, n: int, key, greedy: bool):
     return jnp.moveaxis(toks, 0, 1), jnp.moveaxis(probs, 0, 1), cache, state_hist
 
 
+def draft_scan_keys(model: Model, params, cache, t_in, keys: jnp.ndarray,
+                    greedy: bool):
+    """Like :func:`draft_scan` but with fully-resolved *per-stream* step
+    keys (B, n, 2) instead of one key split n ways — the speculation-
+    parallel orchestrator's drafting path, where streams sit at different
+    virtual-step counters and therefore sample from different points of
+    the shared key chain (orchestrator/engine.py). For B == 1 with
+    ``keys[0, j] == split(kd, n)[j]`` the sampled bits equal
+    ``draft_scan``'s exactly (same key, same flat draw shape)."""
+    init_states = _extract_states(cache)
+
+    def body(carry, k_b):
+        c, tok = carry
+        logits, c = model.decode_step(params, c, tok[:, None])
+        probs = _softmax(logits)
+        if greedy:
+            nxt = jnp.argmax(probs, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.vmap(lambda kk, p: jax.random.categorical(
+                kk, jnp.log(p + 1e-30)))(k_b, probs).astype(jnp.int32)
+        return (c, nxt), (nxt, probs, _extract_states(c))
+
+    (cache, _), (toks, probs, hist) = jax.lax.scan(
+        body, (cache, t_in), jnp.moveaxis(keys, 0, 1))
+    state_hist = jax.tree.map(
+        lambda a, b: jnp.concatenate([a[None], b], axis=0), init_states, hist)
+    return jnp.moveaxis(toks, 0, 1), jnp.moveaxis(probs, 0, 1), cache, state_hist
+
+
+# --------------------------------------------------------------------------
+# Macro-step stages. The lockstep DSIEngine and the speculation-parallel
+# orchestrator (orchestrator/engine.py) are built from the same three
+# pieces — verify forward, emission scatter, drafter rollback — applied to
+# a W window here and an R·W window *block* there, so losslessness proofs
+# carry over verbatim.
+# --------------------------------------------------------------------------
+
+def verify_stage(target: Model, params_t, t_cache, window: jnp.ndarray):
+    """Target forward over a (B, Wn) token window against the cache.
+    Returns (rows (B, Wn, V) softmaxed, post-verify cache for commit)."""
+    logits, t_post = target.verify_chunk(params_t, t_cache, window)
+    return _softmax(logits), t_post
+
+
+def emit_block(buf, n_out, window, forced, n_acc, have, rejected, nxt):
+    """Scatter accepted non-forced window tokens (+ correction where
+    rejected) into the output ring — one batched scatter; invalid lanes
+    point one past the buffer edge and are dropped. Returns (buf, n_out)."""
+    bsz, cap = buf.shape
+    wn = window.shape[1]
+    offs = jnp.arange(wn, dtype=jnp.int32)[None]                 # (1,Wn)
+    put = (have[:, None] & (offs >= forced[:, None])
+           & (offs < n_acc[:, None]))                            # (B,Wn)
+    idx = jnp.where(put, n_out[:, None] + offs - forced[:, None], cap)
+    stream = jnp.arange(bsz)[:, None]
+    buf = buf.at[stream, idx].set(window, mode="drop")
+    n_emit = jnp.where(have, n_acc - forced, 0)
+    n_out = n_out + n_emit
+    corr_idx = jnp.where(rejected, n_out, cap)
+    buf = buf.at[jnp.arange(bsz), corr_idx].set(nxt, mode="drop")
+    n_out = n_out + rejected.astype(jnp.int32)
+    return buf, n_out
+
+
+def rollback_drafter(d_cache, d_hist_prev, n_acc, rejected, frontier_pos,
+                     pos0, wn):
+    """Per-stream drafter bookkeeping after a verification decision: on
+    rejection, roll the recurrent state to offset ``n_acc`` of the
+    *previous* drafted range (whose history is ``d_hist_prev``) and snap
+    ``pos`` to the committed frontier; otherwise keep the live scan state
+    at ``pos0 + wn``. Attention caches are overwrite-safe and untouched."""
+    cur_states = _extract_states(d_cache)
+    rolled = {path: _gather_hist(h, n_acc)
+              for path, h in d_hist_prev.items()}
+    merged = {path: _where_b(rejected, rolled[path], cur_states[path])
+              for path in cur_states}
+    d_cache = _restore_states(d_cache, merged)
+    d_cache["pos"] = jnp.where(rejected, frontier_pos, pos0 + wn)
+    return d_cache
+
+
 @dataclass
 class EngineStats:
     """Per-stream (or aggregate) speculation accounting.
@@ -161,6 +242,9 @@ class EngineStats:
     max_history: Optional[int] = DEFAULT_HISTORY_CAP
     history: list = field(default_factory=list)
     per_stream: Optional[List["EngineStats"]] = None
+    #: speculation-parallel runs attach one ``ReplicaStats`` per verifier
+    #: replica (orchestrator/engine.py); None on single-instance engines
+    replicas: Optional[list] = None
     # paged-KV cache accounting (filled by the serving admission path;
     # zeros on the dense path — docs/cache.md)
     prompt_tokens: int = 0
@@ -230,9 +314,8 @@ class DSIEngine:
             k_draft, greedy)
 
         # (b) target: verify the current window (discarded where bubble)
-        logits, t_post = self.target.verify_chunk(params_t, state["t_cache"],
-                                                  state["window"])
-        rows = _softmax(logits)                                   # (B,W,V)
+        rows, t_post = verify_stage(self.target, params_t, state["t_cache"],
+                                    state["window"])              # (B,W,V)
         target_probs = jnp.concatenate([state["carry"][:, None], rows], 1)
         n_acc, nxt = batched_verify(k_verify, state["window"],
                                     state["window_probs"], target_probs,
@@ -245,34 +328,16 @@ class DSIEngine:
         t_cache = self.target.commit(state["t_cache"], t_post, n_acc)
 
         # (c) emit accepted non-forced window tokens (+ correction if
-        # rejected) as one batched scatter — invalid lanes point one past
-        # the buffer edge and are dropped, so no masked full-buffer passes.
-        buf, n_out = state["out"], state["n_out"]
-        bsz, cap = buf.shape
-        offs = jnp.arange(w, dtype=jnp.int32)[None]                  # (1,W)
-        put = (have[:, None] & (offs >= state["forced"][:, None])
-               & (offs < n_acc[:, None]))                            # (B,W)
-        idx = jnp.where(put, n_out[:, None] + offs - state["forced"][:, None],
-                        cap)
-        stream = jnp.arange(bsz)[:, None]
-        buf = buf.at[stream, idx].set(state["window"], mode="drop")
-        n_emit = jnp.where(have, n_acc - state["forced"], 0)
-        n_out = n_out + n_emit
-        corr_idx = jnp.where(rejected, n_out, cap)
-        buf = buf.at[jnp.arange(bsz), corr_idx].set(nxt, mode="drop")
-        n_out = n_out + rejected.astype(jnp.int32)
+        # rejected) as one batched scatter
+        buf, n_out = emit_block(state["out"], state["n_out"], state["window"],
+                                state["forced"], n_acc, have, rejected, nxt)
 
         # (d) drafter bookkeeping, per stream
         # on rejection: roll recurrent state to offset n_acc of the *window*
         # range — the PREVIOUS scan's history covers positions tp-1..tp+W-1.
-        cur_states = _extract_states(d_cache)
-        rolled = {path: _gather_hist(h, n_acc)
-                  for path, h in state["d_hist_prev"].items()}
-        merged = {path: _where_b(rejected, rolled[path], cur_states[path])
-                  for path in cur_states}
-        d_cache = _restore_states(d_cache, merged)
-        d_cache["pos"] = jnp.where(rejected, t_cache["pos"],
-                                   state["d_cache_pos0"] + w)
+        d_cache = rollback_drafter(d_cache, state["d_hist_prev"], n_acc,
+                                   rejected, t_cache["pos"],
+                                   state["d_cache_pos0"], w)
 
         # (e) assemble next pipeline state
         onehot_nxt = jax.nn.one_hot(nxt, rows.shape[-1], dtype=jnp.float32)
@@ -539,7 +604,12 @@ def _check_capacity(model: Model, s: int, n_new: int, slack: int,
 
 def _aggregate(per: List[EngineStats], steps: int) -> EngineStats:
     """Fold per-stream stats into one EngineStats (B=1 keeps the seed's
-    single-stream semantics: aggregate == the stream's own stats)."""
+    single-stream semantics: aggregate == the stream's own stats).
+
+    Robust to degenerate runs: an empty ``per`` (no streams) or streams
+    that retired before their first verify (zero accepted drafts, zero
+    rejections) aggregate to well-defined zero counters — and
+    ``acceptance_rate`` on the result is 0.0, never a ZeroDivisionError."""
     agg = EngineStats(
         macro_steps=steps,
         bubbles=sum(p.bubbles for p in per),

@@ -61,7 +61,8 @@ def simulate_dsi_pool(target_latency: float, drafter_latency: float,
                       acceptance: float, lookahead: int, sp: int,
                       n_tokens: int, *, seed: int = 0,
                       ttft_target: Optional[float] = None,
-                      ttft_drafter: Optional[float] = None) -> SimResult:
+                      ttft_drafter: Optional[float] = None,
+                      accept: Optional[Sequence[bool]] = None) -> SimResult:
     """Returns end-to-end latency for N tokens under speculation parallelism.
 
     Task structure (Algorithm 1 + App. D, m = 2): within a run starting at
@@ -84,9 +85,20 @@ def simulate_dsi_pool(target_latency: float, drafter_latency: float,
     p = 0 degrades exactly to non-SI pace. The simulator assumes SP sized
     per Eq. 1 (+1 server for the fallback chain); pass a smaller ``sp``
     and block tasks queue on the shared pool.
+
+    ``accept`` (optional) replaces the Bernoulli(acceptance) draws with a
+    given per-draft accept trace, consumed in draft order (exhaustion =>
+    reject) — the hook the speculation-parallel orchestrator's property
+    suite uses to pin its event scheduler to this model on identical
+    randomness (tests/test_orchestrator_props.py).
     """
     assert sp >= 1 and lookahead >= 1
     rng = np.random.default_rng(seed)
+    if accept is not None:
+        it = iter([bool(a) for a in accept])
+        draw = lambda: next(it, False)          # noqa: E731
+    else:
+        draw = lambda: rng.random() < acceptance  # noqa: E731
     servers: List[float] = [0.0] * sp      # free-at times (min-heap)
     heapq.heapify(servers)
 
@@ -101,7 +113,7 @@ def simulate_dsi_pool(target_latency: float, drafter_latency: float,
         # --- one run: first wrong draft offset j ~ Geometric -------------
         needed = n_tokens - frontier
         j = 1
-        while j <= needed and rng.random() < acceptance:
+        while j <= needed and draw():
             j += 1
         rejected = j <= needed             # draft j is wrong
         last = j if rejected else needed   # final confirmed offset this run

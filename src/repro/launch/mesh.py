@@ -46,3 +46,24 @@ def make_host_mesh():
     """Whatever devices exist right now, as a 1-D data mesh (tests/examples)."""
     n = len(jax.devices())
     return _mk((n,), ("data",))
+
+
+def make_spec_mesh(sp: int, *, model: int = 1):
+    """Speculation-parallel mesh over the devices available right now:
+    ``sp`` spec slices (one verifier replica each) × ``model`` chips per
+    replica. The orchestrator's verify block shards one draft window per
+    slice (orchestrator/engine.py); tests fake the devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
+    Raises if the host exposes fewer than ``sp × model`` devices — a
+    silent fallback would hide exactly the misconfiguration (asking for
+    more replicas than hardware) the spec-axis tests exist to surface."""
+    n = len(jax.devices())
+    if sp * model > n:
+        raise ValueError(
+            f"spec mesh needs sp*model = {sp}*{model} devices, host has {n} "
+            f"(set XLA_FLAGS=--xla_force_host_platform_device_count={sp * model}"
+            f" for CPU tests)")
+    if model == 1:
+        return _mk((sp,), ("spec",))
+    return _mk((sp, model), ("spec", "model"))

@@ -31,6 +31,14 @@ def main(argv=None):
                          "sharing (docs/cache.md)")
     ap.add_argument("--num-pages", type=int, default=0,
                     help="bound the page pool (0 = size to the slot table)")
+    ap.add_argument("--sp-degree", type=int, default=1,
+                    help="speculation-parallel verifier replicas for "
+                         "--mode dsi (> 1 routes through the SP "
+                         "orchestrator; docs/orchestrator.md)")
+    ap.add_argument("--spec-mesh", action="store_true",
+                    help="shard verification blocks over a spec-axis mesh "
+                         "built from the visible devices (needs >= "
+                         "sp-degree devices)")
     args = ap.parse_args(argv)
 
     cfg_t = reduced(get_config(args.arch), layers=4, d_model=256)
@@ -44,9 +52,18 @@ def main(argv=None):
         from repro.cache import PagedSpec
         paged = PagedSpec(page_size=args.page_size,
                           num_pages=args.num_pages or None)
+    mesh = None
+    if args.spec_mesh:
+        if args.mode != "dsi" or args.sp_degree <= 1:
+            ap.error("--spec-mesh requires --mode dsi and --sp-degree > 1 "
+                     "(the mesh only backs the SP orchestrator's verify "
+                     "block)")
+        from repro.launch.mesh import make_spec_mesh
+        mesh = make_spec_mesh(args.sp_degree)
     eng = ServingEngine(target=target, params_t=params_t, drafter=drafter,
                         params_d=params_d, mode=args.mode,
-                        lookahead=args.lookahead, paged=paged)
+                        lookahead=args.lookahead, paged=paged,
+                        sp_degree=args.sp_degree, mesh=mesh)
     rng = np.random.default_rng(0)
     for _ in range(args.requests):
         prompt = rng.integers(0, cfg_t.vocab_size,
@@ -63,6 +80,13 @@ def main(argv=None):
         print(f"req {req.rid}: {len(req.output)} tokens{extra}")
     print(f"mode={args.mode} total {wall:.2f}s "
           f"({wall / args.requests:.2f}s/request)")
+    if eng.replica_stats is not None:
+        for rs in eng.replica_stats:
+            d = rs.as_dict()
+            print(f"replica {d['replica']}: verified={d['windows_verified']} "
+                  f"preempted={d['windows_preempted']} "
+                  f"accepted={d['tokens_accepted']} "
+                  f"util={d['utilization']:.2f}")
     if eng.cache_manager is not None:
         st = eng.cache_manager.stats()
         print(f"paged cache: prefix_hit_rate={st['prefix_hit_rate']:.2f} "

@@ -1,0 +1,15 @@
+"""Speculation-parallel orchestrator (paper Algorithm 1) — R verifier
+replicas over the ``spec`` mesh axis plus a deterministic event-driven
+scheduler, pinned to the discrete-event simulator in core/dsi_sim.py.
+See docs/orchestrator.md."""
+from repro.orchestrator.engine import ReplicaStats, SPOrchestrator
+from repro.orchestrator.scheduler import (COMMIT, COMPLETE, PREEMPT, SPAWN,
+                                          START, Event, SPSchedule,
+                                          TickSchedule, replay_ticks,
+                                          schedule_pool, steps_to_tokens)
+
+__all__ = [
+    "SPOrchestrator", "ReplicaStats", "Event", "SPSchedule", "TickSchedule",
+    "schedule_pool", "replay_ticks", "steps_to_tokens",
+    "SPAWN", "START", "COMPLETE", "PREEMPT", "COMMIT",
+]

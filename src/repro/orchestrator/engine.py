@@ -1,0 +1,423 @@
+"""Speculation-parallel orchestrator over the ``spec`` mesh axis.
+
+``SPOrchestrator`` runs the paper's Algorithm 1 on real JAX models: R
+target verifier replicas and one drafter overlap in time. Each tick the
+drafter drafts R lookahead-windows (one sequential scan — drafting is
+recurrent) while the R replicas verify the *previous* tick's block of R
+windows concurrently: the verification forward is one ``verify_chunk``
+over all R·W positions whose window dimension is sharded over the
+``spec`` mesh axis (sharding/rules.py maps the logical ``window`` axis to
+``spec``), so on an R-slice mesh each slice computes exactly one paper
+"target server"'s window — speculation parallelism as context
+parallelism over draft offsets. Decisions then fold left-to-right
+(deterministic scheduler semantics, orchestrator/scheduler.py):
+
+  * spawn      — every drafted window becomes a verify task (tick T)
+  * complete   — windows up to the first rejection are decided (tick T+1)
+  * preempt    — a rejection kills every younger window: the rest of the
+                 decided block and the block drafted this tick
+  * commit     — the longest verified prefix (+ the correction token) is
+                 committed; the next tick is a draft-only bubble
+
+Losslessness and DSIEngine equivalence. The orchestrator replays
+``DSIEngine``'s virtual-step machine R steps per tick: window *content*
+follows the same speculative-continuation rule, every surviving draft /
+verify decision consumes the same position in the same split-chain of
+PRNG keys DSIEngine walks (one (key', kd, kv) split per virtual step;
+cancelled speculation burns key indices that are then reused for the
+restarted — never-observed-together — content, which preserves the
+target distribution), and the verification math is the identical
+``verify_chunk`` + verify-rule pipeline. Hence emitted tokens are
+R-invariant, token-identical to ``DSIEngine.generate`` — bit-for-bit for
+``rule="exact"`` at any batch size and for ``rule="leviathan"`` at B=1
+(B>1 leviathan drafting draws per-stream noise once stream counters
+diverge, which is R-invariant and lossless but keyed differently from
+DSIEngine's batch-shaped draw) — while steps-to-N-tokens shrinks with R:
+a tick commits up to R·W drafts and a rejection still costs exactly one
+bubble tick (benchmarks/bench_orchestrator.py).
+
+R = 1 degrades transparently to today's single-instance behavior: same
+tokens, same tick count, same bubble accounting as ``DSIEngine``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache import PagedSpec, paged_from_dense
+from repro.core.dsi_jax import (DEFAULT_HISTORY_CAP, EngineStats, _aggregate,
+                                _check_capacity, _extract_states, _softmax,
+                                draft_scan_keys, emit_block, rollback_drafter,
+                                verify_stage)
+from repro.core.verify import exact_verify, leviathan_verify
+from repro.models.model import Model
+from repro.orchestrator.scheduler import COMMIT, COMPLETE, PREEMPT, SPAWN, Event
+from repro.sharding import cs, use_mesh
+
+State = Dict[str, Any]
+
+
+@dataclass
+class ReplicaStats:
+    """Per-verifier-replica accounting (replica j verifies window j of
+    every block). ``windows_preempted`` counts verify work thrown away by
+    rejections in older windows — the resource half of the paper's
+    resource-vs-latency tradeoff."""
+    replica: int
+    windows_verified: int = 0
+    windows_preempted: int = 0
+    tokens_accepted: int = 0
+    rejections: int = 0
+    busy_ticks: int = 0
+
+    @property
+    def utilization(self) -> float:
+        tot = self.windows_verified + self.windows_preempted
+        return self.windows_verified / tot if tot else 0.0
+
+    def as_dict(self) -> dict:
+        return {"replica": self.replica,
+                "windows_verified": self.windows_verified,
+                "windows_preempted": self.windows_preempted,
+                "tokens_accepted": self.tokens_accepted,
+                "rejections": self.rejections,
+                "busy_ticks": self.busy_ticks,
+                "utilization": round(self.utilization, 4)}
+
+
+class _KeyChain:
+    """Host-side lazy walk of DSIEngine's per-step key split chain:
+    ``chain[s+1], kd[s+1], kv[s+1] = split(chain[s], 3)``. Virtual step s
+    drafts with ``split(kd[s], W)`` (one key per draft position) and the
+    window drafted at step s is decided with ``split(kv[s+1], B)`` (one
+    key per stream) — the exact indices DSIEngine consumes, so replaying
+    steps in any grouping reproduces its streams."""
+
+    def __init__(self, key0, w: int, b: int):
+        self._chain = [np.asarray(key0)]
+        self.kd: Dict[int, np.ndarray] = {}
+        self.kv: Dict[int, np.ndarray] = {}
+        self._w, self._b = w, b
+
+    def ensure(self, n: int) -> None:
+        while len(self._chain) <= n:
+            nxt, kd, kv = np.asarray(
+                jax.random.split(jnp.asarray(self._chain[-1]), 3))
+            self._chain.append(nxt)
+            i = len(self._chain) - 1
+            self.kd[i] = np.asarray(jax.random.split(jnp.asarray(kd), self._w))
+            self.kv[i] = np.asarray(jax.random.split(jnp.asarray(kv), self._b))
+
+
+class SPOrchestrator:
+    """R verifier replicas + drafter with deterministic SP scheduling.
+
+    API mirrors ``DSIEngine``: ``generate(params_t, params_d, prompt,
+    n_new)`` over B lockstep streams, dense or paged caches. ``mesh``
+    (optional) must carry a ``spec`` axis; the verification block is then
+    sharded over it (one window per slice). ``record_events=True`` keeps
+    a per-stream scheduler event log plus a raw tick log for the
+    simulator-equivalence tests."""
+
+    def __init__(self, target: Model, drafter: Model, *, lookahead: int = 8,
+                 sp: int = 2, rule: str = "exact",
+                 paged: Optional[PagedSpec] = None, mesh=None,
+                 record_events: bool = False,
+                 history_cap: Optional[int] = None):
+        assert rule in ("exact", "leviathan")
+        assert sp >= 1 and lookahead >= 1
+        self.target, self.drafter = target, drafter
+        self.w = lookahead
+        self.sp = sp
+        self.rule = rule
+        self.paged = paged
+        self.mesh = mesh
+        self.record_events = record_events
+        self.history_cap = DEFAULT_HISTORY_CAP if history_cap is None \
+            else history_cap
+        self.events: List[List[Event]] = []   # per stream, last generate()
+        self.tick_log: List[dict] = []        # raw per-tick host records
+        self._jit_tick = jax.jit(self._tick)
+
+    # ----------------------------------------------------------------- tick
+    def _tick(self, params_t, params_d, state: State, dk: jnp.ndarray,
+              vk: jnp.ndarray) -> State:
+        """One orchestrator tick: draft R windows ∥ verify last tick's
+        block ∥ fold R replica decisions; dk (B, R·W, 2) per-position
+        draft keys, vk (B, R, 2) per-replica decision keys."""
+        w, r = self.w, self.sp
+        wn = w * r
+        greedy = self.rule == "exact"
+
+        # (a) drafter: R speculative windows (sequential recurrent scan)
+        d_toks, d_probs, d_cache, d_hist = draft_scan_keys(
+            self.drafter, params_d, state["d_cache"], state["prefetch"], dk,
+            greedy)
+
+        # (b) R replicas verify the pending block concurrently: one chunk
+        # forward, window dim sharded over the spec mesh axis
+        block = cs(state["block"], "batch", "window")
+        rows, t_post = verify_stage(self.target, params_t, state["t_cache"],
+                                    block)                    # (B,RW,V)
+        rows = cs(rows, "batch", "window", None)
+
+        # (c) deterministic left-to-right decision fold: commit the
+        # longest verified prefix, preempt everything younger than the
+        # first rejection
+        have = state["have"]
+        bsz = block.shape[0]
+        alive = have
+        carry_j = state["carry"]
+        n_acc = jnp.zeros((bsz,), jnp.int32)
+        rejected = jnp.zeros((bsz,), bool)
+        rej_win = jnp.full((bsz,), r, jnp.int32)
+        nxt = jnp.zeros((bsz,), jnp.int32)
+        alive_win = []
+        acc_win = []
+        for j in range(r):
+            win = block[:, j * w:(j + 1) * w]
+            wp = state["block_probs"][:, j * w:(j + 1) * w]
+            tp = jnp.concatenate([carry_j[:, None],
+                                  rows[:, j * w:(j + 1) * w]], axis=1)
+            nf = state["forced"] if j == 0 \
+                else jnp.zeros_like(state["forced"])
+            if greedy:
+                nj, xj = jax.vmap(exact_verify)(win, tp, nf)
+            else:
+                nj, xj = jax.vmap(leviathan_verify)(vk[:, j], win, wp, tp, nf)
+            nj = jnp.where(alive, nj, 0)
+            full_j = alive & (nj == w)
+            rej_j = alive & (nj < w)
+            n_acc = n_acc + nj
+            rejected = rejected | rej_j
+            rej_win = jnp.where(rej_j, j, rej_win)
+            nxt = jnp.where(rej_j, xj, nxt)
+            alive_win.append(alive)
+            acc_win.append(nj)
+            alive = full_j
+            carry_j = rows[:, (j + 1) * w - 1]
+        full_block = alive                      # every window fully accepted
+
+        t_cache = self.target.commit(state["t_cache"], t_post, n_acc)
+
+        # (d) emit committed tokens (+ correction) as one batched scatter
+        buf, n_out = emit_block(state["out"], state["n_out"], block,
+                                state["forced"], n_acc, have, rejected, nxt)
+
+        # (e) drafter rollback to the committed frontier where rejected
+        d_cache = rollback_drafter(d_cache, state["d_hist_prev"], n_acc,
+                                   rejected, t_cache["pos"],
+                                   state["d_cache_pos0"], wn)
+
+        # (f) assemble the next block (this tick's drafts) — dead where a
+        # rejection preempted them (next tick is that stream's bubble)
+        v = rows.shape[-1]
+        onehot_nxt = jax.nn.one_hot(nxt, v, dtype=jnp.float32)
+        block_next = jnp.concatenate(
+            [state["prefetch"][:, None], d_toks[:, :wn - 1]], axis=1)
+        bprobs_next = jnp.concatenate(
+            [state["prefetch_prob"][:, None], d_probs[:, :wn - 1]], axis=1)
+        prefetch_next = jnp.where(rejected, nxt, d_toks[:, wn - 1])
+        pprob_next = jnp.where(rejected[:, None], onehot_nxt,
+                               d_probs[:, wn - 1])
+        have_next = ~rejected
+        forced_next = jnp.where(rejected, 1, jnp.zeros_like(state["forced"]))
+        forced_next = jnp.where(have, forced_next, state["forced"])
+        carry_next = jnp.where(full_block[:, None], rows[:, wn - 1],
+                               state["carry"])
+
+        return {
+            "block": block_next,
+            "block_probs": bprobs_next, "have": have_next,
+            "forced": forced_next, "carry": carry_next,
+            "prefetch": prefetch_next, "prefetch_prob": pprob_next,
+            "t_cache": t_cache, "d_cache": d_cache,
+            "d_cache_pos0": d_cache["pos"], "d_hist_prev": d_hist,
+            "out": buf, "n_out": n_out,
+            "n_acc": n_acc, "rejected": rejected, "rej_win": rej_win,
+            "had_block": have,
+            "alive_win": jnp.stack(alive_win, axis=1),   # (B,R)
+            "acc_win": jnp.stack(acc_win, axis=1),       # (B,R)
+        }
+
+    # ------------------------------------------------------------ key plumb
+    def _tick_keys(self, chain: _KeyChain, counters: np.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Per-stream key arrays for one tick: stream i drafts virtual
+        steps [counters[i], counters[i]+R) and decides the windows drafted
+        at [counters[i]-R, counters[i]) (window op m decides with
+        kv[m+1]); out-of-range indices only occur on discarded pipeline-
+        fill decisions and clamp to 1."""
+        w, r, b = self.w, self.sp, counters.shape[0]
+        chain.ensure(int(counters.max()) + r)
+        dk = np.empty((b, r * w, 2), np.uint32)
+        vk = np.empty((b, r, 2), np.uint32)
+        for i in range(b):
+            n0 = int(counters[i])
+            for j in range(r):
+                dk[i, j * w:(j + 1) * w] = chain.kd[n0 + j]
+                vk[i, j] = chain.kv[max(1, n0 - r + j + 1)][i]
+        return jnp.asarray(dk), jnp.asarray(vk)
+
+    # ------------------------------------------------------------- bootstrap
+    def _bootstrap(self, d_logits, key):
+        d_prob0 = _softmax(d_logits)
+        if self.rule == "exact":
+            prefetch = jnp.argmax(d_prob0, -1).astype(jnp.int32)
+        else:
+            key, k0 = jax.random.split(key)
+            prefetch = jax.random.categorical(
+                k0, jnp.log(d_prob0 + 1e-30), axis=-1).astype(jnp.int32)
+        return prefetch, d_prob0, key
+
+    @staticmethod
+    def _zero_hist(d_cache, wn):
+        states = _extract_states(d_cache)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (wn + 1,) + a.shape), states)
+
+    # -------------------------------------------------------------- generate
+    def generate(self, params_t, params_d, prompt: jnp.ndarray, n_new,
+                 key: Optional[jax.Array] = None,
+                 max_len: Optional[int] = None,
+                 extra_inputs: Optional[Dict[str, jnp.ndarray]] = None
+                 ) -> Tuple[jnp.ndarray, EngineStats]:
+        """Generate for B lockstep streams; returns (tokens (B, max(n_new)),
+        stats) with ``stats.replicas`` holding per-replica accounting and
+        ``stats.per_stream[b]`` per-stream counters (macro_steps = ticks)."""
+        b, s = prompt.shape
+        w, r = self.w, self.sp
+        wn = w * r
+        n_arr = np.broadcast_to(np.asarray(n_new, np.int32), (b,))
+        n_max = int(n_arr.max())
+        key = key if key is not None else jax.random.PRNGKey(0)
+        slack = 2 * wn + 2
+        _check_capacity(self.target, s, n_max, slack, max_len)
+        _check_capacity(self.drafter, s, n_max, slack, max_len)
+        max_len = max_len or (s + n_max + slack)
+        cap = n_max + wn + 1
+
+        batch = {"tokens": prompt, **(extra_inputs or {})}
+        t_logits, t_cache = self.target.prefill(params_t, batch,
+                                                max_len=max_len,
+                                                window_headroom=wn)
+        d_logits, d_cache = self.drafter.prefill(params_d, batch,
+                                                 max_len=max_len,
+                                                 window_headroom=wn)
+        if self.paged is not None:
+            t_cache = paged_from_dense(self.target, t_cache, self.paged,
+                                       max_len, window_headroom=wn)
+            d_cache = paged_from_dense(self.drafter, d_cache, self.paged,
+                                       max_len, window_headroom=wn)
+        prefetch, d_prob0, key = self._bootstrap(d_logits, key)
+        chain = _KeyChain(key, w, b)
+        counters = np.ones((b,), np.int64)
+
+        state: State = {
+            "block": jnp.zeros((b, wn), jnp.int32),
+            "block_probs": jnp.zeros((b, wn, self.target.cfg.padded_vocab),
+                                     jnp.float32),
+            "have": jnp.zeros((b,), bool),
+            "forced": jnp.zeros((b,), jnp.int32),
+            "carry": _softmax(t_logits),
+            "prefetch": prefetch, "prefetch_prob": d_prob0,
+            "t_cache": t_cache, "d_cache": d_cache,
+            "d_cache_pos0": d_cache["pos"],
+            "d_hist_prev": self._zero_hist(d_cache, wn),
+            "out": jnp.zeros((b, cap), jnp.int32),
+            "n_out": jnp.zeros((b,), jnp.int32),
+        }
+
+        per = [EngineStats(max_history=self.history_cap) for _ in range(b)]
+        replicas = [ReplicaStats(j) for j in range(r)]
+        self.events = [[] for _ in range(b)]
+        self.tick_log = []
+        ticks = 0
+        n_out = np.zeros((b,), np.int32)
+        greedy = self.rule == "exact"
+        if greedy:
+            # greedy decoding consumes no keys: skip the per-tick host-side
+            # chain walk and reuse one dummy key block (serving hot path)
+            dk0 = jnp.zeros((b, wn, 2), jnp.uint32)
+            vk0 = jnp.zeros((b, r, 2), jnp.uint32)
+        while (n_out < n_arr).any():
+            unfinished = n_out < n_arr
+            dk, vk = (dk0, vk0) if greedy \
+                else self._tick_keys(chain, counters)
+            with use_mesh(self.mesh):
+                state = self._jit_tick(params_t, params_d, state, dk, vk)
+            ticks += 1
+            n_acc = np.asarray(state["n_acc"])
+            rej = np.asarray(state["rejected"])
+            rej_win = np.asarray(state["rej_win"])
+            had = np.asarray(state["had_block"])
+            alive_win = np.asarray(state["alive_win"])
+            acc_win = np.asarray(state["acc_win"])
+            n_out = np.asarray(state["n_out"])
+            for i in range(b):
+                if not unfinished[i]:
+                    continue
+                per[i].record(int(n_acc[i]), bool(rej[i]), int(n_out[i]))
+                if not had[i]:
+                    continue
+                for j in range(r):
+                    if alive_win[i, j]:
+                        replicas[j].windows_verified += 1
+                        replicas[j].tokens_accepted += int(acc_win[i, j])
+                        replicas[j].rejections += int(rej[i]
+                                                      and rej_win[i] == j)
+                    else:
+                        replicas[j].windows_preempted += 1
+            if had.any():
+                for j in range(r):
+                    replicas[j].busy_ticks += 1
+            if self.record_events:
+                self._log_tick(ticks, unfinished, had, rej, rej_win,
+                               alive_win, n_out)
+                self.tick_log.append({
+                    "tick": ticks, "had_block": had.copy(),
+                    "rejected": rej.copy(), "rej_win": rej_win.copy(),
+                    "alive_win": alive_win.copy(), "acc_win": acc_win.copy(),
+                    "n_out": n_out.copy(), "unfinished": unfinished.copy(),
+                })
+            # virtual-step counters: resume at m+2 after a rejection at
+            # window op m (DSIEngine's bubble-step key indices), else +R
+            for i in range(b):
+                if unfinished[i] and had[i] and rej[i]:
+                    m = int(counters[i]) - r + int(rej_win[i])
+                    counters[i] = m + 2
+                else:
+                    counters[i] += r
+        stats = _aggregate(per, ticks)
+        stats.replicas = replicas
+        return state["out"][:, :n_max], stats
+
+    # ------------------------------------------------------------ event log
+    def _log_tick(self, tick, unfinished, had, rej, rej_win, alive_win,
+                  n_out) -> None:
+        """Append this tick's scheduler events per stream, in the exact
+        order ``scheduler.replay_ticks`` emits them (task id of window j
+        drafted at tick T = (T-1)·R + j)."""
+        r = self.sp
+        for i, log in enumerate(self.events):
+            if not unfinished[i]:
+                continue
+            base = (tick - 1) * r
+            for j in range(r):
+                log.append(Event(tick, SPAWN, base + j, replica=j))
+            if not had[i]:
+                continue
+            pend = base - r
+            for j in range(r):
+                if alive_win[i, j]:
+                    log.append(Event(tick, COMPLETE, pend + j, replica=j))
+                else:
+                    log.append(Event(tick, PREEMPT, pend + j, replica=j))
+            log.append(Event(tick, COMMIT, position=int(n_out[i])))
+            if rej[i]:
+                for j in range(r):
+                    log.append(Event(tick, PREEMPT, base + j, replica=j))

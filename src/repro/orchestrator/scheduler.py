@@ -1,0 +1,260 @@
+"""Deterministic event-driven scheduler for speculation parallelism.
+
+Algorithm 1 orchestrates one drafter plus an SP-sized pool of target
+verifier replicas: every drafted block spawns a verify task, a rejection
+preempts every task beyond the corrected position, and the confirmed
+frontier (the longest verified prefix) only ever grows. This module
+realizes those semantics twice, in two time domains, and both are pinned
+to each other and to ``core/dsi_sim.py`` by tests/test_orchestrator_props.py:
+
+``schedule_pool``
+    Continuous-time discrete-event scheduler with explicit task records
+    and replica assignment (earliest-free replica wins, lowest id on
+    ties). Given the same per-draft accept trace it reproduces
+    ``simulate_dsi_pool``'s confirmation times, latency and forward
+    counts exactly, while additionally exposing the spawn / start /
+    complete / preempt / commit event log and per-replica busy time that
+    the closed-form simulator never materializes.
+
+``replay_ticks``
+    The tick-quantized (lockstep SPMD) model that ``SPOrchestrator``
+    (orchestrator/engine.py) realizes on hardware: every tick the drafter
+    drafts R lookahead-sized windows while the R replicas verify the
+    previous tick's block. A rejection kills the in-flight block (the
+    younger windows are preempted) and forces one draft-only bubble tick
+    — exactly DSIEngine's pipeline generalized from one outstanding
+    window to R. The engine's realized event schedule must equal this
+    replay on the realized acceptance trace, for any R.
+
+Both consume acceptance as a per-draft boolean trace (exhaustion =>
+reject), so the engine, the replay, and the paper-level simulator can be
+driven by identical randomness.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+#: event kinds, in the order they occur for a single verify task
+SPAWN, START, COMPLETE, PREEMPT, COMMIT = (
+    "spawn", "start", "complete", "preempt", "commit")
+
+
+@dataclass(frozen=True)
+class Event:
+    """One scheduler event. ``task`` is the verify-task id (the global
+    drafted-window index in the tick domain; -1 for commits), ``position``
+    the last confirmed/covered token position, ``replica`` the verifier
+    replica id (-1 where not applicable)."""
+    time: float
+    kind: str
+    task: int = -1
+    position: int = -1
+    replica: int = -1
+
+
+@dataclass
+class SPSchedule:
+    """Continuous-time schedule (``schedule_pool`` output)."""
+    events: List[Event]
+    latency: float
+    timeline: List[Tuple[float, int]]
+    n_target_forwards: int
+    n_drafter_forwards: int
+    replica_busy: List[float]
+
+
+@dataclass
+class TickSchedule:
+    """Tick-domain schedule (``replay_ticks`` output). ``commits`` holds
+    (tick, emitted-after-tick) checkpoints; ``events`` uses tick numbers
+    as times and drafted-window indices as task ids."""
+    ticks: int
+    emitted: int
+    commits: List[Tuple[int, int]]
+    events: List[Event] = field(default_factory=list)
+    windows_verified: List[int] = field(default_factory=list)   # per replica
+    windows_preempted: List[int] = field(default_factory=list)  # per replica
+
+
+def _make_draw(accept: Optional[Iterable]):
+    it = iter([bool(a) for a in accept]) if accept is not None else None
+
+    def draw() -> bool:
+        return next(it, False) if it is not None else False
+    return draw
+
+
+def schedule_pool(target_latency: float, drafter_latency: float,
+                  lookahead: int, sp: int, n_tokens: int, *,
+                  accept: Sequence[bool]) -> SPSchedule:
+    """Event-driven Algorithm-1 pool schedule on a given accept trace.
+
+    Semantics (same model as ``simulate_dsi_pool``, built from explicit
+    task records instead of the closed-form run loop): within a run from
+    the confirmed frontier, the drafter never blocks; every ``lookahead``
+    drafts spawn a block-verify task that waits for the earliest-free
+    replica and runs one target latency; the non-SI direct chain races
+    the block confirmations per position; the first wrong draft is
+    corrected by whichever source reaches it first, which preempts every
+    task still in flight (their replicas are refunded at the correction
+    time) and restarts drafting."""
+    assert sp >= 1 and lookahead >= 1 and n_tokens >= 1
+    draw = _make_draw(accept)
+    free_at = [0.0] * sp
+    busy = [0.0] * sp
+    events: List[Event] = []
+    timeline: List[Tuple[float, int]] = []
+    frontier, t = 0, 0.0
+    n_t = n_d = 0
+    task_id = 0
+
+    while frontier < n_tokens:
+        needed = n_tokens - frontier
+        j = 1
+        while j <= needed and draw():
+            j += 1
+        rejected = j <= needed
+        last = j if rejected else needed
+        run_start = t
+
+        # block-verify tasks: spawn at draft completion, queue on the pool
+        n_blocks = -(-(last - 1) // lookahead)          # ceil((last-1)/L)
+        block_done = {}
+        run_tasks = []                                  # (tid, b, r, ready, start, done)
+        for b in range(1, n_blocks + 1):
+            k = min(b * lookahead, needed)
+            ready = run_start + k * drafter_latency
+            r = min(range(sp), key=lambda i: free_at[i])
+            start = max(ready, free_at[r])
+            done = start + target_latency
+            free_at[r] = done
+            n_t += 1
+            block_done[b] = done
+            run_tasks.append((task_id, b, r, ready, start, done))
+            task_id += 1
+        n_d += min(n_blocks * lookahead, needed)
+
+        # confirmation: direct chain races block completions per position
+        confirm = run_start
+        for i in range(1, last + 1):
+            direct = confirm + target_latency
+            n_t += 1
+            b_i = -(-(i - 1) // lookahead)
+            blk = block_done.get(b_i, float("inf")) if b_i >= 1 else float("inf")
+            confirm = min(direct, blk)
+            pos = min(frontier + i, n_tokens)
+            timeline.append((confirm, pos))
+            events.append(Event(confirm, COMMIT, position=pos))
+
+        # task outcomes are only knowable at the correction time: tasks
+        # still in flight are preempted and refund their replica
+        for tid, b, r, ready, start, done in run_tasks:
+            events.append(Event(ready, SPAWN, tid, frontier + min(b * lookahead + 1, last), r))
+            if start < confirm:
+                events.append(Event(start, START, tid, replica=r))
+            if done <= confirm:
+                events.append(Event(done, COMPLETE, tid, replica=r))
+                busy[r] += done - start
+            else:
+                events.append(Event(confirm, PREEMPT, tid, replica=r))
+                busy[r] += max(0.0, confirm - start)
+        free_at = [min(f, confirm) for f in free_at]
+
+        frontier += last
+        t = confirm
+
+    events.sort(key=lambda e: (e.time, e.task, e.kind))
+    return SPSchedule(events=events, latency=t, timeline=timeline,
+                      n_target_forwards=n_t, n_drafter_forwards=n_d,
+                      replica_busy=busy)
+
+
+def replay_ticks(accept: Sequence[bool], lookahead: int, sp: int,
+                 n_tokens: int) -> TickSchedule:
+    """Tick-domain replay of the SP orchestrator's scheduler.
+
+    One tick = the drafter drafts ``sp`` lookahead-windows while the
+    ``sp`` replicas verify the block drafted last tick (replica j owns
+    window j). Decisions fold left-to-right: the first rejected draft
+    emits its correction, preempts every younger window (same block and
+    the block being drafted), and forces one draft-only bubble tick; a
+    fully accepted block hands its last window's carry to the next tick.
+    The accept trace is consumed one draw per *live, non-forced* draft
+    position — the same consumption order for every ``sp``, which is why
+    emitted tokens are sp-invariant (tests pin this).
+    """
+    assert sp >= 1 and lookahead >= 1 and n_tokens >= 0
+    draw = _make_draw(accept)
+    w, r = lookahead, sp
+    ticks = emitted = 0
+    have = False
+    forced = 0
+    next_op = 0                 # global drafted-window counter (task ids)
+    pending: List[int] = []     # ops of the block verified next tick
+    events: List[Event] = []
+    commits: List[Tuple[int, int]] = []
+    verified = [0] * r
+    preempted = [0] * r
+
+    while emitted < n_tokens:
+        ticks += 1
+        # draft this tick's block (one op per window, replica j <- window j)
+        drafting = list(range(next_op, next_op + r))
+        next_op += r
+        for j, op in enumerate(drafting):
+            events.append(Event(ticks, SPAWN, op, replica=j))
+
+        rejected = False
+        if have:
+            dead_from = r          # first dead window index in the block
+            for j, op in enumerate(pending):
+                if rejected:
+                    events.append(Event(ticks, PREEMPT, op, replica=j))
+                    preempted[j] += 1
+                    continue
+                for p in range(w):
+                    if j == 0 and p < forced:
+                        continue                     # correction re-entering
+                    if draw():
+                        emitted += 1
+                    else:
+                        emitted += 1                 # the correction token
+                        rejected = True
+                        dead_from = j + 1
+                        break
+                events.append(Event(ticks, COMPLETE, op, replica=j))
+                verified[j] += 1
+            commits.append((ticks, emitted))
+            events.append(Event(ticks, COMMIT, position=emitted))
+            if rejected:
+                # this tick's drafts continue dead speculation: preempt
+                # them as schedule events — but they never reached a
+                # verifier, so they don't count as preempted verify work
+                # in the per-replica counters (cancelled draft work is
+                # the drafter's loss, not the replicas')
+                for j, op in enumerate(drafting):
+                    events.append(Event(ticks, PREEMPT, op, replica=j))
+                have = False
+                forced = 1
+                pending = []
+            else:
+                forced = 0
+                pending = drafting
+        else:
+            # bubble (or pipeline-fill) tick: nothing to verify yet
+            have = True
+            pending = drafting
+
+    return TickSchedule(ticks=ticks, emitted=emitted, commits=commits,
+                        events=events, windows_verified=verified,
+                        windows_preempted=preempted)
+
+
+def steps_to_tokens(accept: Sequence[bool], lookahead: int, sp: int,
+                    n_tokens: int) -> int:
+    """Ticks the SP orchestrator needs to emit ``n_tokens`` on a given
+    accept trace — monotonically non-increasing in ``sp`` (property-
+    tested): a bigger replica pool verifies more windows per tick and a
+    rejection still costs exactly one bubble."""
+    return replay_ticks(accept, lookahead, sp, n_tokens).ticks

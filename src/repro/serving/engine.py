@@ -12,6 +12,11 @@ Modes:
             mid-flight via per-slot prefill, so one jitted step advances
             up to ``max_batch`` heterogeneous requests at once — the
             paper's latency path at serving throughput (docs/serving.md).
+            ``sp_degree > 1`` swaps the slot table for the speculation-
+            parallel ``SPOrchestrator`` (docs/orchestrator.md): R verifier
+            replicas decide R draft windows per jitted tick, the queue is
+            bucketed by prompt length (lockstep generate), and per-replica
+            ``ReplicaStats`` accumulate on ``replica_stats``.
 
 Per-request ``EngineStats`` (macro-steps, acceptance rate, bubbles) are
 attached to each Request; ``engine_invocations`` counts jitted engine
@@ -65,6 +70,12 @@ class ServingEngine:
     paged: Optional[PagedSpec] = None
     prefix_sharing: bool = True
     max_len: Optional[int] = None
+    # speculation parallelism (docs/orchestrator.md): > 1 serves mode="dsi"
+    # through SPOrchestrator with this many verifier replicas; an optional
+    # spec-axis mesh shards each verification block one window per slice
+    sp_degree: int = 1
+    mesh: Optional[object] = None
+    replica_stats: Optional[list] = None  # per-replica, merged across runs
     engine_invocations: int = 0  # jitted engine steps across run() calls
     prefill_tokens: int = 0      # prompt tokens pushed through prefill
     cache_manager: Optional[CacheManager] = None  # live during paged run()
@@ -77,8 +88,10 @@ class ServingEngine:
                ) -> Request:
         if self.max_len is not None:
             # speculative modes overshoot by up to 2*lookahead+2 positions
-            # (verify window + drafter prefetch); plain decode does not
-            slack = 0 if self.mode == "nonsi" else 2 * self.lookahead + 2
+            # (verify window + drafter prefetch); SP serving multiplies the
+            # in-flight window by sp_degree; plain decode does not
+            sp = self.sp_degree if self.mode == "dsi" else 1
+            slack = 0 if self.mode == "nonsi" else 2 * sp * self.lookahead + 2
             models = [self.target] + ([self.drafter]
                                       if self.drafter is not None else [])
             if any(m.has_unbounded_cache for m in models):
@@ -95,21 +108,14 @@ class ServingEngine:
     # --------------------------------------------------------------- run
     def run(self) -> List[Request]:
         done: List[Request] = []
+        if self.mode == "dsi" and self.sp_degree > 1:
+            return self._run_dsi_sp()
         if self.mode == "dsi":
             return self._run_dsi_slots()
         if self.mode == "nonsi":
-            # lockstep decode is exact only for equal-length prompts
-            # (left-padding without a mask changes shorter prompts'
-            # context), so bucket the queue by prompt length
-            by_len: Dict[int, List[Request]] = {}
-            for r in self._queue:
-                by_len.setdefault(len(r.prompt), []).append(r)
-            self._queue.clear()
-            for _, group in sorted(by_len.items()):
-                for i in range(0, len(group), self.max_batch):
-                    batch = group[i:i + self.max_batch]
-                    self._run_nonsi_batch(batch)
-                    done.extend(batch)
+            for batch in self._bucketed_batches():
+                self._run_nonsi_batch(batch)
+                done.extend(batch)
             return done
         while self._queue:
             req = self._queue.pop(0)
@@ -219,6 +225,78 @@ class ServingEngine:
                     done.append(req)
         return done
 
+    # -------------------------------------------------- lockstep bucketing
+    def _bucketed_batches(self):
+        """Drain the queue into lockstep-compatible batches: bucketed by
+        (prompt length, extra-input signature) — lockstep generate is
+        exact only for equal-length prompts (left-padding without a mask
+        changes shorter prompts' context), and per-request extra inputs
+        (e.g. VLM image embeds) stack along the batch dim only within a
+        same-keyed group — then chunked to ``max_batch``. Shared by the
+        nonsi and speculation-parallel paths."""
+        buckets: Dict[tuple, List[Request]] = {}
+        for r in self._queue:
+            sig = tuple(sorted((r.extra_inputs or {}).keys()))
+            buckets.setdefault((len(r.prompt), sig), []).append(r)
+        self._queue.clear()
+        for _, group in sorted(buckets.items()):
+            for i in range(0, len(group), self.max_batch):
+                yield group[i:i + self.max_batch]
+
+    @staticmethod
+    def _stacked_extras(batch: List[Request]):
+        """Batch-dim-stacked extra inputs for one lockstep batch (None
+        when the bucket carries none)."""
+        if not batch[0].extra_inputs:
+            return None
+        return {k: jnp.concatenate([r.extra_inputs[k] for r in batch],
+                                   axis=0)
+                for k in batch[0].extra_inputs}
+
+    # ------------------------------------------- speculation parallelism
+    def _run_dsi_sp(self) -> List[Request]:
+        """Serve the queue through the SP orchestrator: R verifier
+        replicas per batch, queue bucketed by prompt length (the lockstep
+        ``generate`` path needs equal-length prompts per batch; content
+        and per-stream max_new stay heterogeneous). Per-request stats are
+        the orchestrator's per-stream EngineStats; per-replica stats
+        merge across batches into ``self.replica_stats``."""
+        assert self.drafter is not None and self.params_d is not None
+        from repro.orchestrator import SPOrchestrator
+        if self._engine is None or not isinstance(self._engine,
+                                                  SPOrchestrator):
+            self._engine = SPOrchestrator(
+                self.target, self.drafter, lookahead=self.lookahead,
+                sp=self.sp_degree, rule=self.rule, paged=self.paged,
+                mesh=self.mesh, history_cap=self.history_cap)
+        eng = self._engine
+        done: List[Request] = []
+        for batch in self._bucketed_batches():
+            toks = jnp.asarray([r.prompt for r in batch], jnp.int32)
+            n_new = [r.max_new for r in batch]
+            out, stats = eng.generate(self.params_t, self.params_d,
+                                      toks, n_new, max_len=self.max_len,
+                                      extra_inputs=self._stacked_extras(batch))
+            self.engine_invocations += stats.macro_steps
+            self.prefill_tokens += 2 * sum(len(r.prompt) for r in batch)
+            arr = np.asarray(out)
+            for k, req in enumerate(batch):
+                req.output = arr[k, :req.max_new].tolist()
+                req.stats = stats.per_stream[k]
+            self._merge_replica_stats(stats.replicas)
+            done.extend(batch)
+        return done
+
+    def _merge_replica_stats(self, replicas) -> None:
+        if self.replica_stats is None:
+            self.replica_stats = [type(r)(r.replica) for r in replicas]
+        for agg, r in zip(self.replica_stats, replicas):
+            agg.windows_verified += r.windows_verified
+            agg.windows_preempted += r.windows_preempted
+            agg.tokens_accepted += r.tokens_accepted
+            agg.rejections += r.rejections
+            agg.busy_ticks += r.busy_ticks
+
     def _spec_engine(self, cls):
         """One engine per ServingEngine: its jit cache persists across
         run() calls, so repeated serving rounds with the same geometry
@@ -241,11 +319,13 @@ class ServingEngine:
         req.stats = stats
 
     def _run_nonsi_batch(self, batch: List[Request]):
-        # equal-length prompts (run() buckets by length), lockstep decode
+        # equal-length prompts (run() buckets by length + extra-input
+        # signature), lockstep decode
         toks = np.asarray([r.prompt for r in batch], np.int32)
         max_new = max(r.max_new for r in batch)
         out = nonsi_generate(self.target, self.params_t,
-                             jnp.asarray(toks), max_new)
+                             jnp.asarray(toks), max_new,
+                             extra_inputs=self._stacked_extras(batch))
         self.engine_invocations += max_new
         arr = np.asarray(out)
         for i, r in enumerate(batch):

@@ -1,3 +1,3 @@
 from repro.sharding.rules import (  # noqa: F401
-    cs, current_mesh, logical_to_spec, param_specs, use_mesh,
+    cs, current_mesh, logical_to_spec, param_specs, spec_size, use_mesh,
 )

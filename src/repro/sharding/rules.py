@@ -35,7 +35,20 @@ _LOGICAL = {
     # (paper §3.1) realized as more shards of the verification attention
     "seq": ("spec", "model"),
     "spec": ("spec",),
+    # the SP orchestrator's draft-window block dim (R windows × W drafts):
+    # one window per spec slice = one paper target server per replica
+    # (orchestrator/engine.py)
+    "window": ("spec",),
 }
+
+
+def spec_size(mesh: Optional[Mesh]) -> int:
+    """Replica count the active/given mesh realizes on its ``spec`` axis
+    (1 when there is no mesh or no spec axis — single-instance fallback)."""
+    mesh = mesh if mesh is not None else current_mesh()
+    if mesh is None or "spec" not in mesh.axis_names:
+        return 1
+    return mesh.shape["spec"]
 
 Logical = Union[str, None, Sequence[str]]
 

@@ -92,6 +92,44 @@ def test_ring_decode_fallback_parity(h, kv, w, dtype, rng):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("impl", ["kernel", "fallback"])
+def test_ring_decode_sq_equals_window(impl, rng):
+    """Edge shape: the query block exactly fills the sliding window
+    (Sq == W == window): every row's live span is exactly the window and
+    the oldest in-window key sits one slot from eviction — off-by-one
+    territory for the window mask."""
+    b, w, h, kv, d, s = 2, 8, 4, 2, 64, 40
+    win = w                                       # Sq == window
+    pos = jnp.array([s + 7, 19], jnp.int32)       # wrapped + mid-fill
+    q, k, v, slot = _inputs(rng, b, w, h, kv, d, s, jnp.float32, pos)
+    if impl == "kernel":
+        out = ring_decode_attention(q, k, v, slot, pos, window=win,
+                                    interpret=True)
+    else:
+        out = ring_decode_ref(q, k, v, slot, pos, window=win)
+    ref = attention_ref(q, k, v, causal=True, window=win, q_offset=pos,
+                        kv_positions=slot)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["kernel", "fallback"])
+@pytest.mark.parametrize("h,kv", [(4, 4), (1, 1)])
+def test_ring_decode_gqa_group_one(impl, h, kv, rng):
+    """Edge shape: GQA group size 1 (H == KV, including the 1-head
+    degenerate) — the packed M-dim is W rows with no head replication."""
+    b, w, d, s = 2, 4, 64, 96
+    pos = jnp.array([s + 3, 21], jnp.int32)
+    q, k, v, slot = _inputs(rng, b, w, h, kv, d, s, jnp.float32, pos)
+    if impl == "kernel":
+        out = ring_decode_attention(q, k, v, slot, pos, interpret=True)
+    else:
+        out = ring_decode_ref(q, k, v, slot, pos)
+    ref = attention_ref(q, k, v, causal=True, q_offset=pos, kv_positions=slot)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_dispatcher_routes_ring_calls(rng, monkeypatch):
     """attention()/decode_attention() with kv_positions never reach the
     blocked jnp path; forced-Pallas reaches the ring kernel."""

@@ -1,0 +1,144 @@
+"""Cross-engine losslessness matrix — the single parameterized source of
+truth replacing the ad-hoc per-suite parity checks:
+
+  engines   {non-SI, SI, DSI R=1, DSI R=4 (SP orchestrator)}
+  caches    {dense ring, paged block-table}
+  backends  {jnp fallback, Pallas kernels forced (interpret)}
+  sampling  {greedy (exact), seeded (leviathan)}
+
+Greedy: every cell must emit the non-SI greedy reference token-for-token
+(losslessness is a *token identity* there). Seeded sampling: token
+identity holds within an engine across cache layouts (paged == dense on
+the same backend — the layout must never leak into sampling), and across
+SP degrees (DSI R=1 == R=4: speculation parallelism must not change the
+stream). Backend changes under seeded sampling are only guaranteed
+distribution-preserving (the kernel samples corrections by inverse-CDF
+vs gumbel), so the matrix deliberately does not assert cross-backend
+token identity for leviathan.
+"""
+import contextlib
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.cache import PagedSpec
+from repro.core.dsi_jax import DSIEngine
+from repro.core.si_jax import SIEngine, nonsi_generate
+from repro.kernels.dispatch import pallas_override
+from repro.models.model import Model
+from repro.orchestrator import SPOrchestrator
+
+PS = PagedSpec(page_size=8)
+N_NEW = 10
+SEED_KEY = 5
+
+
+@pytest.fixture(scope="module")
+def matrix():
+    """Memoized cell runner: cell(engine, cache, backend, rule) -> tokens.
+    Greedy cells use B=2 heterogeneous prompts; seeded cells use B=1 (the
+    regime where the orchestrator's key chain replays DSIEngine's
+    bit-for-bit)."""
+    cfg_t = tiny("yi-9b")
+    cfg_d = tiny("yi-9b", d_model=128)
+    mt, md = Model(cfg_t), Model(cfg_d)
+    pt = mt.init(jax.random.PRNGKey(0))
+    pd = md.init(jax.random.PRNGKey(1))
+    rng = jax.random.PRNGKey(3)
+    prompts = {"greedy": jax.random.randint(rng, (2, 9), 0, cfg_t.vocab_size),
+               "seeded": jax.random.randint(rng, (1, 9), 0, cfg_t.vocab_size)}
+    memo = {}
+
+    def cell(engine: str, cache: str = "dense", backend: str = "jnp",
+             rule: str = "greedy") -> np.ndarray:
+        k = (engine, cache, backend, rule)
+        if k in memo:
+            return memo[k]
+        paged = PS if cache == "paged" else None
+        vrule = "exact" if rule == "greedy" else "leviathan"
+        key = jax.random.PRNGKey(SEED_KEY)
+        prompt = prompts[rule]
+        ctx = pallas_override(force_pallas=True, interpret=True) \
+            if backend == "kernel" else contextlib.nullcontext()
+        with ctx:
+            if engine == "nonsi":
+                assert cache == "dense" and rule == "greedy"
+                out = nonsi_generate(mt, pt, prompt, N_NEW)
+            elif engine == "si":
+                out, _ = SIEngine(mt, md, lookahead=4, rule=vrule,
+                                  paged=paged).generate(
+                    pt, pd, prompt, N_NEW, key=key)
+            elif engine == "dsi":
+                out, _ = DSIEngine(mt, md, lookahead=4, rule=vrule,
+                                   paged=paged).generate(
+                    pt, pd, prompt, N_NEW, key=key)
+            elif engine in ("dsi_r1", "dsi_r4"):
+                out, _ = SPOrchestrator(mt, md, lookahead=4,
+                                        sp=4 if engine == "dsi_r4" else 1,
+                                        rule=vrule, paged=paged).generate(
+                    pt, pd, prompt, N_NEW, key=key)
+            else:  # pragma: no cover
+                raise AssertionError(engine)
+        memo[k] = np.asarray(out)
+        return memo[k]
+
+    cell.vocab = cfg_t.vocab_size
+    return cell
+
+
+# ------------------------------------------------------------ greedy cells
+@pytest.mark.parametrize("backend", ["jnp", "kernel"])
+@pytest.mark.parametrize("cache", ["dense", "paged"])
+@pytest.mark.parametrize("engine", ["si", "dsi", "dsi_r4"])
+def test_greedy_matrix_matches_reference(matrix, engine, cache, backend):
+    ref = matrix("nonsi")
+    out = matrix(engine, cache, backend, "greedy")
+    assert np.array_equal(out, ref), (engine, cache, backend)
+
+
+def test_greedy_reference_backend_invariant(matrix):
+    """The non-SI greedy reference itself is backend-invariant."""
+    assert np.array_equal(matrix("nonsi"),
+                          matrix("nonsi", "dense", "kernel", "greedy"))
+
+
+# ------------------------------------------------------------ seeded cells
+@pytest.mark.parametrize("backend", ["jnp", "kernel"])
+@pytest.mark.parametrize("engine", ["si", "dsi", "dsi_r4"])
+def test_seeded_paged_equals_dense(matrix, engine, backend):
+    """Cache layout must never leak into sampling: paged == dense
+    token-for-token on the same backend, for every engine."""
+    a = matrix(engine, "dense", backend, "seeded")
+    b = matrix(engine, "paged", backend, "seeded")
+    assert np.array_equal(a, b), (engine, backend)
+
+
+@pytest.mark.parametrize("cache", ["dense", "paged"])
+@pytest.mark.parametrize("backend", ["jnp", "kernel"])
+def test_seeded_sp_degree_invariant(matrix, cache, backend):
+    """DSI R=4 == DSI R=1 (both through the orchestrator, same backend
+    and cache): speculation parallelism never changes the sampled
+    stream."""
+    a = matrix("dsi_r4", cache, backend, "seeded")
+    b = matrix("dsi_r1", cache, backend, "seeded")
+    assert a.shape == (1, N_NEW)
+    assert np.array_equal(a, b), (cache, backend)
+
+
+def test_seeded_orchestrator_matches_dsi_engine_jnp(matrix):
+    """On the default (jnp) verification route, the orchestrator's seeded
+    stream is bit-identical to DSIEngine's (B=1 key-chain replay)."""
+    assert np.array_equal(matrix("dsi_r4", "dense", "jnp", "seeded"),
+                          matrix("dsi", "dense", "jnp", "seeded"))
+    assert np.array_equal(matrix("dsi_r4", "paged", "jnp", "seeded"),
+                          matrix("dsi", "paged", "jnp", "seeded"))
+
+
+@pytest.mark.parametrize("engine", ["si", "dsi", "dsi_r4"])
+def test_seeded_tokens_in_vocab(matrix, engine):
+    """Kernel-route seeded sampling emits in-range tokens (distribution-
+    level losslessness is pinned by tests/test_verify.py enumeration)."""
+    out = matrix(engine, "dense", "kernel", "seeded")
+    assert ((0 <= out) & (out < matrix.vocab)).all()

@@ -1,0 +1,362 @@
+"""SP orchestrator end-to-end: token identity with DSIEngine across SP
+degrees (dense + paged, exact + leviathan), step-count reduction, event-
+schedule equivalence with the tick replay, per-replica stats, the
+spec-mesh multi-device path, speculation-parallel serving, and the
+EngineStats degenerate-case fixes."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.cache import PagedSpec
+from repro.core.dsi_jax import DSIEngine, EngineStats, _aggregate
+from repro.core.si_jax import nonsi_generate
+from repro.models.model import Model
+from repro.orchestrator import SPOrchestrator, replay_ticks
+from repro.serving.engine import ServingEngine
+
+PS = PagedSpec(page_size=8)
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.fixture(scope="module")
+def models():
+    cfg_t = tiny("yi-9b")
+    cfg_d = tiny("yi-9b", d_model=128)
+    mt, md = Model(cfg_t), Model(cfg_d)
+    pt = mt.init(jax.random.PRNGKey(0))
+    pd = md.init(jax.random.PRNGKey(1))
+    return cfg_t, mt, md, pt, pd
+
+
+def _trace_from_ticks(orch, stream: int):
+    """Reconstruct stream ``stream``'s realized per-draft accept trace
+    from the orchestrator's raw tick log (the inverse of the replay's
+    consumption order)."""
+    w, r = orch.w, orch.sp
+    trace = []
+    forced = 0
+    for rec in orch.tick_log:
+        if not rec["unfinished"][stream]:
+            break
+        if not rec["had_block"][stream]:
+            continue
+        rejd = bool(rec["rejected"][stream])
+        rw = int(rec["rej_win"][stream])
+        for j in range(r):
+            if not rec["alive_win"][stream][j]:
+                continue
+            acc = int(rec["acc_win"][stream][j])
+            f = forced if j == 0 else 0
+            trace += [True] * (acc - f)
+            if rejd and rw == j:
+                trace.append(False)
+        forced = 1 if rejd else 0
+    return trace
+
+
+# ------------------------------------------------------------- losslessness
+@pytest.mark.parametrize("sp", [1, 2, 4])
+def test_orchestrator_lossless_dense(models, sp, rng):
+    """B>1 heterogeneous streams + per-stream n_new: every SP degree
+    emits each stream's non-SI greedy reference."""
+    cfg, mt, md, pt, pd = models
+    prompt = jax.random.randint(rng, (3, 10), 0, cfg.vocab_size)
+    n_new = [11, 7, 9]
+    ref = nonsi_generate(mt, pt, prompt, max(n_new))
+    out, stats = SPOrchestrator(mt, md, lookahead=4, sp=sp).generate(
+        pt, pd, prompt, n_new)
+    for i in range(3):
+        assert np.array_equal(np.asarray(out)[i, :n_new[i]],
+                              np.asarray(ref)[i, :n_new[i]]), (sp, i)
+        assert stats.per_stream[i].emitted >= n_new[i]
+    assert len(stats.replicas) == sp
+
+
+@pytest.mark.parametrize("sp", [1, 2, 4])
+def test_orchestrator_lossless_paged(models, sp, rng):
+    """Paged block-table caches: same tokens as dense for every SP degree
+    (non-page-aligned prompt, interleaved block tables)."""
+    cfg, mt, md, pt, pd = models
+    prompt = jax.random.randint(rng, (2, 11), 0, cfg.vocab_size)
+    n_new = 10
+    ref = nonsi_generate(mt, pt, prompt, n_new)
+    out, _ = SPOrchestrator(mt, md, lookahead=4, sp=sp, paged=PS).generate(
+        pt, pd, prompt, n_new)
+    assert np.array_equal(np.asarray(out), np.asarray(ref)), sp
+
+
+@pytest.mark.parametrize("sp", [1, 2, 4])
+def test_orchestrator_leviathan_matches_dsi_engine(models, sp, rng):
+    """Seeded rejection sampling, B=1: the orchestrator walks DSIEngine's
+    key split-chain by virtual step, so the sampled stream is
+    bit-identical to DSIEngine.generate for every SP degree."""
+    cfg, mt, md, pt, pd = models
+    prompt = jax.random.randint(rng, (1, 8), 0, cfg.vocab_size)
+    key = jax.random.PRNGKey(5)
+    ref, _ = DSIEngine(mt, md, lookahead=4, rule="leviathan").generate(
+        pt, pd, prompt, 12, key=key)
+    out, _ = SPOrchestrator(mt, md, lookahead=4, sp=sp,
+                            rule="leviathan").generate(pt, pd, prompt, 12,
+                                                       key=key)
+    assert np.array_equal(np.asarray(out), np.asarray(ref)), sp
+
+
+def test_orchestrator_leviathan_r_invariant_batched(models, rng):
+    """B>1 seeded sampling: per-stream key counters make the emitted
+    streams SP-degree-invariant (R=1 == R=2) even when streams' rejection
+    histories diverge."""
+    cfg, mt, md, pt, pd = models
+    prompt = jax.random.randint(rng, (2, 8), 0, cfg.vocab_size)
+    key = jax.random.PRNGKey(9)
+    out1, _ = SPOrchestrator(mt, md, lookahead=4, sp=1,
+                             rule="leviathan").generate(pt, pd, prompt, 10,
+                                                        key=key)
+    out2, _ = SPOrchestrator(mt, md, lookahead=4, sp=2,
+                             rule="leviathan").generate(pt, pd, prompt, 10,
+                                                        key=key)
+    assert np.array_equal(np.asarray(out1), np.asarray(out2))
+    arr = np.asarray(out1)
+    assert ((0 <= arr) & (arr < cfg.vocab_size)).all()
+
+
+def test_orchestrator_r1_equals_dsi_step_counts(models, rng):
+    """R=1 is today's behavior exactly: same tokens, same macro-step
+    count, same rejection/bubble accounting as DSIEngine."""
+    cfg, mt, md, pt, pd = models
+    prompt = jax.random.randint(rng, (1, 9), 0, cfg.vocab_size)
+    out_d, st_d = DSIEngine(mt, md, lookahead=4).generate(pt, pd, prompt, 14)
+    out_o, st_o = SPOrchestrator(mt, md, lookahead=4, sp=1).generate(
+        pt, pd, prompt, 14)
+    assert np.array_equal(np.asarray(out_o), np.asarray(out_d))
+    assert st_o.macro_steps == st_d.macro_steps
+    assert st_o.rejections == st_d.rejections
+    assert st_o.bubbles == st_d.bubbles
+
+
+# ------------------------------------------------------- steps vs SP degree
+def test_perfect_drafter_steps_shrink_with_sp(models, rng):
+    """Drafter == target: zero rejections and steps-to-N close to the
+    ceil(N / (R·W)) pipeline floor — strictly fewer ticks at R=4 than
+    R=1 (the paper's latency win from speculation parallelism)."""
+    cfg, mt, _, pt, _ = models
+    prompt = jax.random.randint(rng, (1, 8), 0, cfg.vocab_size)
+    n_new = 24
+    ref = nonsi_generate(mt, pt, prompt, n_new)
+    steps = {}
+    for sp in (1, 2, 4):
+        out, st = SPOrchestrator(mt, mt, lookahead=4, sp=sp).generate(
+            pt, pt, prompt, n_new)
+        assert np.array_equal(np.asarray(out), np.asarray(ref))
+        assert st.rejections == 0
+        steps[sp] = st.macro_steps
+    assert steps[1] >= steps[2] >= steps[4]
+    assert steps[4] < steps[1]
+    assert steps[4] <= -(-n_new // (4 * 4)) + 2    # pipeline fill slack
+
+
+def test_noisy_drafter_steps_non_increasing(models, rng):
+    """Realistic acceptance: steps-to-N never grows with SP degree on the
+    same models/prompt (rejections cost one bubble at any R)."""
+    cfg, mt, md, pt, pd = models
+    prompt = jax.random.randint(rng, (1, 10), 0, cfg.vocab_size)
+    steps = [SPOrchestrator(mt, md, lookahead=4, sp=sp).generate(
+        pt, pd, prompt, 16)[1].macro_steps for sp in (1, 2, 4)]
+    assert steps[0] >= steps[1] >= steps[2], steps
+
+
+# ------------------------------------------- scheduler/event equivalence
+@pytest.mark.parametrize("sp", [1, 2, 4])
+def test_engine_schedule_matches_tick_replay(models, sp, rng):
+    """The realized event schedule (spawn/preempt/commit per tick) and
+    tick count equal the deterministic scheduler's replay of the realized
+    acceptance trace — the engine IS the scheduler's semantics on real
+    models."""
+    cfg, mt, md, pt, pd = models
+    prompt = jax.random.randint(rng, (1, 9), 0, cfg.vocab_size)
+    n_new = 13
+    orch = SPOrchestrator(mt, md, lookahead=4, sp=sp, record_events=True)
+    _, stats = orch.generate(pt, pd, prompt, n_new)
+    trace = _trace_from_ticks(orch, 0)
+    ts = replay_ticks(trace, 4, sp, n_new)
+    assert ts.ticks == stats.macro_steps
+    assert ts.events == orch.events[0]
+    assert ts.windows_verified == [r.windows_verified
+                                   for r in stats.replicas]
+    assert ts.windows_preempted == [r.windows_preempted
+                                    for r in stats.replicas]
+
+
+def test_replica_stats_consistency(models, rng):
+    """Replica 0 decides every live block (utilization 1.0); younger
+    replicas only burn work when rejections preempt them; accepted tokens
+    across replicas equal the aggregate accepted drafts."""
+    cfg, mt, md, pt, pd = models
+    prompt = jax.random.randint(rng, (1, 8), 0, cfg.vocab_size)
+    _, stats = SPOrchestrator(mt, md, lookahead=4, sp=4).generate(
+        pt, pd, prompt, 12)
+    reps = stats.replicas
+    assert reps[0].windows_preempted == 0 and reps[0].utilization == 1.0
+    assert all(r.utilization <= reps[0].utilization for r in reps)
+    assert sum(r.tokens_accepted for r in reps) == stats.accepted_drafts
+    assert sum(r.rejections for r in reps) == stats.rejections
+
+
+# -------------------------------------------------------- spec-axis mesh
+@pytest.mark.slow
+def test_orchestrator_on_spec_mesh_multi_device():
+    """Real multi-device run: 8 fake CPU devices, a 4-slice spec mesh, the
+    verify block sharded one window per slice — tokens identical to the
+    single-device greedy reference and steps identical to the meshless
+    orchestrator."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    code = """
+        import jax, numpy as np
+        import sys, os
+        sys.path.insert(0, os.path.join(%r, "tests"))
+        from conftest import tiny
+        from repro.core.si_jax import nonsi_generate
+        from repro.launch.mesh import make_spec_mesh
+        from repro.models.model import Model
+        from repro.orchestrator import SPOrchestrator
+        from repro.sharding import spec_size
+        assert len(jax.devices()) == 8
+        cfg_t = tiny("yi-9b"); cfg_d = tiny("yi-9b", d_model=128)
+        mt, md = Model(cfg_t), Model(cfg_d)
+        pt = mt.init(jax.random.PRNGKey(0))
+        pd = md.init(jax.random.PRNGKey(1))
+        prompt = jax.random.randint(jax.random.PRNGKey(0), (2, 9), 0,
+                                    cfg_t.vocab_size)
+        ref = nonsi_generate(mt, pt, prompt, 12)
+        mesh = make_spec_mesh(4)
+        assert spec_size(mesh) == 4
+        orch = SPOrchestrator(mt, md, lookahead=4, sp=4, mesh=mesh)
+        out, st = orch.generate(pt, pd, prompt, 12)
+        assert np.array_equal(np.asarray(out), np.asarray(ref))
+        base = SPOrchestrator(mt, md, lookahead=4, sp=4)
+        out0, st0 = base.generate(pt, pd, prompt, 12)
+        assert st.macro_steps == st0.macro_steps
+        assert np.array_equal(np.asarray(out), np.asarray(out0))
+        print("mesh ok", st.macro_steps)
+    """ % ROOT
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=500)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "mesh ok" in out.stdout
+
+
+def test_make_spec_mesh_rejects_oversubscription():
+    from repro.launch.mesh import make_spec_mesh
+    n = len(jax.devices())
+    with pytest.raises(ValueError):
+        make_spec_mesh(n + 1)
+
+
+# ----------------------------------------------------------------- serving
+def test_serving_sp_degree_lossless(models, rng):
+    """Heterogeneous queue through sp_degree=2 serving equals sequential
+    DSI serving token-for-token; per-replica stats accumulate."""
+    cfg, mt, md, pt, pd = models
+    rs = np.random.default_rng(0)
+    reqs = [(rs.integers(0, cfg.vocab_size,
+                         size=int(rs.integers(6, 12))).tolist(),
+             int(rs.integers(5, 12))) for _ in range(4)]
+
+    def run(**kw):
+        eng = ServingEngine(target=mt, params_t=pt, drafter=md, params_d=pd,
+                            mode="dsi", lookahead=4, max_batch=2, **kw)
+        for p, m in reqs:
+            eng.submit(p, m)
+        return eng, eng.run()
+
+    eng_seq, done_seq = run()
+    eng_sp, done_sp = run(sp_degree=2)
+    by_rid = {r.rid: r.output for r in done_seq}
+    assert all(r.output == by_rid[r.rid] for r in done_sp)
+    assert eng_sp.replica_stats is not None
+    assert len(eng_sp.replica_stats) == 2
+    assert sum(r.windows_verified for r in eng_sp.replica_stats) > 0
+    assert all(r.stats is not None and r.stats.macro_steps > 0
+               for r in done_sp)
+
+
+def test_serving_sp_degree_extra_inputs(rng):
+    """Requests carrying extra inputs (VLM image embeds) served at
+    sp_degree=2 match the slot-table path — the extras must thread
+    through the orchestrator's batched prefill, not be dropped."""
+    cfg_t = tiny("llama-3.2-vision-11b")
+    cfg_d = tiny("llama-3.2-vision-11b", d_model=128)
+    mt, md = Model(cfg_t), Model(cfg_d)
+    pt = mt.init(jax.random.PRNGKey(0))
+    pd = md.init(jax.random.PRNGKey(1))
+    rs = np.random.default_rng(0)
+    reqs = []
+    for i in range(2):
+        prompt = rs.integers(0, cfg_t.vocab_size, size=8).tolist()
+        img = jax.random.normal(jax.random.fold_in(rng, i),
+                                (1, cfg_t.num_image_tokens, cfg_t.d_frontend))
+        reqs.append((prompt, 6, {"image_embeds": img}))
+
+    def run(**kw):
+        eng = ServingEngine(target=mt, params_t=pt, drafter=md, params_d=pd,
+                            mode="dsi", lookahead=4, max_batch=2, **kw)
+        for p, m, extra in reqs:
+            eng.submit(p, m, extra_inputs=extra)
+        return {r.rid: r.output for r in eng.run()}
+
+    ref = run()
+    sp = run(sp_degree=2)
+    assert sp == ref
+
+
+def test_serving_sp_degree_capacity_guard(models):
+    """submit() accounts the R-times-larger speculative overshoot when
+    sizing against max_len."""
+    from repro.cache import CacheCapacityError
+    cfg, mt, md, pt, pd = models
+    eng = ServingEngine(target=mt, params_t=pt, drafter=md, params_d=pd,
+                        mode="dsi", lookahead=4, sp_degree=4, max_len=48)
+    with pytest.raises(CacheCapacityError):
+        eng.submit(list(range(10)), 8)   # 10 + 8 + 2*4*4+2 = 52 > 48
+
+
+# ------------------------------------------------- EngineStats degenerate
+def test_stats_retire_before_first_verify(models):
+    """A request that retires with max_new=0 never reaches a verify:
+    stats stay well-defined (acceptance_rate 0.0, no division errors)."""
+    cfg, mt, md, pt, pd = models
+    eng = ServingEngine(target=mt, params_t=pt, drafter=md, params_d=pd,
+                        mode="dsi", lookahead=4, max_batch=2)
+    eng.submit([1, 2, 3, 4, 5, 6], 0)
+    eng.submit([1, 2, 3, 4, 5, 6], 5)
+    done = eng.run()
+    zero = next(r for r in done if r.max_new == 0)
+    assert zero.output == []
+    assert zero.stats.acceptance_rate == 0.0
+
+
+def test_aggregate_handles_empty_and_zero_streams():
+    assert _aggregate([], 0).acceptance_rate == 0.0
+    s = EngineStats()
+    assert s.acceptance_rate == 0.0 and s.prefix_hit_rate == 0.0
+    agg = _aggregate([EngineStats(), EngineStats()], 3)
+    assert agg.macro_steps == 3 and agg.acceptance_rate == 0.0
+
+
+def test_orchestrator_generate_zero_tokens(models, rng):
+    """n_new=0 streams terminate immediately with empty output and zero
+    ticks — no division by zero in aggregation."""
+    cfg, mt, md, pt, pd = models
+    prompt = jax.random.randint(rng, (1, 6), 0, cfg.vocab_size)
+    out, stats = SPOrchestrator(mt, md, lookahead=4, sp=2).generate(
+        pt, pd, prompt, 0)
+    assert np.asarray(out).shape == (1, 0)
+    assert stats.macro_steps == 0 and stats.acceptance_rate == 0.0

@@ -1,0 +1,265 @@
+"""Property suite pinning the SP orchestrator's deterministic scheduler
+to the discrete-event simulator (core/dsi_sim.py) and to Algorithm-1
+invariants.
+
+``hypothesis`` is optional (CI deliberately omits it): with it installed
+the randomized properties explore traces/parameters; without it the
+deterministic grid tests at the bottom pin every property on fixed
+random traces, so clean environments still exercise each invariant.
+"""
+import numpy as np
+import pytest
+
+from repro.core.dsi_sim import simulate_dsi_pool
+from repro.orchestrator import (COMMIT, COMPLETE, PREEMPT, SPAWN, START,
+                                replay_ticks, schedule_pool, steps_to_tokens)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _trace(seed: int, n: int, p: float):
+    rng = np.random.default_rng(seed)
+    return (rng.random(n) < p).tolist()
+
+
+# ---------------------------------------------------------------------------
+# Shared assertion bodies (hypothesis and grid tests call the same code).
+# ---------------------------------------------------------------------------
+
+def check_pool_matches_sim(trace, t_t, t_d, la, sp, n):
+    """schedule_pool (event-driven, explicit tasks/replicas) reproduces
+    simulate_dsi_pool (closed-form run loop) exactly on the same trace."""
+    sim = simulate_dsi_pool(t_t, t_d, 0.0, la, sp, n, accept=list(trace))
+    sch = schedule_pool(t_t, t_d, la, sp, n, accept=list(trace))
+    assert abs(sch.latency - sim.latency) < 1e-9
+    assert len(sch.timeline) == len(sim.timeline)
+    for (ta, ca), (tb, cb) in zip(sch.timeline, sim.timeline):
+        assert abs(ta - tb) < 1e-9 and ca == cb
+    assert sch.n_target_forwards == sim.n_target_forwards
+    assert sch.n_drafter_forwards == sim.n_drafter_forwards
+
+
+def check_pool_events_well_formed(trace, t_t, t_d, la, sp, n):
+    """Every verify task's lifecycle is ordered (spawn <= start <=
+    complete/preempt), commits are monotone and complete, and replica
+    busy time never exceeds sp * makespan."""
+    sch = schedule_pool(t_t, t_d, la, sp, n, accept=list(trace))
+    by_task = {}
+    commits = []
+    for e in sch.events:
+        if e.kind == COMMIT:
+            commits.append((e.time, e.position))
+            continue
+        by_task.setdefault(e.task, {})[e.kind] = e
+    for tid, evs in by_task.items():
+        assert SPAWN in evs, tid
+        assert (COMPLETE in evs) != (PREEMPT in evs), \
+            f"task {tid} must either complete or be preempted, not both"
+        end = evs.get(COMPLETE) or evs.get(PREEMPT)
+        assert evs[SPAWN].time <= end.time + 1e-12
+        if START in evs:
+            assert evs[SPAWN].time <= evs[START].time <= end.time + 1e-12
+        assert 0 <= end.replica < sp
+    times = [t for t, _ in commits]
+    assert times == sorted(times)
+    assert max(c for _, c in commits) == n
+    assert all(0.0 <= b <= sch.latency * sp + 1e-9 for b in sch.replica_busy)
+
+
+def check_pool_latency_monotone_in_sp(trace, t_t, t_d, la, n):
+    """More verifier replicas never slow the pool down (same trace)."""
+    lats = [schedule_pool(t_t, t_d, la, sp, n, accept=list(trace)).latency
+            for sp in (1, 2, 4, 8)]
+    assert all(a >= b - 1e-9 for a, b in zip(lats, lats[1:])), lats
+
+
+def check_ticks_r_invariant_tokens(trace, la, n):
+    """Emitted-token trajectory: the tick replay consumes the trace in
+    the same order for every R (the engine-level guarantee that emitted
+    tokens are R-invariant), so every commit checkpoint below the target
+    that R > 1 reaches is a checkpoint R = 1 also passed through — block
+    boundaries are window boundaries — and the final-block overshoot is
+    bounded by one speculation block."""
+    base = replay_ticks(list(trace), la, 1, n)
+    base_counts = {c for _, c in base.commits}
+    for r in (2, 3, 4):
+        other = replay_ticks(list(trace), la, r, n)
+        assert other.emitted >= n
+        assert other.emitted - n <= r * la    # < one block + correction
+        counts = [c for _, c in other.commits]
+        assert counts == sorted(set(counts))  # strictly monotone
+        assert {c for c in counts if c < n} <= base_counts, (r, counts)
+
+
+def check_ticks_monotone_in_r(trace, la, n):
+    steps = [steps_to_tokens(list(trace), la, r, n) for r in (1, 2, 4, 8)]
+    assert all(a >= b for a, b in zip(steps, steps[1:])), steps
+
+
+def check_ticks_events_well_formed(trace, la, r, n):
+    """Tick-domain scheduler log: every window spawns once, is decided or
+    preempted at the following tick at the latest, commits are monotone,
+    and the per-replica verified/preempted counters match the event log."""
+    ts = replay_ticks(list(trace), la, r, n)
+    spawned, completed, preempted = {}, {}, {}
+    commits = []
+    for e in ts.events:
+        if e.kind == SPAWN:
+            assert e.task not in spawned
+            spawned[e.task] = e
+        elif e.kind == COMPLETE:
+            assert e.task not in completed and e.task not in preempted
+            completed[e.task] = e
+            assert e.time == spawned[e.task].time + 1
+        elif e.kind == PREEMPT:
+            # a window is preempted either while pending (tick+1) or at
+            # its own draft tick (the block drafted during a rejection)
+            preempted[e.task] = e
+            assert e.time - spawned[e.task].time in (0, 1)
+        elif e.kind == COMMIT:
+            commits.append((e.time, e.position))
+    assert not (set(completed) & set(preempted))
+    counts = [c for _, c in commits]
+    assert counts == sorted(counts) and counts[-1] == ts.emitted
+    for j in range(r):
+        assert ts.windows_verified[j] == sum(
+            1 for e in completed.values() if e.replica == j)
+        # counters track thrown-away *verify* work: preempts of pending
+        # windows (time = spawn + 1); same-tick preempts are cancelled
+        # drafts that never reached a verifier
+        assert ts.windows_preempted[j] == sum(
+            1 for e in preempted.values()
+            if e.replica == j and e.time == spawned[e.task].time + 1)
+
+
+def check_ticks_degenerate_regimes(la, r, n):
+    """All-accept: steps ~= fill + ceil(n / (R*L)); all-reject: one token
+    per 3 ticks (decide+bubble+refill collapses to the 2-tick DSI cadence
+    plus the pipeline restart)."""
+    perfect = replay_ticks([True] * (4 * n), la, r, n)
+    assert perfect.ticks <= 1 + -(-n // (r * la)) + 1
+    hopeless = replay_ticks([False] * (4 * n), la, r, n)
+    assert hopeless.emitted >= n
+    # every live decision emits exactly one correction token
+    assert len([c for c in hopeless.commits]) >= n
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis wrappers.
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    lat = st.floats(0.05, 2.0)
+    frac = st.floats(0.0, 1.0)
+
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 10_000), p=frac, n=st.integers(1, 60),
+           la=st.integers(1, 8), sp=st.integers(1, 8), t_t=lat,
+           t_d=st.floats(0.01, 0.9))
+    def test_pool_scheduler_matches_simulator(seed, p, n, la, sp, t_t, t_d):
+        trace = _trace(seed, 4 * n + 16, p)
+        check_pool_matches_sim(trace, t_t, min(t_d, t_t), la, sp, n)
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 10_000), p=frac, n=st.integers(1, 40),
+           la=st.integers(1, 6), sp=st.integers(1, 6))
+    def test_pool_scheduler_events_well_formed(seed, p, n, la, sp):
+        trace = _trace(seed, 4 * n + 16, p)
+        check_pool_events_well_formed(trace, 1.0, 0.15, la, sp, n)
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 10_000), p=frac, n=st.integers(1, 40),
+           la=st.integers(1, 6))
+    def test_pool_latency_monotone_in_sp(seed, p, n, la):
+        trace = _trace(seed, 4 * n + 16, p)
+        check_pool_latency_monotone_in_sp(trace, 1.0, 0.15, la, n)
+
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 10_000), p=frac, n=st.integers(1, 60),
+           la=st.integers(1, 8))
+    def test_tick_replay_tokens_r_invariant(seed, p, n, la):
+        trace = _trace(seed, 8 * n + 64, p)
+        check_ticks_r_invariant_tokens(trace, la, n)
+
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 10_000), p=frac, n=st.integers(1, 60),
+           la=st.integers(1, 8))
+    def test_tick_replay_steps_monotone_in_r(seed, p, n, la):
+        trace = _trace(seed, 8 * n + 64, p)
+        check_ticks_monotone_in_r(trace, la, n)
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 10_000), p=frac, n=st.integers(1, 40),
+           la=st.integers(1, 6), r=st.integers(1, 6))
+    def test_tick_replay_events_well_formed(seed, p, n, la, r):
+        trace = _trace(seed, 8 * n + 64, p)
+        check_ticks_events_well_formed(trace, la, r, n)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic grid fallbacks — always run, with or without hypothesis.
+# ---------------------------------------------------------------------------
+
+GRID = [
+    # (seed, p, n, la, sp)
+    (0, 0.0, 12, 1, 1), (1, 0.3, 20, 4, 2), (2, 0.7, 35, 2, 4),
+    (3, 0.95, 50, 8, 3), (4, 1.0, 24, 4, 8), (5, 0.5, 1, 3, 2),
+]
+
+
+@pytest.mark.parametrize("seed,p,n,la,sp", GRID)
+def test_pool_scheduler_matches_simulator_grid(seed, p, n, la, sp):
+    trace = _trace(seed, 4 * n + 16, p)
+    check_pool_matches_sim(trace, 1.0, 0.15, la, sp, n)
+    check_pool_matches_sim(trace, 1.7, 0.9, la, sp, n)
+
+
+@pytest.mark.parametrize("seed,p,n,la,sp", GRID)
+def test_pool_scheduler_events_well_formed_grid(seed, p, n, la, sp):
+    trace = _trace(seed, 4 * n + 16, p)
+    check_pool_events_well_formed(trace, 1.0, 0.15, la, sp, n)
+
+
+@pytest.mark.parametrize("seed,p,n,la", [(s, p, n, la)
+                                         for s, p, n, la, _ in GRID])
+def test_pool_latency_monotone_in_sp_grid(seed, p, n, la):
+    trace = _trace(seed, 4 * n + 16, p)
+    check_pool_latency_monotone_in_sp(trace, 1.0, 0.15, la, n)
+
+
+@pytest.mark.parametrize("seed,p,n,la", [(s, p, n, la)
+                                         for s, p, n, la, _ in GRID])
+def test_tick_replay_tokens_r_invariant_grid(seed, p, n, la):
+    trace = _trace(seed, 8 * n + 64, p)
+    check_ticks_r_invariant_tokens(trace, la, n)
+
+
+@pytest.mark.parametrize("seed,p,n,la", [(s, p, n, la)
+                                         for s, p, n, la, _ in GRID])
+def test_tick_replay_steps_monotone_in_r_grid(seed, p, n, la):
+    trace = _trace(seed, 8 * n + 64, p)
+    check_ticks_monotone_in_r(trace, la, n)
+
+
+@pytest.mark.parametrize("seed,p,n,la,r", GRID)
+def test_tick_replay_events_well_formed_grid(seed, p, n, la, r):
+    trace = _trace(seed, 8 * n + 64, p)
+    check_ticks_events_well_formed(trace, la, r, n)
+
+
+@pytest.mark.parametrize("la,r,n", [(1, 1, 10), (4, 2, 24), (2, 4, 16)])
+def test_tick_replay_degenerate_regimes(la, r, n):
+    check_ticks_degenerate_regimes(la, r, n)
+
+
+def test_trace_exhaustion_is_reject():
+    """Both models treat an exhausted trace as rejection (deterministic
+    non-SI pace), so short traces terminate rather than hang."""
+    sch = schedule_pool(1.0, 0.2, 4, 2, 10, accept=[True, True])
+    assert sch.latency > 0 and max(c for _, c in sch.timeline) == 10
+    ts = replay_ticks([True, True], 4, 2, 10)
+    assert ts.emitted >= 10

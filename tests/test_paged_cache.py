@@ -105,6 +105,62 @@ def test_paged_decode_kernel_parity(impl, window, rng):
                                rtol=2e-5, atol=2e-5)
 
 
+def _paged_case(rng, *, b, w, h, kv, d, page, n_pages, pos, window=None):
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.kernels.flash_attention.ring_decode import (
+        paged_decode_attention, paged_decode_ref, ring_slot_map)
+    s = page * n_pages
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (b, w, h, d))
+    pool = 1 + b * n_pages
+    kp = jax.random.normal(ks[1], (pool, page, kv, d))
+    vp = jax.random.normal(ks[2], (pool, page, kv, d))
+    bt = 1 + jnp.arange(n_pages)[None] * b + jnp.arange(b)[:, None]
+    slot = ring_slot_map(pos + w, s)
+    ref = attention_ref(q, gather_pages(kp, bt), gather_pages(vp, bt),
+                        causal=True, window=window, q_offset=pos,
+                        kv_positions=slot)
+    out_k = paged_decode_attention(q, kp, vp, bt, slot, pos, window=window,
+                                   interpret=True)
+    out_r = paged_decode_ref(q, kp, vp, bt, slot, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(out_r), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_ring_wrap_at_page_edge(rng):
+    """Edge shape: the ring wrap boundary lands exactly on a page edge
+    for one stream (pos ≡ 0 mod page) and straddles a page edge mid-
+    window for the other — the block-table indexing must follow the
+    slot→page map across both discontinuities."""
+    page, n_pages = 16, 4
+    s = page * n_pages
+    pos = jnp.array([s + page, s + page - 2], jnp.int32)
+    _paged_case(rng, b=2, w=4, h=4, kv=2, d=64, page=page, n_pages=n_pages,
+                pos=pos)
+
+
+def test_paged_decode_gqa_group_one(rng):
+    """Edge shape: GQA group size 1 (H == KV) through the paged kernel."""
+    page, n_pages = 16, 4
+    s = page * n_pages
+    pos = jnp.array([s + 5, 23], jnp.int32)
+    _paged_case(rng, b=2, w=4, h=4, kv=4, d=64, page=page, n_pages=n_pages,
+                pos=pos)
+
+
+def test_paged_decode_single_page_table(rng):
+    """Edge shape: one-page block tables (clen == page): every logical
+    slot resolves through block-table entry 0, with a wrapped stream and
+    Sq == W == the sliding window."""
+    page, n_pages = 32, 1
+    s = page * n_pages
+    pos = jnp.array([s + 9, 11], jnp.int32)
+    _paged_case(rng, b=2, w=8, h=4, kv=2, d=64, page=page, n_pages=n_pages,
+                pos=pos, window=8)
+
+
 # ------------------------------------------------- paged-vs-dense parity
 def test_paged_dsi_generate_lossless(models, rng):
     """DSI generation over block-table caches is token-identical to the
@@ -404,3 +460,48 @@ def test_serving_capacity_guard_at_submit(models):
     eng_n.submit(list(range(10)), 14)             # 10+14+0 <= 24: allowed
     with pytest.raises(CacheCapacityError):
         eng_n.submit(list(range(10)), 20)
+
+
+# ------------------------------------------- per-replica scratch layout
+def test_replica_scratch_slots_disjoint_and_page_aligned():
+    """SP-orchestrator cache contract (docs/orchestrator.md): replica
+    scratch-tail slot sets are always pairwise disjoint; their logical
+    page sets are pairwise disjoint exactly when the page size divides
+    the lookahead (page-aligned tails, the multi-controller layout)."""
+    from repro.cache import replica_scratch_slots
+    aligned = replica_scratch_slots(40, clen_p=64, page_size=4,
+                                    lookahead=8, sp=4)
+    slots = [set(sl.tolist()) for sl, _ in aligned]
+    pages = [set(pg.tolist()) for _, pg in aligned]
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert not slots[i] & slots[j]
+            assert not pages[i] & pages[j]
+    # wrap across the ring boundary keeps slot-disjointness
+    wrapped = replica_scratch_slots(60, clen_p=64, page_size=4,
+                                    lookahead=8, sp=4)
+    wslots = [set(sl.tolist()) for sl, _ in wrapped]
+    assert not wslots[0] & wslots[3]
+    # unaligned tails (page 8 > lookahead 4): neighbours share a page
+    unaligned = replica_scratch_slots(0, clen_p=64, page_size=8,
+                                      lookahead=4, sp=2)
+    upages = [set(pg.tolist()) for _, pg in unaligned]
+    assert upages[0] & upages[1]
+
+
+def test_shared_prefix_pages_read_only_view():
+    """Pages wholly below the committed frontier are the replica-shared
+    read-only prefix; pages with empty or speculative slots are scratch."""
+    import numpy as np
+    from repro.cache import replica_scratch_slots, shared_prefix_pages
+    clen_p, page = 32, 8
+    pos = 19                     # committed frontier, mid-page
+    slot_map = np.full((clen_p,), -1, np.int64)
+    slot_map[:pos] = np.arange(pos)          # fresh (non-wrapped) cache
+    prefix = shared_prefix_pages(slot_map, pos, page)
+    assert prefix.tolist() == [0, 1]         # pages 0..1 fully committed
+    tails = replica_scratch_slots(pos, clen_p, page, 4, 2)
+    tail_pages = set()
+    for _, pg in tails:
+        tail_pages |= set(pg.tolist())
+    assert not tail_pages & set(prefix.tolist())
