@@ -15,7 +15,16 @@ realistic acceptance regime) — and reports, per R:
     that buys the step reduction),
   * losslessness cross-check (every R emits the non-SI greedy stream).
 
-Writes ``BENCH_orchestrator.json`` for the CI trajectory artifact.
+A second, serving-level section measures **steady-state throughput** of
+SP continuous batching (requests admit into / retire out of the running
+tick — docs/serving.md §2) against the legacy drain-then-refill lockstep
+path on a mixed queue: identical tokens (mid-tick admission is lossless
+by construction, asserted), fewer ticks. ``tokens_per_tick`` is the
+deterministic canary — continuous admission must never fall below
+drain-refill.
+
+Writes ``BENCH_orchestrator.json`` (sweep + ``steady_state`` sections)
+for the CI trajectory artifact.
 
     PYTHONPATH=src python -m benchmarks.bench_orchestrator
     PYTHONPATH=src python -m benchmarks.run --smoke            # CI canary
@@ -65,6 +74,50 @@ def _run_sweep(target, drafter, params_t, params_d, prompt, n_new, la,
     return rows
 
 
+def _steady_state(model, params, pd, la: int, smoke: bool) -> dict:
+    """Continuous vs drain-refill SP serving on a mixed queue (hetero
+    max_new forces drain's lockstep batches to idle finished lanes while
+    continuous admission backfills them). Deterministic greedy streams:
+    both paths must emit identical tokens, and continuous must match or
+    beat drain on tokens-per-tick."""
+    from repro.serving.engine import ServingEngine
+    n_req = 6
+    rng = np.random.default_rng(3)
+    long_new = 16 if smoke else 24
+    reqs = [(rng.integers(0, model.cfg.vocab_size, size=12).tolist(),
+             8 if i % 2 else long_new) for i in range(n_req)]
+    rows = {}
+    outputs = {}
+    for admission in ("drain", "continuous"):
+        eng = ServingEngine(target=model, params_t=params, drafter=model,
+                            params_d=pd, mode="dsi", lookahead=la,
+                            max_batch=2, sp_degree=2, admission=admission)
+        for p, m in reqs:
+            eng.submit(p, m)
+        t0 = time.monotonic()
+        done = eng.run()
+        wall = time.monotonic() - t0
+        toks = sum(len(r.output) for r in done)
+        rows[admission] = {
+            "requests": n_req,
+            "ticks": eng.engine_invocations,
+            "tokens": toks,
+            "tokens_per_tick": round(toks / eng.engine_invocations, 3),
+            "wall_s": round(wall, 4),
+        }
+        outputs[admission] = {r.rid: r.output for r in done}
+    assert outputs["continuous"] == outputs["drain"], \
+        "mid-tick admission must be token-identical to drain-then-refill"
+    assert (rows["continuous"]["tokens_per_tick"]
+            >= rows["drain"]["tokens_per_tick"]), \
+        f"continuous admission regressed steady-state throughput: {rows}"
+    print("name,admission,requests,ticks,tokens,tokens_per_tick,wall_s")
+    for admission, row in rows.items():
+        print(f"steady_state,{admission},{row['requests']},{row['ticks']},"
+              f"{row['tokens']},{row['tokens_per_tick']},{row['wall_s']}")
+    return rows
+
+
 def main(smoke: bool = False, json_path: Optional[str] = None) -> None:
     from benchmarks.engine_stats import noisy_params
     layers, d_model = (2, 192) if smoke else (4, 256)
@@ -97,11 +150,16 @@ def main(smoke: bool = False, json_path: Optional[str] = None) -> None:
         assert all(a >= b for a, b in zip(steps, steps[1:])), \
             f"steps-to-N must be non-increasing in SP degree, got {steps}"
 
+    steady = _steady_state(model, params,
+                           noisy_params(params, 0.05, jax.random.PRNGKey(9)),
+                           la, smoke)
+
     if json_path:
         out = {
             "workload": {"n_new": n_new, "lookahead": la, "layers": layers,
                          "d_model": d_model, "sp_degrees": list(SP_DEGREES)},
             **regimes,
+            "steady_state": steady,
         }
         with open(json_path, "w") as f:
             json.dump(out, f, indent=2)

@@ -8,5 +8,6 @@ from repro.cache.paged import (PagedSpec, dense_to_paged,  # noqa: F401
                                gather_pages, interleaved_block_tables,
                                is_paged, paged_from_dense,
                                replica_scratch_slots, reset_block_rows,
-                               round_up, shared_prefix_pages)
+                               round_up, scratch_tails_disjoint,
+                               shared_prefix_pages)
 from repro.cache.prefix import RadixPrefixIndex  # noqa: F401

@@ -72,6 +72,8 @@ class PageAllocator:
         return pages
 
     def incref(self, pages: Iterable[int]) -> None:
+        """Add one reference per page (sharing: a new stream or the
+        prefix index starts holding an already-live page)."""
         for p in pages:
             assert self.refs[p] > 0, f"incref of free page {p}"
             self.refs[p] += 1

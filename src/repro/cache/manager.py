@@ -38,7 +38,7 @@ import numpy as np
 
 from repro.cache.allocator import (TRASH_PAGE, CacheCapacityError, CacheOOM,
                                    PageAllocator)
-from repro.cache.paged import PagedSpec, copy_page
+from repro.cache.paged import PagedSpec, copy_page, replica_scratch_slots
 from repro.cache.prefix import RadixPrefixIndex
 
 PoolKey = Tuple[str, int]        # ("t"|"d", segment index)
@@ -63,19 +63,35 @@ class AdmissionTicket:
 
 
 class CacheManager:
+    """Paged-KV admission/retire control plane for one serving slot table
+    (module docstring above has the full protocol). ``sp`` > 1 sizes the
+    geometry for speculation-parallel serving: the speculative block an
+    SP orchestrator writes per tick spans ``sp · lookahead`` positions,
+    so ring headroom and the admission slack both scale by ``sp``, and
+    ``scratch_tails``/``scratch_page_aligned`` expose the per-replica
+    scratch-tail layout (page-disjoint when the page size divides the
+    lookahead). Prefix sharing is unchanged: only fully-prefilled
+    *prompt* pages are ever published to the index, so admission under SP
+    reuses committed prefix pages without ever copying replica scratch
+    (the scratch tail is always freshly allocated, per stream)."""
+
     def __init__(self, target, drafter, spec: PagedSpec, *, n_slots: int,
-                 max_len: int, lookahead: int, prefix_sharing: bool = True):
+                 max_len: int, lookahead: int, sp: int = 1,
+                 prefix_sharing: bool = True):
+        assert sp >= 1
         self.spec = spec
         self.ps = spec.page_size
         self.models = {"t": target, "d": drafter}
         self.lookahead = lookahead
-        self.slack = 2 * lookahead + 2           # verify/draft overshoot
+        self.sp = sp
+        self.block = lookahead * sp              # speculative block per tick
+        self.slack = 2 * self.block + 2          # verify/draft overshoot
         self.max_len = max_len
         self.geom: Dict[PoolKey, Tuple[int, int, bool]] = {}
         self.alloc: Dict[PoolKey, PageAllocator] = {}
         for mk, model in self.models.items():
             for si, clen_p, n_pages, windowed in model.paged_geometry(
-                    max_len, self.ps, window_headroom=lookahead):
+                    max_len, self.ps, window_headroom=self.block):
                 self.geom[(mk, si)] = (clen_p, n_pages, windowed)
                 self.alloc[(mk, si)] = PageAllocator(
                     spec.pool_pages(n_slots, n_pages))
@@ -293,6 +309,29 @@ class CacheManager:
         for ns, page in new_refs:
             self.alloc[self._ns_key(ns)].incref([page])
 
+    # ------------------------------------------------- replica scratch tails
+    @property
+    def scratch_page_aligned(self) -> bool:
+        """True when the per-replica scratch tails occupy pairwise-disjoint
+        logical pages at *page-aligned* committed frontiers (the page size
+        divides the lookahead) — the geometry precondition for fully
+        independent per-replica page writes in a multi-controller SP
+        deployment (docs/orchestrator.md §5). At an arbitrary frontier
+        neighboring tails still share the straddled boundary page, so the
+        per-admission check is ``scratch_tails_disjoint(scratch_tails(...))``
+        at the stream's actual ``pos``."""
+        return self.sp == 1 or self.lookahead % self.ps == 0
+
+    def scratch_tails(self, mk: str, si: int, pos: int):
+        """Per-replica ``(logical slots, logical pages)`` of the scratch
+        tail a stream at committed frontier ``pos`` writes in pool segment
+        ``(mk, si)`` — replica ``j`` owns window ``j`` of the speculative
+        block. Physical pages follow via the stream's block table; the
+        committed prefix pages stay read-only under the block write."""
+        clen_p, _, _ = self.geom[(mk, si)]
+        return replica_scratch_slots(pos, clen_p, self.ps,
+                                     self.lookahead, self.sp)
+
     # ------------------------------------------------------------ release
     def release(self, slot: int) -> None:
         """Drop a retired stream's page references (engine `retire` must
@@ -306,6 +345,8 @@ class CacheManager:
         free = sum(a.free_pages for a in self.alloc.values())
         peak = sum(a.peak_in_use for a in self.alloc.values())
         return {
+            "sp": self.sp,
+            "scratch_page_aligned": self.scratch_page_aligned,
             "pages_in_use": in_use, "pages_free": free, "pages_peak": peak,
             "pages_allocated": self.pages_allocated,
             "pages_shared": self.pages_shared,

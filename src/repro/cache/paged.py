@@ -152,10 +152,13 @@ def replica_scratch_slots(pos: int, clen_p: int, page_size: int,
     writing logical slots ``[pos + j·W, pos + (j+1)·W) mod clen_p``.
     Returns, per replica, ``(slots, logical_pages)`` — slot indices are
     always pairwise disjoint across replicas (the block spans < clen_p),
-    and the logical page sets are pairwise disjoint whenever
-    ``page_size`` divides ``lookahead`` (page-aligned tails: the layout a
-    multi-controller deployment needs for fully independent per-replica
-    page writes; physical pages follow via the stream's block table).
+    and the logical page sets are pairwise disjoint whenever ``page_size``
+    divides ``lookahead`` *and* the frontier ``pos`` is page-aligned
+    (page-aligned tails: the layout a multi-controller deployment needs
+    for fully independent per-replica page writes; physical pages follow
+    via the stream's block table). At an unaligned frontier neighboring
+    tails share the straddled boundary page — check the returned page
+    sets (``scratch_tails_disjoint``) before relying on independence.
     Committed prefix pages (``shared_prefix_pages``) stay read-only under
     the block write."""
     assert sp * lookahead < clen_p, "speculative block must fit the ring"
@@ -166,6 +169,20 @@ def replica_scratch_slots(pos: int, clen_p: int, page_size: int,
                        pos + (j + 1) * lookahead, dtype=np.int64) % clen_p
         out.append((sl, np.unique(sl // page_size)))
     return out
+
+
+def scratch_tails_disjoint(tails) -> bool:
+    """True when the per-replica logical page sets of a
+    ``replica_scratch_slots`` layout are pairwise disjoint — the actual
+    (frontier-dependent) independence check a multi-controller deployment
+    must make before issuing concurrent per-replica page writes."""
+    seen: set = set()
+    for _, pages in tails:
+        ps = set(int(p) for p in pages)
+        if seen & ps:
+            return False
+        seen |= ps
+    return True
 
 
 def shared_prefix_pages(slot_map, pos: int, page_size: int):

@@ -37,6 +37,15 @@ class _Node:
 
 
 class RadixPrefixIndex:
+    """Token-content → prefix-page trie (module docstring above has the
+    design). Public protocol, driven host-side by ``CacheManager``:
+    ``match`` finds the longest cached prefix shared by every requested
+    namespace, ``insert`` publishes a freshly prefilled prompt's pages
+    (returning exactly the new references the caller must ``incref``),
+    and ``evict_lru`` reclaims the least-recently-touched leaf under
+    memory pressure. ``hits``/``lookups`` feed the prefix-hit telemetry
+    (docs/cache.md §5)."""
+
     def __init__(self, page_size: int):
         assert page_size > 0
         self.page_size = page_size
@@ -173,6 +182,8 @@ class RadixPrefixIndex:
         return self._leaf_pages(leaf)
 
     def __len__(self) -> int:
+        """Number of stored full-chunk entries (trie edges) — a size
+        proxy for tests and telemetry, not a page count."""
         n = 0
         stack = [self.root]
         while stack:

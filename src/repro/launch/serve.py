@@ -4,6 +4,13 @@ paper's kind — serve a small model with batched requests).
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --mode dsi \
       --requests 4 --max-new 32
+
+Speculation-parallel serving with the Eq.-1 planner (the planner measures
+target/drafter forward latencies and picks the SP degree, bounded by
+--sp-degree as the replica budget — docs/orchestrator.md §7):
+
+  PYTHONPATH=src python -m repro.launch.serve --mode dsi \
+      --sp-degree 4 --planner auto
 """
 from __future__ import annotations
 
@@ -39,7 +46,26 @@ def main(argv=None):
                     help="shard verification blocks over a spec-axis mesh "
                          "built from the visible devices (needs >= "
                          "sp-degree devices)")
+    ap.add_argument("--planner", choices=("off", "auto"), default="off",
+                    help="'auto' picks the SP degree from measured "
+                         "target/drafter latencies via the Eq.-1 planner, "
+                         "with --sp-degree as the replica budget "
+                         "(docs/orchestrator.md)")
+    ap.add_argument("--admission", choices=("continuous", "drain"),
+                    default="continuous",
+                    help="SP serving admission: 'continuous' admits into "
+                         "the running tick (default); 'drain' is the "
+                         "legacy drain-then-refill comparator")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="serving slot-table width (concurrent streams)")
     args = ap.parse_args(argv)
+    if args.planner == "auto" and args.mode != "dsi":
+        ap.error("--planner auto requires --mode dsi (the planner sizes "
+                 "the speculation-parallel verifier pool)")
+    if args.planner == "auto" and args.spec_mesh:
+        ap.error("--planner auto and --spec-mesh are mutually exclusive: "
+                 "a spec mesh pins the SP degree to its topology, so the "
+                 "planner would be inert")
 
     cfg_t = reduced(get_config(args.arch), layers=4, d_model=256)
     cfg_d = reduced(get_config(args.arch), layers=2, d_model=128)
@@ -63,7 +89,9 @@ def main(argv=None):
     eng = ServingEngine(target=target, params_t=params_t, drafter=drafter,
                         params_d=params_d, mode=args.mode,
                         lookahead=args.lookahead, paged=paged,
-                        sp_degree=args.sp_degree, mesh=mesh)
+                        sp_degree=args.sp_degree, mesh=mesh,
+                        max_batch=args.max_batch, admission=args.admission,
+                        planner="auto" if args.planner == "auto" else None)
     rng = np.random.default_rng(0)
     for _ in range(args.requests):
         prompt = rng.integers(0, cfg_t.vocab_size,
@@ -80,6 +108,13 @@ def main(argv=None):
         print(f"req {req.rid}: {len(req.output)} tokens{extra}")
     print(f"mode={args.mode} total {wall:.2f}s "
           f"({wall / args.requests:.2f}s/request)")
+    if eng.planned_sp is not None:
+        d = eng.planner.as_dict()
+        print(f"planner: t_target={d['t_target_s'] * 1e3:.2f}ms "
+              f"t_drafter={d['t_drafter_s'] * 1e3:.2f}ms "
+              f"ratio={d['latency_ratio']:.2f} "
+              f"-> sp_degree={eng.planned_sp} "
+              f"(budget {args.sp_degree})")
     if eng.replica_stats is not None:
         for rs in eng.replica_stats:
             d = rs.as_dict()
@@ -89,10 +124,14 @@ def main(argv=None):
                   f"util={d['utilization']:.2f}")
     if eng.cache_manager is not None:
         st = eng.cache_manager.stats()
+        extra = ""
+        if st["sp"] > 1:
+            extra = (f" sp={st['sp']} "
+                     f"scratch_page_aligned={st['scratch_page_aligned']}")
         print(f"paged cache: prefix_hit_rate={st['prefix_hit_rate']:.2f} "
               f"pages_peak={st['pages_peak']} "
               f"pages_shared={st['pages_shared']} "
-              f"deferrals={st['deferrals']}")
+              f"deferrals={st['deferrals']}{extra}")
 
 
 if __name__ == "__main__":

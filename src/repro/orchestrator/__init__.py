@@ -1,8 +1,11 @@
 """Speculation-parallel orchestrator (paper Algorithm 1) — R verifier
 replicas over the ``spec`` mesh axis plus a deterministic event-driven
-scheduler, pinned to the discrete-event simulator in core/dsi_sim.py.
-See docs/orchestrator.md."""
+scheduler, pinned to the discrete-event simulator in core/dsi_sim.py,
+and the online Eq.-1 planner that picks the SP degree from measured
+target/drafter latencies. See docs/orchestrator.md."""
 from repro.orchestrator.engine import ReplicaStats, SPOrchestrator
+from repro.orchestrator.planner import (LatencyEMA, SPPlanner, plan_sp,
+                                        predicted_latency)
 from repro.orchestrator.scheduler import (COMMIT, COMPLETE, PREEMPT, SPAWN,
                                           START, Event, SPSchedule,
                                           TickSchedule, replay_ticks,
@@ -12,4 +15,5 @@ __all__ = [
     "SPOrchestrator", "ReplicaStats", "Event", "SPSchedule", "TickSchedule",
     "schedule_pool", "replay_ticks", "steps_to_tokens",
     "SPAWN", "START", "COMPLETE", "PREEMPT", "COMMIT",
+    "SPPlanner", "LatencyEMA", "plan_sp", "predicted_latency",
 ]

@@ -38,6 +38,23 @@ bubble tick (benchmarks/bench_orchestrator.py).
 
 R = 1 degrades transparently to today's single-instance behavior: same
 tokens, same tick count, same bubble accounting as ``DSIEngine``.
+
+Serving (continuous batching). Besides the research ``generate`` API (B
+lockstep streams, one shared prompt length), the orchestrator exposes the
+same slot-table API ``DSIEngine`` serves through: ``init_slots`` builds an
+empty R-replica tick state over ``n_slots`` inactive streams, ``admit``
+prefills one request (any prompt length; dense or via the paged
+``CacheManager``) and scatters it into a free slot *mid-tick* — the other
+slots keep their pipeline state — and ``retire`` frees a finished slot
+immediately (partial-tick commit: a stream leaves the moment its request
+is satisfied, it never waits for the tick's other streams). ``step``
+advances every slot by one tick. Inactive slots run the same lockstep
+computation on garbage but never emit and never reject, exactly like the
+DSIEngine slot table (docs/serving.md); mid-tick admission is therefore
+token-identical to drain-then-refill serving for ``rule="exact"``
+(tests/test_lossless_matrix.py). Sampled serving keeps one PRNG key chain
+per admitted slot, so streams stay distribution-lossless but are keyed
+independently of the lockstep ``generate`` batch draw.
 """
 from __future__ import annotations
 
@@ -48,13 +65,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cache import PagedSpec, paged_from_dense
+from repro.cache import PagedSpec, paged_from_dense, reset_block_rows
 from repro.core.dsi_jax import (DEFAULT_HISTORY_CAP, EngineStats, _aggregate,
                                 _check_capacity, _extract_states, _softmax,
                                 draft_scan_keys, emit_block, rollback_drafter,
                                 verify_stage)
 from repro.core.verify import exact_verify, leviathan_verify
-from repro.models.model import Model
+from repro.models.model import Model, cache_set_row
 from repro.orchestrator.scheduler import COMMIT, COMPLETE, PREEMPT, SPAWN, Event
 from repro.sharding import cs, use_mesh
 
@@ -73,6 +90,13 @@ class ReplicaStats:
     tokens_accepted: int = 0
     rejections: int = 0
     busy_ticks: int = 0
+    #: wall-clock attributed to ticks this replica verified in —
+    #: telemetry only. Ticks are one fused SPMD step, so this is an
+    #: upper bound per replica (every busy replica is charged the full
+    #: tick) and deliberately NOT a planner signal: per-model latencies
+    #: come from the planner's own probe forwards
+    #: (orchestrator/planner.py).
+    busy_seconds: float = 0.0
 
     @property
     def utilization(self) -> float:
@@ -86,6 +110,7 @@ class ReplicaStats:
                 "tokens_accepted": self.tokens_accepted,
                 "rejections": self.rejections,
                 "busy_ticks": self.busy_ticks,
+                "busy_seconds": round(self.busy_seconds, 6),
                 "utilization": round(self.utilization, 4)}
 
 
@@ -142,6 +167,14 @@ class SPOrchestrator:
         self.events: List[List[Event]] = []   # per stream, last generate()
         self.tick_log: List[dict] = []        # raw per-tick host records
         self._jit_tick = jax.jit(self._tick)
+        self._jit_admit = jax.jit(self._admit_row)
+        # continuous-batching slot table (docs/serving.md): geometry of the
+        # live table plus per-slot sampling chains for rule="leviathan"
+        self.table_max_len: Optional[int] = None
+        self._admissions = 0
+        self._slot_chains: Dict[int, _KeyChain] = {}
+        self._slot_counters: Dict[int, int] = {}
+        self._zero_keys: Dict[int, Tuple[jnp.ndarray, jnp.ndarray]] = {}
 
     # ----------------------------------------------------------------- tick
     def _tick(self, params_t, params_d, state: State, dk: jnp.ndarray,
@@ -167,8 +200,11 @@ class SPOrchestrator:
 
         # (c) deterministic left-to-right decision fold: commit the
         # longest verified prefix, preempt everything younger than the
-        # first rejection
-        have = state["have"]
+        # first rejection. Inactive serving slots (``active`` False) run
+        # the same lockstep computation on garbage but never hold a live
+        # block, so they never emit and never reject.
+        active = state["active"]
+        have = state["have"] & active
         bsz = block.shape[0]
         alive = have
         carry_j = state["carry"]
@@ -224,13 +260,14 @@ class SPOrchestrator:
         prefetch_next = jnp.where(rejected, nxt, d_toks[:, wn - 1])
         pprob_next = jnp.where(rejected[:, None], onehot_nxt,
                                d_probs[:, wn - 1])
-        have_next = ~rejected
+        have_next = active & ~rejected
         forced_next = jnp.where(rejected, 1, jnp.zeros_like(state["forced"]))
         forced_next = jnp.where(have, forced_next, state["forced"])
         carry_next = jnp.where(full_block[:, None], rows[:, wn - 1],
                                state["carry"])
 
         return {
+            "key": state["key"], "active": active,
             "block": block_next,
             "block_probs": bprobs_next, "have": have_next,
             "forced": forced_next, "carry": carry_next,
@@ -318,6 +355,7 @@ class SPOrchestrator:
         counters = np.ones((b,), np.int64)
 
         state: State = {
+            "key": key, "active": jnp.ones((b,), bool),
             "block": jnp.zeros((b, wn), jnp.int32),
             "block_probs": jnp.zeros((b, wn, self.target.cfg.padded_vocab),
                                      jnp.float32),
@@ -395,6 +433,228 @@ class SPOrchestrator:
         stats = _aggregate(per, ticks)
         stats.replicas = replicas
         return state["out"][:, :n_max], stats
+
+    # ------------------------------------------- continuous-batching slots
+    def init_slots(self, n_slots: int, cap: int, max_len: int,
+                   key: Optional[jax.Array] = None) -> State:
+        """Empty R-replica slot-table state: ``n_slots`` inactive streams,
+        each with room for ``cap`` emitted tokens and caches of ``max_len``
+        positions (ring headroom sized for the full R·W speculative
+        block). Every later ``admit`` must use the same geometry — it
+        does; the engine remembers ``max_len`` — so the serving loop
+        compiles the tick and the admit scatter exactly once per table
+        shape and reuses them across ``run()`` rounds (the bucketed
+        re-jit reuse ``ServingEngine`` layers on top)."""
+        b, r = n_slots, self.sp
+        wn = self.w * r
+        v = self.target.cfg.padded_vocab
+        self.table_max_len = max_len
+        self._slot_chains.clear()
+        self._slot_counters.clear()
+        t_cache = self.target.init_cache(b, max_len, window_headroom=wn,
+                                         paged=self.paged)
+        d_cache = self.drafter.init_cache(b, max_len, window_headroom=wn,
+                                          paged=self.paged)
+        return {
+            "key": key if key is not None else jax.random.PRNGKey(0),
+            "active": jnp.zeros((b,), bool),
+            "block": jnp.zeros((b, wn), jnp.int32),
+            "block_probs": jnp.zeros((b, wn, v), jnp.float32),
+            "have": jnp.zeros((b,), bool),
+            "forced": jnp.zeros((b,), jnp.int32),
+            "carry": jnp.zeros((b, v), jnp.float32),
+            "prefetch": jnp.zeros((b,), jnp.int32),
+            "prefetch_prob": jnp.zeros((b, v), jnp.float32),
+            "t_cache": t_cache, "d_cache": d_cache,
+            "d_cache_pos0": d_cache["pos"],
+            "d_hist_prev": self._zero_hist(d_cache, wn),
+            "out": jnp.zeros((b, cap), jnp.int32),
+            "n_out": jnp.zeros((b,), jnp.int32),
+            "n_acc": jnp.zeros((b,), jnp.int32),
+            "rejected": jnp.zeros((b,), bool),
+            "rej_win": jnp.full((b,), r, jnp.int32),
+            "had_block": jnp.zeros((b,), bool),
+            "alive_win": jnp.zeros((b, r), bool),
+            "acc_win": jnp.zeros((b, r), jnp.int32),
+        }
+
+    def _admit_row(self, state: State, slot, t_row, d_row, carry, prefetch,
+                   pprob, hist_row) -> State:
+        """Scatter one prefilled stream into slot ``slot`` mid-tick
+        (jitted; one compilation regardless of prompt length — prefill
+        rows are S-independent ring caches). The other slots' pipeline
+        state is untouched: admission never perturbs live streams."""
+        wn = self.w * self.sp
+        cap = state["out"].shape[1]
+        v = state["carry"].shape[1]
+
+        def set0(arr, val):
+            val = jnp.asarray(val)
+            return jax.lax.dynamic_update_slice_in_dim(
+                arr, val.astype(arr.dtype), slot, axis=0)
+
+        s = dict(state)
+        s["t_cache"] = cache_set_row(state["t_cache"], t_row, slot)
+        s["d_cache"] = cache_set_row(state["d_cache"], d_row, slot)
+        s["d_cache_pos0"] = set0(state["d_cache_pos0"],
+                                 jnp.reshape(d_row["pos"], (1,)))
+        s["d_hist_prev"] = jax.tree.map(
+            lambda a, r_: jax.lax.dynamic_update_slice_in_dim(
+                a, r_.astype(a.dtype), slot, axis=2),
+            state["d_hist_prev"], hist_row)
+        s["carry"] = set0(state["carry"], carry)
+        s["prefetch"] = set0(state["prefetch"], prefetch)
+        s["prefetch_prob"] = set0(state["prefetch_prob"], pprob)
+        s["block"] = set0(state["block"], jnp.zeros((1, wn), jnp.int32))
+        s["block_probs"] = set0(state["block_probs"],
+                                jnp.zeros((1, wn, v), jnp.float32))
+        s["have"] = set0(state["have"], jnp.zeros((1,), bool))
+        s["forced"] = set0(state["forced"], jnp.zeros((1,), jnp.int32))
+        s["out"] = set0(state["out"], jnp.zeros((1, cap), jnp.int32))
+        s["n_out"] = set0(state["n_out"], jnp.zeros((1,), jnp.int32))
+        s["n_acc"] = set0(state["n_acc"], jnp.zeros((1,), jnp.int32))
+        s["rejected"] = set0(state["rejected"], jnp.zeros((1,), bool))
+        s["rej_win"] = set0(state["rej_win"],
+                            jnp.full((1,), self.sp, jnp.int32))
+        s["had_block"] = set0(state["had_block"], jnp.zeros((1,), bool))
+        s["alive_win"] = set0(state["alive_win"],
+                              jnp.zeros((1, self.sp), bool))
+        s["acc_win"] = set0(state["acc_win"],
+                            jnp.zeros((1, self.sp), jnp.int32))
+        s["active"] = set0(state["active"], jnp.ones((1,), bool))
+        return s
+
+    def admit(self, params_t, params_d, state: State, slot: int,
+              prompt: jnp.ndarray, *,
+              extra_inputs: Optional[Dict[str, jnp.ndarray]] = None,
+              manager=None, max_new: Optional[int] = None) -> State:
+        """Prefill one request (prompt (1,S), any S) and install it in
+        ``slot`` while the other slots keep ticking — the continuous-
+        batching admission path (mirrors ``DSIEngine.admit``; see there
+        for the paged ``CacheManager`` protocol). The admitted stream's
+        first tick is its pipeline fill; from the second tick on it
+        verifies like any other stream."""
+        assert self.table_max_len is not None, "call init_slots first"
+        wn = self.w * self.sp
+        batch = {"tokens": prompt, **(extra_inputs or {})}
+        if manager is not None:
+            tokens = np.asarray(prompt)[0].tolist()
+            ticket = manager.admit(tokens, slot, max_new=max_new)
+            state = manager.apply_cow(state, ticket)
+            t_row = manager.row_cache(state["t_cache"], "t", ticket)
+            d_row = manager.row_cache(state["d_cache"], "d", ticket)
+            t_logits, t_row = self.target.prefill_paged(
+                params_t, batch, t_row, ticket.n_cached["t"])
+            d_logits, d_row = self.drafter.prefill_paged(
+                params_d, batch, d_row, ticket.n_cached["d"])
+            manager.register(ticket, tokens)
+        else:
+            t_logits, t_row = self.target.prefill(params_t, batch,
+                                                  max_len=self.table_max_len,
+                                                  window_headroom=wn)
+            d_logits, d_row = self.drafter.prefill(params_d, batch,
+                                                   max_len=self.table_max_len,
+                                                   window_headroom=wn)
+        self._admissions += 1
+        k_admit = jax.random.fold_in(state["key"], self._admissions)
+        prefetch, d_prob0, _ = self._bootstrap(d_logits, k_admit)
+        if self.rule != "exact":
+            # independent per-slot key chain: the slot's draft/verify
+            # draws walk their own split chain from the admission key
+            self._slot_chains[slot] = _KeyChain(
+                jax.random.fold_in(k_admit, 1), self.w, 1)
+            self._slot_counters[slot] = 1
+        hist_row = self._zero_hist(d_row, wn)
+        return self._jit_admit(state, slot, t_row, d_row,
+                               _softmax(t_logits), prefetch, d_prob0,
+                               hist_row)
+
+    def retire(self, state: State, slot: int) -> State:
+        """Free a finished slot mid-tick (partial-tick commit): the stream
+        stops emitting immediately and the slot waits for the next
+        admission. Paged caches additionally re-point the slot's block
+        tables at the trash page so recycled pages stay safe from the
+        inactive slot's continuing lockstep garbage writes."""
+        state = dict(state, active=state["active"].at[slot].set(False))
+        for ck in ("t_cache", "d_cache"):
+            if any(k.startswith("block") and v is not None
+                   for k, v in state[ck].items()):
+                state[ck] = reset_block_rows(state[ck], slot)
+        self._slot_chains.pop(slot, None)
+        self._slot_counters.pop(slot, None)
+        return state
+
+    def step(self, params_t, params_d, state: State) -> State:
+        """Advance every slot by one orchestrator tick (draft R windows ∥
+        verify the pending block ∥ fold decisions)."""
+        b = int(state["active"].shape[0])
+        if self.rule == "exact":
+            if b not in self._zero_keys:
+                self._zero_keys[b] = (
+                    jnp.zeros((b, self.w * self.sp, 2), jnp.uint32),
+                    jnp.zeros((b, self.sp, 2), jnp.uint32))
+            dk, vk = self._zero_keys[b]
+        else:
+            dk, vk = self._slot_tick_keys(b)
+        with use_mesh(self.mesh):
+            state = self._jit_tick(params_t, params_d, state, dk, vk)
+        if self.rule != "exact":
+            self._advance_slot_counters(state)
+        return state
+
+    def _slot_tick_keys(self, b: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Per-slot dk/vk blocks from each admitted slot's own key chain
+        (same index discipline as ``_tick_keys``; empty slots draw dummy
+        zeros — greedy lanes consume no keys)."""
+        w, r = self.w, self.sp
+        dk = np.zeros((b, r * w, 2), np.uint32)
+        vk = np.zeros((b, r, 2), np.uint32)
+        for slot, chain in self._slot_chains.items():
+            n0 = self._slot_counters[slot]
+            chain.ensure(n0 + r)
+            for j in range(r):
+                dk[slot, j * w:(j + 1) * w] = chain.kd[n0 + j]
+                vk[slot, j] = chain.kv[max(1, n0 - r + j + 1)][0]
+        return jnp.asarray(dk), jnp.asarray(vk)
+
+    def _advance_slot_counters(self, state: State) -> None:
+        """Post-tick virtual-step bookkeeping per admitted slot (the
+        serving twin of ``generate``'s counter update)."""
+        had = np.asarray(state["had_block"])
+        rej = np.asarray(state["rejected"])
+        rej_win = np.asarray(state["rej_win"])
+        for slot in self._slot_counters:
+            if had[slot] and rej[slot]:
+                m = self._slot_counters[slot] - self.sp + int(rej_win[slot])
+                self._slot_counters[slot] = m + 2
+            else:
+                self._slot_counters[slot] += self.sp
+
+    def record_replica_tick(self, replicas: List[ReplicaStats], state: State,
+                            mask, wall_s: float = 0.0) -> None:
+        """Fold one serving tick's outcome into per-replica accounting.
+        ``mask`` selects the slots that count (live requests); ``wall_s``
+        is the tick's wall-clock, charged to every replica that verified
+        work this tick (upper bound — the tick is one fused step)."""
+        had = np.asarray(state["had_block"])
+        rej = np.asarray(state["rejected"])
+        rej_win = np.asarray(state["rej_win"])
+        alive_win = np.asarray(state["alive_win"])
+        acc_win = np.asarray(state["acc_win"])
+        mask = np.asarray(mask, bool)
+        for i in np.nonzero(mask & had)[0]:
+            for j in range(self.sp):
+                if alive_win[i, j]:
+                    replicas[j].windows_verified += 1
+                    replicas[j].tokens_accepted += int(acc_win[i, j])
+                    replicas[j].rejections += int(rej[i]
+                                                  and rej_win[i] == j)
+                else:
+                    replicas[j].windows_preempted += 1
+        if (mask & had).any():
+            for rep in replicas:
+                rep.busy_ticks += 1
+                rep.busy_seconds += wall_s
 
     # ------------------------------------------------------------ event log
     def _log_tick(self, tick, unfinished, had, rej, rej_win, alive_win,

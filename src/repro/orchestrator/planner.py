@@ -1,0 +1,207 @@
+"""Eq.-1 speculation-parallelism planner: measured latencies → SP degree.
+
+Paper Eq. (1) sizes the target-server pool so a verification task never
+queues:  ceil(t_target / (lookahead · t_drafter)) <= SP.  The drafter
+finishes a lookahead-window every ``L · t_drafter`` seconds and each
+window occupies a verifier for ``t_target`` seconds, so the pool must
+absorb one new task per window interval; the smallest R satisfying Eq. 1
+is also the *useful* degree — more replicas than verification tasks in
+flight can never start earlier (``core/planner.py`` carries the static
+closed forms; this module adds the online half).
+
+``SPPlanner`` owns the measurement loop the static planner assumes away:
+``calibrate`` times the live models' jitted forwards (one ``verify_chunk``
+over a lookahead window for the target, single-token ``decode_step``s for
+the drafter) post-compilation and folds the medians into EMAs; the probe
+functions and caches are built once and reused, so the serving engine
+re-calibrates every round — a handful of tiny forwards — and the
+estimates keep tracking the live system. Deliberately NOT used as a
+signal: the orchestrator tick's wall-clock. The fused SPMD tick runs the
+draft scan and the verify forward unconditionally (bubble lanes compute
+and discard), so tick time cannot be decomposed into per-model latencies
+— it lands on ``ReplicaStats.busy_seconds`` as telemetry only.
+
+``plan_sp`` is the pure decision rule, and it is pinned by
+``tests/test_planner.py`` to the discrete-event simulator
+(``core/dsi_sim.simulate_dsi_pool``): on any accept trace, serving at the
+planned degree is never slower than ``sp_degree=1``, and at the Eq.-1
+degree block tasks never wait for a free server. ``ServingEngine``
+consults the planner once per serving round (the SP degree is baked into
+the jitted tick's shapes), bounded by the replica budget the operator
+provides (``--sp-degree``); ``launch/serve.py --planner auto`` wires it
+end-to-end (docs/orchestrator.md §7).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dsi_sim import simulate_dsi_pool
+from repro.core.planner import min_sp
+
+
+@dataclass
+class LatencyEMA:
+    """Exponential moving average over noisy latency samples (host wall
+    clock). ``value`` is None until the first update."""
+    alpha: float = 0.25
+    value: Optional[float] = None
+    n: int = 0
+
+    def update(self, x: float) -> float:
+        x = float(x)
+        self.value = x if self.value is None \
+            else self.alpha * x + (1.0 - self.alpha) * self.value
+        self.n += 1
+        return self.value
+
+
+def plan_sp(target_latency: float, drafter_latency: float,
+            lookahead: int, max_sp: int) -> int:
+    """Eq.-1 SP degree for measured latencies, clamped to the replica
+    budget: the smallest R with ceil(t_target / (L · t_drafter)) <= R.
+
+    Smaller R under-provisions (block-verify tasks queue on the pool and
+    the queueing delay eats the speculation overlap); larger R buys
+    nothing (Eq. 1 already guarantees a free server at every spawn).
+    """
+    assert target_latency > 0 and drafter_latency > 0
+    assert lookahead >= 1 and max_sp >= 1
+    return max(1, min(max_sp,
+                      min_sp(target_latency, drafter_latency, lookahead)))
+
+
+def predicted_latency(target_latency: float, drafter_latency: float,
+                      acceptance: float, lookahead: int, sp: int,
+                      n_tokens: int, *, seed: int = 0,
+                      accept: Optional[Sequence[bool]] = None) -> float:
+    """End-to-end latency the pool simulator predicts for one candidate
+    degree — the objective ``plan_sp`` optimizes, exposed so tests can pin
+    the planner to ``simulate_dsi_pool`` on shared accept traces."""
+    return simulate_dsi_pool(target_latency, drafter_latency, acceptance,
+                             lookahead, sp, n_tokens, seed=seed,
+                             accept=accept).latency
+
+
+class SPPlanner:
+    """Online Eq.-1 planner: EMA latency estimates + the pure decision
+    rule. One instance persists across serving rounds (``ServingEngine``
+    keeps it on the engine), so estimates keep refining as traffic
+    flows."""
+
+    def __init__(self, alpha: float = 0.25):
+        self.t_target = LatencyEMA(alpha)
+        self.t_drafter = LatencyEMA(alpha)
+        self.calibrations = 0
+        self.last_plan: Optional[int] = None
+        self._probe_key: Optional[tuple] = None
+        self._probes: Optional[tuple] = None   # (verify, decode, caches...)
+
+    # ----------------------------------------------------------- measure
+    @property
+    def measured(self) -> bool:
+        return (self.t_target.value is not None
+                and self.t_drafter.value is not None)
+
+    @property
+    def latency_ratio(self) -> float:
+        """Measured t_target / t_drafter — the paper's f/f' knob; 0 when
+        unmeasured."""
+        if not self.measured or self.t_drafter.value <= 0:
+            return 0.0
+        return self.t_target.value / self.t_drafter.value
+
+    def observe(self, target_s: Optional[float] = None,
+                drafter_s: Optional[float] = None) -> None:
+        """Fold direct latency samples (seconds per forward) into the
+        EMAs."""
+        if target_s is not None:
+            self.t_target.update(target_s)
+        if drafter_s is not None:
+            self.t_drafter.update(drafter_s)
+
+    def _probe_fns(self, target, drafter, params_t, params_d,
+                   lookahead: int, prompt_len: int):
+        """Build (once) and cache the jitted probe closures + prefilled
+        caches: repeated calibrations re-time the same compiled forwards,
+        so re-planning every serving round costs a handful of tiny
+        forwards, not recompilation."""
+        key = (id(target), id(drafter), lookahead, prompt_len)
+        if self._probe_key != key:
+            max_len = prompt_len + 2 * lookahead + 2
+            tokens = jnp.zeros((1, prompt_len), jnp.int32)
+            _, t_cache = target.prefill(params_t, {"tokens": tokens},
+                                        max_len=max_len,
+                                        window_headroom=lookahead)
+            _, d_cache = drafter.prefill(params_d, {"tokens": tokens},
+                                         max_len=max_len,
+                                         window_headroom=lookahead)
+            window = jnp.zeros((1, lookahead), jnp.int32)
+            tok1 = tokens[:, :1]
+            verify = jax.jit(lambda p, c, t: target.verify_chunk(p, c, t))
+            decode = jax.jit(lambda p, c, t: drafter.decode_step(p, c, t))
+            self._probes = (verify, decode, t_cache, d_cache, window, tok1)
+            self._probe_key = key
+        return self._probes
+
+    def calibrate(self, target, drafter, params_t, params_d, *,
+                  lookahead: int, prompt_len: int = 8,
+                  reps: int = 3) -> Tuple[float, float]:
+        """Time the live models' jitted forwards and fold the medians into
+        the EMAs: the target's ``verify_chunk`` over one lookahead window
+        (Eq. 1's t_target is the per-*task* latency, and a task verifies a
+        window) and ``lookahead`` single-token drafter ``decode_step``s.
+        Compilation happens on a warmup pass and is excluded; probes are
+        cached, so calling this every serving round is cheap online
+        refinement."""
+        verify, decode, t_cache, d_cache, window, tok1 = self._probe_fns(
+            target, drafter, params_t, params_d, lookahead, prompt_len)
+        jax.block_until_ready(verify(params_t, t_cache, window))   # warmup
+        jax.block_until_ready(decode(params_d, d_cache, tok1))
+
+        t_samples = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(verify(params_t, t_cache, window))
+            t_samples.append(time.perf_counter() - t0)
+        d_samples = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for _ in range(lookahead):
+                jax.block_until_ready(decode(params_d, d_cache, tok1))
+            d_samples.append((time.perf_counter() - t0) / lookahead)
+        t_t = sorted(t_samples)[len(t_samples) // 2]
+        t_d = sorted(d_samples)[len(d_samples) // 2]
+        # a drafter slower than the target breaks Eq. 1's premise (and
+        # simulate_dsi_pool's); clamp so the plan degrades to SP=1
+        t_d = min(t_d, t_t)
+        self.observe(target_s=t_t, drafter_s=t_d)
+        self.calibrations += 1
+        return t_t, t_d
+
+    # -------------------------------------------------------------- plan
+    def sp_degree(self, lookahead: int, max_sp: int) -> int:
+        """Planned SP degree for the current estimates (1 until
+        measured)."""
+        if not self.measured:
+            self.last_plan = 1
+        else:
+            self.last_plan = plan_sp(self.t_target.value,
+                                     self.t_drafter.value,
+                                     lookahead, max_sp)
+        return self.last_plan
+
+    def as_dict(self) -> dict:
+        return {
+            "t_target_s": self.t_target.value,
+            "t_drafter_s": self.t_drafter.value,
+            "latency_ratio": round(self.latency_ratio, 3),
+            "samples": {"target": self.t_target.n,
+                        "drafter": self.t_drafter.n},
+            "calibrations": self.calibrations,
+            "last_plan": self.last_plan,
+        }

@@ -1,2 +1,7 @@
+"""Serving layer: the continuous-batching ``ServingEngine`` (slot table
+over the DSI macro-step / SP orchestrator tick), the OS-thread-pool
+online orchestrator of the paper's §4 methodology, and the
+``serve_queue`` telemetry front-end. See docs/serving.md and
+docs/architecture.md."""
 from repro.serving.engine import ServingEngine, Request  # noqa: F401
 from repro.serving.servers import DSIOrchestrator, serve_queue  # noqa: F401

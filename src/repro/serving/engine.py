@@ -12,15 +12,25 @@ Modes:
             mid-flight via per-slot prefill, so one jitted step advances
             up to ``max_batch`` heterogeneous requests at once — the
             paper's latency path at serving throughput (docs/serving.md).
-            ``sp_degree > 1`` swaps the slot table for the speculation-
-            parallel ``SPOrchestrator`` (docs/orchestrator.md): R verifier
-            replicas decide R draft windows per jitted tick, the queue is
-            bucketed by prompt length (lockstep generate), and per-replica
-            ``ReplicaStats`` accumulate on ``replica_stats``.
+            ``sp_degree > 1`` swaps DSIEngine's macro-step for the
+            speculation-parallel ``SPOrchestrator`` tick
+            (docs/orchestrator.md) over the *same* slot-table scheduler:
+            R verifier replicas decide R draft windows per jitted tick,
+            requests admit into and retire out of the running tick
+            (``admission="continuous"``, the default; ``"drain"`` keeps
+            the legacy prompt-length-bucketed lockstep batches as a
+            benchmark comparator), and per-replica ``ReplicaStats``
+            accumulate on ``replica_stats``. ``planner`` enables the
+            online Eq.-1 planner (orchestrator/planner.py): measured
+            target/drafter latencies pick the SP degree per serving
+            round, bounded by ``sp_degree`` as the replica budget.
 
 Per-request ``EngineStats`` (macro-steps, acceptance rate, bubbles) are
 attached to each Request; ``engine_invocations`` counts jitted engine
-steps across the whole run (the serving cost unit).
+steps across the whole run (the serving cost unit). Slot-table and cache
+geometry are bucketed (``_geom_bucket``) so successive serving rounds
+with similar workloads reuse the engines' jitted tick/admit instead of
+recompiling.
 """
 from __future__ import annotations
 
@@ -75,6 +85,17 @@ class ServingEngine:
     # spec-axis mesh shards each verification block one window per slice
     sp_degree: int = 1
     mesh: Optional[object] = None
+    # SP admission policy: "continuous" admits/retires into the running
+    # tick (slot table over the orchestrator); "drain" is the legacy
+    # drain-then-refill lockstep path (prompt-length buckets), kept as
+    # the steady-state-throughput comparator (bench_orchestrator.py)
+    admission: str = "continuous"
+    # Eq.-1 planner (orchestrator/planner.py): "auto" or an SPPlanner
+    # instance picks the SP degree from measured latencies each serving
+    # round, with ``sp_degree`` as the replica budget (a spec mesh pins
+    # the degree to its topology instead). None = fixed sp_degree.
+    planner: Optional[object] = None
+    planned_sp: Optional[int] = None      # last planner decision
     replica_stats: Optional[list] = None  # per-replica, merged across runs
     engine_invocations: int = 0  # jitted engine steps across run() calls
     prefill_tokens: int = 0      # prompt tokens pushed through prefill
@@ -82,6 +103,7 @@ class ServingEngine:
     _queue: List[Request] = field(default_factory=list)
     _rid: itertools.count = field(default_factory=itertools.count)
     _engine: Optional[object] = None  # cached jitted engine across run()s
+    _sp_engines: Dict[int, object] = field(default_factory=dict)
 
     def submit(self, prompt: List[int], max_new: int,
                extra_inputs: Optional[Dict[str, jnp.ndarray]] = None
@@ -108,8 +130,11 @@ class ServingEngine:
     # --------------------------------------------------------------- run
     def run(self) -> List[Request]:
         done: List[Request] = []
-        if self.mode == "dsi" and self.sp_degree > 1:
-            return self._run_dsi_sp()
+        if self.mode == "dsi" and (self.sp_degree > 1
+                                   or self.planner is not None):
+            if self.admission == "drain":
+                return self._run_dsi_sp_drain()
+            return self._run_sp_slots()
         if self.mode == "dsi":
             return self._run_dsi_slots()
         if self.mode == "nonsi":
@@ -125,37 +150,63 @@ class ServingEngine:
 
     # ----------------------------------------------- continuous batching
     def _run_dsi_slots(self) -> List[Request]:
-        """Slot-table scheduler over DSIEngine's batched macro-step.
+        """Slot-table scheduler over DSIEngine's batched macro-step (see
+        ``_run_slot_table`` — this is its R=1 instantiation)."""
+        return self._run_slot_table(self._spec_engine(DSIEngine))
+
+    def _run_slot_table(self, eng, *, sp: int = 1, bucket: bool = False,
+                        replicas=None) -> List[Request]:
+        """The slot-table continuous-batching scheduler, shared by the
+        DSIEngine macro-step (sp=1) and the SPOrchestrator tick (sp=R)
+        through their common ``init_slots``/``admit``/``step``/``retire``
+        API.
 
         A fixed table of ``max_batch`` streams advances in one jitted step
-        per iteration; finished streams retire and waiting requests are
-        admitted into their slots mid-flight (per-slot prefill), so the
-        target/drafter never idle while work is queued.
+        per iteration; finished streams retire the step they complete
+        (partial-tick commit) and waiting requests are admitted into
+        their slots mid-flight (per-slot prefill), so the target/drafter
+        never idle while work is queued.
 
         Paged mode adds a `CacheManager` between queue and slots:
         admission reserves refcounted pages (reusing shared prompt-prefix
-        pages for target *and* drafter) and can *defer* — a request stays
+        pages for target *and* drafter; ring headroom sized for the full
+        sp·lookahead speculative block) and can *defer* — a request stays
         queued under memory pressure until a retiring stream releases
-        pages, instead of corrupting live streams."""
+        pages, instead of corrupting live streams.
+
+        ``bucket`` rounds cache/output geometry up to quanta so repeated
+        rounds reuse the jitted tick; ``replicas`` (SP path) receives
+        per-replica accounting, with tick wall-clock recorded as
+        ``busy_seconds`` telemetry (skipping the first tick of a round,
+        which may pay the jit compile — and never fed to the planner: a
+        fused tick's wall cannot be decomposed into per-model
+        latencies)."""
         assert self.drafter is not None and self.params_d is not None
         if not self._queue:
             return []
-        eng = self._spec_engine(DSIEngine)
+        import time as _time
+
         w = self.lookahead
+        wn = w * sp
         n_slots = min(self.max_batch, len(self._queue))
-        cap = max(r.max_new for r in self._queue) + w + 1
+        cap = max(r.max_new for r in self._queue) + wn + 1
         max_len = self.max_len or (max(len(r.prompt) for r in self._queue)
                                    + max(r.max_new for r in self._queue)
-                                   + 2 * w + 2)
+                                   + 2 * wn + 2)
+        if bucket:
+            cap = self._geom_bucket(cap)
+            if self.max_len is None:
+                max_len = self._geom_bucket(max_len)
         state = eng.init_slots(n_slots, cap, max_len)
         mgr = None
         if self.paged is not None:
             mgr = CacheManager(self.target, self.drafter, self.paged,
                                n_slots=n_slots, max_len=max_len,
-                               lookahead=w,
+                               lookahead=w, sp=sp,
                                prefix_sharing=self.prefix_sharing)
             self.cache_manager = mgr
 
+        first_tick = True
         slots: List[Optional[Request]] = [None] * n_slots
         slot_stats: List[Optional[EngineStats]] = [None] * n_slots
         done: List[Request] = []
@@ -202,11 +253,18 @@ class ServingEngine:
                     else:
                         self.prefill_tokens += 2 * len(req.prompt)
 
+            live = np.asarray([r is not None for r in slots])
+            t0 = _time.perf_counter()
             state = eng.step(self.params_t, self.params_d, state)
             self.engine_invocations += 1
             n_acc = np.asarray(state["n_acc"])
             rej = np.asarray(state["rejected"])
             n_out = np.asarray(state["n_out"])
+            if replicas is not None:
+                wall = _time.perf_counter() - t0   # host-synced via reads
+                eng.record_replica_tick(replicas, state, live,
+                                        wall_s=0.0 if first_tick else wall)
+            first_tick = False
             retired = [b for b, req in enumerate(slots)
                        if req is not None and n_out[b] >= req.max_new]
             out = np.asarray(state["out"]) if retired else None
@@ -254,22 +312,84 @@ class ServingEngine:
                 for k in batch[0].extra_inputs}
 
     # ------------------------------------------- speculation parallelism
-    def _run_dsi_sp(self) -> List[Request]:
-        """Serve the queue through the SP orchestrator: R verifier
-        replicas per batch, queue bucketed by prompt length (the lockstep
-        ``generate`` path needs equal-length prompts per batch; content
-        and per-stream max_new stay heterogeneous). Per-request stats are
-        the orchestrator's per-stream EngineStats; per-replica stats
-        merge across batches into ``self.replica_stats``."""
-        assert self.drafter is not None and self.params_d is not None
+    @staticmethod
+    def _geom_bucket(n: int, quantum: int = 64) -> int:
+        """Round table geometry (cache length, output capacity) up to a
+        quantum so successive serving rounds with similar workloads hit
+        the same jitted tick/admit compilation instead of recompiling per
+        queue (the SP tick is the expensive compile: R·W-wide block
+        verify plus the drafter scan)."""
+        from repro.cache import round_up
+        return round_up(max(n, 1), quantum)
+
+    def _resolve_sp(self) -> int:
+        """SP degree for this serving round: the Eq.-1 planner's pick
+        (bounded by ``sp_degree`` as the replica budget) when a planner
+        is configured, else the fixed ``sp_degree``. A spec mesh pins the
+        degree to its topology — the jitted tick shards one window per
+        mesh slice, so the planner must not deviate from it."""
+        if self.planner is None or self.mesh is not None:
+            return self.sp_degree
+        from repro.orchestrator import SPPlanner
+        if not isinstance(self.planner, SPPlanner):
+            self.planner = SPPlanner()
+        # every round: the probes are cached post-compile, so this is a
+        # handful of tiny forwards — genuine online refinement (the fused
+        # tick's wall-clock is NOT a usable signal; see planner docstring)
+        self.planner.calibrate(self.target, self.drafter, self.params_t,
+                               self.params_d, lookahead=self.lookahead)
+        self.planned_sp = self.planner.sp_degree(self.lookahead,
+                                                 max_sp=self.sp_degree)
+        return self.planned_sp
+
+    def _sp_engine(self, sp: int):
+        """One orchestrator per SP degree, cached across run() calls so
+        planner oscillation between degrees never recompiles a tick that
+        was already built."""
         from repro.orchestrator import SPOrchestrator
-        if self._engine is None or not isinstance(self._engine,
-                                                  SPOrchestrator):
-            self._engine = SPOrchestrator(
+        eng = self._sp_engines.get(sp)
+        if eng is None:
+            eng = SPOrchestrator(
                 self.target, self.drafter, lookahead=self.lookahead,
-                sp=self.sp_degree, rule=self.rule, paged=self.paged,
+                sp=sp, rule=self.rule, paged=self.paged,
                 mesh=self.mesh, history_cap=self.history_cap)
-        eng = self._engine
+            self._sp_engines[sp] = eng
+        return eng
+
+    def _run_sp_slots(self) -> List[Request]:
+        """Continuous-batching serving over the SP orchestrator tick: the
+        shared slot-table scheduler (``_run_slot_table``) driving
+        ``SPOrchestrator.init_slots``/``admit``/``step``/``retire``.
+        Requests admit into and retire out of the *running* tick —
+        admission prefills one stream (B=1, any prompt length) and
+        scatters it into a free slot while the other slots keep their
+        R-window pipeline; a finished stream leaves at the tick it
+        completes (partial-tick commit) instead of idling until its
+        lockstep batch drains. Paged mode reuses the `CacheManager`
+        admission protocol with SP-sized scratch-tail headroom. Tick
+        wall-clock lands on per-replica ``busy_seconds`` (telemetry);
+        the Eq.-1 planner re-calibrates its latency EMAs from cached
+        probe forwards at the top of each round instead."""
+        if not self._queue:
+            return []
+        from repro.orchestrator import ReplicaStats
+        sp = self._resolve_sp()
+        replicas = [ReplicaStats(j) for j in range(sp)]
+        done = self._run_slot_table(self._sp_engine(sp), sp=sp, bucket=True,
+                                    replicas=replicas)
+        self._merge_replica_stats(replicas)
+        return done
+
+    def _run_dsi_sp_drain(self) -> List[Request]:
+        """Legacy drain-then-refill SP serving: queue bucketed by prompt
+        length, each bucket run to completion through the lockstep
+        ``generate`` path (equal-length prompts per batch; content and
+        per-stream max_new stay heterogeneous — streams that finish
+        early idle until the batch drains). Kept as the steady-state
+        comparator for continuous admission
+        (benchmarks/bench_orchestrator.py)."""
+        assert self.drafter is not None and self.params_d is not None
+        eng = self._sp_engine(self._resolve_sp())
         done: List[Request] = []
         for batch in self._bucketed_batches():
             toks = jnp.asarray([r.prompt for r in batch], jnp.int32)
@@ -288,14 +408,22 @@ class ServingEngine:
         return done
 
     def _merge_replica_stats(self, replicas) -> None:
+        if not replicas:
+            return
         if self.replica_stats is None:
-            self.replica_stats = [type(r)(r.replica) for r in replicas]
+            self.replica_stats = []
+        # a planner may change the SP degree between runs: grow the
+        # aggregate list to the widest degree seen
+        while len(self.replica_stats) < len(replicas):
+            self.replica_stats.append(
+                type(replicas[0])(len(self.replica_stats)))
         for agg, r in zip(self.replica_stats, replicas):
             agg.windows_verified += r.windows_verified
             agg.windows_preempted += r.windows_preempted
             agg.tokens_accepted += r.tokens_accepted
             agg.rejections += r.rejections
             agg.busy_ticks += r.busy_ticks
+            agg.busy_seconds += r.busy_seconds
 
     def _spec_engine(self, cls):
         """One engine per ServingEngine: its jit cache persists across

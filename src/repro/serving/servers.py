@@ -76,6 +76,13 @@ class OnlineStats:
 
 
 class DSIOrchestrator:
+    """Thread-pool DSI orchestrator over abstract target/drafter servers
+    (module docstring above): the drafter runs on the calling thread,
+    block-verify tasks go to the SP-sized pool, rejections cancel all
+    outstanding work beyond the corrected position. The lookahead
+    defaults to the minimal Eq.-1-feasible value for the given
+    latencies."""
+
     def __init__(self, target_fn: TargetFn, drafter_fn: DrafterFn, *,
                  sp: int, lookahead: Optional[int] = None,
                  target_latency: Optional[float] = None,

@@ -505,3 +505,49 @@ def test_shared_prefix_pages_read_only_view():
     for _, pg in tails:
         tail_pages |= set(pg.tolist())
     assert not tail_pages & set(prefix.tolist())
+
+
+def test_cache_manager_sp_scratch_tails(models):
+    """CacheManager(sp=R) sizes geometry for the R·W speculative block
+    and exposes the per-replica scratch-tail layout: slots pairwise
+    disjoint always; logical pages pairwise disjoint exactly when the
+    page size divides the lookahead (`scratch_page_aligned`) AND the
+    committed frontier is page-aligned — at an arbitrary frontier
+    neighboring tails share the straddled boundary page, which
+    `scratch_tails_disjoint` reports (docs/orchestrator.md §5)."""
+    from repro.cache import scratch_tails_disjoint
+    from repro.cache.manager import CacheManager
+    cfg, mt, md, pt, pd = models
+    mgr = CacheManager(mt, md, PagedSpec(page_size=4), n_slots=2,
+                       max_len=64, lookahead=4, sp=2)
+    assert mgr.block == 8 and mgr.slack == 2 * 8 + 2
+    assert mgr.scratch_page_aligned
+    tails = mgr.scratch_tails("t", 0, pos=8)
+    assert len(tails) == 2
+    (s0, p0), (s1, p1) = tails
+    assert s0.tolist() == [8, 9, 10, 11] and s1.tolist() == [12, 13, 14, 15]
+    assert not set(s0.tolist()) & set(s1.tolist())
+    assert scratch_tails_disjoint(tails)
+
+    # aligned geometry but unaligned frontier: the first/second tails
+    # straddle a shared boundary page — the static flag alone must not
+    # be read as independence at every pos
+    unaligned = mgr.scratch_tails("t", 0, pos=10)
+    (s0, p0), (s1, p1) = unaligned
+    assert not set(s0.tolist()) & set(s1.tolist())   # slots still disjoint
+    assert not scratch_tails_disjoint(unaligned)
+    assert set(p0.tolist()) & set(p1.tolist()) == {3}
+
+    # lookahead not a page multiple: unaligned at every frontier
+    mgr2 = CacheManager(mt, md, PagedSpec(page_size=4), n_slots=2,
+                       max_len=64, lookahead=3, sp=2)
+    assert not mgr2.scratch_page_aligned
+    assert not scratch_tails_disjoint(mgr2.scratch_tails("t", 0, pos=8))
+
+    # geometry congruence: the manager's SP-sized pools match what the
+    # orchestrator's init_slots builds for the same table
+    for (mk, si), (clen_p, n_pages, windowed) in mgr.geom.items():
+        model = mgr.models[mk]
+        geo = dict((s, (c, n, w)) for s, c, n, w in
+                   model.paged_geometry(64, 4, window_headroom=8))
+        assert geo[si] == (clen_p, n_pages, windowed)

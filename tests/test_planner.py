@@ -1,0 +1,202 @@
+"""Eq.-1 planner suite: the pure decision rule pinned to the
+discrete-event pool simulator (core/dsi_sim.simulate_dsi_pool), the
+online EMA plumbing, live-model calibration, and planner-driven serving.
+
+``hypothesis`` is optional (CI deliberately omits it): the deterministic
+grid tests at the bottom pin every property on fixed random traces.
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.core.dsi_sim import simulate_dsi_pool
+from repro.core.planner import max_useful_sp, min_sp
+from repro.models.model import Model
+from repro.orchestrator import LatencyEMA, SPPlanner, plan_sp, predicted_latency
+from repro.serving.engine import ServingEngine
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _trace(seed: int, n: int, p: float):
+    rng = np.random.default_rng(seed)
+    return (rng.random(n) < p).tolist()
+
+
+# ---------------------------------------------------------------------------
+# Shared assertion bodies (hypothesis and grid tests call the same code).
+# ---------------------------------------------------------------------------
+
+def check_plan_satisfies_eq1(t_t, t_d, la, max_sp):
+    """The planned degree satisfies Eq. 1 whenever the budget allows it,
+    and never exceeds either the budget or the useful maximum."""
+    sp = plan_sp(t_t, t_d, la, max_sp)
+    assert 1 <= sp <= max_sp
+    need = min_sp(t_t, t_d, la)
+    if need <= max_sp:
+        assert sp == need, (sp, need)                 # Eq. 1 holds exactly
+        assert math.ceil(t_t / (la * t_d)) <= sp
+    else:
+        assert sp == max_sp                           # budget-clamped
+    assert sp <= max(max_useful_sp(t_t, t_d), 1)
+
+
+def check_plan_never_slower_than_sp1(trace, t_t, t_d, la, max_sp, n):
+    """On any accept trace, serving at the planned degree is never slower
+    than sp=1 in the pool simulator — the planner converts replicas into
+    latency reduction, monotonically."""
+    sp = plan_sp(t_t, t_d, la, max_sp)
+    lat_planned = predicted_latency(t_t, t_d, 0.0, la, sp, n,
+                                    accept=list(trace))
+    lat_sp1 = predicted_latency(t_t, t_d, 0.0, la, 1, n, accept=list(trace))
+    assert lat_planned <= lat_sp1 + 1e-9, (sp, lat_planned, lat_sp1)
+
+
+def check_predicted_latency_pins_simulator(trace, t_t, t_d, la, sp, n):
+    """predicted_latency IS simulate_dsi_pool's latency — the planner's
+    objective and the paper-level simulator can never drift apart."""
+    ref = simulate_dsi_pool(t_t, t_d, 0.0, la, sp, n,
+                            accept=list(trace)).latency
+    assert abs(predicted_latency(t_t, t_d, 0.0, la, sp, n,
+                                 accept=list(trace)) - ref) < 1e-12
+
+
+# ------------------------------------------------------------- hypothesis
+if HAVE_HYPOTHESIS:
+    lat = st.floats(min_value=1e-3, max_value=10.0,
+                    allow_nan=False, allow_infinity=False)
+
+    @settings(max_examples=60, deadline=None)
+    @given(t_t=lat, t_d=lat, la=st.integers(1, 16), max_sp=st.integers(1, 16))
+    def test_hyp_plan_satisfies_eq1(t_t, t_d, la, max_sp):
+        t_d = min(t_d, t_t)          # drafters are faster (Eq. 1 premise)
+        check_plan_satisfies_eq1(t_t, t_d, la, max_sp)
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2**20), p=st.floats(0.0, 1.0),
+           t_t=lat, t_d=lat, la=st.integers(1, 8),
+           max_sp=st.integers(1, 8), n=st.integers(1, 40))
+    def test_hyp_plan_never_slower_than_sp1(seed, p, t_t, t_d, la, max_sp, n):
+        t_d = min(t_d, t_t)
+        trace = _trace(seed, 4 * n, p)
+        check_plan_never_slower_than_sp1(trace, t_t, t_d, la, max_sp, n)
+
+
+# ------------------------------------------------------ deterministic grid
+@pytest.mark.parametrize("t_t,t_d,la,max_sp", [
+    (1.0, 0.1, 1, 16), (1.0, 0.1, 4, 16), (1.0, 0.1, 4, 2),
+    (1.0, 1.0, 4, 8), (0.5, 0.05, 2, 8), (2.0, 0.3, 3, 4),
+    (1.0, 0.001, 1, 4),
+])
+def test_plan_satisfies_eq1_grid(t_t, t_d, la, max_sp):
+    check_plan_satisfies_eq1(t_t, t_d, la, max_sp)
+
+
+@pytest.mark.parametrize("seed,p", [(0, 0.0), (1, 0.5), (2, 0.9), (3, 1.0)])
+@pytest.mark.parametrize("la,max_sp", [(1, 8), (4, 4), (2, 16)])
+def test_plan_never_slower_than_sp1_grid(seed, p, la, max_sp):
+    trace = _trace(seed, 120, p)
+    check_plan_never_slower_than_sp1(trace, 1.0, 0.1, la, max_sp, 30)
+
+
+@pytest.mark.parametrize("sp", [1, 2, 4])
+def test_predicted_latency_pins_simulator(sp):
+    check_predicted_latency_pins_simulator(_trace(7, 80, 0.7),
+                                           1.0, 0.2, 4, sp, 20)
+
+
+def test_plan_sp_tracks_latency_ratio():
+    """Faster drafters (higher t_t/t_d) demand more replicas; the planned
+    degree is monotone in the ratio and hits the Eq.-1 closed form."""
+    la = 2
+    plans = [plan_sp(1.0, d, la, 64) for d in (1.0, 0.5, 0.25, 0.125, 0.0625)]
+    assert plans == sorted(plans)
+    assert plans[0] == 1                    # t_t == t_d: one replica
+    assert plans[-1] == math.ceil(1.0 / (la * 0.0625))
+
+
+# ------------------------------------------------------------ EMA plumbing
+def test_latency_ema_converges_and_counts():
+    ema = LatencyEMA(alpha=0.5)
+    assert ema.value is None
+    for _ in range(20):
+        ema.update(2.0)
+    assert abs(ema.value - 2.0) < 1e-9 and ema.n == 20
+
+
+def test_planner_unmeasured_defaults_to_sp1():
+    pl = SPPlanner()
+    assert not pl.measured
+    assert pl.sp_degree(4, max_sp=8) == 1
+    assert pl.as_dict()["last_plan"] == 1
+
+
+def test_planner_observe_feeds_emas_and_plan():
+    """Direct latency samples feed the EMAs and the resulting plan
+    matches the pure rule on those estimates."""
+    pl = SPPlanner(alpha=1.0)               # no smoothing: exact values
+    pl.observe(target_s=2.0, drafter_s=0.1)
+    assert pl.measured
+    assert abs(pl.t_target.value - 2.0) < 1e-9
+    assert abs(pl.t_drafter.value - 0.1) < 1e-9
+    assert pl.sp_degree(4, max_sp=16) == plan_sp(2.0, 0.1, 4, 16)    # unchanged
+
+
+# ------------------------------------------------- live-model calibration
+@pytest.fixture(scope="module")
+def models():
+    cfg_t = tiny("yi-9b")
+    cfg_d = tiny("yi-9b", d_model=128)
+    mt, md = Model(cfg_t), Model(cfg_d)
+    pt = mt.init(jax.random.PRNGKey(0))
+    pd = md.init(jax.random.PRNGKey(1))
+    return cfg_t, mt, md, pt, pd
+
+
+def test_calibrate_measures_live_models(models):
+    cfg, mt, md, pt, pd = models
+    pl = SPPlanner()
+    t_t, t_d = pl.calibrate(mt, md, pt, pd, lookahead=4, reps=2)
+    assert t_t > 0 and t_d > 0
+    assert t_d <= t_t + 1e-12               # clamped to Eq. 1's premise
+    assert pl.measured and pl.calibrations == 1
+    assert 1 <= pl.sp_degree(4, max_sp=4) <= 4
+    # probes are cached: re-calibration reuses the compiled forwards and
+    # keeps refining the EMAs (the serving engine does this every round)
+    probes = pl._probes
+    pl.calibrate(mt, md, pt, pd, lookahead=4, reps=2)
+    assert pl.calibrations == 2 and pl._probes is probes
+    assert pl.t_target.n >= 2 and pl.t_drafter.n >= 2
+
+
+def test_serving_planner_auto_lossless_and_bounded(models):
+    """--planner auto end-to-end: planner-served outputs equal fixed
+    sp_degree serving token-for-token and the decision respects the
+    replica budget."""
+    cfg, mt, md, pt, pd = models
+    rs = np.random.default_rng(0)
+    reqs = [(rs.integers(0, cfg.vocab_size,
+                         size=int(rs.integers(6, 10))).tolist(),
+             int(rs.integers(4, 8))) for _ in range(3)]
+
+    def run(**kw):
+        eng = ServingEngine(target=mt, params_t=pt, drafter=md, params_d=pd,
+                            mode="dsi", lookahead=4, max_batch=2, **kw)
+        for p, m in reqs:
+            eng.submit(p, m)
+        return eng, eng.run()
+
+    _, done_ref = run(sp_degree=2)
+    eng_pl, done_pl = run(sp_degree=2, planner="auto")
+    by_rid = {r.rid: r.output for r in done_ref}
+    assert all(r.output == by_rid[r.rid] for r in done_pl)
+    assert eng_pl.planned_sp is not None and 1 <= eng_pl.planned_sp <= 2
+    assert isinstance(eng_pl.planner, SPPlanner)
+    assert eng_pl.planner.as_dict()["last_plan"] == eng_pl.planned_sp

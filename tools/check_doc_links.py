@@ -1,0 +1,140 @@
+#!/usr/bin/env python3
+"""Relative-link and anchor checker for the repo docs.
+
+Scans ``README.md`` and every ``docs/*.md`` for markdown links, verifies
+that
+
+  * relative link targets exist on disk (files or directories),
+  * ``#anchor`` fragments resolve to a heading in the target file, using
+    GitHub's heading → anchor slug rules (lowercase, punctuation
+    stripped, spaces → hyphens, duplicate slugs suffixed ``-1``, ...),
+  * no link is wrapped between ``]`` and ``(`` — CommonMark does not
+    allow a line break there, so such a "link" silently renders as plain
+    text (this repo's ~72-column wrapping makes that an easy mistake;
+    the whole file is scanned as one text precisely so wrapped links are
+    *seen* rather than skipped).
+
+External links (http/https/mailto) are ignored — CI must not depend on
+the network. Exits non-zero with a ``file:line`` report per broken link,
+so it can gate in ``.github/workflows/ci.yml``.
+
+    python tools/check_doc_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+#: inline markdown links [text](target); images ![alt](target) share the
+#: pattern. Link *text* may wrap lines (legal); the gap group catches an
+#: illegal newline between ] and ( — flagged, not silently skipped.
+LINK_RE = re.compile(
+    r"\[[^\]]*\](?P<gap>\s*)\((?P<target>[^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$", re.MULTILINE)
+FENCE_RE = re.compile(r"^(?:```|~~~).*?^(?:```|~~~)\s*?$",
+                      re.MULTILINE | re.DOTALL)
+INLINE_CODE_RE = re.compile(r"`[^`\n]*`")
+
+
+def github_slug(heading: str, seen: dict) -> str:
+    """GitHub's anchor slug for a heading line: markdown markers dropped
+    but their *text* kept (inline-code content stays — `` `a/b.py` `` →
+    ``abpy``), lowercased, punctuation dropped (underscores survive:
+    they are word characters in GitHub slugs), spaces → hyphens,
+    duplicates suffixed ``-1``/``-2``/…"""
+    text = re.sub(r"[`*]", "", heading)
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)   # linked headings
+    slug = re.sub(r"[^\w\- ]", "", text.lower(), flags=re.UNICODE)
+    slug = slug.strip().replace(" ", "-")
+    n = seen.get(slug, 0)
+    seen[slug] = n + 1
+    return slug if n == 0 else f"{slug}-{n}"
+
+
+def _strip_code(text: str) -> str:
+    """Blank out fenced blocks and inline code spans, preserving every
+    newline so match offsets still map to line numbers."""
+    def blank(m: re.Match) -> str:
+        return re.sub(r"[^\n]", " ", m.group(0))
+    return INLINE_CODE_RE.sub(blank, FENCE_RE.sub(blank, text))
+
+
+def anchors_of(path: str) -> set:
+    """Anchor slugs of every heading in ``path``. Only *fenced blocks*
+    are blanked before heading extraction — inline code inside a heading
+    contributes its text to the GitHub slug, so it must survive."""
+    seen: dict = {}
+    out = set()
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+
+    def blank(m: re.Match) -> str:
+        return re.sub(r"[^\n]", " ", m.group(0))
+    text = FENCE_RE.sub(blank, text)
+    for m in HEADING_RE.finditer(text):
+        out.add(github_slug(m.group(2), seen))
+    return out
+
+
+def doc_files(root: str):
+    files = [os.path.join(root, "README.md")]
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        files += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                        if f.endswith(".md"))
+    return [f for f in files if os.path.isfile(f)]
+
+
+def check(root: str):
+    errors = []
+    anchor_cache = {}
+    for path in doc_files(root):
+        with open(path, encoding="utf-8") as f:
+            text = _strip_code(f.read())
+        for m in LINK_RE.finditer(text):
+            lineno = text.count("\n", 0, m.start()) + 1
+            target = m.group("target")
+            if "\n" in m.group("gap"):
+                errors.append(
+                    f"{path}:{lineno}: link to '{target}' is wrapped "
+                    f"between ] and ( — CommonMark renders it as plain "
+                    f"text, not a link")
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            ref, _, frag = target.partition("#")
+            base = path if not ref else os.path.normpath(
+                os.path.join(os.path.dirname(path), ref))
+            if ref and not os.path.exists(base):
+                errors.append(f"{path}:{lineno}: broken link "
+                              f"target '{target}'")
+                continue
+            if frag:
+                if not base.endswith(".md"):
+                    continue
+                if base not in anchor_cache:
+                    anchor_cache[base] = anchors_of(base)
+                if frag not in anchor_cache[base]:
+                    errors.append(
+                        f"{path}:{lineno}: broken anchor "
+                        f"'#{frag}' in '{target}' (known: "
+                        f"{', '.join(sorted(anchor_cache[base])) or 'none'})")
+    return errors
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else "."
+    errors = check(root)
+    for e in errors:
+        print(e)
+    n_files = len(doc_files(root))
+    if errors:
+        print(f"FAIL: {len(errors)} broken link(s) across {n_files} docs")
+        return 1
+    print(f"OK: all relative links and anchors resolve "
+          f"({n_files} docs checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
