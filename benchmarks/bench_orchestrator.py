@@ -23,8 +23,16 @@ by construction, asserted), fewer ticks. ``tokens_per_tick`` is the
 deterministic canary — continuous admission must never fall below
 drain-refill.
 
-Writes ``BENCH_orchestrator.json`` (sweep + ``steady_state`` sections)
-for the CI trajectory artifact.
+A third, ``faults`` section measures serving throughput under a
+one-replica-crash schedule through the fault plane (docs/robustness.md):
+the same mixed queue served fault-free vs with ``crash@2:r1:x2``
+injected — quarantine, degradation to R−1, committed-frontier replay.
+Asserted lossless (identical tokens) with a nonzero degradation count;
+``tokens_per_tick`` under the crash quantifies the cost of losing a
+replica mid-run.
+
+Writes ``BENCH_orchestrator.json`` (sweep + ``steady_state`` +
+``faults`` sections) for the CI trajectory artifact.
 
     PYTHONPATH=src python -m benchmarks.bench_orchestrator
     PYTHONPATH=src python -m benchmarks.run --smoke            # CI canary
@@ -118,6 +126,58 @@ def _steady_state(model, params, pd, la: int, smoke: bool) -> dict:
     return rows
 
 
+def _faults(model, params, pd, la: int, smoke: bool) -> dict:
+    """SP continuous serving under a deterministic one-replica-crash
+    schedule vs fault-free: token-identical (asserted — the fault plane's
+    losslessness contract), with the tokens-per-tick delta as the
+    measured cost of quarantining a replica mid-run."""
+    from repro.serving.engine import ServingEngine
+    n_req = 6
+    rng = np.random.default_rng(3)
+    long_new = 16 if smoke else 24
+    reqs = [(rng.integers(0, model.cfg.vocab_size, size=12).tolist(),
+             8 if i % 2 else long_new) for i in range(n_req)]
+    rows = {}
+    outputs = {}
+    for name, faults in (("fault_free", None),
+                         ("one_replica_crash", "crash@2:r1:x2")):
+        eng = ServingEngine(target=model, params_t=params, drafter=model,
+                            params_d=pd, mode="dsi", lookahead=la,
+                            max_batch=2, sp_degree=2, faults=faults)
+        for p, m in reqs:
+            eng.submit(p, m)
+        t0 = time.monotonic()
+        done = eng.run()
+        wall = time.monotonic() - t0
+        toks = sum(len(r.output) for r in done)
+        row = {
+            "requests": n_req,
+            "ticks": eng.engine_invocations,
+            "tokens": toks,
+            "tokens_per_tick": round(toks / eng.engine_invocations, 3),
+            "wall_s": round(wall, 4),
+        }
+        if eng.fault_stats is not None:
+            fs = eng.fault_stats
+            row.update(faults_injected=fs.faults_injected,
+                       retries=fs.retries, degradations=fs.degradations,
+                       quarantines=fs.quarantines, requeued=fs.requeued,
+                       effective_sp=eng.health.effective_sp)
+        rows[name] = row
+        outputs[name] = {r.rid: r.output for r in done}
+    assert outputs["one_replica_crash"] == outputs["fault_free"], \
+        "a replica crash must never change the emitted streams"
+    assert rows["one_replica_crash"]["degradations"] > 0, \
+        "the crash schedule must actually degrade the SP degree"
+    print("name,scenario,requests,ticks,tokens,tokens_per_tick,wall_s,"
+          "degradations")
+    for name, row in rows.items():
+        print(f"faults,{name},{row['requests']},{row['ticks']},"
+              f"{row['tokens']},{row['tokens_per_tick']},{row['wall_s']},"
+              f"{row.get('degradations', 0)}")
+    return rows
+
+
 def main(smoke: bool = False, json_path: Optional[str] = None) -> None:
     from benchmarks.engine_stats import noisy_params
     layers, d_model = (2, 192) if smoke else (4, 256)
@@ -153,6 +213,9 @@ def main(smoke: bool = False, json_path: Optional[str] = None) -> None:
     steady = _steady_state(model, params,
                            noisy_params(params, 0.05, jax.random.PRNGKey(9)),
                            la, smoke)
+    chaos = _faults(model, params,
+                    noisy_params(params, 0.05, jax.random.PRNGKey(9)),
+                    la, smoke)
 
     if json_path:
         out = {
@@ -160,6 +223,7 @@ def main(smoke: bool = False, json_path: Optional[str] = None) -> None:
                          "d_model": d_model, "sp_degrees": list(SP_DEGREES)},
             **regimes,
             "steady_state": steady,
+            "faults": chaos,
         }
         with open(json_path, "w") as f:
             json.dump(out, f, indent=2)

@@ -251,6 +251,12 @@ class EngineStats:
     prefix_hit_tokens: int = 0   # prompt tokens served from shared pages
     pages_allocated: int = 0     # fresh pages this request allocated
     pages_shared: int = 0        # existing pages this request referenced
+    # fault-plane accounting (filled by the serving supervisor; zeros on
+    # fault-free runs — docs/robustness.md)
+    faults: int = 0              # faults observed on ticks this stream rode
+    retries: int = 0             # tick replays this stream rode through
+    degradations: int = 0        # SP-degree drops this request survived
+    deferrals: int = 0           # admissions deferred (CacheOOM pressure)
 
     def record(self, n_acc: int, rejected: bool, n_out: int,
                bubble: Optional[bool] = None) -> None:

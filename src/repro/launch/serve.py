@@ -11,6 +11,13 @@ target/drafter forward latencies and picks the SP degree, bounded by
 
   PYTHONPATH=src python -m repro.launch.serve --mode dsi \
       --sp-degree 4 --planner auto
+
+Chaos serving — inject a deterministic fault schedule into the SP fault
+plane (docs/robustness.md) and watch the run degrade and recover while
+staying token-lossless:
+
+  PYTHONPATH=src python -m repro.launch.serve --mode dsi --sp-degree 2 \
+      --faults 'crash@2:r1:x2,oom@5:x3' --tick-deadline 0.5
 """
 from __future__ import annotations
 
@@ -58,7 +65,19 @@ def main(argv=None):
                          "legacy drain-then-refill comparator")
     ap.add_argument("--max-batch", type=int, default=8,
                     help="serving slot-table width (concurrent streams)")
+    ap.add_argument("--faults", default=None,
+                    help="deterministic fault schedule for --mode dsi, "
+                         "comma-separated kind@tick[:rJ][:xN][:dMS] events "
+                         "(kinds: crash, straggler, oom, nan — "
+                         "docs/robustness.md), e.g. 'crash@2:r1:x2,oom@5:x3'")
+    ap.add_argument("--tick-deadline", type=float, default=None,
+                    help="per-tick wall-clock deadline in seconds: slower "
+                         "ticks count as straggler faults toward replica "
+                         "quarantine (docs/robustness.md)")
     args = ap.parse_args(argv)
+    if (args.faults or args.tick_deadline) and args.mode != "dsi":
+        ap.error("--faults/--tick-deadline require --mode dsi (the fault "
+                 "plane lives on the speculation-parallel serving path)")
     if args.planner == "auto" and args.mode != "dsi":
         ap.error("--planner auto requires --mode dsi (the planner sizes "
                  "the speculation-parallel verifier pool)")
@@ -91,7 +110,9 @@ def main(argv=None):
                         lookahead=args.lookahead, paged=paged,
                         sp_degree=args.sp_degree, mesh=mesh,
                         max_batch=args.max_batch, admission=args.admission,
-                        planner="auto" if args.planner == "auto" else None)
+                        planner="auto" if args.planner == "auto" else None,
+                        faults=args.faults,
+                        tick_deadline_s=args.tick_deadline)
     rng = np.random.default_rng(0)
     for _ in range(args.requests):
         prompt = rng.integers(0, cfg_t.vocab_size,
@@ -101,10 +122,16 @@ def main(argv=None):
     done = eng.run()
     wall = time.time() - t0
     for req in done:
+        if req.output is None:
+            print(f"req {req.rid}: FAILED ({req.error})")
+            continue
         extra = ""
         if req.stats is not None:
             extra = (f" steps={req.stats.macro_steps}"
                      f" rejections={getattr(req.stats, 'rejections', '-')}")
+            if req.stats.faults or req.stats.degradations:
+                extra += (f" faults={req.stats.faults}"
+                          f" degradations={req.stats.degradations}")
         print(f"req {req.rid}: {len(req.output)} tokens{extra}")
     print(f"mode={args.mode} total {wall:.2f}s "
           f"({wall / args.requests:.2f}s/request)")
@@ -132,6 +159,19 @@ def main(argv=None):
               f"pages_peak={st['pages_peak']} "
               f"pages_shared={st['pages_shared']} "
               f"deferrals={st['deferrals']}{extra}")
+    if eng.fault_stats is not None:
+        d = eng.fault_stats.as_dict()
+        print(f"fault plane: injected={d['faults_injected']} "
+              f"retries={d['retries']} degradations={d['degradations']} "
+              f"quarantines={d['quarantines']} "
+              f"recoveries={d['recoveries']} "
+              f"failed={d['failed_requests']}")
+        h = eng.health.as_dict()
+        states = ",".join(f"r{r['replica']}={r['state']}"
+                          for r in h["replicas"])
+        print(f"health: effective_sp={h['effective_sp']}/"
+              f"{args.sp_degree} {states}"
+              + (" (degraded to non-SI)" if eng.degraded_to_nonsi else ""))
 
 
 if __name__ == "__main__":

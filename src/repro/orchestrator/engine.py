@@ -90,6 +90,10 @@ class ReplicaStats:
     tokens_accepted: int = 0
     rejections: int = 0
     busy_ticks: int = 0
+    #: faults attributed to this replica by the fault plane
+    #: (runtime/supervisor.py) — crashes, corruptions, stragglers; 0 when
+    #: no supervisor wraps the tick
+    faults: int = 0
     #: wall-clock attributed to ticks this replica verified in —
     #: telemetry only. Ticks are one fused SPMD step, so this is an
     #: upper bound per replica (every busy replica is charged the full
@@ -110,6 +114,7 @@ class ReplicaStats:
                 "tokens_accepted": self.tokens_accepted,
                 "rejections": self.rejections,
                 "busy_ticks": self.busy_ticks,
+                "faults": self.faults,
                 "busy_seconds": round(self.busy_seconds, 6),
                 "utilization": round(self.utilization, 4)}
 
@@ -167,6 +172,7 @@ class SPOrchestrator:
         self.events: List[List[Event]] = []   # per stream, last generate()
         self.tick_log: List[dict] = []        # raw per-tick host records
         self._jit_tick = jax.jit(self._tick)
+        self._jit_tick_ref = None   # reference-kernel twin (fault recovery)
         self._jit_admit = jax.jit(self._admit_row)
         # continuous-batching slot table (docs/serving.md): geometry of the
         # live table plus per-slot sampling chains for rule="leviathan"
@@ -587,6 +593,20 @@ class SPOrchestrator:
     def step(self, params_t, params_d, state: State) -> State:
         """Advance every slot by one orchestrator tick (draft R windows ∥
         verify the pending block ∥ fold decisions)."""
+        state = self.step_attempt(params_t, params_d, state)
+        self.commit_step(state)
+        return state
+
+    def step_attempt(self, params_t, params_d, state: State, *,
+                     ref_kernels: bool = False) -> State:
+        """One tick *attempt*: pure in ``state`` with no host-side
+        side effects beyond idempotent key-chain extension, so the fault
+        plane (runtime/supervisor.py) can replay it from the same
+        pre-tick state bit-for-bit — the lossless retry primitive. Call
+        ``commit_step`` exactly once on the accepted result.
+        ``ref_kernels=True`` routes the tick through the reference
+        (non-Pallas) kernel path — traced lazily on first use — the
+        one-shot fallback after a non-finite logit detection."""
         b = int(state["active"].shape[0])
         if self.rule == "exact":
             if b not in self._zero_keys:
@@ -596,11 +616,23 @@ class SPOrchestrator:
             dk, vk = self._zero_keys[b]
         else:
             dk, vk = self._slot_tick_keys(b)
+        if ref_kernels:
+            from repro.kernels.dispatch import pallas_override
+            if self._jit_tick_ref is None:
+                self._jit_tick_ref = jax.jit(self._tick)
+            # the override is consulted at trace time: keep the call (and
+            # hence the first trace) inside the context
+            with pallas_override(force_pallas=False), use_mesh(self.mesh):
+                return self._jit_tick_ref(params_t, params_d, state, dk, vk)
         with use_mesh(self.mesh):
-            state = self._jit_tick(params_t, params_d, state, dk, vk)
+            return self._jit_tick(params_t, params_d, state, dk, vk)
+
+    def commit_step(self, state: State) -> None:
+        """Accept a tick attempt: advance the host-side virtual-step
+        counters (sampled serving). Separated from ``step_attempt`` so a
+        replayed tick never double-walks a slot's key chain."""
         if self.rule != "exact":
             self._advance_slot_counters(state)
-        return state
 
     def _slot_tick_keys(self, b: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Per-slot dk/vk blocks from each admitted slot's own key chain

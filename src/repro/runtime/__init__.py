@@ -1,0 +1,22 @@
+"""Fault-tolerance runtime for DSI serving: deterministic fault
+injection (``FaultPlan``/``FaultInjector``), replica health + graceful
+SP degradation (``HealthTracker``), and the lossless tick retry/replay
+supervisor (``TickSupervisor``) with a structured error taxonomy.
+See docs/robustness.md."""
+from repro.runtime.errors import (CacheStorm, FaultStats,  # noqa: F401
+                                  LogitCorruption, ReplicaFault,
+                                  RetryExhausted, RuntimeFault, SPDegraded,
+                                  TickTimeout)
+from repro.runtime.faults import (FaultEvent, FaultInjector,  # noqa: F401
+                                  FaultPlan)
+from repro.runtime.health import (HEALTHY, PROBATION,  # noqa: F401
+                                  QUARANTINED, HealthTracker, ReplicaHealth)
+from repro.runtime.supervisor import RetryPolicy, TickSupervisor  # noqa: F401
+
+__all__ = [
+    "RuntimeFault", "ReplicaFault", "TickTimeout", "LogitCorruption",
+    "CacheStorm", "RetryExhausted", "SPDegraded", "FaultStats",
+    "FaultEvent", "FaultPlan", "FaultInjector",
+    "ReplicaHealth", "HealthTracker", "HEALTHY", "PROBATION", "QUARANTINED",
+    "RetryPolicy", "TickSupervisor",
+]

@@ -1,0 +1,146 @@
+"""Structured fault taxonomy + counters for the DSI fault plane.
+
+Every failure the runtime can *recover from* is a ``RuntimeFault``
+subclass carrying where (tick, replica) and what (detail) — never a bare
+string — so the supervisor can decide retry / degrade / fail per class,
+and telemetry rows can name the class that consumed a retry.
+``RetryExhausted`` is the terminal wrapper: a request (or run) fails with
+the chain of faults that exhausted its retry budget instead of poisoning
+the batch with a half-committed state.
+
+``FaultStats`` is the run-level counter block (injected faults, retries,
+replays, degradations, quarantines, …) that ``ServingEngine.fault_stats``
+accumulates and ``serve_queue`` flattens into telemetry rows
+(docs/robustness.md).
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, field
+from typing import List, Optional
+
+
+class RuntimeFault(RuntimeError):
+    """Base class for recoverable runtime faults (docs/robustness.md).
+
+    ``tick`` is the serving tick the fault surfaced at (global per
+    supervisor), ``replica`` the verifier replica it is attributed to
+    (None when the fault is not replica-local, e.g. an OOM storm).
+    """
+
+    kind = "fault"
+
+    def __init__(self, detail: str = "", *, tick: Optional[int] = None,
+                 replica: Optional[int] = None):
+        self.detail = detail
+        self.tick = tick
+        self.replica = replica
+        where = []
+        if tick is not None:
+            where.append(f"tick={tick}")
+        if replica is not None:
+            where.append(f"replica={replica}")
+        loc = f" [{', '.join(where)}]" if where else ""
+        super().__init__(f"{self.kind}{loc}: {detail}" if detail
+                         else f"{self.kind}{loc}")
+
+
+class ReplicaFault(RuntimeFault):
+    """A verifier replica crashed (or returned garbage) mid-tick; the
+    tick's results are invalid and must be replayed from the pre-tick
+    state."""
+    kind = "replica_fault"
+
+
+class TickTimeout(RuntimeFault):
+    """A tick (or a pool verify task) exceeded its deadline — the
+    straggler class. Results that do arrive are still valid (late, not
+    wrong), so timeouts count toward quarantine but never force a
+    replay by themselves."""
+    kind = "tick_timeout"
+
+
+class LogitCorruption(RuntimeFault):
+    """Non-finite values detected in verify/draft outputs — a kernel-path
+    corruption. Recovery ladder: re-run once on the reference kernel
+    path, then fault the replica."""
+    kind = "logit_corruption"
+
+
+class CacheStorm(RuntimeFault):
+    """A transient burst of ``CacheOOM`` admission failures (injected or
+    real). Deferral-bounded: requests wait it out in FIFO order."""
+    kind = "cache_storm"
+
+
+class RetryExhausted(RuntimeFault):
+    """Terminal: the bounded retry/degradation ladder ran out. Carries
+    the fault chain that consumed the budget."""
+    kind = "retry_exhausted"
+
+    def __init__(self, detail: str = "", *, tick: Optional[int] = None,
+                 replica: Optional[int] = None,
+                 causes: Optional[List[RuntimeFault]] = None):
+        self.causes = list(causes or [])
+        if self.causes:
+            chain = " <- ".join(type(c).__name__ for c in self.causes)
+            detail = f"{detail} (fault chain: {chain})" if detail else chain
+        super().__init__(detail, tick=tick, replica=replica)
+
+
+class SPDegraded(Exception):
+    """Control-flow signal, not an error: the supervisor quarantined a
+    replica and the serving loop must rebuild the slot table at a lower
+    SP degree (live slots are requeued at their committed frontiers
+    first — serving/engine.py)."""
+
+    def __init__(self, replica: int, tick: int, cause: RuntimeFault):
+        self.replica = replica
+        self.tick = tick
+        self.cause = cause
+        super().__init__(f"replica {replica} quarantined at tick {tick}: "
+                         f"{cause}")
+
+
+@dataclass
+class FaultStats:
+    """Run-level fault-plane counters (merged across serving rounds on
+    ``ServingEngine.fault_stats``; surfaced per row by ``serve_queue``)."""
+    faults_injected: int = 0     # events the injector actually fired
+    crashes: int = 0             # replica-crash faults observed
+    stragglers: int = 0          # deadline violations observed
+    corruptions: int = 0         # non-finite check failures observed
+    oom_events: int = 0          # CacheOOM storm admissions (injected)
+    retries: int = 0             # tick replays consumed by faults
+    ref_fallbacks: int = 0       # corruption retries on the ref kernel path
+    degradations: int = 0        # SP degree reductions (incl. -> non-SI)
+    quarantines: int = 0         # replicas removed from the pool
+    recoveries: int = 0          # quarantined replicas re-admitted
+    probes: int = 0              # recovery probes attempted
+    timeouts: int = 0            # per-task deadline hits (thread pool)
+    requeued: int = 0            # live slots rolled back + requeued
+    failed_requests: int = 0     # requests terminally failed (structured)
+    history: list = field(default_factory=list)   # (tick, kind, replica)
+
+    def note(self, tick: int, kind: str, replica: Optional[int]) -> None:
+        self.history.append((int(tick), str(kind), replica))
+        if len(self.history) > 1024:
+            del self.history[:len(self.history) - 1024]
+
+    @property
+    def total_faults(self) -> int:
+        return (self.crashes + self.stragglers + self.corruptions
+                + self.oom_events + self.timeouts)
+
+    def as_dict(self) -> dict:
+        d = asdict(self)
+        d.pop("history")
+        d["total_faults"] = self.total_faults
+        return d
+
+    def merge(self, other: "FaultStats") -> None:
+        for k in ("faults_injected", "crashes", "stragglers", "corruptions",
+                  "oom_events", "retries", "ref_fallbacks", "degradations",
+                  "quarantines", "recoveries", "probes", "timeouts",
+                  "requeued", "failed_requests"):
+            setattr(self, k, getattr(self, k) + getattr(other, k))
+        self.history.extend(other.history)

@@ -1,0 +1,205 @@
+"""Deterministic fault injection for the DSI serving stack.
+
+A ``FaultPlan`` is a reproducible schedule of fault events keyed by the
+supervisor's global serving tick — either spelled out explicitly (tests,
+``serve --faults``) or drawn once from a seeded RNG
+(``FaultPlan.random``). The ``FaultInjector`` evaluates the plan at each
+(tick, attempt) and is a strict no-op when disabled or empty: the fault
+plane adds no work to a healthy serving path (the ``steady_state`` canary
+in benchmarks/bench_orchestrator.py pins that).
+
+Fault classes (docs/robustness.md):
+
+  crash      — verifier replica j dies mid-tick: the tick attempt's
+               results are invalid and must be replayed.
+  straggler  — replica j stalls: the tick completes late (injected
+               ``delay_s`` of extra latency). Results stay valid.
+  oom        — a transient ``CacheOOM`` storm: the next ``count``
+               admission attempts fail as if the page pool were exhausted.
+  nan        — kernel-path corruption: the tick attempt's verify logits
+               go non-finite (NaN written into the post-tick carry).
+
+Plan spec grammar (``serve --faults``), comma-separated events::
+
+    kind@tick[:rJ][:xN][:dMS]
+
+    crash@5:r1:x2      crash replica 1 at tick 5, on 2 consecutive
+                       attempts (drives quarantine at the default
+                       consecutive-fault threshold)
+    straggler@3:r0:d50 replica 0 stalls 50 ms at tick 3
+    oom@8:x3           CacheOOM storm covering admissions at ticks 8-10
+    nan@12             corrupt verify logits at tick 12 (first attempt)
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+KINDS = ("crash", "straggler", "oom", "nan")
+
+_EVENT_RE = re.compile(r"^(?P<kind>[a-z]+)@(?P<tick>\d+)"
+                       r"(?::r(?P<replica>\d+))?"
+                       r"(?::x(?P<count>\d+))?"
+                       r"(?::d(?P<delay>\d+(?:\.\d+)?))?$")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault. ``tick`` is the supervisor's global tick;
+    ``count`` spans consecutive attempts (crash/nan) or consecutive ticks
+    (oom/straggler); ``delay_s`` only applies to stragglers."""
+    kind: str
+    tick: int
+    replica: Optional[int] = None
+    count: int = 1
+    delay_s: float = 0.0
+
+    def __post_init__(self):
+        assert self.kind in KINDS, self.kind
+        assert self.tick >= 0 and self.count >= 1
+
+    def describe(self) -> str:
+        s = f"{self.kind}@{self.tick}"
+        if self.replica is not None:
+            s += f":r{self.replica}"
+        if self.count != 1:
+            s += f":x{self.count}"
+        if self.delay_s:
+            s += f":d{self.delay_s * 1e3:g}"
+        return s
+
+
+@dataclass
+class FaultPlan:
+    """A deterministic schedule of ``FaultEvent``s (optionally seeded)."""
+    events: List[FaultEvent] = field(default_factory=list)
+    seed: Optional[int] = None
+
+    @classmethod
+    def parse(cls, spec: str) -> "FaultPlan":
+        """Parse the CLI grammar (module docstring). Empty spec → empty
+        plan (injector becomes a no-op)."""
+        events = []
+        for tok in filter(None, (t.strip() for t in spec.split(","))):
+            m = _EVENT_RE.match(tok)
+            if not m:
+                raise ValueError(f"bad fault event {tok!r} (grammar: "
+                                 "kind@tick[:rJ][:xN][:dMS])")
+            kind = m.group("kind")
+            if kind not in KINDS:
+                raise ValueError(f"unknown fault kind {kind!r} "
+                                 f"(one of {KINDS})")
+            events.append(FaultEvent(
+                kind=kind, tick=int(m.group("tick")),
+                replica=(int(m.group("replica"))
+                         if m.group("replica") is not None else None),
+                count=int(m.group("count") or 1),
+                delay_s=float(m.group("delay") or 0) / 1e3))
+        return cls(events=events)
+
+    @classmethod
+    def random(cls, seed: int, *, n_ticks: int = 64, sp: int = 2,
+               p_crash: float = 0.0, p_straggler: float = 0.0,
+               p_oom: float = 0.0, p_nan: float = 0.0,
+               straggler_delay_s: float = 0.005) -> "FaultPlan":
+        """Draw a schedule once from a seeded RNG — same seed, same plan,
+        bit-for-bit (chaos suites replay the identical storm)."""
+        import numpy as np
+        rng = np.random.default_rng(seed)
+        events = []
+        for t in range(n_ticks):
+            for kind, p in (("crash", p_crash), ("straggler", p_straggler),
+                            ("oom", p_oom), ("nan", p_nan)):
+                if p > 0 and rng.random() < p:
+                    rep = (int(rng.integers(0, sp))
+                           if kind in ("crash", "straggler", "nan") else None)
+                    events.append(FaultEvent(
+                        kind=kind, tick=t, replica=rep,
+                        delay_s=straggler_delay_s
+                        if kind == "straggler" else 0.0))
+        return cls(events=events, seed=seed)
+
+    def describe(self) -> str:
+        return ",".join(e.describe() for e in self.events)
+
+    def __bool__(self) -> bool:
+        return bool(self.events)
+
+
+class FaultInjector:
+    """Evaluates a ``FaultPlan`` at (tick, attempt); disabled or empty →
+    every query answers "no fault" with no other work. ``fired`` counts
+    the events that actually triggered (an event naming a replica that is
+    no longer in the active pool never fires)."""
+
+    def __init__(self, plan: Optional[FaultPlan] = None, *,
+                 enabled: bool = True):
+        if isinstance(plan, str):
+            plan = FaultPlan.parse(plan)
+        self.plan = plan or FaultPlan()
+        self.enabled = enabled and bool(self.plan)
+        self.fired = 0
+        self._by_kind: Dict[str, List[FaultEvent]] = {k: [] for k in KINDS}
+        for e in self.plan.events:
+            self._by_kind[e.kind].append(e)
+
+    # ------------------------------------------------------------- queries
+    def _match(self, kind: str, tick: int, attempt: int,
+               active: Optional[Sequence[int]] = None
+               ) -> Optional[FaultEvent]:
+        if not self.enabled:
+            return None
+        for e in self._by_kind[kind]:
+            if kind in ("crash", "nan"):
+                hit = e.tick == tick and attempt < e.count
+            else:  # oom / straggler span ticks, first attempt only
+                hit = e.tick <= tick < e.tick + e.count and attempt == 0
+            if not hit:
+                continue
+            if (e.replica is not None and active is not None
+                    and e.replica not in active):
+                continue   # the targeted replica is already out of the pool
+            return e
+        return None
+
+    def crash_at(self, tick: int, attempt: int,
+                 active: Optional[Sequence[int]] = None
+                 ) -> Optional[FaultEvent]:
+        e = self._match("crash", tick, attempt, active)
+        if e is not None:
+            self.fired += 1
+        return e
+
+    def nan_at(self, tick: int, attempt: int,
+               active: Optional[Sequence[int]] = None
+               ) -> Optional[FaultEvent]:
+        e = self._match("nan", tick, attempt, active)
+        if e is not None:
+            self.fired += 1
+        return e
+
+    def straggler_at(self, tick: int,
+                     active: Optional[Sequence[int]] = None
+                     ) -> Optional[FaultEvent]:
+        e = self._match("straggler", tick, 0, active)
+        if e is not None:
+            self.fired += 1
+        return e
+
+    def oom_at(self, tick: int) -> bool:
+        e = self._match("oom", tick, 0)
+        if e is not None:
+            self.fired += 1
+        return e is not None
+
+    # ---------------------------------------------------------- corruption
+    @staticmethod
+    def corrupt(state: dict) -> dict:
+        """Inject NaN into the post-tick verify carry (the target-head
+        probability row every live stream reads next tick) — the
+        supervisor's finite-check must catch exactly this."""
+        import jax.numpy as jnp
+        state = dict(state)
+        state["carry"] = state["carry"].at[:, 0].set(jnp.nan)
+        return state

@@ -1,0 +1,164 @@
+"""Replica health tracking + graceful SP degradation state machine.
+
+Each verifier replica carries a tiny state machine (docs/robustness.md):
+
+    HEALTHY ──(quarantine_after consecutive faults)──▶ QUARANTINED
+       ▲                                                   │
+       │   backoff ticks elapse → recovery PROBE           │
+       └──(probation_ticks clean ticks)── PROBATION ◀──────┘
+                     │
+                     └──(any fault while probing)──▶ QUARANTINED
+                                                  (backoff × factor)
+
+``HealthTracker`` owns the pool view: which logical replicas may serve
+the next epoch (``healthy()``), when a quarantined replica's backoff has
+expired (``due_probes``), and the consecutive-fault bookkeeping the
+supervisor feeds per tick. Degradation itself — rebuilding the slot
+table at ``effective_sp`` — lives in serving/engine.py; the tracker only
+decides *who* is in the pool. A fault during probation re-quarantines
+immediately with the backoff doubled (exponential), so a genuinely dead
+replica costs one probe epoch per doubling instead of flapping.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+HEALTHY = "healthy"
+PROBATION = "probation"
+QUARANTINED = "quarantined"
+
+
+@dataclass
+class ReplicaHealth:
+    """Per-replica health record (logical replica id — stable across
+    degradations; window indices inside a degraded tick are positions in
+    the *active* list, not these ids)."""
+    replica: int
+    state: str = HEALTHY
+    consecutive_faults: int = 0
+    total_faults: int = 0
+    quarantines: int = 0
+    quarantined_at: Optional[int] = None    # tick of last quarantine
+    backoff_ticks: int = 0                  # current recovery backoff
+    clean_ticks: int = 0                    # consecutive clean (probation)
+
+    def as_dict(self) -> dict:
+        return {"replica": self.replica, "state": self.state,
+                "consecutive_faults": self.consecutive_faults,
+                "total_faults": self.total_faults,
+                "quarantines": self.quarantines,
+                "backoff_ticks": self.backoff_ticks}
+
+
+class HealthTracker:
+    """Pool-level health for ``sp`` logical verifier replicas.
+
+    ``quarantine_after`` consecutive faults quarantine a replica;
+    ``recovery_backoff`` ticks later it becomes eligible for a probe
+    (``due_probes``), serving on probation until ``probation_ticks``
+    clean ticks fully recover it. Backoff doubles (``backoff_factor``)
+    on every re-quarantine, capped at ``max_backoff``.
+    """
+
+    def __init__(self, sp: int, *, quarantine_after: int = 2,
+                 recovery_backoff: int = 16, backoff_factor: int = 2,
+                 max_backoff: int = 1024, probation_ticks: int = 4):
+        assert sp >= 1 and quarantine_after >= 1
+        self.sp = sp
+        self.quarantine_after = quarantine_after
+        self.recovery_backoff = recovery_backoff
+        self.backoff_factor = backoff_factor
+        self.max_backoff = max_backoff
+        self.probation_ticks = probation_ticks
+        self.replicas: Dict[int, ReplicaHealth] = {
+            j: ReplicaHealth(j) for j in range(sp)}
+        self.quarantines = 0
+        self.recoveries = 0
+
+    # ------------------------------------------------------------ pool view
+    def healthy(self) -> List[int]:
+        """Logical replica ids allowed to serve (healthy + probing), in
+        id order — window j of a degraded tick maps to ``healthy()[j]``."""
+        return [j for j, r in sorted(self.replicas.items())
+                if r.state != QUARANTINED]
+
+    @property
+    def effective_sp(self) -> int:
+        return len(self.healthy())
+
+    def due_probes(self, tick: int) -> List[int]:
+        """Quarantined replicas whose backoff has expired at ``tick``."""
+        return [j for j, r in sorted(self.replicas.items())
+                if r.state == QUARANTINED
+                and tick >= (r.quarantined_at or 0) + r.backoff_ticks]
+
+    # ------------------------------------------------------------ recording
+    def record_fault(self, replica: int, tick: int) -> bool:
+        """Fold one fault attributed to ``replica``; returns True when
+        this fault quarantines it (the caller must degrade)."""
+        r = self.replicas[replica]
+        r.total_faults += 1
+        r.consecutive_faults += 1
+        r.clean_ticks = 0
+        trip = (r.state == PROBATION          # probing: one strike
+                or r.consecutive_faults >= self.quarantine_after)
+        if trip:
+            self._quarantine(r, tick)
+        return trip
+
+    def quarantine_now(self, replica: int, tick: int) -> None:
+        """Force-quarantine (retry budget exhausted on this replica)."""
+        r = self.replicas[replica]
+        r.total_faults += 1
+        self._quarantine(r, tick)
+
+    def _quarantine(self, r: ReplicaHealth, tick: int) -> None:
+        prev = r.backoff_ticks
+        r.backoff_ticks = (self.recovery_backoff if r.state != PROBATION
+                           or prev == 0
+                           else min(prev * self.backoff_factor,
+                                    self.max_backoff))
+        if r.state == PROBATION and prev:
+            r.backoff_ticks = min(prev * self.backoff_factor,
+                                  self.max_backoff)
+        r.state = QUARANTINED
+        r.quarantined_at = tick
+        r.consecutive_faults = 0
+        r.quarantines += 1
+        self.quarantines += 1
+
+    def start_probe(self, replica: int) -> None:
+        """Re-admit a quarantined replica on probation (backoff expired)."""
+        r = self.replicas[replica]
+        assert r.state == QUARANTINED
+        r.state = PROBATION
+        r.clean_ticks = 0
+
+    def record_clean_tick(self, exclude: Optional[set] = None) -> List[int]:
+        """One fault-free tick for the serving replicas: resets
+        consecutive-fault counters and advances probation; returns the
+        replicas that just fully recovered. ``exclude`` names replicas
+        that faulted earlier in this same tick (a successful *replay* of
+        their fault must not wipe the streak — consecutive means
+        consecutive ticks-with-a-fault, not consecutive attempts)."""
+        recovered = []
+        for r in self.replicas.values():
+            if r.state == QUARANTINED or (exclude and r.replica in exclude):
+                continue
+            r.consecutive_faults = 0
+            if r.state == PROBATION:
+                r.clean_ticks += 1
+                if r.clean_ticks >= self.probation_ticks:
+                    r.state = HEALTHY
+                    r.backoff_ticks = 0
+                    recovered.append(r.replica)
+                    self.recoveries += 1
+        return recovered
+
+    def as_dict(self) -> dict:
+        return {"effective_sp": self.effective_sp,
+                "quarantines": self.quarantines,
+                "recoveries": self.recoveries,
+                "replicas": [r.as_dict()
+                             for _, r in sorted(self.replicas.items())]}

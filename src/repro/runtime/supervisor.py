@@ -1,0 +1,236 @@
+"""TickSupervisor: lossless retry/replay + health-driven degradation for
+the speculation-parallel serving tick.
+
+The SP tick is a *pure function* of its pre-tick state (the orchestrator
+advances host-side key counters only in ``commit_step``), so the lossless
+recovery primitive is trivial and exact: discard the faulted attempt's
+output and re-run the identical tick on the identical pre-tick state —
+the virtual-step key chains are consumed at the same indices, so a
+replayed tick is bit-for-bit the tick that would have happened without
+the fault. The supervisor wraps every serving tick with that loop:
+
+  attempt → (injected faults? deadline? finite-check) →
+    clean       commit; clean-tick bookkeeping (probation advances)
+    crash       record fault on the replica, bounded replay w/ backoff
+    corruption  one retry on the reference-kernel path (``ref_kernels``),
+                then treated as a replica fault
+    straggler   results are valid (late ≠ wrong): keep the state, record
+                the latency violation, degrade only via quarantine
+    exhausted   force-quarantine the attributed replica and degrade —
+                never poison the batch with a half-committed tick
+
+Quarantine raises ``SPDegraded``; the serving loop (serving/engine.py)
+rolls live slots back to their committed frontiers, requeues them, and
+rebuilds the slot table at ``HealthTracker.effective_sp`` — shrinking
+R → R−1 → … → 1 → the non-SI path. The supervisor survives across epochs
+(its tick counter and health state are global to the run).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.runtime.errors import (FaultStats, LogitCorruption, ReplicaFault,
+                                  RetryExhausted, SPDegraded, TickTimeout)
+from repro.runtime.faults import FaultInjector
+from repro.runtime.health import HealthTracker
+
+
+@dataclass
+class RetryPolicy:
+    """Bounded replay budget per tick + exponential backoff between
+    attempts. Defaults keep tests fast (no sleep); production sets
+    ``backoff_s`` to a real base interval."""
+    max_retries: int = 3
+    backoff_s: float = 0.0
+    backoff_factor: float = 2.0
+    max_backoff_s: float = 0.25
+
+    def backoff(self, attempt: int) -> float:
+        """Backoff before retry ``attempt`` (0-based over retries)."""
+        if self.backoff_s <= 0:
+            return 0.0
+        return min(self.backoff_s * self.backoff_factor ** attempt,
+                   self.max_backoff_s)
+
+
+class TickSupervisor:
+    """Fault plane around the serving tick (module docstring).
+
+    ``step_fn(ref_kernels)`` passed to ``run_tick`` must be pure in the
+    pre-tick state (replay-safe) and honor ``ref_kernels=True`` by
+    routing through the reference kernel path
+    (``SPOrchestrator.step_attempt``).
+    """
+
+    def __init__(self, sp: int, *, injector: Optional[FaultInjector] = None,
+                 policy: Optional[RetryPolicy] = None,
+                 health: Optional[HealthTracker] = None,
+                 stats: Optional[FaultStats] = None,
+                 tick_deadline_s: Optional[float] = None,
+                 check_finite: bool = True):
+        self.injector = injector
+        self.policy = policy or RetryPolicy()
+        self.health = health or HealthTracker(sp)
+        self.stats = stats or FaultStats()
+        self.tick_deadline_s = tick_deadline_s
+        self.check_finite = check_finite
+        self.tick = 0                       # global across epochs
+        self.active: List[int] = self.health.healthy()
+        self.last_retries = 0
+        self._replicas = None               # epoch's ReplicaStats, by window
+
+    # -------------------------------------------------------------- epochs
+    def bind_epoch(self, active: List[int], replicas=None) -> None:
+        """Start an epoch serving logical replicas ``active`` (window j of
+        the tick maps to ``active[j]``); ``replicas`` is the epoch's
+        per-window ``ReplicaStats`` list for fault attribution."""
+        self.active = list(active)
+        self._replicas = replicas
+
+    def probe_recoveries(self) -> List[int]:
+        """Backoff-expired quarantined replicas re-admitted on probation
+        (called between epochs); returns the probed replica ids."""
+        due = self.health.due_probes(self.tick)
+        for rid in due:
+            self.health.start_probe(rid)
+            self.stats.probes += 1
+            self.stats.note(self.tick, "probe", rid)
+        return due
+
+    # --------------------------------------------------------------- admit
+    def oom_event(self) -> bool:
+        """True when an injected CacheOOM storm covers the upcoming tick's
+        admissions (the serving loop defers exactly as for real
+        pressure)."""
+        if self.injector is not None and self.injector.oom_at(self.tick):
+            self.stats.oom_events += 1
+            self.stats.note(self.tick, "oom", None)
+            return True
+        return False
+
+    # ---------------------------------------------------------------- tick
+    def run_tick(self, step_fn: Callable[[bool], dict],
+                 live: Optional[np.ndarray] = None):
+        """Run one supervised tick. Returns ``(state, degrade)`` where
+        ``degrade`` is an ``SPDegraded`` signal to raise *after* the valid
+        state is committed (straggler quarantine: late results still
+        count). Raises ``SPDegraded`` directly when the tick's output is
+        invalid (crash/corruption quarantine — pre-tick state stands)."""
+        t = self.tick
+        self.tick += 1
+        inj = self.injector
+        causes: List[Exception] = []
+        use_ref = False
+        self.last_retries = 0
+        faulted: set = set()        # replicas that faulted on this tick
+        strag = inj.straggler_at(t, self.active) if inj else None
+        for attempt in range(self.policy.max_retries + 1):
+            if attempt:
+                b = self.policy.backoff(attempt - 1)
+                if b:
+                    time.sleep(b)
+            t0 = time.perf_counter()
+            if strag is not None and attempt == 0 and strag.delay_s:
+                time.sleep(strag.delay_s)
+            state = step_fn(use_ref)
+            wall = time.perf_counter() - t0
+
+            fault = None
+            ev = inj.crash_at(t, attempt, self.active) if inj else None
+            if ev is not None:
+                fault = ReplicaFault(f"injected crash ({ev.describe()})",
+                                     tick=t, replica=ev.replica)
+                self.stats.crashes += 1
+            else:
+                nev = inj.nan_at(t, attempt, self.active) if inj else None
+                if nev is not None and not use_ref:
+                    state = inj.corrupt(state)
+                if self.check_finite and not self._finite(state, live):
+                    rep = (nev.replica if nev is not None
+                           and nev.replica is not None else self.active[-1])
+                    fault = LogitCorruption("non-finite verify carry",
+                                            tick=t, replica=rep)
+                    self.stats.corruptions += 1
+
+            if fault is None:
+                self.last_retries = attempt
+                return state, self._post_tick_clean(t, strag, wall, faulted)
+
+            # ---- invalid tick attempt: replay from the pre-tick state
+            causes.append(fault)
+            self.stats.note(t, fault.kind, fault.replica)
+            rep = (fault.replica if fault.replica is not None
+                   else self.active[-1])
+            faulted.add(rep)
+            self._attribute(rep)
+            if self.health.record_fault(rep, t):
+                self.stats.quarantines += 1
+                self._sync_injected()
+                raise SPDegraded(rep, t, fault)
+            if attempt == self.policy.max_retries:
+                # budget gone: shed the replica instead of failing the run
+                self.health.quarantine_now(rep, t)
+                self.stats.quarantines += 1
+                self._sync_injected()
+                raise SPDegraded(rep, t, RetryExhausted(
+                    "tick replay budget exhausted", tick=t, replica=rep,
+                    causes=causes))
+            self.stats.retries += 1
+            if isinstance(fault, LogitCorruption) and not use_ref:
+                use_ref = True            # one shot on the reference path
+                self.stats.ref_fallbacks += 1
+        raise AssertionError("unreachable")       # pragma: no cover
+
+    # ------------------------------------------------------------- helpers
+    def _post_tick_clean(self, t: int, strag, wall: float,
+                         faulted: Optional[set] = None):
+        """Valid-results bookkeeping: deadline/straggler violations count
+        toward quarantine but never invalidate the tick. ``faulted``
+        replicas (replayed earlier this tick) keep their streaks."""
+        self._sync_injected()
+        slow = (self.tick_deadline_s is not None
+                and wall > self.tick_deadline_s)
+        if strag is None and not slow:
+            recovered = self.health.record_clean_tick(exclude=faulted)
+            if recovered:
+                self.stats.recoveries += len(recovered)
+                for rid in recovered:
+                    self.stats.note(t, "recovered", rid)
+            return None
+        rep = (strag.replica if strag is not None
+               and strag.replica is not None else self.active[-1])
+        self.stats.stragglers += 1
+        self.stats.note(t, "straggler", rep)
+        self._attribute(rep)
+        if self.health.record_fault(rep, t):
+            self.stats.quarantines += 1
+            return SPDegraded(rep, t, TickTimeout(
+                f"tick wall {wall * 1e3:.1f}ms exceeded deadline",
+                tick=t, replica=rep))
+        return None
+
+    def _attribute(self, replica: int) -> None:
+        if self._replicas and replica in self.active:
+            w = self.active.index(replica)
+            if w < len(self._replicas):
+                self._replicas[w].faults += 1
+
+    def _sync_injected(self) -> None:
+        if self.injector is not None:
+            self.stats.faults_injected = self.injector.fired
+
+    @staticmethod
+    def _finite(state: dict, live: Optional[np.ndarray]) -> bool:
+        """Non-finite scan over the verify carry (target head) and the
+        drafter's prefetch distribution, live rows only (inactive lanes
+        compute on garbage by design)."""
+        for k in ("carry", "prefetch_prob"):
+            a = np.asarray(state[k])
+            rows = a[live] if live is not None else a
+            if rows.size and not np.isfinite(rows).all():
+                return False
+        return True

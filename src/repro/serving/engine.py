@@ -46,6 +46,7 @@ from repro.cache import (CacheCapacityError, CacheManager, CacheOOM,
 from repro.core.dsi_jax import DSIEngine, EngineStats
 from repro.core.si_jax import SIEngine, nonsi_generate
 from repro.models.model import Model
+from repro.runtime import SPDegraded
 
 
 @dataclass
@@ -57,9 +58,26 @@ class Request:
     output: Optional[List[int]] = None
     stats: Optional[EngineStats] = None
     #: admission rejection (e.g. a request that can never fit the page
-    #: pool): the request completes with ``output=None`` instead of
-    #: aborting the whole run
+    #: pool) or a structured fault-plane failure: the request completes
+    #: with ``output=None`` instead of aborting the whole run
     error: Optional[str] = None
+    #: tokens already emitted before a fault-plane degradation rolled the
+    #: stream back to its committed frontier (docs/robustness.md): on
+    #: re-admission the stream is prefilled with ``prompt + committed``
+    #: and generates the remaining tokens — greedy continuation from the
+    #: committed prefix, so the replay is token-identical
+    committed: List[int] = field(default_factory=list)
+    #: admissions deferred under CacheOOM pressure (bounded by
+    #: ``ServingEngine.max_deferrals``)
+    deferrals: int = 0
+
+    def effective_prompt(self) -> List[int]:
+        """Prefill contents for (re-)admission: the original prompt plus
+        every token already committed by previous epochs."""
+        return list(self.prompt) + list(self.committed)
+
+    def remaining_new(self) -> int:
+        return max(self.max_new - len(self.committed), 0)
 
 
 @dataclass
@@ -97,6 +115,26 @@ class ServingEngine:
     planner: Optional[object] = None
     planned_sp: Optional[int] = None      # last planner decision
     replica_stats: Optional[list] = None  # per-replica, merged across runs
+    # fault plane (docs/robustness.md): ``faults`` takes a FaultPlan /
+    # FaultInjector / plan-spec string (deterministic injection for chaos
+    # tests and ``serve --faults``); ``tick_deadline_s`` arms real
+    # straggler detection on tick wall-clock. Either one constructs a
+    # ``TickSupervisor`` around the SP tick — with both unset the fault
+    # plane does not exist and serving pays zero overhead.
+    faults: Optional[object] = None
+    fault_policy: Optional[object] = None     # runtime.RetryPolicy
+    tick_deadline_s: Optional[float] = None
+    quarantine_after: int = 2      # consecutive faults -> quarantine
+    recovery_backoff: int = 16     # ticks before a recovery probe
+    #: per-request bound on CacheOOM admission deferrals: the FIFO head
+    #: (oldest waiter — age priority, no overtaking) either admits or
+    #: fails cleanly with a structured CacheCapacityError, so sustained
+    #: pressure can never livelock the queue
+    max_deferrals: Optional[int] = 64
+    fault_stats: Optional[object] = None      # runtime.FaultStats, merged
+    health: Optional[object] = None           # runtime.HealthTracker
+    degraded_to_nonsi: bool = False
+    _supervisor: Optional[object] = None
     engine_invocations: int = 0  # jitted engine steps across run() calls
     prefill_tokens: int = 0      # prompt tokens pushed through prefill
     cache_manager: Optional[CacheManager] = None  # live during paged run()
@@ -131,7 +169,12 @@ class ServingEngine:
     def run(self) -> List[Request]:
         done: List[Request] = []
         if self.mode == "dsi" and (self.sp_degree > 1
-                                   or self.planner is not None):
+                                   or self.planner is not None
+                                   or self.faults is not None
+                                   or self.tick_deadline_s is not None):
+            # the fault plane lives on the SP path (SPOrchestrator R=1 is
+            # the transparent single-replica fallback), so arming faults
+            # or deadlines routes mode="dsi" through it at any degree
             if self.admission == "drain":
                 return self._run_dsi_sp_drain()
             return self._run_sp_slots()
@@ -155,7 +198,9 @@ class ServingEngine:
         return self._run_slot_table(self._spec_engine(DSIEngine))
 
     def _run_slot_table(self, eng, *, sp: int = 1, bucket: bool = False,
-                        replicas=None) -> List[Request]:
+                        replicas=None, supervisor=None,
+                        done: Optional[List[Request]] = None
+                        ) -> List[Request]:
         """The slot-table continuous-batching scheduler, shared by the
         DSIEngine macro-step (sp=1) and the SPOrchestrator tick (sp=R)
         through their common ``init_slots``/``admit``/``step``/``retire``
@@ -180,19 +225,29 @@ class ServingEngine:
         ``busy_seconds`` telemetry (skipping the first tick of a round,
         which may pay the jit compile — and never fed to the planner: a
         fused tick's wall cannot be decomposed into per-model
-        latencies)."""
+        latencies).
+
+        ``supervisor`` (runtime/supervisor.py) arms the fault plane: every
+        tick runs through its retry/replay loop, injected CacheOOM storms
+        hit the admission path, and a replica quarantine raises
+        ``SPDegraded`` *after* live slots have been rolled back to their
+        committed frontiers and requeued (``_requeue_live``) — the caller
+        rebuilds the table at a lower SP degree. ``done`` may be passed in
+        so requests completed before a degradation survive the raise."""
         assert self.drafter is not None and self.params_d is not None
+        if done is None:
+            done = []
         if not self._queue:
-            return []
+            return done
         import time as _time
 
         w = self.lookahead
         wn = w * sp
         n_slots = min(self.max_batch, len(self._queue))
-        cap = max(r.max_new for r in self._queue) + wn + 1
-        max_len = self.max_len or (max(len(r.prompt) for r in self._queue)
-                                   + max(r.max_new for r in self._queue)
-                                   + 2 * wn + 2)
+        cap = max(max(r.remaining_new() for r in self._queue), 1) + wn + 1
+        max_len = self.max_len or (
+            max(len(r.effective_prompt()) for r in self._queue)
+            + max(r.remaining_new() for r in self._queue) + 2 * wn + 2)
         if bucket:
             cap = self._geom_bucket(cap)
             if self.max_len is None:
@@ -209,19 +264,28 @@ class ServingEngine:
         first_tick = True
         slots: List[Optional[Request]] = [None] * n_slots
         slot_stats: List[Optional[EngineStats]] = [None] * n_slots
-        done: List[Request] = []
+        goals: List[int] = [0] * n_slots   # remaining_new at admission
         while self._queue or any(r is not None for r in slots):
             # admit queued requests into free slots (late admissions enter
-            # mid-flight; the other streams keep their pipeline state)
+            # mid-flight; the other streams keep their pipeline state).
+            # An injected CacheOOM storm closes admission for this tick —
+            # waiting requests defer exactly as under real page pressure,
+            # including the per-request deferral bound.
+            storm = supervisor is not None and supervisor.oom_event()
             for b in range(n_slots):
                 if slots[b] is None and self._queue:
                     req = self._queue[0]
-                    prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+                    if storm:
+                        self._defer_head(mgr, done)
+                        break
+                    prompt_eff = req.effective_prompt()
+                    prompt = jnp.asarray(prompt_eff, jnp.int32)[None]
                     try:
                         state = eng.admit(self.params_t, self.params_d,
                                           state, b, prompt,
                                           extra_inputs=req.extra_inputs,
-                                          manager=mgr, max_new=req.max_new)
+                                          manager=mgr,
+                                          max_new=req.remaining_new())
                     except CacheCapacityError as e:
                         # can never fit the pool: reject this request
                         # alone and keep serving the rest of the queue
@@ -236,27 +300,58 @@ class ServingEngine:
                         # nothing ever will: defensive raise (never-fits
                         # requests are rejected above before this).
                         mgr.deferrals += 1
+                        if self._defer_head(mgr, done):
+                            continue
                         if not any(r is not None for r in slots):
                             raise
                         break
                     self._queue.pop(0)
                     slots[b] = req
-                    slot_stats[b] = st = EngineStats(
-                        max_history=self.history_cap)
-                    st.prompt_tokens = len(req.prompt)
+                    goals[b] = req.remaining_new()
+                    if req.stats is None:
+                        req.stats = EngineStats(max_history=self.history_cap)
+                    slot_stats[b] = st = req.stats
+                    # += not =: a degraded stream re-admits with the same
+                    # EngineStats, accumulating prefill honestly
+                    st.prompt_tokens += len(prompt_eff)
+                    st.deferrals = req.deferrals
                     if mgr is not None:
                         t = mgr.last_ticket
-                        st.prefix_hit_tokens = t.n_cached["t"]
-                        st.pages_allocated = t.pages_allocated
-                        st.pages_shared = t.pages_shared
+                        st.prefix_hit_tokens += t.n_cached["t"]
+                        st.pages_allocated += t.pages_allocated
+                        st.pages_shared += t.pages_shared
                         self.prefill_tokens += t.prefill_tokens()
                     else:
-                        self.prefill_tokens += 2 * len(req.prompt)
+                        self.prefill_tokens += 2 * len(prompt_eff)
 
             live = np.asarray([r is not None for r in slots])
             t0 = _time.perf_counter()
-            state = eng.step(self.params_t, self.params_d, state)
-            self.engine_invocations += 1
+            degrade = None
+            n_retries = 0
+            if supervisor is None:
+                state = eng.step(self.params_t, self.params_d, state)
+            else:
+                def _attempt(ref, _s=state):
+                    # replay-safe: closes over the pre-tick state; the
+                    # key counters only advance in commit_step below
+                    if ref and hasattr(eng, "step_attempt"):
+                        return eng.step_attempt(self.params_t, self.params_d,
+                                                _s, ref_kernels=True)
+                    if hasattr(eng, "step_attempt"):
+                        return eng.step_attempt(self.params_t, self.params_d,
+                                                _s)
+                    return eng.step(self.params_t, self.params_d, _s)
+                try:
+                    state, degrade = supervisor.run_tick(_attempt, live=live)
+                except SPDegraded:
+                    # invalid tick: pre-tick state stands — roll live
+                    # slots back to committed frontiers and requeue
+                    self._requeue_live(slots, slot_stats, state, mgr, done)
+                    raise
+                if hasattr(eng, "commit_step"):
+                    eng.commit_step(state)
+                n_retries = supervisor.last_retries
+            self.engine_invocations += 1 + n_retries
             n_acc = np.asarray(state["n_acc"])
             rej = np.asarray(state["rejected"])
             n_out = np.asarray(state["n_out"])
@@ -266,21 +361,148 @@ class ServingEngine:
                                         wall_s=0.0 if first_tick else wall)
             first_tick = False
             retired = [b for b, req in enumerate(slots)
-                       if req is not None and n_out[b] >= req.max_new]
+                       if req is not None and n_out[b] >= goals[b]]
             out = np.asarray(state["out"]) if retired else None
             for b, req in enumerate(slots):
                 if req is None:
                     continue
-                slot_stats[b].record(int(n_acc[b]), bool(rej[b]),
-                                     int(n_out[b]))
+                st = slot_stats[b]
+                st.record(int(n_acc[b]), bool(rej[b]),
+                          int(n_out[b]) + len(req.committed))
+                if n_retries:
+                    st.retries += n_retries
+                    st.faults += n_retries
                 if b in retired:
-                    req.output = out[b, :req.max_new].tolist()
-                    req.stats = slot_stats[b]
+                    req.output = req.committed + out[b, :goals[b]].tolist()
+                    req.stats = st
                     state = eng.retire(state, b)
                     if mgr is not None:
                         mgr.release(b)
                     slots[b], slot_stats[b] = None, None
                     done.append(req)
+            if degrade is not None:
+                # straggler quarantine: this tick's (late but valid)
+                # results are committed and retirements honored above;
+                # now shrink the table for the next epoch
+                self._requeue_live(slots, slot_stats, state, mgr, done)
+                raise degrade
+        return done
+
+    # --------------------------------------------------- fault-plane hooks
+    def _requeue_live(self, slots, slot_stats, state, mgr, done) -> None:
+        """Roll every live slot back to its committed frontier and requeue
+        it (rid order — age priority) for re-admission at the next epoch's
+        SP degree. Tokens the stream already emitted move to
+        ``Request.committed``; re-admission prefills ``prompt+committed``
+        and greedy continuation from that prefix is token-identical to the
+        uninterrupted run (docs/robustness.md). Streams that already hit
+        their goal retire normally instead of requeueing."""
+        n_out = np.asarray(state["n_out"])
+        out = np.asarray(state["out"])
+        requeued: List[Request] = []
+        for b, req in enumerate(slots):
+            if req is None:
+                continue
+            take = min(int(n_out[b]), req.remaining_new())
+            req.committed = req.committed + out[b, :take].tolist()
+            st = slot_stats[b]
+            if mgr is not None:
+                mgr.release(b)
+            slots[b], slot_stats[b] = None, None
+            if req.remaining_new() <= 0:
+                req.output = list(req.committed)
+                req.stats = st
+                done.append(req)
+                continue
+            st.degradations += 1
+            req.stats = st
+            requeued.append(req)
+            if self.fault_stats is not None:
+                self.fault_stats.requeued += 1
+        self._queue[:0] = sorted(requeued, key=lambda r: r.rid)
+
+    def _defer_head(self, mgr, done) -> bool:
+        """Count a deferral against the FIFO head; once it exceeds
+        ``max_deferrals`` the request fails cleanly with a structured
+        CacheCapacityError (age priority: the oldest waiter either admits
+        or fails — sustained pressure can never livelock the queue).
+        Returns True when the head was evicted (admission may continue
+        with the next request)."""
+        req = self._queue[0]
+        req.deferrals += 1
+        if (self.max_deferrals is not None
+                and req.deferrals > self.max_deferrals):
+            self._queue.pop(0)
+            req.error = (f"CacheCapacityError: admission deferred "
+                         f"{req.deferrals} times (bound "
+                         f"{self.max_deferrals}) under sustained cache "
+                         f"pressure")
+            done.append(req)
+            if self.fault_stats is not None:
+                self.fault_stats.failed_requests += 1
+            return True
+        return False
+
+    def _fault_supervisor(self, sp: int):
+        """Lazily build the run-long TickSupervisor when the fault plane
+        is armed (``faults`` and/or ``tick_deadline_s``); None otherwise —
+        the unarmed serving path never touches runtime/."""
+        if self.faults is None and self.tick_deadline_s is None:
+            return None
+        if self._supervisor is None:
+            from repro.runtime import (FaultInjector, FaultStats,
+                                       HealthTracker, RetryPolicy,
+                                       TickSupervisor)
+            inj = None
+            if self.faults is not None:
+                inj = (self.faults if isinstance(self.faults, FaultInjector)
+                       else FaultInjector(self.faults))
+            if self.fault_stats is None:
+                self.fault_stats = FaultStats()
+            if self.health is None:
+                self.health = HealthTracker(
+                    sp, quarantine_after=self.quarantine_after,
+                    recovery_backoff=self.recovery_backoff)
+            policy = self.fault_policy
+            if policy is not None and not isinstance(policy, RetryPolicy):
+                policy = RetryPolicy(**policy)
+            self._supervisor = TickSupervisor(
+                sp, injector=inj, policy=policy, health=self.health,
+                stats=self.fault_stats,
+                tick_deadline_s=self.tick_deadline_s)
+        return self._supervisor
+
+    def _run_nonsi_fallback(self, done: List[Request]) -> List[Request]:
+        """Every replica quarantined: finish the queue on the plain
+        autoregressive path (docs/robustness.md). Exact-rule greedy
+        decode from each committed frontier is token-identical to the
+        speculative run; the seeded leviathan rule has no non-speculative
+        equivalent, so those requests fail with a structured error rather
+        than silently changing distribution."""
+        self.degraded_to_nonsi = True
+        if self.fault_stats is not None:
+            self.fault_stats.note(-1, "nonsi_fallback", None)
+        while self._queue:
+            req = self._queue.pop(0)
+            if self.rule != "exact":
+                req.error = ("ReplicaFault: all verifier replicas "
+                             "quarantined and rule="
+                             f"{self.rule!r} has no lossless "
+                             "non-speculative fallback")
+                if self.fault_stats is not None:
+                    self.fault_stats.failed_requests += 1
+                done.append(req)
+                continue
+            n = req.remaining_new()
+            if n > 0:
+                toks = jnp.asarray(req.effective_prompt(), jnp.int32)[None]
+                out = nonsi_generate(self.target, self.params_t, toks, n,
+                                     extra_inputs=req.extra_inputs)
+                self.engine_invocations += n
+                req.output = req.committed + np.asarray(out)[0, :n].tolist()
+            else:
+                req.output = list(req.committed)
+            done.append(req)
         return done
 
     # -------------------------------------------------- lockstep bucketing
@@ -327,9 +549,18 @@ class ServingEngine:
         (bounded by ``sp_degree`` as the replica budget) when a planner
         is configured, else the fixed ``sp_degree``. A spec mesh pins the
         degree to its topology — the jitted tick shards one window per
-        mesh slice, so the planner must not deviate from it."""
+        mesh slice, so the planner must not deviate from it.
+
+        With the fault plane armed, the replica budget is first clamped
+        to ``HealthTracker.effective_sp`` — neither the fixed degree nor
+        the planner ever plans onto quarantined replicas
+        (docs/robustness.md). A spec mesh pins the degree to its topology,
+        so health never shrinks a mesh-sharded tick."""
+        budget = self.sp_degree
+        if self.health is not None and self.mesh is None:
+            budget = max(1, min(budget, self.health.effective_sp))
         if self.planner is None or self.mesh is not None:
-            return self.sp_degree
+            return budget
         from repro.orchestrator import SPPlanner
         if not isinstance(self.planner, SPPlanner):
             self.planner = SPPlanner()
@@ -339,7 +570,7 @@ class ServingEngine:
         self.planner.calibrate(self.target, self.drafter, self.params_t,
                                self.params_d, lookahead=self.lookahead)
         self.planned_sp = self.planner.sp_degree(self.lookahead,
-                                                 max_sp=self.sp_degree)
+                                                 max_sp=budget)
         return self.planned_sp
 
     def _sp_engine(self, sp: int):
@@ -369,15 +600,42 @@ class ServingEngine:
         admission protocol with SP-sized scratch-tail headroom. Tick
         wall-clock lands on per-replica ``busy_seconds`` (telemetry);
         the Eq.-1 planner re-calibrates its latency EMAs from cached
-        probe forwards at the top of each round instead."""
+        probe forwards at the top of each round instead.
+
+        With the fault plane armed (``faults`` / ``tick_deadline_s``),
+        serving becomes an *epoch loop*: each epoch runs the slot table at
+        the current healthy SP degree under a ``TickSupervisor``; a
+        quarantine raises ``SPDegraded`` — live streams are already rolled
+        back to their committed frontiers and requeued — and the next
+        epoch rebuilds the table one replica smaller. Backoff-expired
+        quarantines re-admit on probation between epochs; with every
+        replica quarantined, exact-rule requests finish on the plain
+        autoregressive path (``_run_nonsi_fallback``)."""
         if not self._queue:
             return []
         from repro.orchestrator import ReplicaStats
-        sp = self._resolve_sp()
-        replicas = [ReplicaStats(j) for j in range(sp)]
-        done = self._run_slot_table(self._sp_engine(sp), sp=sp, bucket=True,
-                                    replicas=replicas)
-        self._merge_replica_stats(replicas)
+        supervisor = self._fault_supervisor(self.sp_degree)
+        done: List[Request] = []
+        while self._queue:
+            if supervisor is not None:
+                supervisor.probe_recoveries()
+            sp = self._resolve_sp()
+            if supervisor is not None and self.health.effective_sp == 0:
+                return self._run_nonsi_fallback(done)
+            replicas = [ReplicaStats(j) for j in range(sp)]
+            if supervisor is not None:
+                active = self.health.healthy()[:sp]
+                supervisor.bind_epoch(active, replicas)
+            try:
+                self._run_slot_table(self._sp_engine(sp), sp=sp,
+                                     bucket=True, replicas=replicas,
+                                     supervisor=supervisor, done=done)
+            except SPDegraded:
+                self._merge_replica_stats(replicas)
+                if self.fault_stats is not None:
+                    self.fault_stats.degradations += 1
+                continue
+            self._merge_replica_stats(replicas)
         return done
 
     def _run_dsi_sp_drain(self) -> List[Request]:
@@ -424,6 +682,7 @@ class ServingEngine:
             agg.rejections += r.rejections
             agg.busy_ticks += r.busy_ticks
             agg.busy_seconds += r.busy_seconds
+            agg.faults += getattr(r, "faults", 0)
 
     def _spec_engine(self, cls):
         """One engine per ServingEngine: its jit cache persists across

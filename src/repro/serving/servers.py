@@ -10,17 +10,26 @@ genuine thread-management costs (context switches, queueing).
 Exact-match (greedy) verification; the drafter runs on the calling thread
 (its own "server"), verification tasks go to the SP-sized pool, and a
 rejection cancels all outstanding work beyond the corrected position
-(Algorithm 1 lines 8/10 — realized as epoch-tagged task invalidation).
+(Algorithm 1 lines 8/10 — realized as epoch-tagged task invalidation: a
+rejection bumps the run's epoch, outstanding futures are cancelled *and*
+any result tagged with a stale epoch is discarded structurally, so a
+cancelled-but-already-running verify can never fold into a newer run).
+``task_deadline_s`` arms a per-task deadline: a hung ``target_fn`` is
+abandoned and resubmitted (bounded retries) instead of wedging
+``generate`` forever — exhausting the budget raises a structured
+``TickTimeout`` (docs/robustness.md).
 """
 from __future__ import annotations
 
 import time
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeout
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.planner import min_lookahead
+from repro.runtime.errors import TickTimeout
 
 
 def serve_queue(engine, requests: Sequence[Tuple[Sequence[int], int]]
@@ -40,6 +49,12 @@ def serve_queue(engine, requests: Sequence[Tuple[Sequence[int], int]]
     rows: List[Dict[str, object]] = []
     cache_stats = (engine.cache_manager.stats()
                    if getattr(engine, "cache_manager", None) else None)
+    fault_plane = None
+    if getattr(engine, "fault_stats", None) is not None:
+        fault_plane = engine.fault_stats.as_dict()
+        if getattr(engine, "health", None) is not None:
+            fault_plane["health"] = engine.health.as_dict()
+        fault_plane["degraded_to_nonsi"] = engine.degraded_to_nonsi
     for r in done:
         st = r.stats
         rows.append({
@@ -55,6 +70,16 @@ def serve_queue(engine, requests: Sequence[Tuple[Sequence[int], int]]
             "pages_shared": st.pages_shared if st else None,
             "prefix_hit_rate": st.prefix_hit_rate if st else None,
             "cache": cache_stats,
+            # fault-plane telemetry (None when the plane is unarmed;
+            # docs/robustness.md). Per-request counters ride EngineStats;
+            # the run-level block (injection/quarantine/recovery counters
+            # + replica health) is shared by every row of the run.
+            "faults": st.faults if st else None,
+            "retries": st.retries if st else None,
+            "degradations": st.degradations if st else None,
+            "deferrals": st.deferrals if st else None,
+            "error": r.error,
+            "fault_plane": fault_plane,
         })
     return rows
 
@@ -73,6 +98,12 @@ class OnlineStats:
     accepted: int = 0
     wall_s: float = 0.0
     timeline: list = field(default_factory=list)
+    # fault-plane accounting (zeros when no deadline is armed and no
+    # rejection occurs — docs/robustness.md)
+    epochs: int = 0          # rejection-driven epoch bumps (invalidations)
+    stale_results: int = 0   # results discarded by epoch tag / abandonment
+    timeouts: int = 0        # per-task deadline hits
+    retries: int = 0         # timed-out tasks resubmitted
 
 
 class DSIOrchestrator:
@@ -86,7 +117,9 @@ class DSIOrchestrator:
     def __init__(self, target_fn: TargetFn, drafter_fn: DrafterFn, *,
                  sp: int, lookahead: Optional[int] = None,
                  target_latency: Optional[float] = None,
-                 drafter_latency: Optional[float] = None):
+                 drafter_latency: Optional[float] = None,
+                 task_deadline_s: Optional[float] = None,
+                 max_task_retries: int = 2):
         self.target_fn = target_fn
         self.drafter_fn = drafter_fn
         self.sp = sp
@@ -95,6 +128,37 @@ class DSIOrchestrator:
                 "need latencies to derive the minimal feasible lookahead (Eq. 1)"
             lookahead = min_lookahead(target_latency, drafter_latency, sp)
         self.lookahead = lookahead
+        # per-task deadline (None = block forever, the legacy behavior):
+        # a verify future that misses it is abandoned and resubmitted up
+        # to ``max_task_retries`` times, then the run fails with a
+        # structured ``TickTimeout`` instead of wedging the caller
+        self.task_deadline_s = task_deadline_s
+        self.max_task_retries = max_task_retries
+        self._epoch = 0   # bumped per rejection: stale-result invalidation
+
+    def _await_verify(self, pool, fut, snapshot, verify_from, stats):
+        """Resolve one verify future under the per-task deadline. A task
+        that misses the deadline is abandoned (its eventual result is
+        never read — counted as stale) and the identical snapshot is
+        resubmitted; the retry budget exhausting raises ``TickTimeout``."""
+        if self.task_deadline_s is None:
+            return fut.result()
+        for attempt in range(self.max_task_retries + 1):
+            try:
+                return fut.result(timeout=self.task_deadline_s)
+            except FuturesTimeout:
+                stats.timeouts += 1
+                if not fut.cancel():
+                    # already running: the thread is hung or slow; its
+                    # late result is simply never folded in
+                    stats.stale_results += 1
+                if attempt == self.max_task_retries:
+                    raise TickTimeout(
+                        f"verify task exceeded {self.task_deadline_s}s "
+                        f"deadline on {attempt + 1} consecutive attempts")
+                stats.retries += 1
+                fut = pool.submit(self.target_fn, snapshot, verify_from)
+        raise AssertionError("unreachable")       # pragma: no cover
 
     def generate(self, prompt: Sequence[int], n_new: int
                  ) -> Tuple[List[int], OnlineStats]:
@@ -107,7 +171,11 @@ class DSIOrchestrator:
                 # one "run": draft ahead, verifying blocks concurrently
                 ctx = list(out)
                 drafts: List[int] = []
-                futures = deque()          # (start_offset, block_len, fut)
+                # (start_offset, block_len, snapshot, verify_from, epoch,
+                #  fut) — snapshot/verify_from allow deadline resubmission
+                # of the identical task; the epoch tag structurally
+                # invalidates results from before the last rejection
+                futures = deque()
                 rejected = False
                 while not rejected:
                     # draft the next block (the drafter never blocks on
@@ -120,16 +188,25 @@ class DSIOrchestrator:
                     snapshot = ctx + drafts
                     fut = pool.submit(self.target_fn, snapshot,
                                       len(ctx) + start)
-                    futures.append((start, blk, fut))
+                    futures.append((start, blk, snapshot, len(ctx) + start,
+                                    self._epoch, fut))
                     stats.tasks += 1
 
                     # drain any completed verifications, in block order
-                    while futures and (futures[0][2].done()
+                    while futures and (futures[0][5].done()
                                        or len(futures) >= self.sp
                                        or len(ctx) + len(drafts) - n_prompt
                                        >= n_new):
-                        f_start, f_blk, f = futures.popleft()
-                        tgt = f.result()   # target tokens for the block + 1
+                        (f_start, f_blk, f_snap, f_from, f_epoch,
+                         f) = futures.popleft()
+                        if f_epoch != self._epoch:
+                            # result from before a rejection: discard it
+                            # (the cancel on rejection is best-effort; the
+                            # epoch tag is the correctness guarantee)
+                            stats.stale_results += 1
+                            continue
+                        tgt = self._await_verify(pool, f, f_snap, f_from,
+                                                 stats)
                         n_ok = 0
                         for i in range(f_blk):
                             if drafts[f_start + i] == tgt[i]:
@@ -139,10 +216,12 @@ class DSIOrchestrator:
                         stats.accepted += n_ok
                         if n_ok < f_blk:   # rejection => correction token
                             stats.rejections += 1
+                            self._epoch += 1
+                            stats.epochs = self._epoch
                             out = ctx + drafts[:f_start + n_ok] + [tgt[n_ok]]
                             stats.timeline.append(
                                 (time.monotonic() - t0, len(out) - n_prompt))
-                            for _, _, g in futures:
+                            for *_rest, g in futures:
                                 g.cancel()
                             futures.clear()
                             rejected = True

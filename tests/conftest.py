@@ -15,6 +15,20 @@ def rng():
     return jax.random.PRNGKey(0)
 
 
+@pytest.fixture(scope="module", autouse=True)
+def _clear_jax_caches():
+    """Drop compiled executables between test modules.
+
+    The suite jits hundreds of distinct programs across one process; on
+    CPU jaxlib that accumulation can segfault the XLA client late in the
+    run (observed on the unmodified seed as well). Releasing the
+    compilation caches at module boundaries keeps the resident-executable
+    count bounded; modules re-trace lazily, correctness is unaffected.
+    """
+    yield
+    jax.clear_caches()
+
+
 def tiny(name: str, *, layers: int = 2, d_model: int = 256,
          dtype: str = "float32", **kw):
     """Reduced fp32 config (bit-stable greedy streams for lossless tests)."""

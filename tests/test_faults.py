@@ -1,0 +1,372 @@
+"""Fault-plane suite (docs/robustness.md): deterministic injection,
+replica health / quarantine / recovery, lossless retry-replay, bounded
+deferrals, and the thread-pool orchestrator's epoch + deadline hardening.
+
+Unit cells exercise runtime/ in isolation (no models); the chaos cells
+drive real tiny models through ServingEngine under injected crash /
+straggler / OOM-storm / NaN schedules and require the emitted streams to
+be token-identical to the fault-free run — the repo's losslessness
+contract extended to the failure domain. The cross-engine chaos matrix
+(dense × paged) lives in test_lossless_matrix.py.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.models.model import Model
+from repro.runtime import (HEALTHY, PROBATION, QUARANTINED, FaultEvent,
+                           FaultInjector, FaultPlan, FaultStats,
+                           HealthTracker, LogitCorruption, ReplicaFault,
+                           RetryExhausted, RetryPolicy, SPDegraded,
+                           TickSupervisor, TickTimeout)
+from repro.serving.engine import ServingEngine
+from repro.serving.servers import DSIOrchestrator, make_wait_fns, serve_queue
+
+
+# ------------------------------------------------------------ plan parsing
+def test_plan_parse_grammar():
+    p = FaultPlan.parse("crash@5:r1:x2,straggler@3:r0:d50,oom@8:x3,nan@12")
+    assert [e.kind for e in p.events] == ["crash", "straggler", "oom", "nan"]
+    c, s, o, n = p.events
+    assert (c.tick, c.replica, c.count) == (5, 1, 2)
+    assert (s.replica, s.delay_s) == (0, 0.05)
+    assert (o.tick, o.count, o.replica) == (8, 3, None)
+    assert (n.tick, n.count) == (12, 1)
+    # round-trips through describe()
+    assert FaultPlan.parse(p.describe()).events == p.events
+
+
+def test_plan_parse_rejects_garbage():
+    with pytest.raises(ValueError):
+        FaultPlan.parse("crash5")
+    with pytest.raises(ValueError):
+        FaultPlan.parse("meteor@3")
+
+
+def test_plan_random_is_seed_deterministic():
+    kw = dict(n_ticks=64, sp=4, p_crash=0.1, p_straggler=0.1, p_oom=0.05,
+              p_nan=0.05)
+    a = FaultPlan.random(7, **kw)
+    b = FaultPlan.random(7, **kw)
+    assert a.events == b.events and a.events
+    assert FaultPlan.random(8, **kw).events != a.events
+
+
+# --------------------------------------------------------------- injector
+def test_injector_disabled_or_empty_is_noop():
+    for inj in (FaultInjector(""), FaultInjector(None),
+                FaultInjector("crash@0", enabled=False)):
+        assert inj.crash_at(0, 0) is None
+        assert inj.nan_at(0, 0) is None
+        assert inj.straggler_at(0) is None
+        assert not inj.oom_at(0)
+        assert inj.fired == 0
+
+
+def test_injector_matching_semantics():
+    inj = FaultInjector("crash@2:r1:x2,oom@5:x3,straggler@9:r0")
+    # crash spans *attempts* at one tick
+    assert inj.crash_at(2, 0, [0, 1]).replica == 1
+    assert inj.crash_at(2, 1, [0, 1]) is not None
+    assert inj.crash_at(2, 2, [0, 1]) is None
+    assert inj.crash_at(3, 0, [0, 1]) is None
+    # a replica already out of the pool never fires
+    assert inj.crash_at(2, 0, [0]) is None
+    # oom spans *ticks*
+    assert [inj.oom_at(t) for t in (4, 5, 6, 7, 8)] == [
+        False, True, True, True, False]
+    assert inj.straggler_at(9, [0, 1]).replica == 0
+
+
+# ----------------------------------------------------------------- health
+def test_health_quarantine_probation_recovery_ladder():
+    h = HealthTracker(3, quarantine_after=2, recovery_backoff=4,
+                      probation_ticks=2)
+    assert h.healthy() == [0, 1, 2] and h.effective_sp == 3
+    # one fault: counted, not quarantined; a clean tick resets the streak
+    assert not h.record_fault(1, tick=0)
+    h.record_clean_tick()
+    assert not h.record_fault(1, tick=2)
+    # two consecutive faults trip quarantine
+    assert h.record_fault(1, tick=3)
+    assert h.replicas[1].state == QUARANTINED
+    assert h.healthy() == [0, 2] and h.effective_sp == 2
+    # backoff expiry -> probe -> probation -> clean ticks -> recovered
+    assert h.due_probes(tick=5) == []
+    assert h.due_probes(tick=7) == [1]
+    h.start_probe(1)
+    assert h.replicas[1].state == PROBATION
+    assert h.record_clean_tick() == []
+    assert h.record_clean_tick() == [1]
+    assert h.replicas[1].state == HEALTHY and h.recoveries == 1
+
+
+def test_health_probation_is_one_strike_and_backoff_doubles():
+    h = HealthTracker(2, quarantine_after=3, recovery_backoff=4,
+                      backoff_factor=2)
+    for t in range(3):
+        tripped = h.record_fault(0, tick=t)
+    assert tripped and h.replicas[0].backoff_ticks == 4
+    h.start_probe(0)
+    # a single fault while probing re-quarantines with doubled backoff
+    assert h.record_fault(0, tick=10)
+    assert h.replicas[0].state == QUARANTINED
+    assert h.replicas[0].backoff_ticks == 8
+
+
+def test_retry_policy_backoff_schedule():
+    p = RetryPolicy(max_retries=3, backoff_s=0.01, backoff_factor=2,
+                    max_backoff_s=0.03)
+    assert [p.backoff(a) for a in range(4)] == [0.01, 0.02, 0.03, 0.03]
+    assert RetryPolicy().backoff(5) == 0.0   # default: no sleeping in tests
+
+
+# ------------------------------------------------------------- supervisor
+def _mini_state(nan=False):
+    import jax.numpy as jnp
+    v = jnp.full((2, 4), jnp.nan if nan else 0.25, jnp.float32)
+    return {"carry": v, "prefetch_prob": v}
+
+
+def test_supervisor_replays_crash_and_counts():
+    sup = TickSupervisor(2, injector=FaultInjector("crash@1:r0"))
+    calls = []
+    step = lambda ref: (calls.append(ref), _mini_state())[1]
+    sup.run_tick(step, live=np.array([True, True]))
+    assert len(calls) == 1
+    state, degrade = sup.run_tick(step, live=np.array([True, True]))
+    assert degrade is None and len(calls) == 3      # tick 1 replayed once
+    assert sup.stats.crashes == 1 and sup.stats.retries == 1
+    assert sup.last_retries == 1
+    assert sup.health.replicas[0].consecutive_faults == 1
+
+
+def test_supervisor_corruption_falls_back_to_ref_once():
+    sup = TickSupervisor(1, injector=FaultInjector("nan@0"))
+    calls = []
+
+    def step(ref):
+        calls.append(ref)
+        return _mini_state()
+    state, _ = sup.run_tick(step, live=np.array([True, True]))
+    # attempt 0 (pallas), corrupted -> attempt 1 on the reference path
+    assert calls == [False, True]
+    assert sup.stats.corruptions == 1 and sup.stats.ref_fallbacks == 1
+    assert np.isfinite(np.asarray(state["carry"])).all()
+
+
+def test_supervisor_quarantines_on_consecutive_faults():
+    sup = TickSupervisor(2, injector=FaultInjector("crash@0:r1:x5"),
+                         health=HealthTracker(2, quarantine_after=2))
+    with pytest.raises(SPDegraded) as ei:
+        sup.run_tick(lambda ref: _mini_state(), live=np.array([True, True]))
+    assert ei.value.replica == 1
+    assert isinstance(ei.value.cause, ReplicaFault)
+    assert sup.health.effective_sp == 1 and sup.stats.quarantines == 1
+
+
+def test_supervisor_retry_exhaustion_forces_quarantine():
+    # every attempt of every tick corrupts even the ref path: the budget
+    # exhausts and the supervisor sheds the replica instead of failing
+    sup = TickSupervisor(2, policy=RetryPolicy(max_retries=2),
+                         health=HealthTracker(2, quarantine_after=99))
+    with pytest.raises(SPDegraded) as ei:
+        sup.run_tick(lambda ref: _mini_state(nan=True),
+                     live=np.array([True, True]))
+    cause = ei.value.cause
+    assert isinstance(cause, RetryExhausted)
+    assert all(isinstance(c, LogitCorruption) for c in cause.causes)
+    assert sup.health.replicas[ei.value.replica].state == QUARANTINED
+
+
+def test_supervisor_straggler_keeps_results_degrades_after():
+    # late results are valid: the state is returned, the degradation is
+    # handed back for the caller to raise *after* committing
+    sup = TickSupervisor(2, injector=FaultInjector("straggler@0:r0:x9:d1"),
+                         health=HealthTracker(2, quarantine_after=2))
+    state, degrade = sup.run_tick(lambda ref: _mini_state(),
+                                  live=np.array([True, True]))
+    assert state is not None and degrade is None
+    state, degrade = sup.run_tick(lambda ref: _mini_state(),
+                                  live=np.array([True, True]))
+    assert state is not None
+    assert isinstance(degrade, SPDegraded)
+    assert isinstance(degrade.cause, TickTimeout)
+    assert sup.stats.stragglers == 2
+
+
+def test_supervisor_tick_deadline_counts_as_straggler():
+    sup = TickSupervisor(1, tick_deadline_s=1e-4,
+                         health=HealthTracker(1, quarantine_after=99))
+
+    def slow(ref):
+        time.sleep(2e-3)
+        return _mini_state()
+    state, degrade = sup.run_tick(slow, live=np.array([True, True]))
+    assert state is not None and degrade is None
+    assert sup.stats.stragglers == 1
+
+
+def test_fault_stats_merge_and_dict():
+    a, b = FaultStats(crashes=1, retries=2), FaultStats(crashes=2)
+    b.note(3, "crash", 0)
+    a.merge(b)
+    assert a.crashes == 3 and a.retries == 2
+    assert a.history == [(3, "crash", 0)]
+    d = a.as_dict()
+    assert d["total_faults"] == 3 and "history" not in d
+
+
+# ------------------------------------------------ serving chaos (models)
+@pytest.fixture(scope="module")
+def served():
+    """Tiny target/drafter + a fixed request list; returns a runner and
+    the memoized fault-free reference outputs."""
+    cfg_t = tiny("yi-9b")
+    cfg_d = tiny("yi-9b", d_model=128)
+    mt, md = Model(cfg_t), Model(cfg_d)
+    pt = mt.init(jax.random.PRNGKey(0))
+    pd = md.init(jax.random.PRNGKey(1))
+    rs = np.random.default_rng(1)
+    reqs = [(rs.integers(0, cfg_t.vocab_size,
+                         size=int(rs.integers(6, 11))).tolist(),
+             int(rs.integers(4, 9))) for _ in range(5)]
+
+    def run(faults=None, **kw):
+        eng = ServingEngine(target=mt, params_t=pt, drafter=md, params_d=pd,
+                            mode="dsi", lookahead=4, max_batch=2,
+                            sp_degree=2, faults=faults, **kw)
+        for p, m in reqs:
+            eng.submit(p, m)
+        return eng, [r.output for r in sorted(eng.run(),
+                                              key=lambda r: r.rid)]
+
+    run.reference = run()[1]
+    return run
+
+
+def test_chaos_crash_quarantine_lossless(served):
+    eng, out = served("crash@2:r1:x2")
+    assert out == served.reference
+    assert eng.fault_stats.crashes == 2
+    assert eng.fault_stats.quarantines == 1
+    assert eng.fault_stats.degradations == 1
+    assert eng.fault_stats.requeued > 0
+    assert eng.health.effective_sp == 1
+    # the degraded epoch really ran narrower than the budget
+    assert eng.replica_stats[1].faults > 0
+
+
+def test_chaos_mixed_storm_lossless(served):
+    eng, out = served("crash@2:r1:x2,straggler@4:r0:d5,oom@1:x2,nan@6")
+    assert out == served.reference
+    fs = eng.fault_stats
+    assert fs.crashes and fs.stragglers and fs.oom_events and fs.corruptions
+    assert fs.ref_fallbacks == 1
+    assert fs.total_faults == fs.crashes + fs.stragglers + \
+        fs.corruptions + fs.oom_events + fs.timeouts
+
+
+def test_chaos_degrade_to_nonsi_lossless(served):
+    # both replicas quarantined: exact-rule serving finishes on the plain
+    # autoregressive path, still token-identical
+    eng, out = served("crash@2:r1:x2,crash@4:r0:x2", recovery_backoff=1000)
+    assert out == served.reference
+    assert eng.degraded_to_nonsi
+    assert eng.health.effective_sp == 0
+    assert eng.fault_stats.degradations >= 2
+
+
+def test_chaos_recovery_probe_restores_degree(served):
+    eng, out = served("crash@2:r1:x2", recovery_backoff=2)
+    assert out == served.reference
+    assert eng.health.as_dict()["replicas"][1]["state"] == QUARANTINED
+    # a later serving round probes the quarantined replica back in
+    for _ in range(2):
+        for p, m in [([1, 2, 3, 4, 5, 6], 6)]:
+            eng.submit(p, m)
+        eng.run()
+        if eng.health.effective_sp == 2:
+            break
+    assert eng.fault_stats.probes >= 1
+    assert eng.fault_stats.recoveries >= 1
+    assert eng.health.effective_sp == 2
+
+
+def test_chaos_deferral_bound_fails_cleanly(served):
+    # a permanent storm with a tiny deferral bound: requests fail with a
+    # structured CacheCapacityError instead of livelocking the queue
+    eng, out = served("oom@0:x10000", max_deferrals=3)
+    assert all(o is None for o in out)
+    assert eng.fault_stats.failed_requests == 5
+    assert eng.fault_stats.oom_events > 0
+
+
+def test_chaos_telemetry_rows(served):
+    # serve_queue surfaces per-request + run-level fault telemetry
+    cfg_t = tiny("yi-9b")
+    rs = np.random.default_rng(1)
+    reqs = [(rs.integers(0, cfg_t.vocab_size,
+                         size=int(rs.integers(6, 11))).tolist(),
+             int(rs.integers(4, 9))) for _ in range(5)]
+    eng, _ = served("crash@2:r1:x2")
+    rows = serve_queue(eng, reqs[:2])
+    for row in rows:
+        assert row["fault_plane"]["crashes"] >= 2
+        assert row["fault_plane"]["health"]["quarantines"] >= 1
+        assert row["faults"] is not None and row["error"] is None
+
+
+def test_unarmed_engine_has_no_fault_plane(served):
+    eng, out = served(None)
+    assert out == served.reference
+    assert eng.fault_stats is None and eng.health is None
+    assert eng._supervisor is None
+
+
+# -------------------------------------- thread-pool orchestrator hardening
+def test_online_task_deadline_unwedges_generate():
+    """A target server that hangs once: the per-task deadline abandons
+    the hung future, resubmits, and the run completes correctly."""
+    stream = list(range(10, 30))
+    target_fn, drafter_fn = make_wait_fns(
+        stream, acceptance=0.8, target_latency=1e-4, drafter_latency=1e-5,
+        n_prompt=3)
+    hung = []
+
+    def flaky_target(context, verify_from):
+        if not hung:
+            hung.append(1)
+            time.sleep(0.2)            # one hung task
+        return target_fn(context, verify_from)
+
+    orch = DSIOrchestrator(flaky_target, drafter_fn, sp=2, lookahead=4,
+                           task_deadline_s=0.05, max_task_retries=2)
+    out, stats = orch.generate([1, 2, 3], 12)
+    assert out == stream[:12]
+    assert stats.timeouts >= 1 and stats.retries >= 1
+
+
+def test_online_deadline_exhaustion_raises_structured():
+    def dead_target(context, verify_from):
+        time.sleep(10)
+        raise AssertionError("unreachable")
+
+    orch = DSIOrchestrator(dead_target, lambda ctx: 0, sp=1, lookahead=2,
+                           task_deadline_s=0.01, max_task_retries=1)
+    with pytest.raises(TickTimeout):
+        orch.generate([1, 2, 3], 4)
+
+
+def test_online_epoch_counts_rejections():
+    stream = list(range(10, 30))
+    target_fn, drafter_fn = make_wait_fns(
+        stream, acceptance=0.5, target_latency=1e-4, drafter_latency=1e-5,
+        n_prompt=3, seed=3)
+    orch = DSIOrchestrator(target_fn, drafter_fn, sp=2, lookahead=4)
+    out, stats = orch.generate([1, 2, 3], 12)
+    assert out == stream[:12]
+    assert stats.epochs == stats.rejections

@@ -186,3 +186,46 @@ def test_mid_admit_continuous_equals_drain_and_reference(matrix, cache):
     assert eng_cont.engine_invocations > 0
     assert sum(r.windows_verified + r.windows_preempted
                for r in eng_cont.replica_stats) > 0
+
+
+# --------------------------------------------------------- chaos cells
+@pytest.mark.parametrize("cache", ["dense", "paged"])
+@pytest.mark.parametrize("faults", [
+    "crash@2:r1:x2",                 # replica crash -> quarantine+degrade
+    "straggler@1:r0:x3:d2",          # repeated latency spikes -> quarantine
+    "oom@1:x2,crash@3:r1:x2,nan@5",  # mixed storm
+])
+def test_chaos_matrix_lossless(matrix, cache, faults):
+    """The losslessness contract extended to the failure domain
+    (docs/robustness.md): under injected replica crashes, straggler
+    spikes, CacheOOM storms and NaN corruption, SP continuous serving
+    emits streams token-identical to the fault-free run — and the
+    fault-free run is already pinned to the non-SI greedy reference by
+    test_mid_admit_continuous_equals_drain_and_reference. Dense and
+    paged; the run must really have degraded (nonzero fault-plane
+    counters), not dodged the schedule."""
+    from repro.serving.engine import ServingEngine
+
+    mt, md, pt, pd = matrix.models
+    rs = np.random.default_rng(1)
+    reqs = [(rs.integers(0, matrix.vocab,
+                         size=int(rs.integers(6, 11))).tolist(),
+             int(rs.integers(4, 9))) for _ in range(5)]
+    paged = PS if cache == "paged" else None
+
+    def run(f):
+        eng = ServingEngine(target=mt, params_t=pt, drafter=md, params_d=pd,
+                            mode="dsi", lookahead=4, max_batch=2,
+                            sp_degree=2, paged=paged, faults=f)
+        for p, m in reqs:
+            eng.submit(p, m)
+        return eng, {r.rid: r.output for r in eng.run()}
+
+    _, base = run(None)
+    eng, chaos = run(faults)
+    assert chaos == base, (cache, faults)
+    assert eng.fault_stats.total_faults > 0
+    assert eng.fault_stats.retries + eng.fault_stats.degradations > 0
+    if "crash" in faults or "straggler" in faults:
+        assert eng.fault_stats.degradations > 0
+        assert eng.fault_stats.requeued > 0
