@@ -15,7 +15,6 @@ On TPU the dispatcher row times the compiled Pallas kernel instead.
 from __future__ import annotations
 
 import json
-import time
 from typing import List, Optional
 
 import jax
@@ -26,31 +25,26 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.flash_attention.ring_decode import ring_slot_map
 from repro.kernels.spec_verify.ref import spec_verify_ref
 from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.telemetry import interleaved_medians, timed_us
+
+# timing protocol lives in telemetry.bench (shared by all three bench
+# scripts — docs/observability.md); these wrappers only adapt signatures
 
 
 def _time(fn, *args, reps=5, **kw):
-    out = fn(*args, **kw)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args, **kw)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6
+    if kw:
+        return timed_us(lambda *a: fn(*a, **kw), *args, reps=reps)
+    return timed_us(fn, *args, reps=reps)
 
 
 def _time_interleaved(fns, *args, rounds=24):
-    """Median per-call us for several fns, alternating calls each round —
-    robust against thermal/noisy-neighbour drift that makes sequential
-    A-then-B timings lie on small shared hosts."""
-    for fn in fns.values():
-        jax.block_until_ready(fn(*args))
-    acc = {name: [] for name in fns}
-    for _ in range(rounds):
-        for name, fn in fns.items():
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn(*args))
-            acc[name].append(time.perf_counter() - t0)
-    return {name: sorted(ts)[len(ts) // 2] * 1e6 for name, ts in acc.items()}
+    """Median per-call us for several named fns, alternating calls each
+    round — robust against thermal/noisy-neighbour drift that makes
+    sequential A-then-B timings lie on small shared hosts."""
+    names = list(fns)
+    meds = interleaved_medians([fns[n] for n in names], *args,
+                               rounds=rounds)
+    return dict(zip(names, meds))
 
 
 def _row(rows: List[dict], op: str, shape: str, us: float,

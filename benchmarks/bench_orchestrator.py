@@ -10,7 +10,11 @@ realistic acceptance regime) — and reports, per R:
     monotonically non-increasing in R,
   * wall-clock (informational on CPU: the R replicas are real concurrent
     window verifications only when a spec-axis mesh maps them to
-    devices),
+    devices), measured with the shared fenced interleaved-median
+    protocol from ``repro.telemetry.bench`` — dispatch is fenced with
+    ``block_until_ready`` and the R ∈ {1, 2, 4} variants alternate each
+    round so thermal/noisy-neighbour drift cannot bias one degree
+    (docs/observability.md §5),
   * acceptance/preemption accounting (the wasted-verify resource cost
     that buys the step reduction),
   * losslessness cross-check (every R emits the non-SI greedy stream).
@@ -41,7 +45,6 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import time
 from typing import Optional
 
 import jax
@@ -51,27 +54,28 @@ from repro.configs import get_config, reduced
 from repro.core.si_jax import nonsi_generate
 from repro.models.model import Model
 from repro.orchestrator import SPOrchestrator
+from repro.telemetry import interleaved_medians, timed_section
 
 SP_DEGREES = (1, 2, 4)
 
 
 def _run_sweep(target, drafter, params_t, params_d, prompt, n_new, la,
-               ref) -> list:
+               ref, rounds: int = 3) -> list:
+    # Stats/lossless come from one compile pass per degree; wall-clock
+    # comes from the fenced interleaved-median protocol across all
+    # degrees at once (never sequential per-R timing, which would let
+    # clock drift masquerade as a speedup).
+    orchs = [SPOrchestrator(target, drafter, lookahead=la, sp=r,
+                            rule="exact") for r in SP_DEGREES]
     rows = []
-    for r in SP_DEGREES:
-        orch = SPOrchestrator(target, drafter, lookahead=la, sp=r,
-                              rule="exact")
+    for r, orch in zip(SP_DEGREES, orchs):
         out, stats = orch.generate(params_t, params_d, prompt, n_new)
-        t0 = time.monotonic()
-        out, stats = orch.generate(params_t, params_d, prompt, n_new)
-        wall = time.monotonic() - t0                 # post-compile pass
         lossless = bool(np.array_equal(np.asarray(out), np.asarray(ref)))
         preempted = sum(x.windows_preempted for x in stats.replicas)
         verified = sum(x.windows_verified for x in stats.replicas)
         rows.append({
             "sp": r,
             "steps": stats.macro_steps,
-            "wall_s": round(wall, 4),
             "tokens": int(n_new),
             "tokens_per_step": round(n_new / stats.macro_steps, 3),
             "rejections": stats.rejections,
@@ -79,6 +83,12 @@ def _run_sweep(target, drafter, params_t, params_d, prompt, n_new, la,
             "windows_preempted": preempted,
             "lossless": lossless,
         })
+    meds_us = interleaved_medians(
+        [lambda orch=orch: orch.generate(params_t, params_d, prompt,
+                                         n_new)[0]
+         for orch in orchs], rounds=rounds)
+    for row, med in zip(rows, meds_us):
+        row["wall_s"] = round(med / 1e6, 4)
     return rows
 
 
@@ -102,9 +112,9 @@ def _steady_state(model, params, pd, la: int, smoke: bool) -> dict:
                             max_batch=2, sp_degree=2, admission=admission)
         for p, m in reqs:
             eng.submit(p, m)
-        t0 = time.monotonic()
-        done = eng.run()
-        wall = time.monotonic() - t0
+        with timed_section() as t:
+            t.result = eng.run()
+        done, wall = t.result, t.seconds
         toks = sum(len(r.output) for r in done)
         rows[admission] = {
             "requests": n_req,
@@ -146,9 +156,9 @@ def _faults(model, params, pd, la: int, smoke: bool) -> dict:
                             max_batch=2, sp_degree=2, faults=faults)
         for p, m in reqs:
             eng.submit(p, m)
-        t0 = time.monotonic()
-        done = eng.run()
-        wall = time.monotonic() - t0
+        with timed_section() as t:
+            t.result = eng.run()
+        done, wall = t.result, t.seconds
         toks = sum(len(r.output) for r in done)
         row = {
             "requests": n_req,
@@ -197,7 +207,8 @@ def main(smoke: bool = False, json_path: Optional[str] = None) -> None:
     for regime, pd in (("perfect", params),
                        ("noisy", noisy_params(params, 0.05,
                                               jax.random.PRNGKey(7)))):
-        rows = _run_sweep(model, model, params, pd, prompt, n_new, la, ref)
+        rows = _run_sweep(model, model, params, pd, prompt, n_new, la, ref,
+                          rounds=2 if smoke else 3)
         regimes[regime] = rows
         for row in rows:
             print(f"orchestrator,{regime},{row['sp']},{row['steps']},"

@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import time
 from typing import Optional
 
 import jax
@@ -27,6 +26,7 @@ from repro.cache import PagedSpec
 from repro.configs import get_config, reduced
 from repro.models.model import Model
 from repro.serving.engine import ServingEngine
+from repro.telemetry import timed_section
 
 
 def _workload(cfg, *, n_requests: int, prefix_len: int, seed: int = 0):
@@ -46,9 +46,9 @@ def _run(model, params, drafter, params_d, reqs, *, max_batch, la,
                         max_batch=max_batch, paged=paged)
     for p, m in reqs:
         eng.submit(p, m)
-    t0 = time.monotonic()
-    done = eng.run()
-    wall = time.monotonic() - t0
+    with timed_section() as t:
+        t.result = eng.run()
+    done, wall = t.result, t.seconds
     toks = sum(len(r.output) for r in done)
     row = {
         "requests": len(done),

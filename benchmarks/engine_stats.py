@@ -27,6 +27,7 @@ from repro.core.dsi_jax import DSIEngine
 from repro.core.si_jax import SIEngine, nonsi_generate
 from repro.models.model import Model
 from repro.serving.engine import ServingEngine
+from repro.telemetry import safe_mean
 
 
 def noisy_params(params, scale: float, key):
@@ -97,8 +98,8 @@ def _serving(model, params, pd, cfg, *, n_requests: int, max_batch: int,
     # robust to requests that retired before their first verify (or were
     # rejected at admission, stats=None): mean over an empty list is 0.0,
     # never a nan/ZeroDivisionError
-    rates = [r.stats.acceptance_rate for r in done_cb if r.stats is not None]
-    acc = float(np.mean(rates)) if rates else 0.0
+    acc = safe_mean([r.stats.acceptance_rate for r in done_cb
+                     if r.stats is not None])
     bub = sum(r.stats.bubbles for r in done_cb if r.stats is not None)
     print("name,requests,slots,invocations_sequential,"
           "invocations_batched,mean_acceptance,total_bubbles")

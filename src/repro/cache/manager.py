@@ -40,6 +40,8 @@ from repro.cache.allocator import (TRASH_PAGE, CacheCapacityError, CacheOOM,
                                    PageAllocator)
 from repro.cache.paged import PagedSpec, copy_page, replica_scratch_slots
 from repro.cache.prefix import RadixPrefixIndex
+from repro.telemetry.agg import safe_div
+from repro.telemetry.metrics import cache_metrics
 
 PoolKey = Tuple[str, int]        # ("t"|"d", segment index)
 
@@ -212,6 +214,10 @@ class CacheManager:
         self.pages_shared += ticket.pages_shared
         self.pages_allocated += ticket.pages_allocated
         self.last_ticket = ticket
+        cm = cache_metrics()
+        cm.admissions.inc()
+        cm.prefix_hits.inc(sum(ticket.n_cached.values()))
+        self._export_occupancy(cm)
         return ticket
 
     def _alloc_with_evict(self, key: PoolKey, n: int) -> List[int]:
@@ -231,6 +237,7 @@ class CacheManager:
             for ns, page in released:
                 self.alloc[self._ns_key(ns)].decref([page])
             self.evictions += 1
+            cache_metrics().evictions.inc()
         return a.alloc(n)
 
     # ----------------------------------------------------- device-side ops
@@ -338,8 +345,13 @@ class CacheManager:
         also point the slot's device block tables at the trash page)."""
         for key, pages in self._slot_refs.pop(slot, {}).items():
             self.alloc[key].decref(pages)
+        self._export_occupancy(cache_metrics())
 
     # ---------------------------------------------------------- telemetry
+    def _export_occupancy(self, cm) -> None:
+        cm.pages_used.set(sum(a.pages_in_use for a in self.alloc.values()))
+        cm.pages_free.set(sum(a.free_pages for a in self.alloc.values()))
+
     def stats(self) -> Dict[str, float]:
         in_use = sum(a.pages_in_use for a in self.alloc.values())
         free = sum(a.free_pages for a in self.alloc.values())
@@ -353,6 +365,6 @@ class CacheManager:
             "admissions": self.admissions, "deferrals": self.deferrals,
             "evictions": self.evictions, "cow_copies": self.cow_copies,
             "prefix_hit_tokens": self.prefix_hit_tokens,
-            "prefix_hit_rate": (self.prefix_hit_tokens /
-                                max(self.prompt_tokens, 1)),
+            "prefix_hit_rate": safe_div(self.prefix_hit_tokens,
+                                        self.prompt_tokens),
         }

@@ -276,15 +276,16 @@ class EngineStats:
 
     @property
     def acceptance_rate(self) -> float:
-        tot = self.accepted_drafts + self.rejections
-        return self.accepted_drafts / tot if tot else 0.0
+        from repro.telemetry.agg import safe_div
+        return safe_div(self.accepted_drafts,
+                        self.accepted_drafts + self.rejections)
 
     @property
     def prefix_hit_rate(self) -> float:
         """Fraction of this request's prompt tokens whose KV came from
         shared prefix pages instead of being re-prefilled."""
-        return (self.prefix_hit_tokens / self.prompt_tokens
-                if self.prompt_tokens else 0.0)
+        from repro.telemetry.agg import safe_div
+        return safe_div(self.prefix_hit_tokens, self.prompt_tokens)
 
 
 class DSIEngine:

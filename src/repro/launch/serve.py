@@ -18,6 +18,13 @@ staying token-lossless:
 
   PYTHONPATH=src python -m repro.launch.serve --mode dsi --sp-degree 2 \
       --faults 'crash@2:r1:x2,oom@5:x3' --tick-deadline 0.5
+
+Telemetry (docs/observability.md) — trace the SP timeline to a
+Perfetto-loadable trace.json, snapshot the metrics registry, and/or
+serve live /metrics + /trace endpoints while the run is in flight:
+
+  PYTHONPATH=src python -m repro.launch.serve --mode dsi --sp-degree 4 \
+      --trace-out trace.json --metrics-out metrics.prom --metrics-port 0
 """
 from __future__ import annotations
 
@@ -74,6 +81,20 @@ def main(argv=None):
                     help="per-tick wall-clock deadline in seconds: slower "
                          "ticks count as straggler faults toward replica "
                          "quarantine (docs/robustness.md)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the run's span timeline as Chrome/Perfetto "
+                         "trace JSON (one track per replica + per request; "
+                         "docs/observability.md)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a Prometheus text-exposition snapshot of "
+                         "the metrics registry after the run")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve live GET /metrics + /trace + /snapshot on "
+                         "this port during the run (0 picks a free port)")
+    ap.add_argument("--jax-profiler", default=None, metavar="DIR",
+                    help="also record a jax.profiler trace into DIR "
+                         "(TensorBoard/Perfetto-compatible; device-level "
+                         "detail the span tracer cannot see)")
     args = ap.parse_args(argv)
     if (args.faults or args.tick_deadline) and args.mode != "dsi":
         ap.error("--faults/--tick-deadline require --mode dsi (the fault "
@@ -105,6 +126,16 @@ def main(argv=None):
                      "block)")
         from repro.launch.mesh import make_spec_mesh
         mesh = make_spec_mesh(args.sp_degree)
+    tracer = None
+    if args.trace_out or args.metrics_port is not None:
+        from repro.telemetry import SpanTracer
+        tracer = SpanTracer()
+    http_srv = None
+    if args.metrics_port is not None:
+        from repro.serving.servers import TelemetryHTTPServer
+        http_srv = TelemetryHTTPServer(args.metrics_port, tracer=tracer)
+        port = http_srv.start()
+        print(f"telemetry: http://127.0.0.1:{port}/metrics /trace /snapshot")
     eng = ServingEngine(target=target, params_t=params_t, drafter=drafter,
                         params_d=params_d, mode=args.mode,
                         lookahead=args.lookahead, paged=paged,
@@ -112,15 +143,31 @@ def main(argv=None):
                         max_batch=args.max_batch, admission=args.admission,
                         planner="auto" if args.planner == "auto" else None,
                         faults=args.faults,
-                        tick_deadline_s=args.tick_deadline)
+                        tick_deadline_s=args.tick_deadline, tracer=tracer)
     rng = np.random.default_rng(0)
     for _ in range(args.requests):
         prompt = rng.integers(0, cfg_t.vocab_size,
                               size=args.prompt_len).tolist()
         eng.submit(prompt, args.max_new)
+    if args.jax_profiler:
+        jax.profiler.start_trace(args.jax_profiler)
     t0 = time.time()
     done = eng.run()
     wall = time.time() - t0
+    if args.jax_profiler:
+        jax.profiler.stop_trace()
+        print(f"jax profiler trace -> {args.jax_profiler}")
+    if args.trace_out:
+        from repro.telemetry import write_chrome_trace
+        write_chrome_trace(args.trace_out, tracer.spans(), tracer.instants())
+        print(f"trace ({len(tracer.spans())} spans) -> {args.trace_out}")
+    if args.metrics_out:
+        from repro.telemetry import default_registry
+        with open(args.metrics_out, "w") as f:
+            f.write(default_registry().prometheus_text())
+        print(f"metrics snapshot -> {args.metrics_out}")
+    if http_srv is not None:
+        http_srv.stop()
     for req in done:
         if req.output is None:
             print(f"req {req.rid}: FAILED ({req.error})")

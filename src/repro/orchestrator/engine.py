@@ -74,6 +74,8 @@ from repro.core.verify import exact_verify, leviathan_verify
 from repro.models.model import Model, cache_set_row
 from repro.orchestrator.scheduler import COMMIT, COMPLETE, PREEMPT, SPAWN, Event
 from repro.sharding import cs, use_mesh
+from repro.telemetry.agg import safe_div
+from repro.telemetry.metrics import orchestrator_metrics
 
 State = Dict[str, Any]
 
@@ -104,8 +106,8 @@ class ReplicaStats:
 
     @property
     def utilization(self) -> float:
-        tot = self.windows_verified + self.windows_preempted
-        return self.windows_verified / tot if tot else 0.0
+        return safe_div(self.windows_verified,
+                        self.windows_verified + self.windows_preempted)
 
     def as_dict(self) -> dict:
         return {"replica": self.replica,
@@ -381,6 +383,7 @@ class SPOrchestrator:
         self.events = [[] for _ in range(b)]
         self.tick_log = []
         ticks = 0
+        om = orchestrator_metrics()
         n_out = np.zeros((b,), np.int32)
         greedy = self.rule == "exact"
         if greedy:
@@ -401,7 +404,15 @@ class SPOrchestrator:
             had = np.asarray(state["had_block"])
             alive_win = np.asarray(state["alive_win"])
             acc_win = np.asarray(state["acc_win"])
+            prev_out = n_out
             n_out = np.asarray(state["n_out"])
+            om.ticks.inc()
+            # clamp at each stream's goal: the final tick may overshoot by
+            # up to a window and the excess never reaches the output
+            om.committed.inc(int((np.minimum(n_out, n_arr)
+                                  - np.minimum(prev_out, n_arr))
+                                 [unfinished].sum()))
+            om.rollbacks.inc(int(rej[unfinished].sum()))
             for i in range(b):
                 if not unfinished[i]:
                     continue
@@ -414,8 +425,13 @@ class SPOrchestrator:
                         replicas[j].tokens_accepted += int(acc_win[i, j])
                         replicas[j].rejections += int(rej[i]
                                                       and rej_win[i] == j)
+                        om.windows.labels(replica=j,
+                                          outcome="verified").inc()
+                        om.accepted.labels(replica=j).inc(int(acc_win[i, j]))
                     else:
                         replicas[j].windows_preempted += 1
+                        om.windows.labels(replica=j,
+                                          outcome="preempted").inc()
             if had.any():
                 for j in range(r):
                     replicas[j].busy_ticks += 1
@@ -674,6 +690,7 @@ class SPOrchestrator:
         alive_win = np.asarray(state["alive_win"])
         acc_win = np.asarray(state["acc_win"])
         mask = np.asarray(mask, bool)
+        om = orchestrator_metrics()
         for i in np.nonzero(mask & had)[0]:
             for j in range(self.sp):
                 if alive_win[i, j]:
@@ -681,12 +698,17 @@ class SPOrchestrator:
                     replicas[j].tokens_accepted += int(acc_win[i, j])
                     replicas[j].rejections += int(rej[i]
                                                   and rej_win[i] == j)
+                    om.windows.labels(replica=j, outcome="verified").inc()
+                    om.accepted.labels(replica=j).inc(int(acc_win[i, j]))
                 else:
                     replicas[j].windows_preempted += 1
+                    om.windows.labels(replica=j, outcome="preempted").inc()
         if (mask & had).any():
             for rep in replicas:
                 rep.busy_ticks += 1
                 rep.busy_seconds += wall_s
+                om.busy_seconds.labels(replica=rep.replica).inc(wall_s)
+            om.rollbacks.inc(int(rej[mask & had].sum()))
 
     # ------------------------------------------------------------ event log
     def _log_tick(self, tick, unfinished, had, rej, rej_win, alive_win,

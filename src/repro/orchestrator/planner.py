@@ -42,6 +42,7 @@ import jax.numpy as jnp
 
 from repro.core.dsi_sim import simulate_dsi_pool
 from repro.core.planner import min_sp
+from repro.telemetry.metrics import planner_metrics
 
 
 @dataclass
@@ -181,18 +182,28 @@ class SPPlanner:
         t_d = min(t_d, t_t)
         self.observe(target_s=t_t, drafter_s=t_d)
         self.calibrations += 1
+        pm = planner_metrics()
+        pm.calibrations.inc()
+        pm.t_target.set(self.t_target.value)
+        pm.t_drafter.set(self.t_drafter.value)
+        pm.latency_ratio.set(self.latency_ratio)
         return t_t, t_d
 
     # -------------------------------------------------------------- plan
     def sp_degree(self, lookahead: int, max_sp: int) -> int:
         """Planned SP degree for the current estimates (1 until
         measured)."""
+        prev = self.last_plan
         if not self.measured:
             self.last_plan = 1
         else:
             self.last_plan = plan_sp(self.t_target.value,
                                      self.t_drafter.value,
                                      lookahead, max_sp)
+        pm = planner_metrics()
+        pm.sp_degree.set(self.last_plan)
+        if prev is not None and prev != self.last_plan:
+            pm.replans.inc()
         return self.last_plan
 
     def as_dict(self) -> dict:

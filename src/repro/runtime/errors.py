@@ -122,6 +122,11 @@ class FaultStats:
     history: list = field(default_factory=list)   # (tick, kind, replica)
 
     def note(self, tick: int, kind: str, replica: Optional[int]) -> None:
+        # every supervisor fault path funnels through here, so this is
+        # the single registry write point for fault events (the kind
+        # taxonomy is closed — bounded label cardinality)
+        from repro.telemetry.metrics import fault_metrics
+        fault_metrics().events.labels(kind=str(kind)).inc()
         self.history.append((int(tick), str(kind), replica))
         if len(self.history) > 1024:
             del self.history[:len(self.history) - 1024]

@@ -163,35 +163,30 @@ class FaultInjector:
             return e
         return None
 
+    def _fire(self, e: Optional[FaultEvent]) -> Optional[FaultEvent]:
+        if e is not None:
+            self.fired += 1
+            from repro.telemetry.metrics import fault_metrics
+            fault_metrics().injected.labels(kind=e.kind).inc()
+        return e
+
     def crash_at(self, tick: int, attempt: int,
                  active: Optional[Sequence[int]] = None
                  ) -> Optional[FaultEvent]:
-        e = self._match("crash", tick, attempt, active)
-        if e is not None:
-            self.fired += 1
-        return e
+        return self._fire(self._match("crash", tick, attempt, active))
 
     def nan_at(self, tick: int, attempt: int,
                active: Optional[Sequence[int]] = None
                ) -> Optional[FaultEvent]:
-        e = self._match("nan", tick, attempt, active)
-        if e is not None:
-            self.fired += 1
-        return e
+        return self._fire(self._match("nan", tick, attempt, active))
 
     def straggler_at(self, tick: int,
                      active: Optional[Sequence[int]] = None
                      ) -> Optional[FaultEvent]:
-        e = self._match("straggler", tick, 0, active)
-        if e is not None:
-            self.fired += 1
-        return e
+        return self._fire(self._match("straggler", tick, 0, active))
 
     def oom_at(self, tick: int) -> bool:
-        e = self._match("oom", tick, 0)
-        if e is not None:
-            self.fired += 1
-        return e is not None
+        return self._fire(self._match("oom", tick, 0)) is not None
 
     # ---------------------------------------------------------- corruption
     @staticmethod

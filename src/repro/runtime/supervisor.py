@@ -37,6 +37,7 @@ from repro.runtime.errors import (FaultStats, LogitCorruption, ReplicaFault,
                                   RetryExhausted, SPDegraded, TickTimeout)
 from repro.runtime.faults import FaultInjector
 from repro.runtime.health import HealthTracker
+from repro.telemetry.metrics import fault_metrics
 
 
 @dataclass
@@ -81,6 +82,7 @@ class TickSupervisor:
         self.tick = 0                       # global across epochs
         self.active: List[int] = self.health.healthy()
         self.last_retries = 0
+        self.epochs = 0                     # bind_epoch calls (telemetry)
         self._replicas = None               # epoch's ReplicaStats, by window
 
     # -------------------------------------------------------------- epochs
@@ -90,6 +92,10 @@ class TickSupervisor:
         per-window ``ReplicaStats`` list for fault attribution."""
         self.active = list(active)
         self._replicas = replicas
+        self.epochs += 1
+        fm = fault_metrics()
+        fm.epoch.set(self.epochs)
+        fm.effective_sp.set(len(active))
 
     def probe_recoveries(self) -> List[int]:
         """Backoff-expired quarantined replicas re-admitted on probation
@@ -169,20 +175,24 @@ class TickSupervisor:
             self._attribute(rep)
             if self.health.record_fault(rep, t):
                 self.stats.quarantines += 1
+                self._note_quarantine()
                 self._sync_injected()
                 raise SPDegraded(rep, t, fault)
             if attempt == self.policy.max_retries:
                 # budget gone: shed the replica instead of failing the run
                 self.health.quarantine_now(rep, t)
                 self.stats.quarantines += 1
+                self._note_quarantine()
                 self._sync_injected()
                 raise SPDegraded(rep, t, RetryExhausted(
                     "tick replay budget exhausted", tick=t, replica=rep,
                     causes=causes))
             self.stats.retries += 1
+            fault_metrics().retries.inc()
             if isinstance(fault, LogitCorruption) and not use_ref:
                 use_ref = True            # one shot on the reference path
                 self.stats.ref_fallbacks += 1
+                fault_metrics().ref_fallbacks.inc()
         raise AssertionError("unreachable")       # pragma: no cover
 
     # ------------------------------------------------------------- helpers
@@ -198,6 +208,9 @@ class TickSupervisor:
             recovered = self.health.record_clean_tick(exclude=faulted)
             if recovered:
                 self.stats.recoveries += len(recovered)
+                fm = fault_metrics()
+                fm.recoveries.inc(len(recovered))
+                fm.effective_sp.set(len(self.health.healthy()))
                 for rid in recovered:
                     self.stats.note(t, "recovered", rid)
             return None
@@ -208,6 +221,7 @@ class TickSupervisor:
         self._attribute(rep)
         if self.health.record_fault(rep, t):
             self.stats.quarantines += 1
+            self._note_quarantine()
             return SPDegraded(rep, t, TickTimeout(
                 f"tick wall {wall * 1e3:.1f}ms exceeded deadline",
                 tick=t, replica=rep))
@@ -218,6 +232,11 @@ class TickSupervisor:
             w = self.active.index(replica)
             if w < len(self._replicas):
                 self._replicas[w].faults += 1
+
+    def _note_quarantine(self) -> None:
+        fm = fault_metrics()
+        fm.quarantines.inc()
+        fm.effective_sp.set(len(self.health.healthy()))
 
     def _sync_injected(self) -> None:
         if self.injector is not None:

@@ -47,6 +47,7 @@ from repro.core.dsi_jax import DSIEngine, EngineStats
 from repro.core.si_jax import SIEngine, nonsi_generate
 from repro.models.model import Model
 from repro.runtime import SPDegraded
+from repro.telemetry.metrics import orchestrator_metrics, serving_metrics
 
 
 @dataclass
@@ -57,6 +58,10 @@ class Request:
     extra_inputs: Optional[Dict[str, jnp.ndarray]] = None
     output: Optional[List[int]] = None
     stats: Optional[EngineStats] = None
+    #: telemetry timestamps (host perf_counter): set by submit()/the slot
+    #: table; drive the queue-wait and TTFT histograms
+    t_submit: Optional[float] = None
+    t_first_token: Optional[float] = None
     #: admission rejection (e.g. a request that can never fit the page
     #: pool) or a structured fault-plane failure: the request completes
     #: with ``output=None`` instead of aborting the whole run
@@ -131,6 +136,12 @@ class ServingEngine:
     #: fails cleanly with a structured CacheCapacityError, so sustained
     #: pressure can never livelock the queue
     max_deferrals: Optional[int] = 64
+    #: telemetry (docs/observability.md): an optional ``SpanTracer``
+    #: records the per-tick / per-replica / per-request timeline; metric
+    #: counters always flow to ``telemetry.default_registry()``. Both are
+    #: observation-only — token streams are identical with telemetry on
+    #: or off (tests/test_telemetry.py).
+    tracer: Optional[object] = None
     fault_stats: Optional[object] = None      # runtime.FaultStats, merged
     health: Optional[object] = None           # runtime.HealthTracker
     degraded_to_nonsi: bool = False
@@ -161,7 +172,9 @@ class ServingEngine:
                         f"request needs {need} cache positions "
                         f"(prompt {len(prompt)} + max_new {max_new} + "
                         f"engine headroom {slack}), max_len={self.max_len}")
-        req = Request(next(self._rid), list(prompt), max_new, extra_inputs)
+        import time as _time
+        req = Request(next(self._rid), list(prompt), max_new, extra_inputs,
+                      t_submit=_time.perf_counter())
         self._queue.append(req)
         return req
 
@@ -265,6 +278,10 @@ class ServingEngine:
         slots: List[Optional[Request]] = [None] * n_slots
         slot_stats: List[Optional[EngineStats]] = [None] * n_slots
         goals: List[int] = [0] * n_slots   # remaining_new at admission
+        sm, om = serving_metrics(), orchestrator_metrics()
+        tr = self.tracer
+        last_out = np.zeros((n_slots,), np.int64)  # per-tick token deltas
+        admit_t0: List[float] = [0.0] * n_slots    # tracer-clock admit time
         while self._queue or any(r is not None for r in slots):
             # admit queued requests into free slots (late admissions enter
             # mid-flight; the other streams keep their pipeline state).
@@ -276,7 +293,7 @@ class ServingEngine:
                 if slots[b] is None and self._queue:
                     req = self._queue[0]
                     if storm:
-                        self._defer_head(mgr, done)
+                        self._defer_head(mgr, done, reason="oom_storm")
                         break
                     prompt_eff = req.effective_prompt()
                     prompt = jnp.asarray(prompt_eff, jnp.int32)[None]
@@ -292,6 +309,7 @@ class ServingEngine:
                         self._queue.pop(0)
                         req.error = str(e)
                         done.append(req)
+                        sm.rejected.inc()
                         continue
                     except CacheOOM:
                         # transient pressure: leave the request queued (in
@@ -300,6 +318,8 @@ class ServingEngine:
                         # nothing ever will: defensive raise (never-fits
                         # requests are rejected above before this).
                         mgr.deferrals += 1
+                        from repro.telemetry.metrics import cache_metrics
+                        cache_metrics().oom_deferrals.inc()
                         if self._defer_head(mgr, done):
                             continue
                         if not any(r is not None for r in slots):
@@ -308,6 +328,15 @@ class ServingEngine:
                     self._queue.pop(0)
                     slots[b] = req
                     goals[b] = req.remaining_new()
+                    last_out[b] = 0
+                    sm.admitted.inc()
+                    if req.t_submit is not None:
+                        sm.queue_wait.observe(
+                            _time.perf_counter() - req.t_submit)
+                    if tr is not None:
+                        admit_t0[b] = tr.now()
+                        tr.instant(f"admit r{req.rid}",
+                                   track=f"request {req.rid}")
                     if req.stats is None:
                         req.stats = EngineStats(max_history=self.history_cap)
                     slot_stats[b] = st = req.stats
@@ -355,10 +384,36 @@ class ServingEngine:
             n_acc = np.asarray(state["n_acc"])
             rej = np.asarray(state["rejected"])
             n_out = np.asarray(state["n_out"])
+            wall = _time.perf_counter() - t0       # host-synced via reads
             if replicas is not None:
-                wall = _time.perf_counter() - t0   # host-synced via reads
                 eng.record_replica_tick(replicas, state, live,
                                         wall_s=0.0 if first_tick else wall)
+            # committed-token deltas per live slot (admission/retire reset
+            # last_out, so the delta is exactly this tick's commits);
+            # clamped at the per-request goal — the tick may overshoot by
+            # up to a window and the excess never reaches the output
+            eff_out = np.minimum(n_out, np.asarray(goals))
+            delta = np.where(live, eff_out - last_out, 0)
+            tokens_tick = int(np.clip(delta, 0, None).sum())
+            om.ticks.inc()
+            om.committed.inc(tokens_tick)
+            sm.tick_seconds.observe(wall)
+            if tokens_tick:
+                sm.token_seconds.observe(wall / tokens_tick)
+            if tr is not None:
+                t1 = tr.now()
+                tick_t0 = t1 - wall
+                tr.add_span("tick", "orchestrator", tick_t0, t1,
+                            {"tokens": tokens_tick, "live": int(live.sum()),
+                             "compile": first_tick})
+                if replicas is not None and bool(
+                        (live & np.asarray(state["had_block"])).any()):
+                    # the tick is one fused SPMD step: every busy replica's
+                    # verify work occupies the whole tick interval — R
+                    # overlapping spans, the paper's SP made visible
+                    for rep in replicas:
+                        tr.add_span("verify", f"replica {rep.replica}",
+                                    tick_t0, t1)
             first_tick = False
             retired = [b for b, req in enumerate(slots)
                        if req is not None and n_out[b] >= goals[b]]
@@ -372,6 +427,11 @@ class ServingEngine:
                 if n_retries:
                     st.retries += n_retries
                     st.faults += n_retries
+                if (delta[b] > 0 and req.t_first_token is None
+                        and req.t_submit is not None):
+                    req.t_first_token = _time.perf_counter()
+                    sm.ttft.observe(req.t_first_token - req.t_submit)
+                last_out[b] = eff_out[b]
                 if b in retired:
                     req.output = req.committed + out[b, :goals[b]].tolist()
                     req.stats = st
@@ -379,7 +439,13 @@ class ServingEngine:
                     if mgr is not None:
                         mgr.release(b)
                     slots[b], slot_stats[b] = None, None
+                    last_out[b] = 0
                     done.append(req)
+                    sm.retired.inc()
+                    if tr is not None:
+                        tr.add_span(f"req {req.rid}", f"request {req.rid}",
+                                    admit_t0[b], tr.now(),
+                                    {"tokens": len(req.output)})
             if degrade is not None:
                 # straggler quarantine: this tick's (late but valid)
                 # results are committed and retirements honored above;
@@ -421,7 +487,7 @@ class ServingEngine:
                 self.fault_stats.requeued += 1
         self._queue[:0] = sorted(requeued, key=lambda r: r.rid)
 
-    def _defer_head(self, mgr, done) -> bool:
+    def _defer_head(self, mgr, done, reason: str = "cache_oom") -> bool:
         """Count a deferral against the FIFO head; once it exceeds
         ``max_deferrals`` the request fails cleanly with a structured
         CacheCapacityError (age priority: the oldest waiter either admits
@@ -430,6 +496,7 @@ class ServingEngine:
         with the next request)."""
         req = self._queue[0]
         req.deferrals += 1
+        serving_metrics().deferrals.labels(reason=reason).inc()
         if (self.max_deferrals is not None
                 and req.deferrals > self.max_deferrals):
             self._queue.pop(0)
@@ -438,6 +505,7 @@ class ServingEngine:
                          f"{self.max_deferrals}) under sustained cache "
                          f"pressure")
             done.append(req)
+            serving_metrics().rejected.inc()
             if self.fault_stats is not None:
                 self.fault_stats.failed_requests += 1
             return True

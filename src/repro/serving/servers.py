@@ -30,6 +30,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.planner import min_lookahead
 from repro.runtime.errors import TickTimeout
+from repro.telemetry.agg import json_sanitize
 
 
 def serve_queue(engine, requests: Sequence[Tuple[Sequence[int], int]]
@@ -40,7 +41,9 @@ def serve_queue(engine, requests: Sequence[Tuple[Sequence[int], int]]
     response metadata. Returns one dict per request, in completion order,
     each carrying this run's ``engine_invocations`` (the shared serving
     cost, excluding prior runs on a reused engine) next to the request's
-    own speculation accounting."""
+    own speculation accounting. Every row round-trips ``json.dumps``
+    (numpy scalars sanitized — tests/test_telemetry.py pins the
+    schema)."""
     for prompt, max_new in requests:
         engine.submit(list(prompt), max_new)
     before = engine.engine_invocations
@@ -81,7 +84,78 @@ def serve_queue(engine, requests: Sequence[Tuple[Sequence[int], int]]
             "error": r.error,
             "fault_plane": fault_plane,
         })
-    return rows
+    return [json_sanitize(row) for row in rows]
+
+
+class TelemetryHTTPServer:
+    """Zero-dependency observability endpoint (stdlib ``http.server`` on
+    a daemon thread): ``GET /metrics`` serves the registry's Prometheus
+    text exposition, ``GET /trace`` the tracer's Chrome/Perfetto trace
+    JSON (load it at ui.perfetto.dev), ``GET /snapshot`` the registry as
+    JSON. Serving is never blocked: handlers only *read* (the registry
+    and tracer are lock-protected for exactly this cross-thread read).
+
+        srv = TelemetryHTTPServer(port=9100, tracer=tracer)
+        srv.start()           # -> actual port (0 picks a free one)
+        ...
+        srv.stop()
+    """
+
+    def __init__(self, port: int = 0, *, registry=None, tracer=None,
+                 host: str = "127.0.0.1"):
+        from repro.telemetry import default_registry
+        self.registry = registry or default_registry()
+        self.tracer = tracer
+        self.host, self.port = host, port
+        self._httpd = None
+        self._thread = None
+
+    def start(self) -> int:
+        import json as _json
+        import threading
+        from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+        from repro.telemetry import chrome_trace
+        outer = self
+
+        class Handler(BaseHTTPRequestHandler):
+            def do_GET(self):
+                if self.path.split("?")[0] == "/metrics":
+                    body = outer.registry.prometheus_text().encode()
+                    ctype = "text/plain; version=0.0.4; charset=utf-8"
+                elif self.path.split("?")[0] == "/trace":
+                    tr = outer.tracer
+                    doc = (chrome_trace(tr.spans(), tr.instants())
+                           if tr is not None else {"traceEvents": []})
+                    body = _json.dumps(doc).encode()
+                    ctype = "application/json"
+                elif self.path.split("?")[0] == "/snapshot":
+                    body = _json.dumps(outer.registry.snapshot()).encode()
+                    ctype = "application/json"
+                else:
+                    self.send_error(404)
+                    return
+                self.send_response(200)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *a):       # quiet: no per-request stderr
+                pass
+
+        self._httpd = ThreadingHTTPServer((self.host, self.port), Handler)
+        self.port = self._httpd.server_address[1]
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        daemon=True)
+        self._thread.start()
+        return self.port
+
+    def stop(self) -> None:
+        if self._httpd is not None:
+            self._httpd.shutdown()
+            self._httpd.server_close()
+            self._httpd = None
 
 # target_fn(prefix_tokens) -> greedy tokens for each position of
 #   prefix_tokens[ctx_len:]  plus one extra (the "next" token): i.e. given

@@ -1,0 +1,44 @@
+"""Unified telemetry plane for the DSI reproduction (docs/observability.md).
+
+Three layers, all zero-dependency:
+
+  * metrics — ``MetricsRegistry`` with counters/gauges/histograms,
+    Prometheus text exposition, process-global ``default_registry()``;
+  * tracing — ``SpanTracer`` per-tick/per-replica/per-request timelines
+    with ``jax.block_until_ready`` fencing at span boundaries;
+  * export — Chrome/Perfetto ``trace.json``, JSONL sink, and converters
+    from the scheduler's Algorithm-1 event log into the span stream.
+
+Plus the shared aggregation helpers (``safe_div``/``safe_mean``/
+``json_sanitize``) and the benchmark timing protocol
+(``timed_us``/``interleaved_medians``/``timed_section``).
+Instrumentation is observation-only: registry writes are host-side
+Python, fencing only synchronizes — token streams are identical with
+telemetry on or off (pinned in tests/test_telemetry.py).
+"""
+from repro.telemetry.agg import json_sanitize, safe_div, safe_max, safe_mean
+from repro.telemetry.bench import (fence, interleaved_medians, timed_section,
+                                   timed_us)
+from repro.telemetry.metrics import (cache_metrics, fault_metrics,
+                                     orchestrator_metrics, planner_metrics,
+                                     serving_metrics)
+from repro.telemetry.export import (JsonlSink, chrome_trace,
+                                    spans_from_pool_events,
+                                    spans_from_tick_events,
+                                    write_chrome_trace)
+from repro.telemetry.registry import (DEFAULT_BUCKETS, Counter, Gauge,
+                                      Histogram, MetricsRegistry,
+                                      default_registry)
+from repro.telemetry.tracing import Instant, Span, SpanTracer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "default_registry",
+    "DEFAULT_BUCKETS",
+    "serving_metrics", "orchestrator_metrics", "planner_metrics",
+    "fault_metrics", "cache_metrics",
+    "Span", "Instant", "SpanTracer",
+    "chrome_trace", "write_chrome_trace", "JsonlSink",
+    "spans_from_pool_events", "spans_from_tick_events",
+    "safe_div", "safe_mean", "safe_max", "json_sanitize",
+    "fence", "timed_us", "interleaved_medians", "timed_section",
+]

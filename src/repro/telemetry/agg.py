@@ -1,0 +1,65 @@
+"""Safe aggregation + JSON sanitization helpers (the ``safe_agg``
+satellite of the telemetry plane).
+
+Every stats surface in the repo had its own copy of the empty-mean /
+zero-denominator guard (``EngineStats._aggregate``, the rate properties,
+``benchmarks/engine_stats``, ``serve_queue`` rows) and several leaked
+``np.float32``/``np.int64`` scalars into dicts that later hit
+``json.dumps``. These helpers are the single tested implementation; the
+schema test in tests/test_telemetry.py asserts every exported dict
+round-trips ``json.dumps``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Sequence
+
+__all__ = ["safe_mean", "safe_div", "safe_max", "json_sanitize"]
+
+
+def safe_div(num: float, den: float, default: float = 0.0) -> float:
+    """num/den as a Python float; ``default`` when den is 0/NaN."""
+    den = float(den)
+    if den == 0.0 or math.isnan(den):
+        return default
+    return float(num) / den
+
+
+def safe_mean(xs: Sequence[float], default: float = 0.0) -> float:
+    """Mean of a possibly-empty sequence as a Python float."""
+    xs = [float(x) for x in xs]
+    if not xs:
+        return default
+    return sum(xs) / len(xs)
+
+
+def safe_max(xs: Sequence[float], default: float = 0.0) -> float:
+    """Max of a possibly-empty sequence as a Python float."""
+    xs = [float(x) for x in xs]
+    return max(xs) if xs else default
+
+
+def json_sanitize(obj: Any) -> Any:
+    """Recursively convert an exported-stats object into plain Python
+    types (``json.dumps``-safe): numpy scalars → int/float/bool, numpy
+    arrays → lists, tuples/sets → lists, dataclass-free dicts preserved,
+    non-finite floats → None (JSON has no NaN/Inf). Unknown leaf types
+    fall back to ``str``."""
+    if obj is None or isinstance(obj, (bool, int, str)):
+        return obj
+    if isinstance(obj, float):
+        return obj if math.isfinite(obj) else None
+    if isinstance(obj, dict):
+        return {str(k): json_sanitize(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple, set, frozenset)):
+        return [json_sanitize(v) for v in obj]
+    # numpy scalars/arrays without importing numpy at module load
+    item = getattr(obj, "item", None)
+    if callable(item) and getattr(obj, "shape", None) == ():
+        return json_sanitize(obj.item())
+    tolist = getattr(obj, "tolist", None)
+    if callable(tolist):
+        return json_sanitize(tolist())
+    if isinstance(obj, (bytes, bytearray)):
+        return obj.decode("utf-8", "replace")
+    return str(obj)

@@ -1,0 +1,88 @@
+"""Shared wall-clock timing helpers for the benchmark scripts.
+
+The three bench scripts previously disagreed on methodology:
+``bench_kernels`` fenced with ``block_until_ready`` and used an
+interleaved-median protocol, while ``bench_orchestrator`` timed fused
+ticks with a bare ``time.monotonic`` pair — no fence (so it measured
+dispatch, not compute, for the final tick) and sequential per-variant
+runs (so thermal/JIT-cache drift biased later variants). These helpers
+are the single timed-section implementation all three import.
+
+  * ``timed_us(fn, *args)`` — warmup + fenced mean over reps (the old
+    ``bench_kernels._time`` semantics).
+  * ``interleaved_medians([f1, f2, ...], *args)`` — round-robin the
+    variants within each round and take per-variant medians, so slow
+    drift hits all variants equally (the old ``_time_interleaved``).
+  * ``timed_section()`` — context manager for one fenced wall-clock
+    interval around arbitrary host code (serving/orchestrator benches);
+    fences on exit via the ``result`` the caller hands it.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Any, Callable, List, Sequence
+
+__all__ = ["fence", "timed_us", "interleaved_medians", "timed_section"]
+
+
+def fence(x: Any = None) -> Any:
+    """``jax.block_until_ready`` on ``x`` (no-op for None); returns x."""
+    if x is not None:
+        import jax
+        jax.block_until_ready(x)
+    return x
+
+
+def timed_us(fn: Callable, *args, reps: int = 5) -> float:
+    """Mean wall-clock microseconds per call over ``reps`` post-warmup
+    calls, fenced so device work is complete before the clock stops."""
+    fence(fn(*args))                       # warmup / compile
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(reps):
+        out = fn(*args)
+    fence(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def interleaved_medians(fns: Sequence[Callable], *args,
+                        rounds: int = 24) -> List[float]:
+    """Median wall-clock microseconds per call for each fn, measured
+    interleaved: every round times each fn once (fenced), so slow drift
+    (thermal, cache pressure) lands on all variants equally instead of
+    biasing whichever ran last."""
+    for fn in fns:
+        fence(fn(*args))                   # warmup / compile each
+    samples: List[List[float]] = [[] for _ in fns]
+    for _ in range(rounds):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            fence(fn(*args))
+            samples[i].append((time.perf_counter() - t0) * 1e6)
+    return [statistics.median(s) for s in samples]
+
+
+class timed_section:
+    """Fenced wall-clock interval around a host-side block::
+
+        with timed_section() as t:
+            out, stats = orch.generate(...)
+            t.result = out                 # fenced before the clock stops
+        row["wall_s"] = t.seconds
+
+    Setting ``result`` is optional — without it the section times host
+    code as-is (correct when the block already synchronizes)."""
+
+    def __init__(self):
+        self.result: Any = None
+        self.seconds = 0.0
+
+    def __enter__(self) -> "timed_section":
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if exc[0] is None:
+            fence(self.result)
+        self.seconds = time.perf_counter() - self._t0

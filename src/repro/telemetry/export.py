@@ -1,0 +1,203 @@
+"""Exporters: Chrome/Perfetto ``trace.json``, JSONL sink, and the
+scheduler-event-log → span converters.
+
+``chrome_trace`` emits the Trace Event Format Perfetto and
+``chrome://tracing`` load directly: one fake process, one *thread per
+track* (thread-name metadata events carry the track names), ``"X"``
+complete events for spans and ``"i"`` instant events for point events,
+timestamps in microseconds. Opening a serving trace shows one row per
+verifier replica and one per request — R overlapping ``verify`` spans on
+the replica rows are the paper's speculation parallelism, literally
+visible (docs/observability.md walks through reading one).
+
+The converters give the repo's two *synthetic* time domains the same
+export path as wall-clock spans:
+
+  * ``spans_from_pool_events`` — the continuous-time Algorithm-1 pool
+    schedule (``orchestrator/scheduler.schedule_pool``, pinned to
+    ``simulate_dsi_pool``): each verify task becomes a span on its
+    replica's track from START to COMPLETE (or PREEMPT — the preempted
+    remainder is marked), commits become instants. Per-track span
+    durations sum to the schedule's ``replica_busy`` exactly
+    (tests/test_telemetry.py pins this on a shared accept trace).
+  * ``spans_from_tick_events`` — the tick-quantized event log
+    (``SPOrchestrator.events`` / ``scheduler.replay_ticks``): tick T
+    occupies synthetic time [T-1, T); a window COMPLETEd/PREEMPTed at
+    tick T was verified during that tick, so its span covers the tick
+    on its replica's track; SPAWNs become drafting spans on the drafter
+    track.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.telemetry.agg import json_sanitize
+from repro.telemetry.tracing import Instant, Span
+
+__all__ = ["chrome_trace", "write_chrome_trace", "JsonlSink",
+           "spans_from_pool_events", "spans_from_tick_events"]
+
+
+def chrome_trace(spans: Sequence[Span], instants: Sequence[Instant] = (),
+                 *, process_name: str = "dsi",
+                 time_scale: float = 1e6) -> dict:
+    """Trace Event Format dict (``json.dump`` it to get trace.json).
+    ``time_scale`` converts span seconds to trace microseconds (use 1e6
+    for wall-clock spans; synthetic tick/latency domains pick their own
+    scale so one tick reads as e.g. 1ms)."""
+    pid = 1
+    tids: Dict[str, int] = {}
+    events: List[dict] = [{
+        "ph": "M", "pid": pid, "name": "process_name",
+        "args": {"name": process_name},
+    }]
+
+    def tid(track: str) -> int:
+        t = tids.get(track)
+        if t is None:
+            t = tids[track] = len(tids) + 1
+            events.append({"ph": "M", "pid": pid, "tid": t,
+                           "name": "thread_name", "args": {"name": track}})
+        return t
+
+    for s in spans:
+        ev = {"ph": "X", "pid": pid, "tid": tid(s.track), "name": s.name,
+              "ts": round(s.t0 * time_scale, 3),
+              "dur": round(max(s.t1 - s.t0, 0.0) * time_scale, 3)}
+        if s.args:
+            ev["args"] = json_sanitize(s.args)
+        events.append(ev)
+    for i in instants:
+        ev = {"ph": "i", "pid": pid, "tid": tid(i.track), "name": i.name,
+              "ts": round(i.t * time_scale, 3), "s": "t"}
+        if i.args:
+            ev["args"] = json_sanitize(i.args)
+        events.append(ev)
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(path: str, spans: Sequence[Span],
+                       instants: Sequence[Instant] = (), **kw) -> None:
+    with open(path, "w") as f:
+        json.dump(chrome_trace(spans, instants, **kw), f)
+
+
+class JsonlSink:
+    """Append-only JSONL event sink: one sanitized JSON object per line.
+    Works as a context manager; ``emit`` accepts any dict (spans and
+    metric snapshots both flatten through it)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._f = open(path, "a")
+        self.emitted = 0
+
+    def emit(self, record: dict) -> None:
+        self._f.write(json.dumps(json_sanitize(record)) + "\n")
+        self.emitted += 1
+
+    def emit_span(self, span: Span) -> None:
+        self.emit({"type": "span", "name": span.name, "track": span.track,
+                   "t0": span.t0, "t1": span.t1, "args": span.args})
+
+    def flush(self) -> None:
+        self._f.flush()
+
+    def close(self) -> None:
+        self._f.close()
+
+    def __enter__(self) -> "JsonlSink":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# Scheduler event-log converters
+# ---------------------------------------------------------------------------
+
+def _replica_track(j: int) -> str:
+    return f"replica {j}"
+
+
+def spans_from_pool_events(events: Iterable) -> Tuple[List[Span],
+                                                      List[Instant]]:
+    """Continuous-time pool schedule → (spans, instants).
+
+    Consumes ``orchestrator.scheduler.Event`` records (``schedule_pool``
+    output). A verify task's span runs START→COMPLETE on its replica's
+    track; a task preempted mid-flight gets the truncated START→PREEMPT
+    interval (outcome recorded in args); a task preempted before it
+    started yields no span (it never occupied a replica). COMMITs become
+    instants on the ``commits`` track carrying the confirmed position.
+    """
+    starts: Dict[int, float] = {}
+    spans: List[Span] = []
+    instants: List[Instant] = []
+    for e in events:
+        if e.kind == "start":
+            starts[e.task] = e.time
+        elif e.kind in ("complete", "preempt") and e.task in starts:
+            t0 = starts.pop(e.task)
+            if e.time > t0:
+                spans.append(Span(f"verify t{e.task}",
+                                  _replica_track(e.replica), t0, e.time,
+                                  {"task": e.task, "outcome": e.kind}))
+        elif e.kind == "commit":
+            instants.append(Instant("commit", "commits", e.time,
+                                    {"position": e.position}))
+    return spans, instants
+
+
+def spans_from_tick_events(events: Iterable, *, sp: int,
+                           tick_s: float = 1.0) -> Tuple[List[Span],
+                                                         List[Instant]]:
+    """Tick-domain event log (``SPOrchestrator.events`` per stream, or
+    ``replay_ticks(...).events``) → (spans, instants) on a synthetic
+    clock where tick T spans [ (T-1)·tick_s, T·tick_s ).
+
+    A COMPLETE/PREEMPT at tick T means replica j spent tick T verifying
+    that window — one span per decided window on the replica's track, so
+    a fully-alive block renders as ``sp`` stacked spans covering the
+    same tick. SPAWNs at tick T are that tick's drafting work: one
+    ``draft`` span on the drafter track per tick (windows merged).
+    Preempts of never-verified windows (the freshly drafted block killed
+    by a same-tick rejection) carry no replica time and become instants.
+    """
+    spans: List[Span] = []
+    instants: List[Instant] = []
+    draft_ticks: Dict[int, int] = {}      # tick -> windows drafted
+    decided: set = set()
+    for e in events:
+        t1 = e.time * tick_s
+        t0 = (e.time - 1) * tick_s
+        if e.kind == "spawn":
+            draft_ticks[e.time] = draft_ticks.get(e.time, 0) + 1
+        elif e.kind == "complete":
+            decided.add(e.task)
+            spans.append(Span(f"verify w{e.task}",
+                              _replica_track(e.replica), t0, t1,
+                              {"window": e.task, "outcome": "complete"}))
+        elif e.kind == "preempt":
+            if e.task in decided:
+                continue
+            decided.add(e.task)
+            if e.replica >= 0 and e.task < (e.time - 1) * sp:
+                # pending-block window (drafted last tick, task id below
+                # this tick's spawn base): the replica did spend the tick
+                # verifying it before the rejection fold killed it
+                spans.append(Span(f"verify w{e.task} (preempted)",
+                                  _replica_track(e.replica), t0, t1,
+                                  {"window": e.task, "outcome": "preempt"}))
+            else:
+                instants.append(Instant(f"cancel w{e.task}", "drafter", t1,
+                                        {"window": e.task}))
+        elif e.kind == "commit":
+            instants.append(Instant("commit", "commits", t1,
+                                    {"position": e.position}))
+    for tick, n in sorted(draft_ticks.items()):
+        spans.append(Span(f"draft {n}w", "drafter", (tick - 1) * tick_s,
+                          tick * tick_s, {"windows": n}))
+    return spans, instants

@@ -1,0 +1,176 @@
+"""The DSI metric catalog: every instrument the serving stack writes,
+declared in one place (docs/observability.md renders this as the metric
+reference).
+
+Each ``*_metrics()`` helper get-or-creates its subsystem's instruments
+against a registry (the process-global one by default) and returns them
+as a namespace. Declaration is idempotent and cheap (one dict lookup per
+instrument under the registry lock), so call sites fetch fresh at each
+accounting site instead of caching module-level instrument references —
+that keeps them correct across ``registry.reset()`` in tests.
+
+Naming follows Prometheus conventions: ``_total`` counters, ``_seconds``
+histograms in seconds, gauges bare. Label cardinality is bounded by
+construction (replica index ≤ SP degree, fault kinds are a closed
+taxonomy); request ids never become labels.
+"""
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+from repro.telemetry.registry import MetricsRegistry, default_registry
+
+__all__ = ["serving_metrics", "orchestrator_metrics", "planner_metrics",
+           "fault_metrics", "cache_metrics"]
+
+#: tick/latency histograms: 1ms..10s (serving ticks on CPU sit ~10-100ms)
+_TICK_BUCKETS = (1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2, 1e-1, 2.5e-1,
+                 5e-1, 1.0, 2.5, 5.0, 10.0)
+#: queue-wait / TTFT: serving rounds, up to a minute
+_WAIT_BUCKETS = (1e-2, 5e-2, 1e-1, 2.5e-1, 5e-1, 1.0, 2.5, 5.0, 10.0,
+                 30.0, 60.0)
+
+
+def serving_metrics(reg: MetricsRegistry = None) -> SimpleNamespace:
+    """serving/engine.py — request lifecycle + latency distributions."""
+    reg = reg or default_registry()
+    return SimpleNamespace(
+        admitted=reg.counter(
+            "dsi_requests_admitted_total",
+            "requests admitted into the slot table"),
+        retired=reg.counter(
+            "dsi_requests_retired_total",
+            "requests retired with a full output"),
+        rejected=reg.counter(
+            "dsi_requests_rejected_total",
+            "requests rejected at admission (over capacity)"),
+        deferrals=reg.counter(
+            "dsi_admission_deferrals_total",
+            "admissions pushed back to the queue", ("reason",)),
+        ttft=reg.histogram(
+            "dsi_ttft_seconds",
+            "submit-to-first-committed-token latency", (),
+            buckets=_WAIT_BUCKETS),
+        queue_wait=reg.histogram(
+            "dsi_queue_wait_seconds",
+            "submit-to-admission queue wait", (),
+            buckets=_WAIT_BUCKETS),
+        tick_seconds=reg.histogram(
+            "dsi_tick_seconds",
+            "wall-clock per fused serving tick (fenced)", (),
+            buckets=_TICK_BUCKETS),
+        token_seconds=reg.histogram(
+            "dsi_token_seconds",
+            "wall-clock per committed token (tick wall / tokens "
+            "committed that tick)", (),
+            buckets=_TICK_BUCKETS),
+    )
+
+
+def orchestrator_metrics(reg: MetricsRegistry = None) -> SimpleNamespace:
+    """orchestrator/engine.py — tick loop + per-replica SP accounting."""
+    reg = reg or default_registry()
+    return SimpleNamespace(
+        ticks=reg.counter(
+            "dsi_orchestrator_ticks_total",
+            "fused draft-parallel-verify ticks executed"),
+        committed=reg.counter(
+            "dsi_tokens_committed_total",
+            "tokens committed to output streams"),
+        rollbacks=reg.counter(
+            "dsi_rollbacks_total",
+            "rejection rollbacks (block + drafter rewind)"),
+        windows=reg.counter(
+            "dsi_replica_windows_total",
+            "verify windows per replica by outcome",
+            ("replica", "outcome")),
+        accepted=reg.counter(
+            "dsi_replica_tokens_accepted_total",
+            "draft tokens accepted per verifier replica", ("replica",)),
+        busy_seconds=reg.counter(
+            "dsi_replica_busy_seconds_total",
+            "tick wall-clock charged to busy replicas (upper bound: "
+            "the tick is one fused step)", ("replica",)),
+    )
+
+
+def planner_metrics(reg: MetricsRegistry = None) -> SimpleNamespace:
+    """orchestrator/planner.py — Eq.-1 inputs and degree decisions."""
+    reg = reg or default_registry()
+    return SimpleNamespace(
+        t_target=reg.gauge(
+            "dsi_planner_target_seconds",
+            "EMA target forward latency (Eq.-1 input)"),
+        t_drafter=reg.gauge(
+            "dsi_planner_drafter_seconds",
+            "EMA drafter forward latency (Eq.-1 input)"),
+        latency_ratio=reg.gauge(
+            "dsi_planner_latency_ratio",
+            "measured t_target / t_drafter (the paper's f/f' knob)"),
+        sp_degree=reg.gauge(
+            "dsi_planner_sp_degree",
+            "last SP degree the planner chose"),
+        replans=reg.counter(
+            "dsi_planner_replans_total",
+            "plan decisions that changed the SP degree"),
+        calibrations=reg.counter(
+            "dsi_planner_calibrations_total",
+            "probe-forward calibration rounds"),
+    )
+
+
+def fault_metrics(reg: MetricsRegistry = None) -> SimpleNamespace:
+    """runtime/{faults,supervisor,errors,health}.py — the fault plane."""
+    reg = reg or default_registry()
+    return SimpleNamespace(
+        events=reg.counter(
+            "dsi_fault_events_total",
+            "fault events recorded by the supervisor, by kind",
+            ("kind",)),
+        injected=reg.counter(
+            "dsi_faults_injected_total",
+            "faults fired by the deterministic injector", ("kind",)),
+        retries=reg.counter(
+            "dsi_tick_retries_total",
+            "tick replays after a recoverable fault"),
+        ref_fallbacks=reg.counter(
+            "dsi_ref_kernel_fallbacks_total",
+            "ticks replayed on the reference-kernel twin"),
+        quarantines=reg.counter(
+            "dsi_replica_quarantines_total",
+            "replicas quarantined by the health tracker"),
+        recoveries=reg.counter(
+            "dsi_replica_recoveries_total",
+            "quarantined replicas probed healthy and restored"),
+        effective_sp=reg.gauge(
+            "dsi_effective_sp_degree",
+            "healthy SP degree after quarantines"),
+        epoch=reg.gauge(
+            "dsi_supervisor_epoch",
+            "supervisor degradation epoch (bumps on SP re-plan)"),
+    )
+
+
+def cache_metrics(reg: MetricsRegistry = None) -> SimpleNamespace:
+    """cache/manager.py — paged-KV occupancy and reuse."""
+    reg = reg or default_registry()
+    return SimpleNamespace(
+        pages_used=reg.gauge(
+            "dsi_cache_pages_used",
+            "physical pages currently referenced"),
+        pages_free=reg.gauge(
+            "dsi_cache_pages_free",
+            "physical pages on the free list"),
+        admissions=reg.counter(
+            "dsi_cache_admissions_total",
+            "prompts admitted into the paged cache"),
+        prefix_hits=reg.counter(
+            "dsi_cache_prefix_hit_tokens_total",
+            "prompt tokens served from shared prefix pages"),
+        evictions=reg.counter(
+            "dsi_cache_evictions_total",
+            "cold retired-prefix pages evicted under pressure"),
+        oom_deferrals=reg.counter(
+            "dsi_cache_oom_deferrals_total",
+            "admissions deferred because no page could be freed"),
+    )

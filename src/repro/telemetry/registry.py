@@ -1,0 +1,376 @@
+"""Zero-dependency metrics registry: counters, gauges, histograms.
+
+The registry is the single write path for the DSI serving stack's
+numeric telemetry (docs/observability.md). Every subsystem — serving
+loop, SP orchestrator, Eq.-1 planner, fault plane, paged cache —
+declares its instruments once at import time against the process-global
+``default_registry()`` and bumps them at its existing accounting sites;
+the hand-rolled stats dataclasses (``EngineStats``, ``ReplicaStats``,
+``FaultStats``, ``CacheManager.stats``) stay as *scoped views* (per
+request / per run) while the registry is the process-wide aggregate that
+exporters read.
+
+Design points:
+
+  * **Get-or-create is idempotent**: declaring the same (name, kind,
+    labelnames) twice returns the same instrument; a kind or label
+    mismatch is a programming error and raises.
+  * **Labels** materialize child series lazily; cardinality is bounded
+    per metric (``max_series``) so a label leak (e.g. a request id used
+    as a label) fails loudly instead of eating memory.
+  * **Histograms** use fixed upper-bound buckets (Prometheus
+    convention: ``le`` is an *inclusive* upper bound, ``+Inf`` is
+    implicit) with cumulative counts computed at exposition time.
+  * **Exposition** is Prometheus text format 0.0.4 (`prometheus_text`)
+    — no client library, no network dependency; the ``/metrics``
+    endpoint (serving/servers.py) and the CI snapshot both read it.
+  * Thread-safe: one lock per registry guards creation and all value
+    updates (the serving loop and the telemetry HTTP endpoint run on
+    different threads).
+
+All observations are host-side Python floats/ints — the registry never
+touches JAX values, so instrumentation is observation-only by
+construction (tests/test_telemetry.py pins serving token-identity with
+telemetry on vs off).
+"""
+from __future__ import annotations
+
+import math
+import threading
+from bisect import bisect_left
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "default_registry", "DEFAULT_BUCKETS"]
+
+#: default histogram edges (seconds): spans 10µs kernel dispatches to
+#: multi-second serving rounds without config per call site
+DEFAULT_BUCKETS = (1e-5, 1e-4, 1e-3, 5e-3, 1e-2, 2.5e-2, 5e-2, 1e-1,
+                   2.5e-1, 5e-1, 1.0, 2.5, 5.0, 10.0)
+
+LabelKey = Tuple[Tuple[str, str], ...]
+
+
+def _escape(s: str) -> str:
+    """Prometheus label-value escaping: backslash, quote, newline."""
+    return s.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _fmt(v: float) -> str:
+    """Prometheus sample value: integers render bare, floats repr-style,
+    infinities as +Inf/-Inf."""
+    if isinstance(v, float):
+        if math.isinf(v):
+            return "+Inf" if v > 0 else "-Inf"
+        if v == int(v) and abs(v) < 1e15:
+            return str(int(v))
+        return repr(v)
+    return str(v)
+
+
+class _Metric:
+    """Shared label-family machinery. A metric without labelnames has a
+    single implicit child at the empty key."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str, labelnames: Sequence[str],
+                 lock: threading.Lock, max_series: int):
+        self.name = name
+        self.help = help
+        self.labelnames = tuple(labelnames)
+        self._lock = lock
+        self._max_series = max_series
+        self._children: Dict[LabelKey, object] = {}
+        if not self.labelnames:
+            self._children[()] = self._new_child()
+
+    def _new_child(self):
+        raise NotImplementedError
+
+    def labels(self, **labels: str):
+        """Child series for one label assignment (order-insensitive)."""
+        if set(labels) != set(self.labelnames):
+            raise ValueError(
+                f"{self.name}: got labels {sorted(labels)}, "
+                f"declared {sorted(self.labelnames)}")
+        key = tuple((k, str(labels[k])) for k in self.labelnames)
+        with self._lock:
+            child = self._children.get(key)
+            if child is None:
+                if len(self._children) >= self._max_series:
+                    raise ValueError(
+                        f"{self.name}: label cardinality exceeded "
+                        f"{self._max_series} series (leaking an unbounded "
+                        f"value — e.g. a request id — into a label?)")
+                child = self._children[key] = self._new_child()
+        return child
+
+    def _default(self):
+        """The unlabeled child (only valid without labelnames)."""
+        if self.labelnames:
+            raise ValueError(f"{self.name}: declared with labels "
+                             f"{self.labelnames}; call .labels(...) first")
+        return self._children[()]
+
+    # ------------------------------------------------------------ export
+    def _series(self) -> List[Tuple[LabelKey, object]]:
+        with self._lock:
+            return list(self._children.items())
+
+    @staticmethod
+    def _label_str(key: LabelKey, extra: Tuple[Tuple[str, str], ...] = ()
+                   ) -> str:
+        pairs = key + extra
+        if not pairs:
+            return ""
+        inner = ",".join(f'{k}="{_escape(v)}"' for k, v in pairs)
+        return "{" + inner + "}"
+
+    def expose(self) -> List[str]:
+        raise NotImplementedError
+
+
+class _CounterChild:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        if n < 0:
+            raise ValueError("counters only go up")
+        self.value += n
+
+
+class Counter(_Metric):
+    """Monotonic counter. ``inc`` on the metric itself hits the unlabeled
+    child; labeled families go through ``labels(...)``."""
+
+    kind = "counter"
+
+    def _new_child(self):
+        return _CounterChild()
+
+    def inc(self, n: float = 1.0) -> None:
+        with self._lock:
+            self._default().inc(n)
+
+    @property
+    def value(self) -> float:
+        return self._default().value
+
+    def expose(self) -> List[str]:
+        return [f"{self.name}{self._label_str(key)} {_fmt(c.value)}"
+                for key, c in self._series()]
+
+
+class _GaugeChild:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+    def dec(self, n: float = 1.0) -> None:
+        self.value -= n
+
+
+class Gauge(_Metric):
+    """Point-in-time value (set/inc/dec)."""
+
+    kind = "gauge"
+
+    def _new_child(self):
+        return _GaugeChild()
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self._default().set(v)
+
+    def inc(self, n: float = 1.0) -> None:
+        with self._lock:
+            self._default().inc(n)
+
+    def dec(self, n: float = 1.0) -> None:
+        with self._lock:
+            self._default().dec(n)
+
+    @property
+    def value(self) -> float:
+        return self._default().value
+
+    def expose(self) -> List[str]:
+        return [f"{self.name}{self._label_str(key)} {_fmt(c.value)}"
+                for key, c in self._series()]
+
+
+class _HistogramChild:
+    __slots__ = ("counts", "sum", "count", "_edges")
+
+    def __init__(self, edges: Tuple[float, ...]):
+        self._edges = edges
+        self.counts = [0] * (len(edges) + 1)   # last = +Inf overflow
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, x: float) -> None:
+        x = float(x)
+        # le is an inclusive upper bound: x == edge lands in that bucket
+        self.counts[bisect_left(self._edges, x)] += 1
+        self.sum += x
+        self.count += 1
+
+
+class Histogram(_Metric):
+    """Fixed-bucket histogram. ``buckets`` are finite inclusive upper
+    bounds, strictly increasing; ``+Inf`` is implicit."""
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str, labelnames: Sequence[str],
+                 lock: threading.Lock, max_series: int,
+                 buckets: Sequence[float] = DEFAULT_BUCKETS):
+        edges = tuple(float(b) for b in buckets)
+        if not edges or any(a >= b for a, b in zip(edges, edges[1:])):
+            raise ValueError("buckets must be non-empty, strictly increasing")
+        if math.isinf(edges[-1]):
+            raise ValueError("+Inf bucket is implicit; pass finite edges")
+        self.buckets = edges
+        super().__init__(name, help, labelnames, lock, max_series)
+
+    def _new_child(self):
+        return _HistogramChild(self.buckets)
+
+    def observe(self, x: float) -> None:
+        with self._lock:
+            self._default().observe(x)
+
+    @property
+    def sum(self) -> float:
+        return self._default().sum
+
+    @property
+    def count(self) -> int:
+        return self._default().count
+
+    def expose(self) -> List[str]:
+        lines: List[str] = []
+        for key, c in self._series():
+            cum = 0
+            for edge, n in zip(self.buckets, c.counts):
+                cum += n
+                lines.append(f"{self.name}_bucket"
+                             f"{self._label_str(key, (('le', _fmt(float(edge))),))}"
+                             f" {cum}")
+            cum += c.counts[-1]
+            lines.append(f"{self.name}_bucket"
+                         f"{self._label_str(key, (('le', '+Inf'),))} {cum}")
+            lines.append(f"{self.name}_sum{self._label_str(key)} "
+                         f"{_fmt(c.sum)}")
+            lines.append(f"{self.name}_count{self._label_str(key)} {cum}")
+        return lines
+
+
+_NAME_OK = __import__("re").compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+
+
+class MetricsRegistry:
+    """Instrument factory + exposition surface (module docstring)."""
+
+    def __init__(self, max_series: int = 256):
+        self._lock = threading.RLock()
+        self._metrics: Dict[str, _Metric] = {}
+        self._max_series = max_series
+
+    # -------------------------------------------------------- declare
+    def _declare(self, cls, name: str, help: str,
+                 labelnames: Sequence[str], **kw) -> _Metric:
+        if not _NAME_OK.match(name):
+            raise ValueError(f"invalid metric name {name!r}")
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is not None:
+                if (type(m) is not cls
+                        or m.labelnames != tuple(labelnames)):
+                    raise ValueError(
+                        f"metric {name!r} re-declared as {cls.kind} "
+                        f"labels={tuple(labelnames)} (was {m.kind} "
+                        f"labels={m.labelnames})")
+                return m
+            m = cls(name, help, labelnames, self._lock,
+                    self._max_series, **kw)
+            self._metrics[name] = m
+            return m
+
+    def counter(self, name: str, help: str = "",
+                labelnames: Sequence[str] = ()) -> Counter:
+        return self._declare(Counter, name, help, labelnames)
+
+    def gauge(self, name: str, help: str = "",
+              labelnames: Sequence[str] = ()) -> Gauge:
+        return self._declare(Gauge, name, help, labelnames)
+
+    def histogram(self, name: str, help: str = "",
+                  labelnames: Sequence[str] = (),
+                  buckets: Sequence[float] = DEFAULT_BUCKETS) -> Histogram:
+        return self._declare(Histogram, name, help, labelnames,
+                             buckets=buckets)
+
+    def get(self, name: str) -> Optional[_Metric]:
+        with self._lock:
+            return self._metrics.get(name)
+
+    def metrics(self) -> List[_Metric]:
+        with self._lock:
+            return [self._metrics[k] for k in sorted(self._metrics)]
+
+    # --------------------------------------------------------- export
+    def prometheus_text(self) -> str:
+        """Prometheus text exposition (format 0.0.4) of every metric,
+        sorted by name — the ``/metrics`` payload."""
+        out: List[str] = []
+        for m in self.metrics():
+            if m.help:
+                out.append(f"# HELP {m.name} "
+                           + m.help.replace("\\", "\\\\").replace("\n", "\\n"))
+            out.append(f"# TYPE {m.name} {m.kind}")
+            out.extend(m.expose())
+        return "\n".join(out) + "\n"
+
+    def snapshot(self) -> Dict[str, dict]:
+        """Plain-Python dump (JSON-ready) of every series — the JSONL /
+        test-assertion surface."""
+        out: Dict[str, dict] = {}
+        for m in self.metrics():
+            series = {}
+            for key, c in m._series():
+                lk = ",".join(f"{k}={v}" for k, v in key)
+                if isinstance(m, Histogram):
+                    series[lk] = {"sum": c.sum, "count": c.count,
+                                  "buckets": dict(zip(
+                                      [*map(float, m.buckets), float("inf")],
+                                      c.counts))}
+                else:
+                    series[lk] = c.value
+            out[m.name] = {"kind": m.kind, "series": series}
+        return out
+
+    def reset(self) -> None:
+        """Drop every metric (tests only — production counters are
+        process-lifetime)."""
+        with self._lock:
+            self._metrics.clear()
+
+
+_DEFAULT = MetricsRegistry()
+
+
+def default_registry() -> MetricsRegistry:
+    """The process-global registry every subsystem writes to."""
+    return _DEFAULT

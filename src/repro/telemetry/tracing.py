@@ -1,0 +1,222 @@
+"""Span tracer: explicit begin/end timelines for the SP serving stack.
+
+DSI's claim is *temporal* — drafter and R target replicas overlap in
+time — so the tracer's job is to make that overlap a first-class,
+exportable artifact. A ``Span`` is a named interval on a ``track``
+(one track per verifier replica, one per request, one for the
+orchestrator tick loop, one for the drafter); ``SpanTracer`` collects
+them with a monotonic clock and exports to Chrome/Perfetto ``trace.json``
+or JSONL (telemetry/export.py).
+
+Two recording styles:
+
+  * ``with tracer.span("tick", track="orchestrator"):`` — nested scope
+    spans. Nesting is enforced per track (end must close the innermost
+    open span on its track) so exported traces are always well-formed
+    flame graphs.
+  * ``tracer.add_span(name, track, t0, t1)`` — explicit intervals for
+    work whose boundaries were measured elsewhere (the serving loop
+    times the jitted tick itself, then attributes the interval to every
+    busy replica's track — the tick is one fused SPMD step, so the
+    per-replica span is the tick interval, which is exactly what makes
+    speculation parallelism *visible* as R overlapping spans).
+
+JAX dispatch fencing: a jitted call returns before the device work
+finishes, so naive ``perf_counter`` pairs around it time *dispatch*, not
+compute. When ``tracer.fenced`` (default), ``tracer.fence(x)`` runs
+``jax.block_until_ready`` on ``x`` so a span boundary taken after it
+reflects completed device work. Fencing only ever synchronizes — it
+never changes computed values — so tracing is observation-only
+(tests/test_telemetry.py pins token-identity with tracing on vs off).
+
+Thread-safe: one lock guards span begin/end and the finished-span list
+(the telemetry HTTP endpoint snapshots concurrently with the serving
+loop).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+__all__ = ["Span", "Instant", "SpanTracer"]
+
+
+@dataclass(frozen=True)
+class Span:
+    """One closed interval. Times are seconds on the tracer's monotonic
+    clock (0 = tracer creation)."""
+    name: str
+    track: str
+    t0: float
+    t1: float
+    args: Optional[Dict[str, Any]] = None
+
+    @property
+    def duration(self) -> float:
+        return self.t1 - self.t0
+
+
+@dataclass(frozen=True)
+class Instant:
+    """A point event (e.g. a commit checkpoint) on a track."""
+    name: str
+    track: str
+    t: float
+    args: Optional[Dict[str, Any]] = None
+
+
+class _Scope:
+    """Context manager returned by :meth:`SpanTracer.span`."""
+
+    __slots__ = ("_tracer", "_name", "_track", "_args", "_fence", "_t0")
+
+    def __init__(self, tracer: "SpanTracer", name: str, track: str,
+                 args, fence):
+        self._tracer = tracer
+        self._name = name
+        self._track = track
+        self._args = args
+        self._fence = fence
+        self._t0 = 0.0
+
+    def __enter__(self) -> "_Scope":
+        self._tracer.fence(self._fence)
+        self._t0 = self._tracer.begin(self._name, self._track, self._args)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._tracer.fence(self._fence)
+        self._tracer.end(self._track)
+
+
+class SpanTracer:
+    """Collects spans and instants across tracks (module docstring).
+
+    ``enabled=False`` turns every call into a no-op so call sites never
+    need their own guards; ``max_spans`` bounds memory on long serving
+    runs (oldest spans dropped, drop count kept)."""
+
+    def __init__(self, *, enabled: bool = True, fenced: bool = True,
+                 max_spans: int = 200_000):
+        self.enabled = enabled
+        self.fenced = fenced
+        self.max_spans = max_spans
+        self.dropped = 0
+        self._lock = threading.Lock()
+        self._t_origin = time.perf_counter()
+        self._spans: List[Span] = []
+        self._instants: List[Instant] = []
+        # per-track stack of open (name, t0, args)
+        self._open: Dict[str, List[Tuple[str, float, Optional[dict]]]] = {}
+
+    # ------------------------------------------------------------ clock
+    def now(self) -> float:
+        """Seconds on the tracer clock (monotonic, 0 = creation)."""
+        return time.perf_counter() - self._t_origin
+
+    def fence(self, x: Any = None) -> None:
+        """Synchronize on in-flight JAX work so the next timestamp
+        reflects completed compute, not dispatch. No-op when ``x`` is
+        None, when tracing is disabled, or when ``fenced=False``."""
+        if x is None or not (self.enabled and self.fenced):
+            return
+        import jax
+        jax.block_until_ready(x)
+
+    # ------------------------------------------------------- span API
+    def span(self, name: str, track: str = "main",
+             args: Optional[Dict[str, Any]] = None,
+             fence: Any = None) -> _Scope:
+        """Scoped span: ``with tracer.span("tick", track="orch"): ...``.
+        ``fence`` (optional) is block_until_ready'd at both boundaries."""
+        return _Scope(self, name, track, args, fence)
+
+    def begin(self, name: str, track: str = "main",
+              args: Optional[Dict[str, Any]] = None) -> float:
+        """Open a span on ``track``; returns its t0. Spans on one track
+        must close LIFO (``end`` enforces it)."""
+        t = self.now()
+        if self.enabled:
+            with self._lock:
+                self._open.setdefault(track, []).append((name, t, args))
+        return t
+
+    def end(self, track: str = "main",
+            args: Optional[Dict[str, Any]] = None) -> Optional[Span]:
+        """Close the innermost open span on ``track``. ``args`` merge
+        into (and override) the begin-time args."""
+        if not self.enabled:
+            return None
+        t1 = self.now()
+        with self._lock:
+            stack = self._open.get(track)
+            if not stack:
+                raise ValueError(f"end() on track {track!r} with no open span")
+            name, t0, a0 = stack.pop()
+            merged = {**(a0 or {}), **(args or {})} or None
+            span = Span(name, track, t0, t1, merged)
+            self._append(span)
+        return span
+
+    def add_span(self, name: str, track: str, t0: float, t1: float,
+                 args: Optional[Dict[str, Any]] = None) -> None:
+        """Record a pre-measured interval (tracer-clock seconds)."""
+        if not self.enabled:
+            return
+        if t1 < t0:
+            raise ValueError(f"span {name!r}: t1 < t0 ({t1} < {t0})")
+        with self._lock:
+            self._append(Span(name, track, t0, t1, args))
+
+    def instant(self, name: str, track: str = "main",
+                args: Optional[Dict[str, Any]] = None,
+                t: Optional[float] = None) -> None:
+        """Record a point event."""
+        if not self.enabled:
+            return
+        with self._lock:
+            self._instants.append(
+                Instant(name, track, self.now() if t is None else t, args))
+
+    def _append(self, span: Span) -> None:
+        self._spans.append(span)
+        if len(self._spans) > self.max_spans:
+            drop = len(self._spans) - self.max_spans
+            del self._spans[:drop]
+            self.dropped += drop
+
+    # ---------------------------------------------------------- export
+    def spans(self, track: Optional[str] = None) -> List[Span]:
+        """Finished spans (optionally one track), in completion order."""
+        with self._lock:
+            if track is None:
+                return list(self._spans)
+            return [s for s in self._spans if s.track == track]
+
+    def instants(self) -> List[Instant]:
+        with self._lock:
+            return list(self._instants)
+
+    def open_depth(self, track: str = "main") -> int:
+        with self._lock:
+            return len(self._open.get(track, []))
+
+    def tracks(self) -> List[str]:
+        """Every track that holds at least one finished span or instant,
+        in first-appearance order."""
+        with self._lock:
+            seen: Dict[str, None] = {}
+            for s in self._spans:
+                seen.setdefault(s.track, None)
+            for i in self._instants:
+                seen.setdefault(i.track, None)
+            return list(seen)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._spans.clear()
+            self._instants.clear()
+            self._open.clear()
+            self.dropped = 0

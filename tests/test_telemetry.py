@@ -1,0 +1,462 @@
+"""Telemetry plane: metrics registry, span tracer, scheduler-event
+converters, exporters, and the observation-only contract.
+
+The load-bearing assertions:
+  * histogram ``le`` edges are inclusive and exposition is cumulative
+    (Prometheus text format 0.0.4);
+  * label cardinality is bounded (a leaked request-id label fails loudly);
+  * span nesting is LIFO per track and malformed closes raise;
+  * the pool-schedule converter reproduces ``SPSchedule.replica_busy``
+    exactly and its clock matches ``simulate_dsi_pool`` latency on a
+    shared accept trace;
+  * the tick converter agrees with ``replay_ticks`` window accounting;
+  * telemetry is observation-only: serving emits token-identical streams
+    with tracing + metrics on vs off, dense and paged (the lossless
+    spot-check backing docs/observability.md's "never on the math path");
+  * ``serve_queue`` rows and registry snapshots round-trip ``json.dumps``.
+"""
+import json
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.core.dsi_sim import simulate_dsi_pool
+from repro.models.model import Model
+from repro.orchestrator import SPOrchestrator
+from repro.orchestrator.scheduler import replay_ticks, schedule_pool
+from repro.serving.engine import ServingEngine
+from repro.telemetry import (Counter, Gauge, Histogram, Instant,
+                             JsonlSink, MetricsRegistry, Span, SpanTracer,
+                             chrome_trace, default_registry,
+                             interleaved_medians, json_sanitize, safe_div,
+                             safe_max, safe_mean, spans_from_pool_events,
+                             spans_from_tick_events, timed_section,
+                             timed_us)
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_and_gauge_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("t_total", "help text")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = reg.gauge("t_gauge")
+    g.set(4)
+    g.inc()
+    g.dec(2)
+    assert g.value == 3.0
+
+
+def test_histogram_bucket_edges_inclusive():
+    """``le`` is an inclusive upper bound: an observation exactly on an
+    edge lands in that bucket, and exposition counts are cumulative with
+    an implicit +Inf bucket."""
+    reg = MetricsRegistry()
+    h = reg.histogram("t_hist", buckets=(0.1, 1.0, 5.0))
+    for x in (0.1, 0.10001, 1.0, 5.0, 7.0):
+        h.observe(x)
+    snap = reg.snapshot()["t_hist"]["series"][""]
+    assert snap["count"] == 5
+    assert snap["sum"] == pytest.approx(0.1 + 0.10001 + 1.0 + 5.0 + 7.0)
+    # raw (non-cumulative) per-bucket counts
+    assert snap["buckets"] == {0.1: 1, 1.0: 2, 5.0: 1, float("inf"): 1}
+    text = reg.prometheus_text()
+    assert 't_hist_bucket{le="0.1"} 1' in text
+    assert 't_hist_bucket{le="1"} 3' in text          # cumulative
+    assert 't_hist_bucket{le="5"} 4' in text
+    assert 't_hist_bucket{le="+Inf"} 5' in text
+    assert "t_hist_count 5" in text
+
+
+def test_histogram_rejects_bad_buckets():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError):
+        reg.histogram("t_bad", buckets=(1.0, 1.0))
+    with pytest.raises(ValueError):
+        reg.histogram("t_bad2", buckets=(1.0, float("inf")))
+
+
+def test_label_cardinality_guard():
+    reg = MetricsRegistry(max_series=4)
+    c = reg.counter("t_leak", labelnames=("rid",))
+    for i in range(4):
+        c.labels(rid=str(i)).inc()
+    with pytest.raises(ValueError, match="cardinality"):
+        c.labels(rid="one-too-many")
+    # wrong label set fails before touching series
+    with pytest.raises(ValueError, match="labels"):
+        c.labels(wrong="x")
+    # unlabeled access on a labeled family is a programming error
+    with pytest.raises(ValueError):
+        c.inc()
+
+
+def test_declare_is_idempotent_and_mismatch_raises():
+    reg = MetricsRegistry()
+    a = reg.counter("t_once", "first help")
+    b = reg.counter("t_once", "second help ignored")
+    assert a is b
+    with pytest.raises(ValueError, match="re-declared"):
+        reg.gauge("t_once")
+    with pytest.raises(ValueError, match="re-declared"):
+        reg.counter("t_once", labelnames=("k",))
+    with pytest.raises(ValueError, match="invalid metric name"):
+        reg.counter("bad name!")
+
+
+_SAMPLE = re.compile(r'^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? -?[0-9+.eEInf]+$')
+
+
+def test_prometheus_text_is_well_formed():
+    reg = MetricsRegistry()
+    reg.counter("t_plain", "plain").inc(2)
+    reg.counter("t_lab", "labeled", labelnames=("kind",)) \
+       .labels(kind='quo"te\n').inc()
+    reg.histogram("t_h", "hist", buckets=(1.0,)).observe(0.5)
+    reg.gauge("t_g").set(1.5)
+    text = reg.prometheus_text()
+    assert text.endswith("\n")
+    for line in text.strip().split("\n"):
+        if line.startswith("# HELP") or line.startswith("# TYPE"):
+            continue
+        assert _SAMPLE.match(line), f"malformed sample line: {line!r}"
+    assert "# TYPE t_plain counter" in text
+    assert "# TYPE t_h histogram" in text
+    # label values escape quotes and newlines
+    assert 't_lab{kind="quo\\"te\\n"} 1' in text
+    # snapshot round-trips json
+    json.loads(json.dumps(json_sanitize(reg.snapshot())))
+
+
+def test_registry_reset_and_default_registry_identity():
+    reg = MetricsRegistry()
+    reg.counter("t_gone").inc()
+    reg.reset()
+    assert reg.get("t_gone") is None
+    assert default_registry() is default_registry()
+
+
+# ---------------------------------------------------------------------------
+# span tracer
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_is_lifo_per_track():
+    tr = SpanTracer(fenced=False)
+    tr.begin("outer", "t0")
+    tr.begin("inner", "t0")
+    tr.begin("other", "t1")
+    assert tr.open_depth("t0") == 2
+    inner = tr.end("t0")
+    outer = tr.end("t0")
+    assert (inner.name, outer.name) == ("inner", "outer")
+    assert inner.t0 >= outer.t0 and inner.t1 <= outer.t1
+    tr.end("t1")
+    with pytest.raises(ValueError, match="no open span"):
+        tr.end("t1")
+
+
+def test_scoped_span_and_disabled_tracer():
+    tr = SpanTracer(fenced=False)
+    with tr.span("tick", track="orch", args={"n": 1}):
+        pass
+    (s,) = tr.spans("orch")
+    assert s.name == "tick" and s.args == {"n": 1} and s.duration >= 0
+    off = SpanTracer(enabled=False)
+    with off.span("x"):
+        pass
+    off.instant("i")
+    assert off.end("main") is None          # no-op, no raise
+    assert off.spans() == [] and off.instants() == []
+
+
+def test_add_span_rejects_inverted_interval_and_bounds_memory():
+    tr = SpanTracer(fenced=False, max_spans=10)
+    with pytest.raises(ValueError, match="t1 < t0"):
+        tr.add_span("bad", "t", 2.0, 1.0)
+    for i in range(15):
+        tr.add_span(f"s{i}", "t", float(i), float(i) + 0.5)
+    assert len(tr.spans()) == 10 and tr.dropped == 5
+    assert tr.spans()[0].name == "s5"       # oldest dropped first
+
+
+def test_tracks_first_appearance_order_and_clear():
+    tr = SpanTracer(fenced=False)
+    tr.add_span("a", "replica 1", 0.0, 1.0)
+    tr.add_span("b", "replica 0", 0.0, 1.0)
+    tr.instant("c", track="commits")
+    assert tr.tracks() == ["replica 1", "replica 0", "commits"]
+    tr.clear()
+    assert tr.tracks() == [] and tr.dropped == 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler-event converters (synthetic time domains)
+# ---------------------------------------------------------------------------
+
+
+def _trace(n, p, seed):
+    rng = np.random.default_rng(seed)
+    return [bool(b) for b in rng.random(n) < p]
+
+
+@pytest.mark.parametrize("sp,la,p", [(1, 2, 0.9), (2, 4, 0.7), (4, 4, 0.5)])
+def test_pool_converter_reproduces_replica_busy(sp, la, p):
+    """Per-replica-track span durations sum to ``SPSchedule.replica_busy``
+    exactly, and the span clock agrees with ``simulate_dsi_pool`` latency
+    on the same accept trace — the converter is a faithful rendering of
+    Algorithm 1's pool schedule, not an approximation of it."""
+    trace = _trace(400, p, seed=sp)
+    n, t_t, t_d = 40, 1.0, 0.2
+    sch = schedule_pool(t_t, t_d, la, sp, n, accept=list(trace))
+    sim = simulate_dsi_pool(t_t, t_d, 0.0, la, sp, n, accept=list(trace))
+    spans, instants = spans_from_pool_events(sch.events)
+    for j in range(sp):
+        busy = sum(s.duration for s in spans if s.track == f"replica {j}")
+        assert busy == pytest.approx(sch.replica_busy[j]), f"replica {j}"
+    commits = [i for i in instants if i.track == "commits"]
+    assert len(commits) == len(sch.timeline)
+    assert commits[-1].args["position"] == n
+    assert max(i.t for i in commits) == pytest.approx(sch.latency)
+    assert sch.latency == pytest.approx(sim.latency)
+    assert all(s.t1 <= sch.latency + 1e-9 for s in spans)
+
+
+def test_pool_converter_drops_never_started_tasks():
+    """A task preempted before START never occupied a replica: no span."""
+    # two accepted drafts then rejection storms with sp=1 force queued
+    # tasks that die waiting
+    sch = schedule_pool(1.0, 0.2, 4, 1, 10, accept=[True, True])
+    spans, _ = spans_from_pool_events(sch.events)
+    started = {e.task for e in sch.events if e.kind == "start"}
+    spanned = {s.args["task"] for s in spans}
+    assert spanned <= started
+
+
+@pytest.mark.parametrize("sp,la", [(1, 4), (2, 4), (4, 2)])
+def test_tick_converter_matches_replay_accounting(sp, la):
+    """Replica verify spans (complete + preempted) match
+    ``replay_ticks``'s per-replica window counters; every span covers
+    exactly one tick; one draft span per tick on the drafter track."""
+    trace = _trace(300, 0.6, seed=la)
+    ts = replay_ticks(trace, la, sp, 30)
+    spans, instants = spans_from_tick_events(ts.events, sp=sp)
+    for j in range(sp):
+        rs = [s for s in spans if s.track == f"replica {j}"]
+        done = sum(1 for s in rs if s.args["outcome"] == "complete")
+        pre = sum(1 for s in rs if s.args["outcome"] == "preempt")
+        assert done == ts.windows_verified[j]
+        assert pre == ts.windows_preempted[j]
+        assert all(s.duration == pytest.approx(1.0) for s in rs)
+    drafts = [s for s in spans if s.track == "drafter"]
+    assert len(drafts) == ts.ticks
+    commits = [i for i in instants if i.track == "commits"]
+    assert len(commits) == len(ts.commits)
+    assert commits[-1].args["position"] == ts.emitted
+    assert all(0.0 <= s.t0 < s.t1 <= ts.ticks for s in spans)
+
+
+def test_tick_converter_shows_sp_overlap():
+    """With sp=4 and a clean accept run, a verified block renders as 4
+    spans sharing one tick interval on distinct replica tracks — the
+    speculation-parallelism picture the exporter exists to draw."""
+    ts = replay_ticks([True] * 200, 4, 4, 40)
+    spans, _ = spans_from_tick_events(ts.events, sp=4)
+    by_interval = {}
+    for s in spans:
+        if s.track.startswith("replica "):
+            by_interval.setdefault((s.t0, s.t1), set()).add(s.track)
+    assert max(len(v) for v in by_interval.values()) == 4
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+
+def test_chrome_trace_round_trips_and_names_tracks():
+    spans = [Span("verify", "replica 0", 0.0, 1.5, {"w": np.int64(3)}),
+             Span("verify", "replica 1", 0.5, 2.0)]
+    instants = [Instant("commit", "commits", 1.0, {"position": 7})]
+    doc = json.loads(json.dumps(chrome_trace(spans, instants)))
+    evs = doc["traceEvents"]
+    names = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert names == {"replica 0", "replica 1", "commits"}
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert len(xs) == 2
+    assert xs[0]["ts"] == 0.0 and xs[0]["dur"] == pytest.approx(1.5e6)
+    assert xs[0]["args"] == {"w": 3}        # numpy sanitized
+    (i,) = [e for e in evs if e["ph"] == "i"]
+    assert i["ts"] == pytest.approx(1e6) and i["args"] == {"position": 7}
+    # distinct tids per track, one shared pid
+    tids = {e["tid"] for e in xs}
+    assert len(tids) == 2 and {e["pid"] for e in evs} == {1}
+
+
+def test_jsonl_sink(tmp_path):
+    p = tmp_path / "events.jsonl"
+    with JsonlSink(str(p)) as sink:
+        sink.emit({"x": np.float32(1.5)})
+        sink.emit_span(Span("s", "t", 0.0, 1.0))
+        sink.flush()
+        assert sink.emitted == 2
+    lines = [json.loads(line) for line in p.read_text().splitlines()]
+    assert lines[0] == {"x": 1.5}
+    assert lines[1]["type"] == "span" and lines[1]["track"] == "t"
+
+
+# ---------------------------------------------------------------------------
+# safe aggregation / sanitization helpers
+# ---------------------------------------------------------------------------
+
+
+def test_safe_agg_helpers():
+    assert safe_div(6, 3) == 2.0
+    assert safe_div(1, 0) == 0.0
+    assert safe_div(1, 0, default=-1.0) == -1.0
+    assert safe_div(1, float("nan")) == 0.0
+    assert safe_mean([]) == 0.0
+    assert safe_mean([1.0, 3.0]) == 2.0
+    assert safe_max([], default=7.0) == 7.0
+    assert safe_max([1, 5, 2]) == 5.0
+
+
+def test_json_sanitize_covers_numpy_and_nonfinite():
+    out = json_sanitize({
+        "f32": np.float32(1.5), "i64": np.int64(3), "b": np.bool_(True),
+        "nan": float("nan"), "inf": np.float64("inf"),
+        "arr": np.arange(3), "nested": [np.float32(0.25), {"k": (1, 2)}],
+        "bytes": b"ok",
+    })
+    assert out == {"f32": 1.5, "i64": 3, "b": True, "nan": None,
+                   "inf": None, "arr": [0, 1, 2],
+                   "nested": [0.25, {"k": [1, 2]}], "bytes": "ok"}
+    json.dumps(out)                         # round-trips by construction
+
+
+# ---------------------------------------------------------------------------
+# bench timing helpers
+# ---------------------------------------------------------------------------
+
+
+def test_bench_helpers_time_jitted_work():
+    f = jax.jit(lambda x: x * 2.0)
+    x = jnp.ones((8,))
+    assert timed_us(f, x, reps=2) > 0.0
+    m1, m2 = interleaved_medians([f, f], x, rounds=2)
+    assert m1 > 0.0 and m2 > 0.0
+    with timed_section() as t:
+        t.result = f(x)
+    assert t.seconds > 0.0
+    assert np.asarray(t.result)[0] == 2.0
+
+
+# ---------------------------------------------------------------------------
+# serving integration: observation-only + registry + exported rows
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def models():
+    cfg_t = tiny("yi-9b")
+    cfg_d = tiny("yi-9b", d_model=128)
+    mt, md = Model(cfg_t), Model(cfg_d)
+    pt = mt.init(jax.random.PRNGKey(0))
+    pd = md.init(jax.random.PRNGKey(1))
+    return cfg_t, mt, md, pt, pd
+
+
+def _queue(cfg, n=3, seed=11):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, cfg.vocab_size, size=8).tolist(), 8)
+            for _ in range(n)]
+
+
+def _serve(models, *, paged, tracer, n=3):
+    cfg, mt, md, pt, pd = models
+    spec = None
+    if paged:
+        from repro.cache import PagedSpec
+        spec = PagedSpec(page_size=8)
+    eng = ServingEngine(target=mt, params_t=pt, drafter=md, params_d=pd,
+                        mode="dsi", lookahead=4, max_batch=2, sp_degree=2,
+                        paged=spec, tracer=tracer)
+    for p, m in _queue(cfg, n=n):
+        eng.submit(p, m)
+    done = eng.run()
+    return eng, {r.rid: r.output for r in done}
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_telemetry_is_observation_only(models, paged):
+    """The lossless spot-check: SP serving emits token-identical streams
+    with the tracer + metrics registry active vs with telemetry off —
+    instrumentation never touches the math path (dense and paged)."""
+    _, plain = _serve(models, paged=paged, tracer=None)
+    tr = SpanTracer()
+    default_registry().reset()
+    eng, traced = _serve(models, paged=paged, tracer=tr)
+    assert traced == plain
+    # one tick span per engine invocation, on the orchestrator track
+    ticks = [s for s in tr.spans("orchestrator") if s.name == "tick"]
+    assert len(ticks) == eng.engine_invocations
+    # SP visibility: some tick has both replica tracks busy at once
+    r0 = tr.spans("replica 0")
+    r1 = tr.spans("replica 1")
+    assert any(a.t0 < b.t1 and b.t0 < a.t1 for a in r0 for b in r1), \
+        "no overlapping verify spans across replica tracks"
+    # the registry saw the run: committed tokens cover every emitted token
+    snap = default_registry().snapshot()
+    committed = snap["dsi_tokens_committed_total"]["series"][""]
+    assert committed == sum(len(v) for v in traced.values())
+    assert snap["dsi_orchestrator_ticks_total"]["series"][""] >= len(ticks)
+    # and the whole snapshot + prometheus text are exportable
+    json.dumps(snap)
+    assert "dsi_tokens_committed_total" in default_registry().prometheus_text()
+
+
+def test_serve_queue_rows_round_trip_json(models):
+    """Every row ``serve_queue`` returns must survive ``json.dumps`` —
+    numpy scalars leak from EngineStats unless sanitized (the schema
+    pin for the serving endpoint's response metadata)."""
+    from repro.serving.servers import serve_queue
+    cfg, mt, md, pt, pd = models
+    eng = ServingEngine(target=mt, params_t=pt, drafter=md, params_d=pd,
+                        mode="dsi", lookahead=4, max_batch=2)
+    rows = serve_queue(eng, _queue(cfg, n=2, seed=3))
+    payload = json.dumps(rows)              # must not raise
+    back = json.loads(payload)
+    assert len(back) == 2
+    for row in back:
+        assert {"rid", "tokens", "macro_steps"} <= set(row)
+        assert isinstance(row["tokens"], int)
+
+
+def test_orchestrator_event_log_exports_to_trace(models):
+    """SPOrchestrator's recorded Algorithm-1 event log converts into the
+    same span/track scheme as live tracing (the offline path to a
+    Perfetto timeline) and renders SP overlap for sp=2."""
+    cfg, mt, md, pt, pd = models
+    orch = SPOrchestrator(mt, md, lookahead=4, sp=2, rule="exact",
+                          record_events=True)
+    prompt = jnp.asarray(_queue(cfg, n=1, seed=5)[0][0], jnp.int32)[None]
+    out, stats = orch.generate(pt, pd, prompt, 10)
+    spans, instants = spans_from_tick_events(orch.events[0], sp=2)
+    assert spans, "event log produced no spans"
+    verified = sum(x.windows_verified for x in stats.replicas)
+    done = [s for s in spans if s.args.get("outcome") == "complete"]
+    assert len(done) == verified
+    doc = chrome_trace(spans, instants, time_scale=1e3)
+    json.dumps(doc)
+    assert any(e.get("ph") == "X" for e in doc["traceEvents"])

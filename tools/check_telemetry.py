@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""CI gate for the telemetry plane (docs/observability.md).
+
+Validates the artifacts a telemetry-enabled serving smoke run produces
+(``python -m repro.launch.serve ... --trace-out trace.json
+--metrics-out metrics.prom``):
+
+  * ``trace.json`` is valid Chrome Trace Event Format: a
+    ``traceEvents`` list whose ``X`` events carry ts/dur and whose
+    tracks are named via ``thread_name`` metadata (Perfetto-loadable);
+  * speculation parallelism is *visible*: at least two ``verify`` spans
+    on distinct replica tracks overlap in time;
+  * one ``tick`` span exists per orchestrator tick — the span count on
+    the orchestrator track must equal the registry's
+    ``dsi_orchestrator_ticks_total`` sample;
+  * ``metrics.prom`` parses as Prometheus text format 0.0.4 and the
+    committed-token counter ``dsi_tokens_committed_total`` is nonzero
+    (the run actually flowed through the instrumented write path).
+
+Exits non-zero with one line per violation so it can gate in
+``.github/workflows/ci.yml``:
+
+    python tools/check_telemetry.py trace.json metrics.prom
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+from typing import Dict, List
+
+SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)(?:\{(?P<labels>[^}]*)\})?"
+    r"\s+(?P<value>-?[0-9].*|[+-]Inf|NaN)$")
+
+
+def parse_prometheus(text: str) -> Dict[str, float]:
+    """Parse text exposition into {name or name{labels}: value}; raises
+    on any line that is neither a comment nor a well-formed sample."""
+    out: Dict[str, float] = {}
+    for ln, line in enumerate(text.splitlines(), 1):
+        if not line.strip() or line.startswith("#"):
+            continue
+        m = SAMPLE_RE.match(line)
+        if not m:
+            raise ValueError(f"metrics line {ln} malformed: {line!r}")
+        key = m.group("name")
+        if m.group("labels"):
+            key += "{" + m.group("labels") + "}"
+        out[key] = float(m.group("value").replace("Inf", "inf"))
+    return out
+
+
+def check(trace_path: str, metrics_path: str) -> List[str]:
+    errors: List[str] = []
+
+    with open(trace_path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f"{trace_path}: no traceEvents list"]
+
+    track_of: Dict[int, str] = {}
+    for e in events:
+        if e.get("ph") == "M" and e.get("name") == "thread_name":
+            track_of[e["tid"]] = e["args"]["name"]
+    spans = [e for e in events if e.get("ph") == "X"]
+    for e in spans:
+        if not ("ts" in e and "dur" in e and e.get("tid") in track_of):
+            errors.append(f"{trace_path}: malformed X event {e}")
+            return errors
+
+    # SP overlap: >= 2 verify spans on distinct replica tracks that
+    # intersect in time — the paper's speculation parallelism, visible
+    verifies = [(track_of[e["tid"]], e["ts"], e["ts"] + e["dur"])
+                for e in spans
+                if e["name"].startswith("verify")
+                and track_of[e["tid"]].startswith("replica ")]
+    overlap = any(ta != tb and a0 < b1 and b0 < a1
+                  for i, (ta, a0, a1) in enumerate(verifies)
+                  for (tb, b0, b1) in verifies[i + 1:])
+    if not overlap:
+        errors.append(f"{trace_path}: no overlapping verify spans on "
+                      f"distinct replica tracks ({len(verifies)} verify "
+                      f"spans seen) — SP timeline not visible")
+
+    ticks = sum(1 for e in spans
+                if e["name"] == "tick"
+                and track_of[e["tid"]] == "orchestrator")
+    if ticks == 0:
+        errors.append(f"{trace_path}: no tick spans on the orchestrator "
+                      f"track")
+
+    with open(metrics_path) as f:
+        try:
+            samples = parse_prometheus(f.read())
+        except ValueError as e:
+            return errors + [f"{metrics_path}: {e}"]
+
+    committed = samples.get("dsi_tokens_committed_total", 0.0)
+    if committed <= 0:
+        errors.append(f"{metrics_path}: dsi_tokens_committed_total is "
+                      f"{committed} — instrumented write path never ran")
+    reg_ticks = samples.get("dsi_orchestrator_ticks_total", 0.0)
+    if ticks and reg_ticks != ticks:
+        errors.append(f"tick mismatch: {ticks} tick spans in "
+                      f"{trace_path} vs dsi_orchestrator_ticks_total="
+                      f"{reg_ticks} in {metrics_path}")
+
+    if not errors:
+        print(f"telemetry OK: {len(spans)} spans / {len(track_of)} tracks, "
+              f"{len(verifies)} verify spans (overlap={overlap}), "
+              f"{ticks} ticks, committed={committed:.0f}")
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    errors = check(argv[1], argv[2])
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
