@@ -25,7 +25,9 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.flash_attention.ring_decode import ring_slot_map
 from repro.kernels.spec_verify.ref import spec_verify_ref
 from repro.kernels.ssd_scan.ref import ssd_ref
-from repro.telemetry import interleaved_medians, timed_us
+from repro.kernels.tuning import TunedConfigStore, tuned_store
+from repro.kernels.tuning.policy import autotune_decode
+from repro.telemetry import fence, interleaved_medians, timed_us
 
 # timing protocol lives in telemetry.bench (shared by all three bench
 # scripts — docs/observability.md); these wrappers only adapt signatures
@@ -50,8 +52,11 @@ def _time_interleaved(fns, *args, rounds=24):
 def _row(rows: List[dict], op: str, shape: str, us: float,
          tokens: Optional[int] = None, note: str = "") -> None:
     tps = tokens / (us * 1e-6) if tokens else None
-    rows.append({"op": op, "shape": shape, "ms": round(us / 1e3, 4),
-                 "tokens_per_s": None if tps is None else round(tps, 1)})
+    row = {"op": op, "shape": shape, "ms": round(us / 1e3, 4),
+           "tokens_per_s": None if tps is None else round(tps, 1)}
+    if note:
+        row["note"] = note
+    rows.append(row)
     derived = f"{tps:.0f}tok/s" if tps else note
     print(f"{op}_{shape},{us:.0f},{derived}")
 
@@ -95,6 +100,50 @@ def bench_decode_attention(rows: List[dict], smoke: bool = False) -> None:
             q, k, v, sl, p, force_pallas=True, interpret=True))
         _row(rows, "decode_attn_pallas_interpret", f"B{b}W{w}H{h}KV{kv}D{d}S{s}",
              _time(f_int, q, k, v, slot, pos, reps=1), tokens=b * w)
+
+
+def bench_tuned_decode(rows: List[dict], smoke: bool = False
+                       ) -> TunedConfigStore:
+    """Autotune the decode/verify hot path for the bench shapes, then
+    time the dispatcher with the populated store against the hard-coded
+    defaults (interleaved medians). ``tools/check_bench.py`` gates on
+    these rows: tuned must never be slower than default at S >= 2048 —
+    the promotion policy only dethrones a default on a real win, so a
+    regression here means the sweep/store/dispatch plumbing broke."""
+    key = jax.random.PRNGKey(0)
+    backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    store = TunedConfigStore()
+    shapes = [(4, 8, 8, 2, 64, 2048)]
+    if not smoke:
+        shapes.append((4, 8, 8, 2, 64, 4096))
+    for b, w, h, kv, d, s in shapes:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, w, h, d))
+        k = jax.random.normal(ks[1], (b, s, kv, d))
+        v = jax.random.normal(ks[2], (b, s, kv, d))
+        pos = jnp.full((b,), s + 3, jnp.int32)
+        slot = ring_slot_map(pos + w, s)
+        shape = f"B{b}W{w}H{h}KV{kv}D{d}S{s}"
+        res = autotune_decode(store, q, k, v, slot, pos, backend=backend,
+                              rounds=8 if smoke else 16)
+        # trace each dispatcher variant under its own store, then time
+        # interleaved (both already compiled, so the context no longer
+        # matters inside the timing loop)
+        f_def = jax.jit(lambda q, k, v, sl, p: decode_attention(
+            q, k, v, sl, p, force_pallas=backend == "pallas" or None))
+        f_tuned = jax.jit(lambda q, k, v, sl, p: decode_attention(
+            q, k, v, sl, p, force_pallas=backend == "pallas" or None))
+        with tuned_store(None):
+            fence(f_def(q, k, v, slot, pos))
+        with tuned_store(store):
+            fence(f_tuned(q, k, v, slot, pos))
+        med = _time_interleaved({"default": f_def, "tuned": f_tuned},
+                                q, k, v, slot, pos)
+        note = (f"winner={res.winner}" if res.promoted else "kept default")
+        _row(rows, "decode_attn_default", shape, med["default"], tokens=b * w)
+        _row(rows, "decode_attn_tuned", shape, med["tuned"], tokens=b * w,
+             note=note)
+    return store
 
 
 def bench_prefill_attention(rows: List[dict]) -> None:
@@ -141,14 +190,15 @@ def main(smoke: bool = False, json_path: Optional[str] = None) -> List[dict]:
     rows: List[dict] = []
     print("name,us_per_call,derived")
     bench_decode_attention(rows, smoke=smoke)
+    store = bench_tuned_decode(rows, smoke=smoke)
     bench_prefill_attention(rows)
     bench_spec_verify(rows)
     if not smoke:
         bench_ssd(rows)
     if json_path:
         with open(json_path, "w") as f:
-            json.dump({"backend": jax.default_backend(), "rows": rows}, f,
-                      indent=1)
+            json.dump({"backend": jax.default_backend(), "rows": rows,
+                       "tuned_configs": store.entries()}, f, indent=1)
         print(f"wrote {json_path} ({len(rows)} rows)")
     return rows
 

@@ -7,7 +7,25 @@ Prints ``name,...`` CSV sections.
 """
 from __future__ import annotations
 
+import os
+import shutil
 import sys
+
+_BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+_BENCH_FILES = ("BENCH_kernels.json", "BENCH_serving.json",
+                "BENCH_orchestrator.json")
+
+
+def _seed_baselines() -> None:
+    """First smoke run on a fresh checkout: seed any missing perf-gate
+    baselines from this run (tools/check_bench.py gates later runs
+    against them; re-seed deliberately with --update-baselines)."""
+    os.makedirs(_BASELINE_DIR, exist_ok=True)
+    for name in _BENCH_FILES:
+        dst = os.path.join(_BASELINE_DIR, name)
+        if os.path.exists(name) and not os.path.exists(dst):
+            shutil.copyfile(name, dst)
+            print(f"seeded baseline {dst}")
 
 
 def main() -> None:
@@ -31,6 +49,7 @@ def main() -> None:
                                 json_path="BENCH_orchestrator.json")
         print("== Kernel micro-benchmarks ==")
         bench_kernels.main(smoke=True, json_path="BENCH_kernels.json")
+        _seed_baselines()
         return
     print("== Table 1: token-count timeline ==")
     table1_timeline.main()

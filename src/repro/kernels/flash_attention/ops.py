@@ -22,6 +22,19 @@ Dispatch (see docs/kernels.md for the full table):
         scores for large Sq, so 32k-token prefill lowers with bounded
         live memory.
 
+Every path resolves its tile/impl knobs through the autotuner's
+``resolve_config`` (kernels/tuning): with no active ``TunedConfigStore``
+the resolved config is exactly the old hard-coded constants; under
+``tuned_store(...)`` the per-shape sweep winners apply. Configs retile
+grids and pick between numerically-equivalent impls — they never change
+masking or sampling semantics, so tuning is lossless by construction
+(tests/test_tuning.py pins this with a deliberately perverse store).
+
+When Pallas was requested but dispatch must drop to the jnp path (cache
+length not block-aligned, per-stream scalars), the fallback is recorded
+on ``dsi_kernel_fallbacks_total{reason=...}`` — once per compiled shape,
+since this function runs at trace time.
+
 Semantics match ``ref.attention_ref`` bit-for-bit up to fp accumulation
 order; tests sweep shapes/dtypes against the oracle.
 """
@@ -38,8 +51,16 @@ from repro.kernels.flash_attention.ring_decode import (paged_decode_attention,
                                                        paged_decode_ref,
                                                        ring_decode_attention,
                                                        ring_decode_ref)
+from repro.kernels.tuning import resolve_config
+from repro.telemetry.metrics import kernel_metrics
 
 _DEFAULT_CHUNK = 1024
+
+
+def _record_fallback(reason: str) -> None:
+    """Pallas was requested but the jnp path ran: count it (trace-time,
+    so once per compiled shape) instead of silently degrading."""
+    kernel_metrics().fallbacks.labels(reason=reason).inc()
 
 
 def _pick_chunk(sq: int, chunk: int) -> int:
@@ -88,34 +109,70 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     (paged ring cache — docs/cache.md)."""
     use_pallas, interp = resolve_pallas(force_pallas, interpret)
     use_pallas = use_pallas or interp   # interpret-only override still forces
+    backend = "pallas" if use_pallas else "jnp"
+    dt = str(q.dtype)
+    h, d = q.shape[2], q.shape[3]
     if block_tables is not None:        # paged ring cache
         assert kv_positions is not None, "paged calls need kv_positions"
+        cfg = resolve_config("paged_decode", backend=backend, dtype=dt,
+                             w=q.shape[1], g=h // k.shape[2], d=d,
+                             page=k.shape[1])
         if use_pallas:
             return paged_decode_attention(q, k, v, block_tables,
                                           kv_positions, q_offset,
                                           causal=causal, window=window,
-                                          kv_len=kv_len, interpret=interp)
+                                          kv_len=kv_len,
+                                          bm_pad=cfg["bm_pad"],
+                                          interpret=interp)
+        if cfg["impl"] == "oracle":
+            from repro.cache.paged import gather_pages
+            return attention_ref(q, gather_pages(k, block_tables),
+                                 gather_pages(v, block_tables),
+                                 causal=causal, window=window,
+                                 q_offset=q_offset,
+                                 kv_positions=kv_positions, kv_len=kv_len)
         return paged_decode_ref(q, k, v, block_tables, kv_positions, q_offset,
                                 causal=causal, window=window, kv_len=kv_len)
     if kv_positions is not None:        # the kernel path (matches spec_verify)
+        cfg = resolve_config("ring_decode", backend=backend, dtype=dt,
+                             w=q.shape[1], g=h // k.shape[2], d=d,
+                             s=k.shape[1])
         if use_pallas:
             return ring_decode_attention(q, k, v, kv_positions, q_offset,
                                          causal=causal, window=window,
-                                         kv_len=kv_len, interpret=interp)
+                                         kv_len=kv_len, bk=cfg["bk"],
+                                         bm_pad=cfg["bm_pad"],
+                                         interpret=interp)
+        if cfg["impl"] == "oracle":
+            return attention_ref(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset,
+                                 kv_positions=kv_positions, kv_len=kv_len)
         return ring_decode_ref(q, k, v, kv_positions, q_offset,
                                causal=causal, window=window, kv_len=kv_len)
-    bq = 128
     sq, sk = q.shape[1], k.shape[1]
-    if (use_pallas and sk % bq == 0 and jnp.ndim(q_offset) == 0
-            and (kv_len is None or jnp.ndim(kv_len) == 0)):
-        from repro.kernels.flash_attention.flash_attention import flash_attention
-        pad = -sq % bq
-        if pad:   # short-query chunk: pad Sq up to one q-block, slice after
-            q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        out = flash_attention(q, k, v, causal=causal, window=window,
-                              q_offset=q_offset, kv_len=kv_len,
-                              interpret=interp)
-        return out[:, :sq] if pad else out
+    cfg = resolve_config("flash_attention", backend=backend, dtype=dt,
+                         sq=sq, sk=sk, d=d)
+    if use_pallas:
+        bq, bk = cfg["bq"], cfg["bk"]
+        if sk % bk:
+            bq, bk = 128, 128   # tuned tiles don't divide this cache
+        if sk % bk:
+            _record_fallback("sk_unaligned")
+        elif jnp.ndim(q_offset) != 0 or (kv_len is not None
+                                         and jnp.ndim(kv_len) != 0):
+            _record_fallback("per_stream_scalars")
+        else:
+            from repro.kernels.flash_attention.flash_attention import \
+                flash_attention
+            pad = -sq % bq
+            if pad:  # short-query chunk: pad Sq up to one q-block, slice after
+                q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            out = flash_attention(q, k, v, causal=causal, window=window,
+                                  q_offset=q_offset, kv_len=kv_len,
+                                  bq=bq, bk=bk, interpret=interp)
+            return out[:, :sq] if pad else out
+    if chunk == _DEFAULT_CHUNK:         # caller didn't override: tunable
+        chunk = cfg.get("chunk", chunk) if backend == "jnp" else chunk
     return _blocked(q, k, v, causal=causal, window=window, q_offset=q_offset,
                     kv_len=kv_len, chunk=chunk)
 

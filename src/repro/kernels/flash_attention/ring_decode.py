@@ -161,24 +161,30 @@ def _kernel(scalars_ref,               # SMEM (B, 2): [pos, kv_len] per stream
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "bk",
-                                             "interpret"))
+                                             "bm_pad", "interpret"))
 def ring_decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                           slot_pos: jnp.ndarray, pos, *,
                           causal: bool = True,
                           window: Optional[int] = None,
                           kv_len=None,
                           bk: int = 128,
+                          bm_pad: int = 16,
                           interpret: bool = False) -> jnp.ndarray:
     """q (B,W,H,D) against a ring cache k/v (B,S,KV,D) with per-slot
     absolute positions ``slot_pos`` ((S,) or (B,S); -1 = empty) and window
     start ``pos`` (scalar or (B,)). Semantics == attention_ref with
-    ``q_offset=pos, kv_positions=slot_pos``."""
+    ``q_offset=pos, kv_positions=slot_pos``.
+
+    ``bk`` (KV-block slots) and ``bm_pad`` (M-dim pad multiple; >= 16
+    keeps f32/bf16 sublane alignment) are the autotuner's knobs
+    (kernels/tuning) — they retile the grid but never change masking or
+    accumulation semantics."""
     b, w, h, d = q.shape
     _, s, kv, _ = k.shape
     assert h % kv == 0, (h, kv)
     g = h // kv
     m = g * w
-    bm = _round_up(m, 16)                 # sublane-aligned for f32 and bf16
+    bm = _round_up(m, max(16, bm_pad))    # sublane-aligned for f32 and bf16
     qp = _pack_q(q, kv)
     if bm != m:
         qp = jnp.pad(qp, ((0, 0), (0, 0), (0, bm - m), (0, 0)))
@@ -238,13 +244,15 @@ def _paged_kernel(scalars_ref, bt_ref,     # SMEM: per-stream scalars + block ta
             m_scr, l_scr, acc_scr, **kw)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bm_pad",
+                                             "interpret"))
 def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
                            v_pool: jnp.ndarray, block_tables: jnp.ndarray,
                            slot_pos: jnp.ndarray, pos, *,
                            causal: bool = True,
                            window: Optional[int] = None,
                            kv_len=None,
+                           bm_pad: int = 16,
                            interpret: bool = False) -> jnp.ndarray:
     """Paged flash-decode: q (B,W,H,D) against a *shared* physical page
     pool k/v (P, page, KV, D) addressed through per-stream block tables
@@ -267,7 +275,7 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
         (slot_pos.shape, n_pages, page)
     g = h // kv
     m = g * w
-    bm = _round_up(m, 16)
+    bm = _round_up(m, max(16, bm_pad))
     qp = _pack_q(q, kv)
     if bm != m:
         qp = jnp.pad(qp, ((0, 0), (0, 0), (0, bm - m), (0, 0)))

@@ -30,8 +30,12 @@ def verify_and_sample(key, draft_tokens: jnp.ndarray,
     use_pallas, interp = resolve_pallas(force_pallas, interpret)
     if use_pallas or interp:
         from repro.kernels.spec_verify.spec_verify import spec_verify
+        from repro.kernels.tuning import resolve_config
+        cfg = resolve_config("spec_verify", backend="pallas",
+                             dtype=str(draft_probs.dtype), k=k, v=v)
         accept, tokens = spec_verify(draft_tokens, draft_probs, target_probs,
-                                     u_accept, u_resample, interpret=interp)
+                                     u_accept, u_resample, bv=cfg["bv"],
+                                     interpret=interp)
     else:
         accept, tokens = spec_verify_ref(draft_tokens, draft_probs,
                                          target_probs, u_accept, u_resample)

@@ -1,0 +1,64 @@
+"""Kernel autotuning: config sweeps, shape-keyed tuned-config store, and
+the ``resolve_config`` lookup every kernel call site goes through
+(docs/kernels.md#autotuning).
+
+Dispatch integration (flash_attention/ops.py, spec_verify/ops.py)::
+
+    cfg = resolve_config("ring_decode", backend="pallas", dtype="float32",
+                         w=8, g=4, d=64, s=2048)
+    ring_decode_attention(..., bk=cfg["bk"], bm_pad=cfg["bm_pad"])
+
+With no active store (the default) this returns exactly the old
+hard-coded constants; under ``tuned_store(...)`` / ``set_active_store``
+/ ``REPRO_TUNED_CONFIGS`` it returns the sweep winner for the shape
+bucket, sanitized so a perverse artifact can never change semantics.
+
+Retune and commit::
+
+    PYTHONPATH=src python -m repro.kernels.tuning \\
+        --out src/repro/kernels/tuning/tuned_configs.json
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from repro.kernels.tuning.cache import (SCHEMA_VERSION, SHIPPED_ARTIFACT,
+                                        TunedConfigStore, active_store,
+                                        make_key, set_active_store,
+                                        shape_bucket, tuned_store)
+from repro.kernels.tuning.sweep import (DEFAULTS, FAMILIES, candidates,
+                                        default_config, sanitize_config,
+                                        vmem_bytes)
+
+__all__ = ["TunedConfigStore", "tuned_store", "active_store",
+           "set_active_store", "make_key", "shape_bucket",
+           "SCHEMA_VERSION", "SHIPPED_ARTIFACT",
+           "FAMILIES", "DEFAULTS", "candidates", "default_config",
+           "sanitize_config", "vmem_bytes", "resolve_config"]
+
+#: shape keys bucketed to the next power of two before lookup, so a
+#: 3000-slot cache hits the 4096 sweep (matches policy.autotune_* keys)
+_BUCKETED = {"ring_decode": ("s",), "paged_decode": (),
+             "spec_verify": ("v",), "flash_attention": ("sq", "sk")}
+
+
+def resolve_config(family: str, *, backend: str, dtype: str,
+                   **shape: Any) -> Dict[str, Any]:
+    """Tile/impl config for one kernel call site: the active store's
+    winner for the shape bucket, else the hard-coded defaults. Called at
+    trace time (the result becomes static in the jitted program); always
+    returns a complete, sanitized config."""
+    cfg = default_config(family, backend)
+    store = active_store()
+    if store is not None:
+        key_shape = dict(shape)
+        for k in _BUCKETED.get(family, ()):
+            if k in key_shape:
+                key_shape[k] = shape_bucket(key_shape[k])
+        hit = store.lookup(family, backend, dtype, **key_shape)
+        from repro.telemetry.metrics import kernel_metrics
+        kernel_metrics().lookups.labels(
+            family=family, outcome="hit" if hit else "miss").inc()
+        if hit:
+            cfg = sanitize_config(family, backend, hit)
+    return cfg

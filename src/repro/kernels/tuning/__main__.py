@@ -1,0 +1,91 @@
+"""Retune CLI: sweep the standard hot-path shapes on this host and write
+the tuned-config artifact (docs/kernels.md#autotuning).
+
+    PYTHONPATH=src python -m repro.kernels.tuning \\
+        --out src/repro/kernels/tuning/tuned_configs.json
+
+Sweeps the backend this host dispatches to (the compiled Pallas kernels
+on TPU, the jnp decode/prefill paths elsewhere), so the committed
+artifact always describes real wall-clock winners. Promotion keeps the
+default unless a candidate wins by ``--min-speedup``, so reruns on a
+noisy host converge to an empty (all-defaults) artifact rather than
+flapping.
+"""
+from __future__ import annotations
+
+import argparse
+import platform
+import sys
+
+import jax
+import jax.numpy as jnp
+
+
+def _decode_shapes(smoke: bool):
+    # (b, w, h, kv, d, s) — mirrors benchmarks/bench_kernels.py
+    shapes = [(4, 1, 8, 2, 64, 2048), (4, 8, 8, 2, 64, 2048)]
+    if not smoke:
+        shapes.append((4, 8, 8, 2, 64, 4096))
+    return shapes
+
+
+def main(argv=None) -> int:
+    from repro.kernels.flash_attention.ring_decode import ring_slot_map
+    from repro.kernels.tuning import SHIPPED_ARTIFACT, TunedConfigStore
+    from repro.kernels.tuning.policy import (MIN_SPEEDUP, autotune_decode,
+                                             autotune_spec_verify)
+
+    ap = argparse.ArgumentParser(prog="repro.kernels.tuning",
+                                 description=__doc__)
+    ap.add_argument("--out", default=SHIPPED_ARTIFACT,
+                    help="artifact path (default: the shipped artifact)")
+    ap.add_argument("--rounds", type=int, default=16)
+    ap.add_argument("--min-speedup", type=float, default=MIN_SPEEDUP)
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest shape set (CI canary)")
+    args = ap.parse_args(argv)
+
+    backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    store = TunedConfigStore()
+    store.meta.update(backend=jax.default_backend(),
+                      host=platform.machine(), rounds=args.rounds)
+    key = jax.random.PRNGKey(0)
+
+    for b, w, h, kv, d, s in _decode_shapes(args.smoke):
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, w, h, d))
+        k = jax.random.normal(ks[1], (b, s, kv, d))
+        v = jax.random.normal(ks[2], (b, s, kv, d))
+        pos = jnp.full((b,), s + 3, jnp.int32)
+        slot = ring_slot_map(pos + w, s)
+        res = autotune_decode(store, q, k, v, slot, pos, backend=backend,
+                              rounds=args.rounds,
+                              min_speedup=args.min_speedup)
+        print(f"ring_decode {res.shape} [{backend}]: "
+              f"default {res.default_us:.0f}us -> winner {res.winner} "
+              f"{res.tuned_us:.0f}us "
+              f"({'promoted' if res.promoted else 'kept default'})")
+
+    if backend == "pallas":
+        # the fused accept/resample kernel only exists on the Pallas route
+        ks = jax.random.split(key, 3)
+        kd, vocab = 8, 32000
+        dp = jax.nn.softmax(jax.random.normal(ks[0], (kd, vocab)))
+        tp = jax.nn.softmax(jax.random.normal(ks[1], (kd + 1, vocab)))
+        dt = jax.random.randint(ks[2], (kd,), 0, vocab)
+        ua = jax.random.uniform(ks[0], (kd + 1,))
+        ur = jax.random.uniform(ks[1], (kd + 1,))
+        res = autotune_spec_verify(store, dt, dp, tp, ua, ur,
+                                   rounds=args.rounds,
+                                   min_speedup=args.min_speedup)
+        print(f"spec_verify {res.shape}: default {res.default_us:.0f}us "
+              f"-> winner {res.winner} "
+              f"({'promoted' if res.promoted else 'kept default'})")
+
+    store.save(args.out)
+    print(f"wrote {args.out} ({len(store)} tuned entries)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,222 @@
+"""Shape-keyed store of tuned kernel configs (docs/kernels.md#autotuning).
+
+A tuned config is a small dict of tile/block/impl knobs for one kernel
+family at one (shape bucket, backend, dtype) — the winner of a
+``policy.sweep`` run. The store persists as a JSON artifact shipped
+in-repo (``tuned_configs.json`` next to this module) so serving hosts
+start from the last committed sweep instead of hard-coded constants.
+
+Key schema (stable across processes, versioned)::
+
+    <family>|<backend>|<dtype>|k1=v1,k2=v2,...
+
+where the shape items are sorted by key and the cache length ``s`` is
+bucketed to the next power of two (``shape_bucket``) — a 3000-slot ring
+cache reuses the 4096 sweep instead of missing. ``backend`` is
+``pallas`` or ``jnp`` (the two dispatch routes in
+``flash_attention/ops.py``); ``dtype`` is the query dtype string.
+
+Safety properties (tested in tests/test_tuning.py):
+
+  * **Versioned schema.** A ``schema`` mismatch on load yields an *empty*
+    store, never an exception — call sites fall back to the defaults in
+    ``sweep.DEFAULTS`` exactly as if no artifact shipped.
+  * **Stale-key eviction.** Entries whose family is no longer registered
+    (or whose params are not a dict) are dropped on load, so renaming a
+    kernel family cannot resurrect configs tuned for the old one.
+  * **Lossless by construction.** Configs only reach kernels through
+    ``resolve_config``, which sanitizes every knob (tile multiples,
+    closed impl sets) — a perverse or hand-edited artifact can change
+    *speed*, never emitted tokens (pinned by the perverse-config matrix
+    cell in tests/test_tuning.py).
+  * **Thread-safe.** One lock guards the entry dict; lookups take a
+    point-in-time copy so concurrent sweeps never tear a read.
+
+The *active* store is process-global and empty by default — tier-1 tests
+and the seed behaviour are byte-identical with the artifact present but
+inactive. Activation is explicit: the ``tuned_store(...)`` context
+manager (benchmarks, tests), ``set_active_store``, or the
+``REPRO_TUNED_CONFIGS`` env var pointing at an artifact path (serving
+hosts; ``default`` selects the shipped artifact).
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import threading
+from typing import Any, Dict, Optional, Tuple, Union
+
+SCHEMA_VERSION = 1
+
+#: the artifact shipped in-repo (committed by ``python -m repro.kernels.tuning``)
+SHIPPED_ARTIFACT = os.path.join(os.path.dirname(__file__),
+                                "tuned_configs.json")
+
+__all__ = ["TunedConfigStore", "make_key", "shape_bucket", "tuned_store",
+           "active_store", "set_active_store", "SCHEMA_VERSION",
+           "SHIPPED_ARTIFACT"]
+
+
+def shape_bucket(n: int, floor: int = 16) -> int:
+    """Next power of two >= n (>= floor): cache lengths / vocab sizes are
+    bucketed so nearby shapes share one tuned entry."""
+    b = floor
+    while b < int(n):
+        b *= 2
+    return b
+
+
+def _fmt_shape(shape: Dict[str, Any]) -> str:
+    return ",".join(f"{k}={shape[k]}" for k in sorted(shape))
+
+
+def make_key(family: str, backend: str, dtype: str,
+             **shape: Any) -> str:
+    """The store key for one (family, backend, dtype, shape bucket)."""
+    return f"{family}|{backend}|{dtype}|{_fmt_shape(shape)}"
+
+
+class TunedConfigStore:
+    """Mapping key -> {"params": {...}, provenance...} with JSON
+    round-trip, tolerant load, and thread-safe access."""
+
+    def __init__(self, entries: Optional[Dict[str, dict]] = None,
+                 meta: Optional[Dict[str, Any]] = None):
+        self._lock = threading.Lock()
+        self._entries: Dict[str, dict] = dict(entries or {})
+        self.meta: Dict[str, Any] = dict(meta or {})
+        #: set on load when the artifact was rejected (schema/parse);
+        #: callers that care (CLI) can surface it, dispatch just sees
+        #: an empty store
+        self.load_error: Optional[str] = None
+
+    # ------------------------------------------------------------ access
+    def lookup(self, family: str, backend: str, dtype: str,
+               **shape: Any) -> Optional[Dict[str, Any]]:
+        """Tuned params for one call-site shape, or None (-> defaults)."""
+        key = make_key(family, backend, dtype, **shape)
+        with self._lock:
+            e = self._entries.get(key)
+            return dict(e["params"]) if e else None
+
+    def put(self, family: str, backend: str, dtype: str,
+            params: Dict[str, Any], *, shape: Dict[str, Any],
+            **provenance: Any) -> str:
+        key = make_key(family, backend, dtype, **shape)
+        entry = {"family": family, "backend": backend, "dtype": dtype,
+                 "shape": dict(shape), "params": dict(params), **provenance}
+        with self._lock:
+            self._entries[key] = entry
+        return key
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def entries(self) -> Dict[str, dict]:
+        with self._lock:
+            return {k: dict(v) for k, v in self._entries.items()}
+
+    # ------------------------------------------------------ persistence
+    def to_json(self) -> Dict[str, Any]:
+        return {"schema": SCHEMA_VERSION, "meta": dict(self.meta),
+                "entries": self.entries()}
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+            f.write("\n")
+
+    @classmethod
+    def from_json(cls, doc: Any) -> "TunedConfigStore":
+        """Tolerant parse: schema mismatch or malformed doc -> empty
+        store with ``load_error`` set; stale entries evicted."""
+        from repro.kernels.tuning.sweep import FAMILIES
+        store = cls()
+        if not isinstance(doc, dict):
+            store.load_error = "artifact is not a JSON object"
+            return store
+        if doc.get("schema") != SCHEMA_VERSION:
+            store.load_error = (f"schema {doc.get('schema')!r} != "
+                                f"{SCHEMA_VERSION} (stale artifact; "
+                                f"retune with python -m repro.kernels.tuning)")
+            return store
+        store.meta = dict(doc.get("meta") or {})
+        entries = doc.get("entries")
+        if not isinstance(entries, dict):
+            store.load_error = "entries missing"
+            return store
+        evicted = 0
+        for key, e in entries.items():
+            if (not isinstance(e, dict)
+                    or e.get("family") not in FAMILIES
+                    or not isinstance(e.get("params"), dict)):
+                evicted += 1            # stale-key eviction
+                continue
+            store._entries[key] = dict(e)
+        if evicted:
+            store.meta["evicted_on_load"] = evicted
+        return store
+
+    @classmethod
+    def load(cls, path: str) -> "TunedConfigStore":
+        """Load an artifact; any I/O or parse failure yields an empty
+        store (the dispatch layer must never crash on a bad artifact)."""
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError) as e:
+            store = cls()
+            store.load_error = f"{type(e).__name__}: {e}"
+            return store
+        return cls.from_json(doc)
+
+
+# ------------------------------------------------------------ active store
+_active: Optional[TunedConfigStore] = None
+_env_checked = False
+_env_lock = threading.Lock()
+
+
+def set_active_store(store: Optional[TunedConfigStore]) -> None:
+    """Install ``store`` as the process-global tuned-config source
+    (None -> defaults everywhere)."""
+    global _active, _env_checked
+    with _env_lock:
+        _active = store
+        _env_checked = True
+
+
+def active_store() -> Optional[TunedConfigStore]:
+    """The store ``resolve_config`` consults. Empty-by-default; the
+    ``REPRO_TUNED_CONFIGS`` env var (a path, or ``default`` for the
+    shipped artifact) is honoured once, lazily."""
+    global _active, _env_checked
+    with _env_lock:
+        if not _env_checked:
+            _env_checked = True
+            path = os.environ.get("REPRO_TUNED_CONFIGS")
+            if path:
+                if path == "default":
+                    path = SHIPPED_ARTIFACT
+                _active = TunedConfigStore.load(path)
+        return _active
+
+
+@contextlib.contextmanager
+def tuned_store(store: Union[TunedConfigStore, str, None]):
+    """Activate a store (or artifact path) for the dynamic extent of the
+    block — like ``dispatch.pallas_override``, consulted at trace time:
+    build engines / jitted functions inside the context."""
+    if isinstance(store, str):
+        store = TunedConfigStore.load(store)
+    global _active, _env_checked
+    with _env_lock:
+        prev, prev_checked = _active, _env_checked
+        _active, _env_checked = store, True
+    try:
+        yield store
+    finally:
+        with _env_lock:
+            _active, _env_checked = prev, prev_checked

@@ -1,0 +1,158 @@
+"""Winner selection for the kernel autotuner (docs/kernels.md#autotuning).
+
+Timing uses the repo's single benchmark protocol
+(``telemetry.bench.interleaved_medians``): every candidate is warmed
+(compiled) first, then timed round-robin with ``block_until_ready``
+fences, so thermal / noisy-neighbour drift lands on all candidates
+equally and the median discards stragglers.
+
+Promotion is deliberately conservative: a candidate only dethrones the
+default when its median beats the default's by at least ``min_speedup``
+(5% by default). Timing noise therefore never replaces the default with
+an equal-speed config — an unpromoted sweep leaves the store untouched
+and every call site keeps the hard-coded constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.kernels.tuning import sweep as sweep_mod
+from repro.kernels.tuning.cache import TunedConfigStore
+from repro.telemetry import interleaved_medians
+from repro.telemetry.metrics import kernel_metrics
+
+__all__ = ["SweepResult", "sweep", "autotune_decode", "autotune_spec_verify",
+           "MIN_SPEEDUP"]
+
+#: a winner must beat the default median by this fraction to be promoted
+MIN_SPEEDUP = 0.05
+
+
+@dataclasses.dataclass
+class SweepResult:
+    family: str
+    backend: str
+    dtype: str
+    shape: Dict[str, Any]
+    timings: List[Tuple[Dict[str, Any], float]]   # (config, median us)
+    default_us: float
+    tuned_us: float
+    winner: Dict[str, Any]
+    promoted: bool
+
+    @property
+    def speedup(self) -> float:
+        return self.default_us / max(self.tuned_us, 1e-9)
+
+
+def sweep(family: str, make_fn: Callable[[Dict[str, Any]], Callable], *,
+          backend: str, dtype: str, shape: Dict[str, Any],
+          store: Optional[TunedConfigStore] = None,
+          configs: Optional[List[Dict[str, Any]]] = None,
+          args: Tuple = (), rounds: int = 12,
+          min_speedup: float = MIN_SPEEDUP) -> SweepResult:
+    """Time every candidate config for one call-site shape and (when a
+    ``store`` is given and the winner clears ``min_speedup``) persist it.
+
+    ``make_fn(config)`` returns a callable running the kernel with that
+    config on ``args`` — the runner must take the arrays as *arguments*
+    (a zero-arg jitted closure bakes them in as constants and XLA
+    constant-folds the whole kernel away, timing nothing). Candidates
+    default to ``sweep.candidates`` for the (family, backend, shape);
+    element 0 is always the default config (the promotion baseline)."""
+    cands = configs if configs is not None \
+        else sweep_mod.candidates(family, backend, **shape)
+    fns = [make_fn(c) for c in cands]
+    meds = interleaved_medians(fns, *args, rounds=rounds)
+    timings = list(zip(cands, meds))
+    default_us = meds[0]
+    best_i = min(range(len(meds)), key=meds.__getitem__)
+    promoted = (best_i != 0
+                and default_us / max(meds[best_i], 1e-9) >= 1 + min_speedup)
+    winner = cands[best_i] if promoted else cands[0]
+    tuned_us = meds[best_i] if promoted else default_us
+    km = kernel_metrics()
+    km.sweeps.labels(family=family).inc()
+    if promoted:
+        km.promotions.labels(family=family).inc()
+    if store is not None and promoted:
+        store.put(family, backend, dtype, winner, shape=shape,
+                  default_us=round(default_us, 2),
+                  tuned_us=round(tuned_us, 2),
+                  speedup=round(default_us / max(tuned_us, 1e-9), 4))
+    return SweepResult(family=family, backend=backend, dtype=dtype,
+                       shape=dict(shape), timings=timings,
+                       default_us=default_us, tuned_us=tuned_us,
+                       winner=winner, promoted=promoted)
+
+
+# --------------------------------------------------------------------------
+# Call-site-shaped helpers: build the jitted runner per config and key the
+# store exactly as flash_attention/ops.py will look the entry up.
+# --------------------------------------------------------------------------
+
+def autotune_decode(store: TunedConfigStore, q, k, v, slot_pos, pos, *,
+                    backend: str = "jnp", interpret: bool = False,
+                    rounds: int = 12,
+                    min_speedup: float = MIN_SPEEDUP) -> SweepResult:
+    """Sweep the ring decode/verify path for one (q, cache) shape. The
+    store key matches ``ops.attention``'s ring branch (w, g, d, bucketed
+    s), so a subsequent dispatch under ``tuned_store`` picks the winner
+    up."""
+    import jax
+
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.kernels.flash_attention.ring_decode import (
+        ring_decode_attention, ring_decode_ref)
+    from repro.kernels.tuning.cache import shape_bucket
+
+    b, w, h, d = q.shape
+    kv = k.shape[2]
+    shape = {"w": w, "g": h // kv, "d": d, "s": shape_bucket(k.shape[1])}
+    dtype = str(q.dtype)
+
+    def make_fn(cfg):
+        cfg = sweep_mod.sanitize_config("ring_decode", backend, cfg)
+        if backend == "pallas":
+            f = jax.jit(lambda q, k, v, sl, p: ring_decode_attention(
+                q, k, v, sl, p, bk=cfg["bk"], bm_pad=cfg["bm_pad"],
+                interpret=interpret))
+        elif cfg["impl"] == "oracle":
+            f = jax.jit(lambda q, k, v, sl, p: attention_ref(
+                q, k, v, causal=True, q_offset=p, kv_positions=sl))
+        else:
+            f = jax.jit(lambda q, k, v, sl, p: ring_decode_ref(
+                q, k, v, sl, p))
+        return f
+
+    return sweep("ring_decode", make_fn, backend=backend, dtype=dtype,
+                 shape=shape, store=store, rounds=rounds,
+                 args=(q, k, v, slot_pos, pos), min_speedup=min_speedup)
+
+
+def autotune_spec_verify(store: TunedConfigStore, draft_tokens, draft_probs,
+                         target_probs, u_accept, u_resample, *,
+                         interpret: bool = False, rounds: int = 12,
+                         min_speedup: float = MIN_SPEEDUP) -> SweepResult:
+    """Sweep the fused accept/resample kernel's vocab tile (pallas route
+    only — the jnp rule has no blocking knob)."""
+    import jax
+
+    from repro.kernels.spec_verify.spec_verify import spec_verify
+    from repro.kernels.tuning.cache import shape_bucket
+
+    k, v = draft_probs.shape
+    shape = {"k": k, "v": shape_bucket(v)}
+    dtype = str(draft_probs.dtype)
+
+    def make_fn(cfg):
+        cfg = sweep_mod.sanitize_config("spec_verify", "pallas", cfg)
+        return jax.jit(lambda dt, dp, tp, ua, ur: spec_verify(
+            dt, dp, tp, ua, ur, bv=cfg["bv"], interpret=interpret))
+
+    return sweep("spec_verify", make_fn, backend="pallas", dtype=dtype,
+                 shape=shape, store=store, rounds=rounds,
+                 args=(draft_tokens, draft_probs, target_probs, u_accept,
+                       u_resample),
+                 min_speedup=min_speedup)

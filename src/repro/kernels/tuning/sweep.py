@@ -1,0 +1,168 @@
+"""Candidate config grids per kernel family (docs/kernels.md#autotuning).
+
+Every Pallas kernel in the DSI hot path carries tile/block knobs that
+used to be hard-coded constants (``bk=128`` in ring_decode, ``bv=512``
+in spec_verify, ``bq=bk=128`` in the prefill flash kernel). This module
+is the single registry of
+
+  * the **default** config per (family, backend) — exactly the old
+    constants, so an empty store reproduces the seed behaviour,
+  * the **candidate grid** the sweeper may time, pruned by shape
+    divisibility and a VMEM working-set budget,
+  * the **sanitizer** that clamps anything read back from a store to
+    values the kernels accept (tile multiples, closed impl sets) — the
+    reason a perverse artifact can never change emitted tokens.
+
+Families and their knobs:
+
+  ring_decode      pallas: bk (KV-block slots), bm_pad (M-dim sublane pad)
+                   jnp:    impl in {packed, oracle} — ring_decode_ref's
+                           batched GEMMs vs attention_ref's fused einsum
+                           (which one wins is shape- and host-dependent:
+                           see BENCH_kernels.json W=1 vs W=8 rows)
+  paged_decode     pallas: bm_pad (bk is pinned to the page size)
+                   jnp:    impl in {packed, oracle}
+  spec_verify      pallas: bv (vocab tile)
+                   jnp:    — (the ref rule has no blocking knob)
+  flash_attention  pallas: bq, bk (q/k tile)
+                   jnp:    chunk (q-chunk of the blocked scan; chunking
+                           only splits the q dim, bit-identical output)
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Any, Dict, List
+
+__all__ = ["FAMILIES", "DEFAULTS", "default_config", "candidates",
+           "vmem_bytes", "sanitize_config", "VMEM_BUDGET_BYTES"]
+
+FAMILIES = ("ring_decode", "paged_decode", "spec_verify", "flash_attention")
+
+#: conservative per-core VMEM working-set budget for one grid step
+#: (v5e has 16 MiB; leave headroom for double-buffered DMA)
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+#: the former hard-coded constants — an empty store resolves to exactly
+#: these, so behaviour without tuning is byte-identical to the seed
+DEFAULTS: Dict[str, Dict[str, Dict[str, Any]]] = {
+    "ring_decode": {"pallas": {"bk": 128, "bm_pad": 16},
+                    "jnp": {"impl": "packed"}},
+    "paged_decode": {"pallas": {"bm_pad": 16},
+                     "jnp": {"impl": "packed"}},
+    "spec_verify": {"pallas": {"bv": 512}, "jnp": {}},
+    "flash_attention": {"pallas": {"bq": 128, "bk": 128},
+                        "jnp": {"chunk": 1024}},
+}
+
+_IMPLS = ("packed", "oracle")
+
+
+def default_config(family: str, backend: str) -> Dict[str, Any]:
+    return dict(DEFAULTS[family][backend])
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def vmem_bytes(family: str, config: Dict[str, Any],
+               **shape: int) -> int:
+    """Rough fp32 working set of one grid step: score tile + accumulator
+    + k/v tiles + softmax state (double-counted 2x for DMA buffers)."""
+    if family == "ring_decode":
+        m = shape["g"] * shape["w"]
+        bm = _round_up(m, max(16, int(config.get("bm_pad", 16))))
+        bk, d = int(config.get("bk", 128)), shape["d"]
+        per = bm * bk + bm * d + 2 * bk * d + 2 * bm + bk
+    elif family == "paged_decode":
+        m = shape["g"] * shape["w"]
+        bm = _round_up(m, max(16, int(config.get("bm_pad", 16))))
+        bk, d = shape["page"], shape["d"]
+        per = bm * bk + bm * d + 2 * bk * d + 2 * bm + bk
+    elif family == "spec_verify":
+        per = 2 * int(config.get("bv", 512))
+    elif family == "flash_attention":
+        bq, bk = int(config.get("bq", 128)), int(config.get("bk", 128))
+        d = shape["d"]
+        per = bq * bk + bq * d + 2 * bk * d + 2 * bq
+    else:  # pragma: no cover
+        raise ValueError(family)
+    return 2 * 4 * per
+
+
+def candidates(family: str, backend: str, **shape: int
+               ) -> List[Dict[str, Any]]:
+    """Every config the sweeper may time for one call-site shape —
+    pruned by divisibility and the VMEM budget; the default is always
+    element 0 (the policy compares winners against it)."""
+    default = default_config(family, backend)
+    out: List[Dict[str, Any]] = [default]
+
+    def add(cfg: Dict[str, Any]) -> None:
+        if cfg in out:
+            return
+        if vmem_bytes(family, cfg, **shape) > VMEM_BUDGET_BYTES:
+            return
+        out.append(cfg)
+
+    if backend == "jnp":
+        if family in ("ring_decode", "paged_decode"):
+            for impl in _IMPLS:
+                add({"impl": impl})
+        elif family == "flash_attention":
+            for chunk in (256, 512, 1024, 2048):
+                if chunk <= shape["sq"]:
+                    add({"chunk": chunk})
+        return out
+
+    if family == "ring_decode":
+        s = shape["s"]
+        for bk, bm_pad in itertools.product((64, 128, 256, 512), (16, 32)):
+            if bk <= _round_up(s, 16):       # larger blocks clamp to this
+                add({"bk": bk, "bm_pad": bm_pad})
+    elif family == "paged_decode":
+        for bm_pad in (16, 32):
+            add({"bm_pad": bm_pad})
+    elif family == "spec_verify":
+        v = shape["v"]
+        for bv in (128, 256, 512, 1024, 2048):
+            if bv <= v:
+                add({"bv": bv})
+    elif family == "flash_attention":
+        sk = shape["sk"]
+        for bq, bk in itertools.product((128, 256), (128, 256)):
+            if sk % bk == 0:                 # the kernel requires Sk % bk == 0
+                add({"bq": bq, "bk": bk})
+    return out
+
+
+def _pos_mult(v: Any, mult: int, default: int) -> int:
+    """Positive int rounded up to a multiple of ``mult``; non-ints fall
+    back to the default."""
+    try:
+        n = int(v)
+    except (TypeError, ValueError):
+        return default
+    if n <= 0:
+        return default
+    return _round_up(n, mult)
+
+
+def sanitize_config(family: str, backend: str,
+                    params: Dict[str, Any]) -> Dict[str, Any]:
+    """Clamp store-supplied params to values the kernels accept. Unknown
+    keys are dropped; bad values revert to the default. This is the
+    lossless firewall: any artifact content yields a *runnable* config,
+    and configs never change kernel semantics, only tiling."""
+    default = default_config(family, backend)
+    out = dict(default)
+    for k, v in params.items():
+        if k not in default:
+            continue
+        if k in ("bk", "bq", "bm_pad"):
+            out[k] = _pos_mult(v, 16, default[k])
+        elif k in ("bv", "chunk"):
+            out[k] = v if isinstance(v, int) and v > 0 else default[k]
+        elif k == "impl":
+            out[k] = v if v in _IMPLS else default[k]
+    return out

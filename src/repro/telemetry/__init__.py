@@ -20,8 +20,8 @@ from repro.telemetry.agg import json_sanitize, safe_div, safe_max, safe_mean
 from repro.telemetry.bench import (fence, interleaved_medians, timed_section,
                                    timed_us)
 from repro.telemetry.metrics import (cache_metrics, fault_metrics,
-                                     orchestrator_metrics, planner_metrics,
-                                     serving_metrics)
+                                     kernel_metrics, orchestrator_metrics,
+                                     planner_metrics, serving_metrics)
 from repro.telemetry.export import (JsonlSink, chrome_trace,
                                     spans_from_pool_events,
                                     spans_from_tick_events,
@@ -35,7 +35,7 @@ __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "default_registry",
     "DEFAULT_BUCKETS",
     "serving_metrics", "orchestrator_metrics", "planner_metrics",
-    "fault_metrics", "cache_metrics",
+    "fault_metrics", "cache_metrics", "kernel_metrics",
     "Span", "Instant", "SpanTracer",
     "chrome_trace", "write_chrome_trace", "JsonlSink",
     "spans_from_pool_events", "spans_from_tick_events",

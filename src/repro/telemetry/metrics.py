@@ -21,7 +21,7 @@ from types import SimpleNamespace
 from repro.telemetry.registry import MetricsRegistry, default_registry
 
 __all__ = ["serving_metrics", "orchestrator_metrics", "planner_metrics",
-           "fault_metrics", "cache_metrics"]
+           "fault_metrics", "cache_metrics", "kernel_metrics"]
 
 #: tick/latency histograms: 1ms..10s (serving ticks on CPU sit ~10-100ms)
 _TICK_BUCKETS = (1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2, 1e-1, 2.5e-1,
@@ -148,6 +148,33 @@ def fault_metrics(reg: MetricsRegistry = None) -> SimpleNamespace:
         epoch=reg.gauge(
             "dsi_supervisor_epoch",
             "supervisor degradation epoch (bumps on SP re-plan)"),
+    )
+
+
+def kernel_metrics(reg: MetricsRegistry = None) -> SimpleNamespace:
+    """kernels/{flash_attention/ops,tuning}.py — dispatch + autotuner.
+
+    The dispatch counters are bumped at *trace time* (ops.attention runs
+    Python once per compiled shape), so they count distinct compiled
+    programs, not per-step executions — exactly the grain that matters
+    for "which shapes silently missed the kernel"."""
+    reg = reg or default_registry()
+    return SimpleNamespace(
+        fallbacks=reg.counter(
+            "dsi_kernel_fallbacks_total",
+            "Pallas was requested but dispatch fell back to the jnp "
+            "path, by reason (counted per compiled shape)", ("reason",)),
+        lookups=reg.counter(
+            "dsi_tuned_config_lookups_total",
+            "tuned-config store lookups at kernel dispatch",
+            ("family", "outcome")),
+        sweeps=reg.counter(
+            "dsi_autotune_sweeps_total",
+            "autotuner config sweeps executed", ("family",)),
+        promotions=reg.counter(
+            "dsi_autotune_promotions_total",
+            "sweeps whose winner beat the default by the min-speedup "
+            "threshold and was persisted", ("family",)),
     )
 
 

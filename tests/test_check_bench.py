@@ -1,0 +1,181 @@
+"""The perf regression gate itself (tools/check_bench.py): flattening,
+per-class thresholds, waiver matching/expiry, the machine-independent
+invariants, baseline round-trip through temp dirs, and the built-in
+self-test fixtures."""
+import datetime
+import importlib.util
+import json
+import os
+
+import pytest
+
+_TOOLS = os.path.join(os.path.dirname(__file__), "..", "tools",
+                      "check_bench.py")
+_spec = importlib.util.spec_from_file_location("check_bench", _TOOLS)
+cb = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(cb)
+
+
+def _kernels(ms_default=10.0, ms_tuned=9.0, shape="B4W8H8KV2D64S2048"):
+    return {"backend": "cpu", "rows": [
+        {"op": "decode_attn_default", "shape": shape, "ms": ms_default,
+         "tokens_per_s": 3200.0},
+        {"op": "decode_attn_tuned", "shape": shape, "ms": ms_tuned,
+         "tokens_per_s": 3300.0, "note": "winner={'impl': 'oracle'}"}],
+        "tuned_configs": {"k": {"params": {"impl": "oracle"}}}}
+
+
+# -------------------------------------------------------------- flatten
+def test_flatten_keys_rows_by_identity():
+    flat = cb.flatten(_kernels(), "BENCH_kernels")
+    key = "BENCH_kernels.rows[decode_attn_default|B4W8H8KV2D64S2048].ms"
+    assert flat[key] == 10.0
+    # row order must not matter
+    doc = _kernels()
+    doc["rows"].reverse()
+    assert cb.flatten(doc, "BENCH_kernels")[key] == 10.0
+
+
+def test_glob_match_treats_brackets_literally():
+    assert cb._glob_match("a.rows[x|S2048].ms", "a.rows[*].ms")
+    assert cb._glob_match("a.rows[x|S2048].ms", "*.ms")
+    assert not cb._glob_match("a.rows[x|S2048].ms", "a.rows[y*].ms")
+
+
+def test_skip_patterns_cover_host_dependent_paths():
+    flat = cb.flatten(_kernels(), "BENCH_kernels")
+    skipped = [p for p in flat if cb._skipped(p)]
+    assert any("tuned_configs" in p for p in skipped)
+    assert any(p.endswith(".note") for p in skipped)
+    assert not any(p.endswith(".ms") for p in skipped)
+
+
+# -------------------------------------------------------------- compare
+def test_compare_classes():
+    base = cb.flatten(_kernels(), "B")
+    # timing within ratio, counters exact: identical run passes
+    assert cb.compare(base, dict(base)) == []
+    # timing regression beyond the ratio fails; improvement passes
+    worse = cb.flatten(_kernels(ms_default=50.0), "B")
+    assert any(v.kind == "regressed" for v in cb.compare(base, worse))
+    better = cb.flatten(_kernels(ms_default=1.0), "B")
+    assert cb.compare(base, better) == []
+
+
+def test_compare_deterministic_drift_and_missing():
+    base = {"B.steps": 7, "B.lossless": True, "B.rows[a|S1].ms": 1.0}
+    drift = dict(base, **{"B.steps": 8})
+    vs = cb.compare(base, drift)
+    assert [v.kind for v in vs] == ["changed"]
+    vs = cb.compare(base, {"B.steps": 7, "B.lossless": True})
+    assert [v.kind for v in vs] == ["missing"]
+    vs = cb.compare(base, dict(base, **{"B.lossless": False}))
+    assert [v.kind for v in vs] == ["changed"]
+
+
+def test_compare_per_metric_threshold_override():
+    base = {"B.rows[a|S1].ms": 1.0}
+    fresh = {"B.rows[a|S1].ms": 5.0}
+    assert cb.compare(base, fresh)                       # default 4x: fail
+    assert cb.compare(base, fresh,
+                      thresholds={"B.rows[*].ms": 8.0}) == []
+
+
+# -------------------------------------------------------------- waivers
+def test_waiver_matching_and_expiry():
+    today = datetime.date(2026, 8, 9)
+    vs = [cb.Violation("B.rows[a|S1].ms", "regressed", "x"),
+          cb.Violation("B.lossless", "lossless", "x", waivable=False)]
+    live = [{"metric": "B.rows[*].ms", "reason": "r", "expires": "2026-12-31"}]
+    rem, notes = cb.apply_waivers(list(vs), live, today=today)
+    assert [v.metric for v in rem] == ["B.lossless"]     # never waivable
+    assert any("waived" in n for n in notes)
+    dead = [{"metric": "B.rows[*].ms", "reason": "r", "expires": "2026-01-01"}]
+    rem, notes = cb.apply_waivers(list(vs), dead, today=today)
+    assert len(rem) == 2 and any("expired" in n for n in notes)
+    bad = [{"metric": "B.rows[*].ms", "reason": "r", "expires": "soonish"}]
+    rem, notes = cb.apply_waivers(list(vs), bad, today=today)
+    assert len(rem) == 2 and any("bad expires" in n for n in notes)
+
+
+# ----------------------------------------------------------- invariants
+def test_invariant_tuned_never_slower():
+    assert cb.check_invariants(kernels=_kernels(10.0, 9.0)) == []
+    vs = cb.check_invariants(kernels=_kernels(10.0, 20.0))
+    assert any(v.kind == "tuned-slower" and not v.waivable for v in vs)
+    # sub-2048 caches are not speed-gated, but a run with no tuned row at
+    # S >= 2048 at all is itself a violation (the bench stopped covering
+    # the acceptance shape)
+    vs = cb.check_invariants(
+        kernels=_kernels(10.0, 20.0, shape="B4W8H8KV2D64S512"))
+    assert [v.kind for v in vs] == ["missing"]
+
+
+def test_invariant_lossless_and_throughput():
+    assert cb.check_invariants(serving={"lossless": True}) == []
+    assert any(v.kind == "lossless" for v in
+               cb.check_invariants(serving={"lossless": False}))
+    orch = {"perfect": [{"sp": 4, "lossless": True}],
+            "noisy": [{"sp": 4, "lossless": False}],
+            "steady_state": {"continuous": {"tokens_per_tick": 1.0},
+                             "drain": {"tokens_per_tick": 2.0}}}
+    vs = cb.check_invariants(orchestrator=orch)
+    kinds = sorted(v.kind for v in vs)
+    assert kinds == ["lossless", "regressed"]
+
+
+# --------------------------------------------------- end-to-end gate run
+def _write(d, name, doc):
+    with open(os.path.join(d, name), "w") as f:
+        json.dump(doc, f)
+
+
+def test_run_gate_round_trip(tmp_path):
+    fresh = tmp_path / "fresh"
+    basedir = tmp_path / "base"
+    fresh.mkdir()
+    _write(str(fresh), "BENCH_kernels.json", _kernels())
+    _write(str(fresh), "BENCH_serving.json", {"lossless": True, "wall_s": 1.0})
+    _write(str(fresh), "BENCH_orchestrator.json",
+           {"perfect": [{"sp": 4, "lossless": True}], "noisy": [],
+            "steady_state": {"continuous": {"tokens_per_tick": 3.0},
+                             "drain": {"tokens_per_tick": 2.0}}})
+    # first run: no baselines yet -> only invariants gate; then seed them
+    vs, _ = cb.run_gate(str(fresh), str(basedir))
+    assert vs == []
+    assert cb.update_baselines(str(fresh), str(basedir)) == \
+        list(cb.BENCH_FILES)
+    # identical rerun passes
+    vs, _ = cb.run_gate(str(fresh), str(basedir))
+    assert vs == []
+    # regress serving timing 10x: caught; then waived: passes
+    _write(str(fresh), "BENCH_serving.json",
+           {"lossless": True, "wall_s": 10.0})
+    vs, _ = cb.run_gate(str(fresh), str(basedir))
+    assert [v.kind for v in vs] == ["regressed"]
+    _write(str(basedir), cb.GATE_FILE, {"waivers": [
+        {"metric": "BENCH_serving.wall_s", "reason": "tracked",
+         "expires": (datetime.date.today()
+                     + datetime.timedelta(days=1)).isoformat()}]})
+    vs, notes = cb.run_gate(str(fresh), str(basedir))
+    assert vs == [] and any("waived" in n for n in notes)
+    # a missing fresh file is a violation (the bench must keep producing it)
+    os.remove(os.path.join(str(fresh), "BENCH_serving.json"))
+    vs, _ = cb.run_gate(str(fresh), str(basedir))
+    assert any(v.metric == "BENCH_serving" for v in vs)
+
+
+def test_self_test_fixtures_pass():
+    assert cb.self_test() == []
+
+
+def test_main_exit_codes(tmp_path, capsys):
+    assert cb.main(["--self-test"]) == 0
+    fresh = tmp_path / "f"
+    fresh.mkdir()
+    _write(str(fresh), "BENCH_serving.json", {"lossless": False})
+    rc = cb.main(["--fresh-dir", str(fresh),
+                  "--baseline-dir", str(tmp_path / "b")])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "lossless" in out and "violation" in out

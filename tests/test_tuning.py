@@ -1,0 +1,480 @@
+"""Kernel autotuner (kernels/tuning): every sweeper candidate is
+output-equivalent to the oracle on edge shapes, the tuned-config store's
+persistence/safety contract holds (versioned schema, stale eviction,
+tolerant load, thread safety), dispatch resolves configs losslessly even
+from a deliberately perverse store, and a requested-but-impossible
+Pallas dispatch records ``dsi_kernel_fallbacks_total`` instead of
+silently degrading."""
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.cache import PagedSpec, gather_pages
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.ring_decode import (paged_decode_attention,
+                                                       paged_decode_ref,
+                                                       ring_decode_attention,
+                                                       ring_decode_ref,
+                                                       ring_slot_map)
+from repro.kernels.tuning import (DEFAULTS, SCHEMA_VERSION, TunedConfigStore,
+                                  candidates, default_config, make_key,
+                                  resolve_config, sanitize_config,
+                                  shape_bucket, tuned_store, vmem_bytes)
+from repro.kernels.tuning import cache as cache_mod
+
+try:                                    # property tests when available
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _ring_inputs(rng, b, w, h, kv, d, s, pos):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (b, w, h, d))
+    k = jax.random.normal(ks[1], (b, s, kv, d))
+    v = jax.random.normal(ks[2], (b, s, kv, d))
+    return q, k, v, ring_slot_map(pos + w, s)
+
+
+# ===================================================== candidate parity
+# Every config the sweeper is allowed to time must produce the oracle's
+# output — a tuning sweep can try anything in the grid, so the grid
+# itself carries the losslessness burden on the nastiest shapes.
+
+@pytest.mark.parametrize("case", [
+    # (b, w, h, kv, d, s, window): Sq == window; GQA group 1;
+    # S not divisible by the default 128-slot block (forces clamping)
+    (2, 8, 4, 2, 64, 40, 8),
+    (2, 4, 4, 4, 64, 96, None),
+    (2, 8, 6, 3, 64, 96, None),
+])
+def test_ring_candidates_parity(case, rng):
+    b, w, h, kv, d, s, win = case
+    pos = jnp.array([s + 5, 17], jnp.int32)
+    q, k, v, slot = _ring_inputs(rng, b, w, h, kv, d, s, pos)
+    ref = attention_ref(q, k, v, causal=True, window=win, q_offset=pos,
+                        kv_positions=slot)
+    shape = {"w": w, "g": h // kv, "d": d, "s": s}
+    pallas_cands = candidates("ring_decode", "pallas", **shape)
+    assert pallas_cands[0] == default_config("ring_decode", "pallas")
+    for cfg in pallas_cands:
+        out = ring_decode_attention(q, k, v, slot, pos, window=win,
+                                    bk=cfg["bk"], bm_pad=cfg["bm_pad"],
+                                    interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5, err_msg=str(cfg))
+    for cfg in candidates("ring_decode", "jnp", **shape):
+        out = (attention_ref(q, k, v, causal=True, window=win, q_offset=pos,
+                             kv_positions=slot) if cfg["impl"] == "oracle"
+               else ring_decode_ref(q, k, v, slot, pos, window=win))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5, err_msg=str(cfg))
+
+
+@pytest.mark.parametrize("case", [
+    # page-edge wrap (pos ≡ 0 mod page + straddling), single-page table
+    dict(b=2, w=4, h=4, kv=2, d=64, page=16, n_pages=4,
+         pos=(16 * 4 + 16, 16 * 4 + 14)),
+    dict(b=2, w=8, h=4, kv=2, d=64, page=32, n_pages=1, pos=(32 + 9, 11)),
+])
+def test_paged_candidates_parity(case, rng):
+    b, w, h, kv, d = case["b"], case["w"], case["h"], case["kv"], case["d"]
+    page, n_pages = case["page"], case["n_pages"]
+    s = page * n_pages
+    pos = jnp.asarray(case["pos"], jnp.int32)
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (b, w, h, d))
+    pool = 1 + b * n_pages
+    kp = jax.random.normal(ks[1], (pool, page, kv, d))
+    vp = jax.random.normal(ks[2], (pool, page, kv, d))
+    bt = 1 + jnp.arange(n_pages)[None] * b + jnp.arange(b)[:, None]
+    slot = ring_slot_map(pos + w, s)
+    ref = attention_ref(q, gather_pages(kp, bt), gather_pages(vp, bt),
+                        causal=True, q_offset=pos, kv_positions=slot)
+    shape = {"w": w, "g": h // kv, "d": d, "page": page}
+    for cfg in candidates("paged_decode", "pallas", **shape):
+        out = paged_decode_attention(q, kp, vp, bt, slot, pos,
+                                     bm_pad=cfg["bm_pad"], interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5, err_msg=str(cfg))
+    for cfg in candidates("paged_decode", "jnp", **shape):
+        out = (attention_ref(q, gather_pages(kp, bt), gather_pages(vp, bt),
+                             causal=True, q_offset=pos, kv_positions=slot)
+               if cfg["impl"] == "oracle"
+               else paged_decode_ref(q, kp, vp, bt, slot, pos))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5, err_msg=str(cfg))
+
+
+@pytest.mark.parametrize("k,v", [(5, 777), (3, 128), (8, 2048)])
+def test_spec_verify_candidates_bit_identical(k, v, rng):
+    """The vocab tile only splits the residual/CDF scans — every bv
+    candidate must reproduce the default tile *bit for bit* (accept mask
+    and sampled tokens), including V not divisible by bv."""
+    from repro.kernels.spec_verify.ref import spec_verify_ref
+    from repro.kernels.spec_verify.spec_verify import spec_verify
+    ks = jax.random.split(rng, 5)
+    dp = jax.nn.softmax(jax.random.normal(ks[0], (k, v)) * 2)
+    tp = jax.nn.softmax(jax.random.normal(ks[1], (k + 1, v)) * 2)
+    dt = jax.random.randint(ks[2], (k,), 0, v)
+    ua = jax.random.uniform(ks[3], (k + 1,))
+    ur = jax.random.uniform(ks[4], (k + 1,))
+    a_ref, t_ref = spec_verify_ref(dt, dp, tp, ua, ur)
+    for cfg in candidates("spec_verify", "pallas", k=k, v=v):
+        a, t = spec_verify(dt, dp, tp, ua, ur, bv=cfg["bv"], interpret=True)
+        assert np.array_equal(np.asarray(a), np.asarray(a_ref)), cfg
+        assert np.array_equal(np.asarray(t), np.asarray(t_ref)), cfg
+
+
+def test_candidate_grids_pruned():
+    """Divisibility/VMEM pruning: no candidate exceeds the budget, ring
+    blocks never exceed the (rounded) cache, flash tiles divide Sk, and
+    the default survives pruning as element 0 even when out-of-grid."""
+    shape = {"w": 8, "g": 4, "d": 64, "s": 96}
+    cands = candidates("ring_decode", "pallas", **shape)
+    assert cands[0] == {"bk": 128, "bm_pad": 16}     # default kept
+    assert all(c["bk"] <= 96 for c in cands[1:])     # pruned to the cache
+    assert all(vmem_bytes("ring_decode", c, **shape) <= 8 << 20
+               for c in cands)
+    fl = candidates("flash_attention", "pallas", sq=512, sk=384, d=64)
+    assert all(384 % c["bk"] == 0 for c in fl[1:])
+    jn = candidates("flash_attention", "jnp", sq=512, sk=384, d=64)
+    assert jn[0] == {"chunk": 1024}   # default baseline (clamped at runtime)
+    assert all(c["chunk"] <= 512 for c in jn[1:])
+    sv = candidates("spec_verify", "pallas", k=5, v=300)
+    assert all(c["bv"] <= 300 for c in sv[1:])
+
+
+# ======================================================= store contract
+def test_store_round_trip(tmp_path):
+    store = TunedConfigStore()
+    key = store.put("ring_decode", "pallas", "float32",
+                    {"bk": 256, "bm_pad": 16},
+                    shape={"w": 8, "g": 4, "d": 64, "s": 2048},
+                    speedup=1.3)
+    assert key == make_key("ring_decode", "pallas", "float32",
+                           w=8, g=4, d=64, s=2048)
+    p = tmp_path / "tuned.json"
+    store.save(str(p))
+    loaded = TunedConfigStore.load(str(p))
+    assert loaded.load_error is None
+    assert loaded.entries() == store.entries()
+    assert loaded.lookup("ring_decode", "pallas", "float32",
+                         w=8, g=4, d=64, s=2048) == {"bk": 256, "bm_pad": 16}
+    assert loaded.lookup("ring_decode", "pallas", "float32",
+                         w=1, g=4, d=64, s=2048) is None
+
+
+def test_store_schema_mismatch_falls_back_clean(tmp_path):
+    p = tmp_path / "stale.json"
+    p.write_text(json.dumps({"schema": SCHEMA_VERSION + 7, "entries": {
+        "x": {"family": "ring_decode", "params": {"bk": 64}}}}))
+    store = TunedConfigStore.load(str(p))
+    assert len(store) == 0 and "schema" in store.load_error
+    # ...and dispatch under that store still resolves the defaults
+    with tuned_store(store):
+        cfg = resolve_config("ring_decode", backend="pallas",
+                             dtype="float32", w=8, g=4, d=64, s=2048)
+    assert cfg == default_config("ring_decode", "pallas")
+
+
+@pytest.mark.parametrize("text", ["not json{", '{"schema": 1}', "[1,2]"])
+def test_store_malformed_artifact(tmp_path, text):
+    p = tmp_path / "bad.json"
+    p.write_text(text)
+    store = TunedConfigStore.load(str(p))
+    assert len(store) == 0 and store.load_error
+
+
+def test_store_missing_file():
+    store = TunedConfigStore.load("/nonexistent/tuned.json")
+    assert len(store) == 0 and store.load_error
+
+
+def test_store_stale_family_evicted():
+    doc = {"schema": SCHEMA_VERSION, "entries": {
+        "old|pallas|float32|s=2048": {"family": "retired_kernel",
+                                      "params": {"bk": 64}},
+        "broken": {"family": "ring_decode", "params": "not-a-dict"},
+        make_key("spec_verify", "pallas", "float32", k=8, v=32768): {
+            "family": "spec_verify", "backend": "pallas",
+            "dtype": "float32", "shape": {"k": 8, "v": 32768},
+            "params": {"bv": 1024}}}}
+    store = TunedConfigStore.from_json(doc)
+    assert len(store) == 1
+    assert store.meta["evicted_on_load"] == 2
+    assert store.lookup("spec_verify", "pallas", "float32",
+                        k=8, v=32768) == {"bv": 1024}
+
+
+def test_store_concurrent_read_safety():
+    """Readers racing a writer across threads never tear or raise; every
+    observed value is a complete params dict."""
+    store = TunedConfigStore()
+    errors = []
+
+    def writer():
+        for i in range(200):
+            store.put("ring_decode", "pallas", "float32",
+                      {"bk": 64 + 16 * (i % 8), "bm_pad": 16},
+                      shape={"w": 8, "g": 4, "d": 64, "s": 2048})
+
+    def reader():
+        try:
+            for _ in range(200):
+                got = store.lookup("ring_decode", "pallas", "float32",
+                                   w=8, g=4, d=64, s=2048)
+                if got is not None:
+                    assert set(got) == {"bk", "bm_pad"}
+                store.entries()
+        except Exception as e:          # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer)] + \
+        [threading.Thread(target=reader) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(store) == 1
+
+
+def test_env_var_activates_store(tmp_path, monkeypatch):
+    store = TunedConfigStore()
+    store.put("ring_decode", "jnp", "float32", {"impl": "oracle"},
+              shape={"w": 8, "g": 4, "d": 64, "s": 2048})
+    p = tmp_path / "env.json"
+    store.save(str(p))
+    monkeypatch.setenv("REPRO_TUNED_CONFIGS", str(p))
+    monkeypatch.setattr(cache_mod, "_active", None)
+    monkeypatch.setattr(cache_mod, "_env_checked", False)
+    try:
+        cfg = resolve_config("ring_decode", backend="jnp", dtype="float32",
+                             w=8, g=4, d=64, s=2048)
+        assert cfg == {"impl": "oracle"}
+    finally:
+        cache_mod.set_active_store(None)
+
+
+# ============================================== resolution & sanitizing
+def test_resolve_defaults_without_store():
+    for family, per_backend in DEFAULTS.items():
+        for backend, want in per_backend.items():
+            got = resolve_config(family, backend=backend, dtype="float32",
+                                 w=8, g=4, d=64, s=2048, page=8,
+                                 sq=512, sk=512, k=8, v=32768)
+            assert got == want, (family, backend)
+
+
+def test_resolve_buckets_cache_length():
+    """A 3000-slot cache hits the entry swept at the 4096 bucket."""
+    store = TunedConfigStore()
+    store.put("ring_decode", "pallas", "float32", {"bk": 256, "bm_pad": 16},
+              shape={"w": 8, "g": 4, "d": 64, "s": 4096})
+    with tuned_store(store):
+        cfg = resolve_config("ring_decode", backend="pallas",
+                             dtype="float32", w=8, g=4, d=64, s=3000)
+    assert cfg["bk"] == 256
+    assert shape_bucket(3000) == 4096 and shape_bucket(4096) == 4096
+    assert shape_bucket(1) == 16
+
+
+def test_resolve_sanitizes_perverse_entries():
+    """Anything read back from an artifact is clamped to runnable values:
+    hand-editing the JSON can change speed, never semantics."""
+    store = TunedConfigStore()
+    store.put("ring_decode", "pallas", "float32",
+              {"bk": -5, "bm_pad": "huge", "impl": "evil", "junk": 1},
+              shape={"w": 8, "g": 4, "d": 64, "s": 2048})
+    with tuned_store(store):
+        cfg = resolve_config("ring_decode", backend="pallas",
+                             dtype="float32", w=8, g=4, d=64, s=2048)
+    assert cfg == {"bk": 128, "bm_pad": 16}       # defaults, junk dropped
+    assert sanitize_config("ring_decode", "pallas", {"bk": 33})["bk"] == 48
+    assert sanitize_config("ring_decode", "jnp",
+                           {"impl": "oracle"}) == {"impl": "oracle"}
+    assert sanitize_config("spec_verify", "pallas", {"bv": 0})["bv"] == 512
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(st.dictionaries(
+        st.sampled_from(["bk", "bm_pad", "bq", "bv", "chunk", "impl", "x"]),
+        st.one_of(st.integers(-4096, 4096), st.text(max_size=4),
+                  st.none(), st.floats(allow_nan=False))))
+    def test_sanitize_total(params):
+        """sanitize_config never raises and always returns a complete
+        config with kernel-legal values, for arbitrary artifact content."""
+        for family in DEFAULTS:
+            for backend in DEFAULTS[family]:
+                out = sanitize_config(family, backend, params)
+                assert set(out) == set(DEFAULTS[family][backend])
+                for key, val in out.items():
+                    if key in ("bk", "bq", "bm_pad"):
+                        assert val > 0 and val % 16 == 0
+                    elif key in ("bv", "chunk"):
+                        assert isinstance(val, int) and val > 0
+                    elif key == "impl":
+                        assert val in ("packed", "oracle")
+
+
+# ==================================================== promotion policy
+def test_sweep_promotes_only_real_wins(monkeypatch):
+    """Deterministic timings via a stubbed interleaved_medians: a clear
+    win promotes and persists; a within-noise win keeps the default and
+    leaves the store untouched."""
+    from repro.kernels.tuning import policy
+
+    cands = [{"bk": 128, "bm_pad": 16}, {"bk": 256, "bm_pad": 16}]
+    make_fn = lambda cfg: (lambda: None)
+
+    monkeypatch.setattr(policy, "interleaved_medians",
+                        lambda fns, *a, rounds: [100.0, 50.0])
+    store = TunedConfigStore()
+    res = policy.sweep("ring_decode", make_fn, backend="pallas",
+                       dtype="float32", shape={"w": 8, "g": 4, "d": 64,
+                                               "s": 2048},
+                       store=store, configs=cands)
+    assert res.promoted and res.winner == cands[1]
+    assert res.speedup == pytest.approx(2.0)
+    assert store.lookup("ring_decode", "pallas", "float32",
+                        w=8, g=4, d=64, s=2048) == cands[1]
+
+    monkeypatch.setattr(policy, "interleaved_medians",
+                        lambda fns, *a, rounds: [100.0, 98.0])
+    store2 = TunedConfigStore()
+    res2 = policy.sweep("ring_decode", make_fn, backend="pallas",
+                        dtype="float32", shape={"w": 8, "g": 4, "d": 64,
+                                                "s": 2048},
+                        store=store2, configs=cands)
+    assert not res2.promoted and res2.winner == cands[0]
+    assert res2.tuned_us == res2.default_us == 100.0
+    assert len(store2) == 0
+
+
+@pytest.mark.perf
+def test_autotune_decode_end_to_end(rng):
+    """Real sweep on a small shape: the store key it writes (if any) is
+    exactly what dispatch looks up, and the dispatcher's output under the
+    tuned store equals the untuned output. Timing-dependent (runs real
+    interleaved medians) — perf-marked, excluded from tier-1."""
+    from repro.kernels.flash_attention.ops import decode_attention
+    from repro.kernels.tuning.policy import autotune_decode
+    b, w, h, kv, d, s = 2, 8, 8, 2, 64, 512
+    pos = jnp.full((b,), s + 3, jnp.int32)
+    q, k, v, slot = _ring_inputs(rng, b, w, h, kv, d, s, pos)
+    store = TunedConfigStore()
+    res = autotune_decode(store, q, k, v, slot, pos, backend="jnp", rounds=4)
+    assert res.shape == {"w": w, "g": h // kv, "d": d, "s": 512}
+    if res.promoted:
+        assert store.lookup("ring_decode", "jnp", "float32",
+                            **res.shape) == res.winner
+    base = decode_attention(q, k, v, slot, pos, force_pallas=False)
+    with tuned_store(store):
+        tuned = decode_attention(q, k, v, slot, pos, force_pallas=False)
+    np.testing.assert_allclose(np.asarray(tuned), np.asarray(base),
+                               rtol=2e-5, atol=2e-5)
+
+
+# =================================================== fallback telemetry
+def _counter_value(snapshot, name, labels):
+    return snapshot.get(name, {}).get("series", {}).get(labels, 0.0)
+
+
+def test_pallas_fallback_is_recorded(rng):
+    """A forced-Pallas prefill whose cache can't tile (Sk % 128 != 0 and
+    no tuned tile fits) must run the jnp path AND count the fallback —
+    the silent-degradation regression this PR fixes."""
+    from repro.kernels.flash_attention.ops import attention
+    from repro.telemetry import default_registry
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (2, 100, 4, 64))
+    k = jax.random.normal(ks[1], (2, 100, 2, 64))
+    v = jax.random.normal(ks[2], (2, 100, 2, 64))
+    name = "dsi_kernel_fallbacks_total"
+    before = _counter_value(default_registry().snapshot(), name,
+                            "reason=sk_unaligned")
+    out = attention(q, k, v, causal=True, force_pallas=True, interpret=True)
+    after = _counter_value(default_registry().snapshot(), name,
+                           "reason=sk_unaligned")
+    assert after == before + 1
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    # per-stream scalar fallback: vector q_offset on an aligned cache
+    q2 = jax.random.normal(ks[0], (2, 128, 4, 64))
+    k2 = jax.random.normal(ks[1], (2, 128, 2, 64))
+    v2 = jax.random.normal(ks[2], (2, 128, 2, 64))
+    before = _counter_value(default_registry().snapshot(), name,
+                            "reason=per_stream_scalars")
+    attention(q2, k2, v2, causal=True, q_offset=jnp.array([0, 4]),
+              force_pallas=True, interpret=True)
+    after = _counter_value(default_registry().snapshot(), name,
+                           "reason=per_stream_scalars")
+    assert after == before + 1
+
+
+def test_tuned_lookups_counted():
+    from repro.telemetry import default_registry
+    store = TunedConfigStore()
+    name = "dsi_tuned_config_lookups_total"
+    before = _counter_value(default_registry().snapshot(), name,
+                            "family=ring_decode,outcome=miss")
+    with tuned_store(store):
+        resolve_config("ring_decode", backend="jnp", dtype="float32",
+                       w=8, g=4, d=64, s=2048)
+    after = _counter_value(default_registry().snapshot(), name,
+                           "family=ring_decode,outcome=miss")
+    assert after == before + 1
+
+
+# ============================================= perverse-config matrix cell
+def _perverse_params():
+    return {"bk": 32, "bm_pad": 32, "bq": 256, "bv": 7, "chunk": 3,
+            "impl": "oracle", "hostile_key": "zzz"}
+
+
+class _PerverseStore(TunedConfigStore):
+    """Hits every lookup with the same hostile params — exercises the
+    sanitize firewall at every dispatch call site at once."""
+
+    def lookup(self, family, backend, dtype, **shape):
+        return _perverse_params()
+
+
+def test_perverse_store_is_lossless(rng):
+    """End-to-end lossless-matrix cell under a deliberately perverse
+    tuned store: DSI and the R=4 SP orchestrator over the paged cache, on
+    both the kernel (interpret) and jnp backends, still emit the non-SI
+    greedy reference token-for-token. Tuned configs change tiling and
+    impl choice — never tokens."""
+    from repro.core.dsi_jax import DSIEngine
+    from repro.core.si_jax import nonsi_generate
+    from repro.kernels.dispatch import pallas_override
+    from repro.models.model import Model
+    from repro.orchestrator import SPOrchestrator
+    cfg_t = tiny("yi-9b")
+    cfg_d = tiny("yi-9b", d_model=128)
+    mt, md = Model(cfg_t), Model(cfg_d)
+    pt = mt.init(jax.random.PRNGKey(0))
+    pd = md.init(jax.random.PRNGKey(1))
+    prompt = jax.random.randint(rng, (2, 9), 0, cfg_t.vocab_size)
+    n_new = 10
+    ps = PagedSpec(page_size=8)
+    ref = np.asarray(nonsi_generate(mt, pt, prompt, n_new))
+    with tuned_store(_PerverseStore()):
+        with pallas_override(force_pallas=True, interpret=True):
+            out_k, _ = DSIEngine(mt, md, lookahead=4, rule="exact",
+                                 paged=ps).generate(pt, pd, prompt, n_new)
+        out_j, _ = SPOrchestrator(mt, md, lookahead=4, sp=4, rule="exact",
+                                  paged=ps).generate(pt, pd, prompt, n_new)
+    assert np.array_equal(np.asarray(out_k), ref)
+    assert np.array_equal(np.asarray(out_j), ref)

@@ -1,0 +1,460 @@
+#!/usr/bin/env python3
+"""Perf regression gate: compare fresh BENCH_*.json runs against the
+checked-in baselines with per-metric relative thresholds and a waiver
+file (stdlib only — runs in the CI `perf-gate` job and locally).
+
+    PYTHONPATH=src python -m benchmarks.run --smoke   # writes BENCH_*.json
+    python tools/check_bench.py                       # gate vs baselines
+    python tools/check_bench.py --update-baselines    # commit a new floor
+    python tools/check_bench.py --self-test           # test the gate itself
+
+Two kinds of checks (docs/observability.md#7-perf-gate):
+
+  * **Invariants** — same-run relations that hold on any host: the tuned
+    decode config is never slower than the hard-coded default at
+    S >= 2048 (the autotuner promotion policy guarantees it), every
+    bench section still reports ``lossless: true``, and continuous
+    admission still beats drain-refill on tokens-per-tick. These are
+    machine-independent and never waived.
+  * **Baseline comparisons** — fresh vs ``benchmarks/baselines/``.
+    Timing metrics (ms / wall_s / tokens_per_s) gate on a generous
+    relative ratio (default 4.0x: CI runners differ from the baseline
+    host; the trajectory matters, not the absolute number). Everything
+    else (step counts, token counts, hit rates, flags) is deterministic
+    and gates near-exactly — an intentional change means re-running
+    ``--update-baselines`` and committing, a regression means fixing.
+
+Gate config lives in ``benchmarks/baselines/gate.json``::
+
+    {"timing_ratio": 4.0, "value_rtol": 1e-6,
+     "thresholds": {"BENCH_kernels.rows[prefill*].ms": 6.0},
+     "waivers": [{"metric": "BENCH_serving.paged.wall_s",
+                  "reason": "tracking issue #12",
+                  "expires": "2026-12-31"}]}
+
+``thresholds`` globs override the timing ratio per metric path;
+``waivers`` suppress specific violations until they expire (an expired
+waiver is reported and ignored). Exit code 0 = gate passed.
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import re
+import shutil
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+BENCH_FILES = ("BENCH_kernels.json", "BENCH_serving.json",
+               "BENCH_orchestrator.json")
+DEFAULT_BASELINE_DIR = os.path.join("benchmarks", "baselines")
+GATE_FILE = "gate.json"
+
+#: machine- or host-dependent subtrees excluded from baseline comparison
+SKIP_PATTERNS = ("*.tuned_configs*", "*.note", "*.backend")
+
+#: leaf names treated as wall-clock (lower is better unless listed below)
+TIMING_LEAVES = ("ms", "wall_s", "us_per_call", "seconds")
+#: timing-derived leaves where higher is better
+RATE_LEAVES = ("tokens_per_s",)
+
+DEFAULT_TIMING_RATIO = 4.0
+DEFAULT_VALUE_RTOL = 1e-6
+#: invariant slack: tuned vs default medians race on the same host in the
+#: same process, so only scheduler jitter separates an equal pair
+TUNED_SLACK = 1.10
+
+
+def _glob_match(name: str, pattern: str) -> bool:
+    """fnmatch-style match where only ``*`` and ``?`` are magic — metric
+    paths contain literal brackets (``rows[op|shape]``), which fnmatch
+    would misread as character classes."""
+    rx = "".join(".*" if c == "*" else "." if c == "?" else re.escape(c)
+                 for c in pattern)
+    return re.fullmatch(rx, name) is not None
+
+
+class Violation:
+    def __init__(self, metric: str, kind: str, detail: str,
+                 waivable: bool = True):
+        self.metric, self.kind, self.detail = metric, kind, detail
+        self.waivable = waivable
+
+    def __repr__(self):
+        return f"[{self.kind}] {self.metric}: {self.detail}"
+
+
+# ---------------------------------------------------------------- flatten
+def _list_key(item: Any, i: int) -> str:
+    if isinstance(item, dict):
+        if "op" in item and "shape" in item:
+            return f"[{item['op']}|{item['shape']}]"
+        if "sp" in item:
+            return f"[sp{item['sp']}]"
+    return f"[{i}]"
+
+
+def flatten(doc: Any, prefix: str = "") -> Dict[str, Any]:
+    """Nested bench JSON -> {dot.path: scalar}. Lists of row dicts are
+    keyed by their identity fields (``rows[op|shape]``, ``[sp4]``) so
+    reordering rows never reads as a regression."""
+    out: Dict[str, Any] = {}
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            out.update(flatten(v, f"{prefix}.{k}" if prefix else str(k)))
+    elif isinstance(doc, list):
+        for i, item in enumerate(doc):
+            out.update(flatten(item, prefix + _list_key(item, i)))
+    elif doc is None:
+        pass
+    else:
+        out[prefix] = doc
+    return out
+
+
+def _skipped(path: str) -> bool:
+    return any(_glob_match(path, p) for p in SKIP_PATTERNS)
+
+
+def classify(path: str) -> str:
+    """'timing' (lower better), 'rate' (higher better) or 'value'."""
+    leaf = path.rsplit(".", 1)[-1]
+    if leaf in TIMING_LEAVES:
+        return "timing"
+    if leaf in RATE_LEAVES:
+        return "rate"
+    return "value"
+
+
+# ---------------------------------------------------------------- compare
+def compare(base: Dict[str, Any], fresh: Dict[str, Any],
+            timing_ratio: float = DEFAULT_TIMING_RATIO,
+            value_rtol: float = DEFAULT_VALUE_RTOL,
+            thresholds: Optional[Dict[str, float]] = None
+            ) -> List[Violation]:
+    """Every baseline metric must exist in the fresh run and stay within
+    its class threshold. New fresh-only metrics are fine (growth)."""
+    out: List[Violation] = []
+    thresholds = thresholds or {}
+
+    def ratio_for(path: str) -> float:
+        for pat, r in thresholds.items():
+            if _glob_match(path, pat):
+                return float(r)
+        return timing_ratio
+
+    for path, b in sorted(base.items()):
+        if _skipped(path):
+            continue
+        if path not in fresh:
+            out.append(Violation(path, "missing",
+                                 "present in baseline, absent in fresh run"))
+            continue
+        f = fresh[path]
+        if isinstance(b, bool) or isinstance(b, str):
+            if f != b:
+                out.append(Violation(path, "changed", f"{b!r} -> {f!r}"))
+            continue
+        if not isinstance(b, (int, float)) or not isinstance(f, (int, float)):
+            continue
+        cls = classify(path)
+        if cls == "timing":
+            lim = b * ratio_for(path)
+            if f > lim:
+                out.append(Violation(
+                    path, "regressed",
+                    f"{f:.4g} > {b:.4g} * {ratio_for(path):g}"))
+        elif cls == "rate":
+            lim = b / ratio_for(path)
+            if f < lim:
+                out.append(Violation(
+                    path, "regressed",
+                    f"{f:.4g} < {b:.4g} / {ratio_for(path):g}"))
+        else:
+            tol = value_rtol * max(abs(b), 1.0)
+            if abs(f - b) > tol:
+                out.append(Violation(path, "changed",
+                                     f"{b!r} -> {f!r} (rtol {value_rtol:g}; "
+                                     "intentional? --update-baselines)"))
+    return out
+
+
+# -------------------------------------------------------------- invariants
+_SHAPE_S = re.compile(r"S(\d+)$")
+
+
+def check_invariants(kernels: Optional[dict] = None,
+                     serving: Optional[dict] = None,
+                     orchestrator: Optional[dict] = None,
+                     tuned_slack: float = TUNED_SLACK) -> List[Violation]:
+    """Same-run, machine-independent gates (never waived)."""
+    out: List[Violation] = []
+    if kernels:
+        rows = {(r["op"], r["shape"]): r for r in kernels.get("rows", [])}
+        tuned_seen = False
+        for (op, shape), r in rows.items():
+            if op != "decode_attn_tuned":
+                continue
+            m = _SHAPE_S.search(shape)
+            if not m or int(m.group(1)) < 2048:
+                continue
+            tuned_seen = True
+            dflt = rows.get(("decode_attn_default", shape))
+            if dflt is None:
+                out.append(Violation(
+                    f"BENCH_kernels.rows[decode_attn_default|{shape}]",
+                    "missing", "tuned row without its default twin",
+                    waivable=False))
+                continue
+            if r["ms"] > dflt["ms"] * tuned_slack:
+                out.append(Violation(
+                    f"BENCH_kernels.rows[decode_attn_tuned|{shape}].ms",
+                    "tuned-slower",
+                    f"tuned {r['ms']}ms > default {dflt['ms']}ms * "
+                    f"{tuned_slack:g} — promotion policy must keep the "
+                    "default unless the winner is faster", waivable=False))
+        if not tuned_seen:
+            out.append(Violation(
+                "BENCH_kernels.rows[decode_attn_tuned|*]", "missing",
+                "no tuned decode rows at S >= 2048", waivable=False))
+    if serving and serving.get("lossless") is not True:
+        out.append(Violation("BENCH_serving.lossless", "lossless",
+                             f"expected true, got "
+                             f"{serving.get('lossless')!r}", waivable=False))
+    if orchestrator:
+        for section in ("perfect", "noisy"):
+            for row in orchestrator.get(section, []):
+                if row.get("lossless") is not True:
+                    out.append(Violation(
+                        f"BENCH_orchestrator.{section}[sp{row.get('sp')}]"
+                        ".lossless", "lossless",
+                        "SP run diverged from the sequential stream",
+                        waivable=False))
+        ss = orchestrator.get("steady_state", {})
+        cont = ss.get("continuous", {}).get("tokens_per_tick")
+        drain = ss.get("drain", {}).get("tokens_per_tick")
+        if cont is not None and drain is not None and cont < drain:
+            out.append(Violation(
+                "BENCH_orchestrator.steady_state.continuous.tokens_per_tick",
+                "regressed", f"continuous {cont} < drain {drain}",
+                waivable=False))
+    return out
+
+
+# ----------------------------------------------------------------- waivers
+def apply_waivers(violations: List[Violation], waivers: List[dict],
+                  today: Optional[datetime.date] = None
+                  ) -> Tuple[List[Violation], List[str]]:
+    """Drop waivable violations matched by an unexpired waiver; returns
+    (remaining, notes). Expired waivers are reported, not honoured."""
+    today = today or datetime.date.today()
+    notes: List[str] = []
+    remaining: List[Violation] = []
+    for v in violations:
+        waived = False
+        for w in waivers:
+            if not v.waivable or not _glob_match(v.metric,
+                                                     w.get("metric", "")):
+                continue
+            try:
+                expires = datetime.date.fromisoformat(w.get("expires", ""))
+            except ValueError:
+                notes.append(f"waiver {w.get('metric')!r}: bad expires "
+                             f"{w.get('expires')!r} (ignored)")
+                continue
+            if expires < today:
+                notes.append(f"waiver {w.get('metric')!r} expired "
+                             f"{expires.isoformat()} (ignored)")
+                continue
+            notes.append(f"waived {v.metric} "
+                         f"({w.get('reason', 'no reason')}, "
+                         f"until {expires.isoformat()})")
+            waived = True
+            break
+        if not waived:
+            remaining.append(v)
+    return remaining, notes
+
+
+# --------------------------------------------------------------- plumbing
+def _load(path: str) -> Optional[dict]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def load_gate_config(baseline_dir: str) -> dict:
+    return _load(os.path.join(baseline_dir, GATE_FILE)) or {}
+
+
+def run_gate(fresh_dir: str = ".",
+             baseline_dir: str = DEFAULT_BASELINE_DIR,
+             today: Optional[datetime.date] = None
+             ) -> Tuple[List[Violation], List[str]]:
+    gate = load_gate_config(baseline_dir)
+    fresh_docs = {n: _load(os.path.join(fresh_dir, n)) for n in BENCH_FILES}
+    violations = check_invariants(
+        kernels=fresh_docs["BENCH_kernels.json"],
+        serving=fresh_docs["BENCH_serving.json"],
+        orchestrator=fresh_docs["BENCH_orchestrator.json"],
+        tuned_slack=float(gate.get("tuned_slack", TUNED_SLACK)))
+    for name in BENCH_FILES:
+        stem = name.rsplit(".", 1)[0]
+        base = _load(os.path.join(baseline_dir, name))
+        fresh = fresh_docs[name]
+        if base is None:
+            continue        # no baseline committed yet for this file
+        if fresh is None:
+            violations.append(Violation(stem, "missing",
+                                        f"{name} not produced by this run "
+                                        "(benchmarks/run.py --smoke)"))
+            continue
+        violations.extend(compare(
+            flatten(base, stem), flatten(fresh, stem),
+            timing_ratio=float(gate.get("timing_ratio",
+                                        DEFAULT_TIMING_RATIO)),
+            value_rtol=float(gate.get("value_rtol", DEFAULT_VALUE_RTOL)),
+            thresholds=gate.get("thresholds") or {}))
+    return apply_waivers(violations, gate.get("waivers") or [], today=today)
+
+
+def update_baselines(fresh_dir: str = ".",
+                     baseline_dir: str = DEFAULT_BASELINE_DIR) -> List[str]:
+    os.makedirs(baseline_dir, exist_ok=True)
+    copied = []
+    for name in BENCH_FILES:
+        src = os.path.join(fresh_dir, name)
+        if os.path.exists(src):
+            shutil.copyfile(src, os.path.join(baseline_dir, name))
+            copied.append(name)
+    return copied
+
+
+# -------------------------------------------------------------- self-test
+def self_test() -> List[str]:
+    """Synthetic fixtures proving the gate catches what it must: a
+    regressed timing metric, a changed counter, a missing metric, a
+    tuned-slower invariant break, waiver matching and expiry — and lets
+    an improvement and a new metric pass."""
+    fails: List[str] = []
+
+    def expect(cond: bool, what: str) -> None:
+        if not cond:
+            fails.append(what)
+
+    base = {"rows": [{"op": "a", "shape": "S2048", "ms": 10.0,
+                      "tokens_per_s": 100.0}],
+            "steps": 7, "lossless": True}
+    flat_b = flatten(base, "B")
+
+    fresh_ok = {"rows": [{"op": "a", "shape": "S2048", "ms": 4.0,
+                          "tokens_per_s": 300.0}],
+                "steps": 7, "lossless": True, "new_metric": 1}
+    expect(compare(flat_b, flatten(fresh_ok, "B")) == [],
+           "improvement + new metric must pass")
+
+    regressed = {"rows": [{"op": "a", "shape": "S2048", "ms": 99.0,
+                           "tokens_per_s": 100.0}],
+                 "steps": 7, "lossless": True}
+    vs = compare(flat_b, flatten(regressed, "B"))
+    expect(any(v.kind == "regressed" and v.metric.endswith(".ms")
+               for v in vs), "4x timing regression must be caught")
+
+    slow_rate = {"rows": [{"op": "a", "shape": "S2048", "ms": 10.0,
+                           "tokens_per_s": 10.0}],
+                 "steps": 7, "lossless": True}
+    expect(any(v.kind == "regressed" for v in
+               compare(flat_b, flatten(slow_rate, "B"))),
+           "tokens_per_s collapse must be caught")
+
+    drifted = {"rows": [{"op": "a", "shape": "S2048", "ms": 10.0,
+                         "tokens_per_s": 100.0}],
+               "steps": 9, "lossless": True}
+    expect(any(v.kind == "changed" and v.metric.endswith("steps")
+               for v in compare(flat_b, flatten(drifted, "B"))),
+           "deterministic counter drift must be caught")
+
+    missing = {"rows": [], "lossless": True}
+    expect(any(v.kind == "missing" for v in
+               compare(flat_b, flatten(missing, "B"))),
+           "missing metric must be caught")
+
+    # invariants: tuned slower than default; lossless flag
+    bad_kernels = {"rows": [
+        {"op": "decode_attn_default", "shape": "B4W8H8KV2D64S2048",
+         "ms": 10.0},
+        {"op": "decode_attn_tuned", "shape": "B4W8H8KV2D64S2048",
+         "ms": 20.0}]}
+    vs = check_invariants(kernels=bad_kernels)
+    expect(any(v.kind == "tuned-slower" for v in vs),
+           "tuned-slower-than-default must be caught")
+    good_kernels = {"rows": [
+        {"op": "decode_attn_default", "shape": "B4W8H8KV2D64S2048",
+         "ms": 10.0},
+        {"op": "decode_attn_tuned", "shape": "B4W8H8KV2D64S2048",
+         "ms": 9.0}]}
+    expect(check_invariants(kernels=good_kernels) == [],
+           "tuned faster than default must pass")
+    expect(any(v.kind == "lossless" for v in
+               check_invariants(serving={"lossless": False})),
+           "lossless=false must be caught")
+
+    # waivers: active suppresses, expired does not, invariants never waive
+    v = [Violation("B.rows[a|S2048].ms", "regressed", "x"),
+         Violation("B.lossless", "lossless", "x", waivable=False)]
+    active = [{"metric": "B.rows[*].ms", "reason": "r",
+               "expires": "2999-01-01"}]
+    rem, notes = apply_waivers(list(v), active,
+                               today=datetime.date(2026, 1, 1))
+    expect(len(rem) == 1 and rem[0].kind == "lossless",
+           "active waiver must suppress only waivable violations")
+    expired = [{"metric": "B.rows[*].ms", "reason": "r",
+                "expires": "2020-01-01"}]
+    rem, notes = apply_waivers(list(v), expired,
+                               today=datetime.date(2026, 1, 1))
+    expect(len(rem) == 2 and any("expired" in n for n in notes),
+           "expired waiver must be ignored and reported")
+    return fails
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="check_bench", description=__doc__)
+    ap.add_argument("--fresh-dir", default=".")
+    ap.add_argument("--baseline-dir", default=DEFAULT_BASELINE_DIR)
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="copy fresh BENCH_*.json over the baselines")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the synthetic gate fixtures and exit")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        fails = self_test()
+        for f in fails:
+            print(f"SELF-TEST FAIL: {f}")
+        print(f"check_bench self-test: "
+              f"{'FAILED' if fails else 'ok'}")
+        return 1 if fails else 0
+
+    if args.update_baselines:
+        copied = update_baselines(args.fresh_dir, args.baseline_dir)
+        print(f"updated baselines: {', '.join(copied) or 'nothing to copy'}")
+        return 0
+
+    violations, notes = run_gate(args.fresh_dir, args.baseline_dir)
+    for n in notes:
+        print(f"note: {n}")
+    for v in violations:
+        print(f"FAIL {v!r}")
+    if violations:
+        print(f"perf gate: {len(violations)} violation(s)")
+        return 1
+    print("perf gate: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
