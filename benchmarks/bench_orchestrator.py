@@ -35,8 +35,17 @@ Asserted lossless (identical tokens) with a nonzero degradation count;
 ``tokens_per_tick`` under the crash quantifies the cost of losing a
 replica mid-run.
 
+A fourth, ``tree`` section sweeps token-tree speculation width
+(core/tree.py) at fixed R: every tick is exactly one target chunk
+forward, so ``tokens_per_target_forward`` (emitted tokens / ticks,
+overshoot included) is accepted tokens per target forward. Tree widths
+must emit the greedy reference stream (the *tree-lossless* invariant —
+check_bench.py enforces it unconditionally, never waivable) and must
+never fall below flat at equal R — a sibling accept can only add tokens
+to a tick.
+
 Writes ``BENCH_orchestrator.json`` (sweep + ``steady_state`` +
-``faults`` sections) for the CI trajectory artifact.
+``faults`` + ``tree`` sections) for the CI trajectory artifact.
 
     PYTHONPATH=src python -m benchmarks.bench_orchestrator
     PYTHONPATH=src python -m benchmarks.run --smoke            # CI canary
@@ -188,6 +197,55 @@ def _faults(model, params, pd, la: int, smoke: bool) -> dict:
     return rows
 
 
+TREE_WIDTHS = (1, 2, 4)
+
+
+def _tree(model, params, pd, prompt, n_new, la, ref) -> list:
+    """Token-tree speculation width sweep at fixed R (core/tree.py).
+
+    Every orchestrator tick is exactly one target chunk forward, so
+    ``tokens_per_target_forward`` = emitted tokens / ticks. Emitted
+    counts the realized stream including the final tick's overshoot —
+    a sibling accept turns a rejection bubble into two emitted tokens
+    (correction + bonus) from the same verify forward, so widths > 1
+    must never fall below the width-1 (flat) row. Width 1 routes
+    through the flat engine path and is the exact baseline."""
+    rows = []
+    for tw in TREE_WIDTHS:
+        orch = SPOrchestrator(model, model, lookahead=la, sp=2,
+                              rule="exact", tree_width=tw)
+        out, stats = orch.generate(params, pd, prompt, n_new)
+        lossless = bool(np.array_equal(np.asarray(out), np.asarray(ref)))
+        rows.append({
+            "tree_width": tw,
+            "tree_depth": la,
+            "sp": 2,
+            "steps": stats.macro_steps,
+            "tokens": stats.emitted,
+            "tokens_per_target_forward": round(
+                stats.emitted / stats.macro_steps, 3),
+            "rejections": stats.rejections,
+            "sibling_accepts": stats.sibling_accepts,
+            "lossless": lossless,
+        })
+    assert all(row["lossless"] for row in rows), \
+        "every tree width must emit the greedy reference stream"
+    flat = rows[0]["tokens_per_target_forward"]
+    assert all(row["tokens_per_target_forward"] >= flat
+               for row in rows[1:]), \
+        f"tree widths must never fall below flat throughput: {rows}"
+    assert any(row["sibling_accepts"] > 0 for row in rows[1:]), \
+        "the noisy drafter must trigger at least one sibling accept"
+    print("name,tree_width,sp,steps,tokens,tokens_per_target_forward,"
+          "rejections,sibling_accepts,lossless")
+    for row in rows:
+        print(f"tree,{row['tree_width']},{row['sp']},{row['steps']},"
+              f"{row['tokens']},{row['tokens_per_target_forward']},"
+              f"{row['rejections']},{row['sibling_accepts']},"
+              f"{row['lossless']}")
+    return rows
+
+
 def main(smoke: bool = False, json_path: Optional[str] = None) -> None:
     from benchmarks.engine_stats import noisy_params
     layers, d_model = (2, 192) if smoke else (4, 256)
@@ -227,6 +285,9 @@ def main(smoke: bool = False, json_path: Optional[str] = None) -> None:
     chaos = _faults(model, params,
                     noisy_params(params, 0.05, jax.random.PRNGKey(9)),
                     la, smoke)
+    tree = _tree(model, params,
+                 noisy_params(params, 0.05, jax.random.PRNGKey(7)),
+                 prompt, n_new, la, ref)
 
     if json_path:
         out = {
@@ -235,6 +296,7 @@ def main(smoke: bool = False, json_path: Optional[str] = None) -> None:
             **regimes,
             "steady_state": steady,
             "faults": chaos,
+            "tree": tree,
         }
         with open(json_path, "w") as f:
             json.dump(out, f, indent=2)

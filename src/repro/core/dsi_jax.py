@@ -109,7 +109,8 @@ def _where_b(mask: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(m, a, b)
 
 
-def draft_scan(model: Model, params, cache, t_in, n: int, key, greedy: bool):
+def draft_scan(model: Model, params, cache, t_in, n: int, key, greedy: bool,
+               boot_tok=None, boot_on=None):
     """n drafter decode steps feeding their own outputs.
 
     Returns (tokens (B,n), probs (B,n,V), cache', state_hist) where
@@ -118,6 +119,12 @@ def draft_scan(model: Model, params, cache, t_in, n: int, key, greedy: bool):
     i>=1, entry 0 = state before the scan — enabling exact rollback to any
     offset inside the drafted range.
 
+    ``boot_tok``/``boot_on`` ((B,) each) override the FIRST sampled token
+    per stream where ``boot_on`` — the token-tree sibling-accept path,
+    where the already-emitted bonus token must re-enter the drafter's
+    stream as its next input (the draw still happens and is discarded, so
+    key consumption is position-identical to the unbooted scan).
+
     Each scanned ``decode_step`` (and the target's ``verify_chunk`` it
     overlaps with) runs its cache attention through the ring-decode kernel
     dispatch (kernels/flash_attention/ops.py) — Pallas on TPU, packed-GEMM
@@ -125,8 +132,9 @@ def draft_scan(model: Model, params, cache, t_in, n: int, key, greedy: bool):
     """
     init_states = _extract_states(cache)
 
-    def body(carry, k):
+    def body(carry, xs):
         c, tok = carry
+        k, step = xs
         logits, c = model.decode_step(params, c, tok[:, None])
         probs = _softmax(logits)
         if greedy:
@@ -134,28 +142,34 @@ def draft_scan(model: Model, params, cache, t_in, n: int, key, greedy: bool):
         else:
             nxt = jax.random.categorical(k, jnp.log(probs + 1e-30), axis=-1
                                          ).astype(jnp.int32)
+        if boot_on is not None:
+            nxt = jnp.where((step == 0) & boot_on, boot_tok, nxt)
         return (c, nxt), (nxt, probs, _extract_states(c))
 
     keys = jax.random.split(key, n)
-    (cache, _), (toks, probs, hist) = jax.lax.scan(body, (cache, t_in), keys)
+    (cache, _), (toks, probs, hist) = jax.lax.scan(
+        body, (cache, t_in), (keys, jnp.arange(n)))
     state_hist = jax.tree.map(
         lambda a, b: jnp.concatenate([a[None], b], axis=0), init_states, hist)
     return jnp.moveaxis(toks, 0, 1), jnp.moveaxis(probs, 0, 1), cache, state_hist
 
 
 def draft_scan_keys(model: Model, params, cache, t_in, keys: jnp.ndarray,
-                    greedy: bool):
+                    greedy: bool, boot_tok=None, boot_on=None):
     """Like :func:`draft_scan` but with fully-resolved *per-stream* step
     keys (B, n, 2) instead of one key split n ways — the speculation-
     parallel orchestrator's drafting path, where streams sit at different
     virtual-step counters and therefore sample from different points of
     the shared key chain (orchestrator/engine.py). For B == 1 with
     ``keys[0, j] == split(kd, n)[j]`` the sampled bits equal
-    ``draft_scan``'s exactly (same key, same flat draw shape)."""
+    ``draft_scan``'s exactly (same key, same flat draw shape).
+    ``boot_tok``/``boot_on`` as in :func:`draft_scan`."""
     init_states = _extract_states(cache)
+    n = keys.shape[1]
 
-    def body(carry, k_b):
+    def body(carry, xs):
         c, tok = carry
+        k_b, step = xs
         logits, c = model.decode_step(params, c, tok[:, None])
         probs = _softmax(logits)
         if greedy:
@@ -163,10 +177,12 @@ def draft_scan_keys(model: Model, params, cache, t_in, keys: jnp.ndarray,
         else:
             nxt = jax.vmap(lambda kk, p: jax.random.categorical(
                 kk, jnp.log(p + 1e-30)))(k_b, probs).astype(jnp.int32)
+        if boot_on is not None:
+            nxt = jnp.where((step == 0) & boot_on, boot_tok, nxt)
         return (c, nxt), (nxt, probs, _extract_states(c))
 
     (cache, _), (toks, probs, hist) = jax.lax.scan(
-        body, (cache, t_in), jnp.moveaxis(keys, 0, 1))
+        body, (cache, t_in), (jnp.moveaxis(keys, 0, 1), jnp.arange(n)))
     state_hist = jax.tree.map(
         lambda a, b: jnp.concatenate([a[None], b], axis=0), init_states, hist)
     return jnp.moveaxis(toks, 0, 1), jnp.moveaxis(probs, 0, 1), cache, state_hist
@@ -180,17 +196,25 @@ def draft_scan_keys(model: Model, params, cache, t_in, keys: jnp.ndarray,
 # carry over verbatim.
 # --------------------------------------------------------------------------
 
-def verify_stage(target: Model, params_t, t_cache, window: jnp.ndarray):
+def verify_stage(target: Model, params_t, t_cache, window: jnp.ndarray,
+                 tree=None):
     """Target forward over a (B, Wn) token window against the cache.
-    Returns (rows (B, Wn, V) softmaxed, post-verify cache for commit)."""
-    logits, t_post = target.verify_chunk(params_t, t_cache, window)
+    Returns (rows (B, Wn, V) softmaxed, post-verify cache for commit).
+    ``tree`` = (n_spine, depth, width) marks a token-tree chunk
+    (core/tree.py; Wn == n_spine·width)."""
+    logits, t_post = target.verify_chunk(params_t, t_cache, window, tree=tree)
     return _softmax(logits), t_post
 
 
-def emit_block(buf, n_out, window, forced, n_acc, have, rejected, nxt):
+def emit_block(buf, n_out, window, forced, n_acc, have, rejected, nxt,
+               extra2=None, tok2=None):
     """Scatter accepted non-forced window tokens (+ correction where
     rejected) into the output ring — one batched scatter; invalid lanes
-    point one past the buffer edge and are dropped. Returns (buf, n_out)."""
+    point one past the buffer edge and are dropped. Returns (buf, n_out).
+
+    ``extra2``/``tok2`` ((B,) bool / int32): token-tree sibling accepts
+    emit a second token after the correction slot — the bonus sampled
+    from the accepted sibling's own verified row (core/tree.py)."""
     bsz, cap = buf.shape
     wn = window.shape[1]
     offs = jnp.arange(wn, dtype=jnp.int32)[None]                 # (1,Wn)
@@ -204,6 +228,10 @@ def emit_block(buf, n_out, window, forced, n_acc, have, rejected, nxt):
     corr_idx = jnp.where(rejected, n_out, cap)
     buf = buf.at[jnp.arange(bsz), corr_idx].set(nxt, mode="drop")
     n_out = n_out + rejected.astype(jnp.int32)
+    if extra2 is not None:
+        idx2 = jnp.where(extra2, n_out, cap)
+        buf = buf.at[jnp.arange(bsz), idx2].set(tok2, mode="drop")
+        n_out = n_out + extra2.astype(jnp.int32)
     return buf, n_out
 
 
@@ -238,6 +266,9 @@ class EngineStats:
     bubbles: int = 0
     accepted_drafts: int = 0
     rejections: int = 0
+    #: rejections rescued by a token-tree sibling (core/tree.py) — each
+    #: such step still bubbles but emits the sibling + its bonus token
+    sibling_accepts: int = 0
     emitted: int = 0
     max_history: Optional[int] = DEFAULT_HISTORY_CAP
     history: list = field(default_factory=list)
@@ -259,7 +290,8 @@ class EngineStats:
     deferrals: int = 0           # admissions deferred (CacheOOM pressure)
 
     def record(self, n_acc: int, rejected: bool, n_out: int,
-               bubble: Optional[bool] = None) -> None:
+               bubble: Optional[bool] = None,
+               sib_acc: bool = False) -> None:
         """``bubble`` defaults to ``rejected`` (DSI: a rejection forces a
         draft-only restart step); blocking SI passes ``bubble=False`` —
         its rejections cost nothing beyond the iteration itself."""
@@ -267,6 +299,8 @@ class EngineStats:
         self.accepted_drafts += int(n_acc)
         if rejected:
             self.rejections += 1
+        if sib_acc:
+            self.sibling_accepts += 1
         if rejected if bubble is None else bubble:
             self.bubbles += 1  # the following step is draft-only
         self.emitted = int(n_out)
@@ -297,47 +331,96 @@ class DSIEngine:
     """
 
     def __init__(self, target: Model, drafter: Model, *, lookahead: int = 8,
-                 rule: str = "exact", paged: Optional[PagedSpec] = None):
+                 rule: str = "exact", paged: Optional[PagedSpec] = None,
+                 tree_width: int = 1):
         assert rule in ("exact", "leviathan")
         self.target, self.drafter = target, drafter
         self.w = lookahead
         self.rule = rule
         self.paged = paged   # block-table KV caches instead of dense rings
+        # token-tree speculation (core/tree.py): verify the drafter's
+        # top-``tree_width`` candidates per depth in one target forward
+        # and commit the longest accepted root-path. width 1 IS flat DSI
+        # (the tree branches below are compiled out entirely).
+        assert tree_width >= 1
+        self.tree_width = tree_width
+        if tree_width > 1:
+            assert lookahead >= 2, \
+                "tree mode needs lookahead >= 2 (the sibling-accept " \
+                "bonus re-enters as the window's second forced token)"
+            assert target.cfg.ssm is None, \
+                "token-tree verify requires an attention-only target"
         self._jit_step = jax.jit(self._macro_step)
         self._jit_admit = jax.jit(self._admit_row)
         self.table_max_len: Optional[int] = None
         self._admissions = 0  # decorrelates sampled bootstraps across admits
 
+    @property
+    def _chunk(self) -> int:
+        """Verify-chunk length: W spine tokens × tree width."""
+        return self.w * self.tree_width
+
     # ---------------------------------------------------------- macro-step
     def _macro_step(self, params_t, params_d, state: State) -> State:
-        w = self.w
+        w, tw = self.w, self.tree_width
         greedy = self.rule == "exact"
         key, k_draft, k_verify = jax.random.split(state["key"], 3)
         active = state["active"]
 
-        # (a) drafter: W speculative continuation steps (all streams)
+        # (a) drafter: W speculative continuation steps (all streams).
+        # After a tree sibling-accept, the bonus token (already emitted)
+        # overrides the first sampled draft so the drafter's stream stays
+        # on the committed path.
         d_toks, d_probs, d_cache, d_hist = draft_scan(
             self.drafter, params_d, state["d_cache"], state["prefetch"], w,
-            k_draft, greedy)
+            k_draft, greedy,
+            boot_tok=state["boot_tok"] if tw > 1 else None,
+            boot_on=state["boot_on"] if tw > 1 else None)
 
         # (b) target: verify the current window (discarded where bubble)
-        rows, t_post = verify_stage(self.target, params_t, state["t_cache"],
-                                    state["window"])              # (B,W,V)
-        target_probs = jnp.concatenate([state["carry"][:, None], rows], 1)
-        n_acc, nxt = batched_verify(k_verify, state["window"],
-                                    state["window_probs"], target_probs,
-                                    n_forced=state["forced"], rule=self.rule)
+        if tw > 1:
+            from repro.core.tree import assemble_chunk, sibling_candidates
+            from repro.kernels.spec_verify.ops import \
+                batched_tree_verify_and_sample
+            sib = sibling_candidates(state["window"], state["window_probs"],
+                                     tw)                       # (B,W,tw-1)
+            chunk = assemble_chunk(state["window"], sib)       # (B,W·tw)
+            rows_full, t_post = verify_stage(self.target, params_t,
+                                             state["t_cache"], chunk,
+                                             tree=(w, w, tw))
+            rows = rows_full[:, :w]                            # spine rows
+            b, v = rows.shape[0], rows.shape[-1]
+            sib_rows = rows_full[:, w:].reshape(b, w, tw - 1, v)
+            target_probs = jnp.concatenate([state["carry"][:, None], rows], 1)
+            n_acc, sib_acc, nxt, tok_b = batched_tree_verify_and_sample(
+                k_verify, state["window"], state["window_probs"],
+                target_probs, sib, sib_rows, n_forced=state["forced"],
+                rule=self.rule)
+        else:
+            rows, t_post = verify_stage(self.target, params_t,
+                                        state["t_cache"],
+                                        state["window"])          # (B,W,V)
+            target_probs = jnp.concatenate([state["carry"][:, None], rows], 1)
+            n_acc, nxt = batched_verify(k_verify, state["window"],
+                                        state["window_probs"], target_probs,
+                                        n_forced=state["forced"],
+                                        rule=self.rule)
+            sib_acc = jnp.zeros_like(state["boot_on"])
+            tok_b = jnp.zeros_like(nxt)
         have = state["have_window"] & active
         n_acc = jnp.where(have, n_acc, 0)
+        sib_acc = sib_acc & have
         full = have & (n_acc == w)
         rejected = have & (n_acc < w)
 
         t_cache = self.target.commit(state["t_cache"], t_post, n_acc)
 
         # (c) emit accepted non-forced window tokens (+ correction if
-        # rejected) as one batched scatter
+        # rejected, + the sibling-accept bonus) as batched scatters
         buf, n_out = emit_block(state["out"], state["n_out"], state["window"],
-                                state["forced"], n_acc, have, rejected, nxt)
+                                state["forced"], n_acc, have, rejected, nxt,
+                                extra2=sib_acc if tw > 1 else None,
+                                tok2=tok_b if tw > 1 else None)
 
         # (d) drafter bookkeeping, per stream
         # on rejection: roll recurrent state to offset n_acc of the *window*
@@ -358,9 +441,16 @@ class DSIEngine:
         # bubble after a rejection; otherwise the assembled window is live
         # (inactive slots stay bubbled forever)
         have_next = active & ~rejected
-        forced_next = jnp.where(rejected, 1, jnp.zeros_like(state["forced"]))
+        # a sibling accept re-enters TWO confirmed tokens (sibling + bonus)
+        forced_next = jnp.where(rejected, 1 + sib_acc.astype(jnp.int32),
+                                jnp.zeros_like(state["forced"]))
         forced_next = jnp.where(have, forced_next, state["forced"])
         carry_next = jnp.where(full[:, None], rows[:, w - 1], state["carry"])
+        # every tick's draft scan consumes the boot override, so it is
+        # reassigned unconditionally: armed only by this tick's sibling
+        # accept, cleared otherwise
+        boot_on_next = sib_acc
+        boot_tok_next = tok_b
 
         return {
             "key": key, "active": active,
@@ -371,6 +461,8 @@ class DSIEngine:
             "d_cache": d_cache, "d_cache_pos0": d_cache["pos"],
             "d_hist_prev": d_hist, "out": buf, "n_out": n_out,
             "n_acc": n_acc, "rejected": rejected,
+            "sib_acc": sib_acc,
+            "boot_tok": boot_tok_next, "boot_on": boot_on_next,
         }
 
     # ------------------------------------------------- stream bootstrapping
@@ -402,27 +494,28 @@ class DSIEngine:
         per-stream (B,) sequence. Returns (tokens (B, max(n_new)), stats)
         with ``stats.per_stream[b]`` holding stream b's accounting."""
         b, s = prompt.shape
-        w = self.w
+        w, cn = self.w, self._chunk
         n_arr = np.broadcast_to(np.asarray(n_new, np.int32), (b,))
         n_max = int(n_arr.max())
         key = key if key is not None else jax.random.PRNGKey(0)
-        _check_capacity(self.target, s, n_max, 2 * w + 2, max_len)
-        _check_capacity(self.drafter, s, n_max, 2 * w + 2, max_len)
-        max_len = max_len or (s + n_max + 2 * w + 2)
-        cap = n_max + w + 1
+        _check_capacity(self.target, s, n_max, 2 * cn + 2, max_len)
+        _check_capacity(self.drafter, s, n_max, 2 * cn + 2, max_len)
+        max_len = max_len or (s + n_max + 2 * cn + 2)
+        # a tree rejection can overshoot one further (sibling + bonus)
+        cap = n_max + w + 1 + (1 if self.tree_width > 1 else 0)
 
         batch = {"tokens": prompt, **(extra_inputs or {})}
         t_logits, t_cache = self.target.prefill(params_t, batch,
                                                 max_len=max_len,
-                                                window_headroom=w)
+                                                window_headroom=cn)
         d_logits, d_cache = self.drafter.prefill(params_d, batch,
                                                  max_len=max_len,
-                                                 window_headroom=w)
+                                                 window_headroom=cn)
         if self.paged is not None:
             t_cache = paged_from_dense(self.target, t_cache, self.paged,
-                                       max_len, window_headroom=w)
+                                       max_len, window_headroom=cn)
             d_cache = paged_from_dense(self.drafter, d_cache, self.paged,
-                                       max_len, window_headroom=w)
+                                       max_len, window_headroom=cn)
         prefetch, d_prob0, key = self._bootstrap(d_logits, key)
 
         state: State = {
@@ -442,6 +535,9 @@ class DSIEngine:
             "n_out": jnp.zeros((b,), jnp.int32),
             "n_acc": jnp.zeros((b,), jnp.int32),
             "rejected": jnp.zeros((b,), bool),
+            "sib_acc": jnp.zeros((b,), bool),
+            "boot_tok": jnp.zeros((b,), jnp.int32),
+            "boot_on": jnp.zeros((b,), bool),
         }
 
         per = [EngineStats() for _ in range(b)]
@@ -453,10 +549,12 @@ class DSIEngine:
             steps += 1
             n_acc = np.asarray(state["n_acc"])
             rej = np.asarray(state["rejected"])
+            sib = np.asarray(state["sib_acc"])
             n_out = np.asarray(state["n_out"])
             for i in range(b):
                 if unfinished[i]:
-                    per[i].record(int(n_acc[i]), bool(rej[i]), int(n_out[i]))
+                    per[i].record(int(n_acc[i]), bool(rej[i]), int(n_out[i]),
+                                  sib_acc=bool(sib[i]))
         stats = _aggregate(per, steps)
         return state["out"][:, :n_max], stats
 
@@ -470,9 +568,11 @@ class DSIEngine:
         b, w = n_slots, self.w
         v = self.target.cfg.padded_vocab
         self.table_max_len = max_len
-        t_cache = self.target.init_cache(b, max_len, window_headroom=w,
+        t_cache = self.target.init_cache(b, max_len,
+                                         window_headroom=self._chunk,
                                          paged=self.paged)
-        d_cache = self.drafter.init_cache(b, max_len, window_headroom=w,
+        d_cache = self.drafter.init_cache(b, max_len,
+                                          window_headroom=self._chunk,
                                           paged=self.paged)
         return {
             "key": key if key is not None else jax.random.PRNGKey(0),
@@ -491,6 +591,9 @@ class DSIEngine:
             "n_out": jnp.zeros((b,), jnp.int32),
             "n_acc": jnp.zeros((b,), jnp.int32),
             "rejected": jnp.zeros((b,), bool),
+            "sib_acc": jnp.zeros((b,), bool),
+            "boot_tok": jnp.zeros((b,), jnp.int32),
+            "boot_on": jnp.zeros((b,), bool),
         }
 
     def _admit_row(self, state: State, slot, t_row, d_row, carry, prefetch,
@@ -527,6 +630,9 @@ class DSIEngine:
         s["n_out"] = set0(state["n_out"], jnp.zeros((1,), jnp.int32))
         s["n_acc"] = set0(state["n_acc"], jnp.zeros((1,), jnp.int32))
         s["rejected"] = set0(state["rejected"], jnp.zeros((1,), bool))
+        s["sib_acc"] = set0(state["sib_acc"], jnp.zeros((1,), bool))
+        s["boot_tok"] = set0(state["boot_tok"], jnp.zeros((1,), jnp.int32))
+        s["boot_on"] = set0(state["boot_on"], jnp.zeros((1,), bool))
         s["active"] = set0(state["active"], jnp.ones((1,), bool))
         return s
 
@@ -560,10 +666,10 @@ class DSIEngine:
         else:
             t_logits, t_row = self.target.prefill(params_t, batch,
                                                   max_len=self.table_max_len,
-                                                  window_headroom=w)
+                                                  window_headroom=self._chunk)
             d_logits, d_row = self.drafter.prefill(params_d, batch,
                                                    max_len=self.table_max_len,
-                                                   window_headroom=w)
+                                                   window_headroom=self._chunk)
         self._admissions += 1
         k_boot = jax.random.fold_in(state["key"], self._admissions)
         prefetch, d_prob0, _ = self._bootstrap(d_logits, k_boot)
@@ -622,6 +728,7 @@ def _aggregate(per: List[EngineStats], steps: int) -> EngineStats:
         bubbles=sum(p.bubbles for p in per),
         accepted_drafts=sum(p.accepted_drafts for p in per),
         rejections=sum(p.rejections for p in per),
+        sibling_accepts=sum(p.sibling_accepts for p in per),
         emitted=sum(p.emitted for p in per),
         history=list(per[0].history) if len(per) == 1 else [],
         per_stream=per,

@@ -62,7 +62,10 @@ def simulate_dsi_pool(target_latency: float, drafter_latency: float,
                       n_tokens: int, *, seed: int = 0,
                       ttft_target: Optional[float] = None,
                       ttft_drafter: Optional[float] = None,
-                      accept: Optional[Sequence[bool]] = None) -> SimResult:
+                      accept: Optional[Sequence[bool]] = None,
+                      tree_width: int = 1,
+                      sib_accept: Optional[Sequence[bool]] = None
+                      ) -> SimResult:
     """Returns end-to-end latency for N tokens under speculation parallelism.
 
     Task structure (Algorithm 1 + App. D, m = 2): within a run starting at
@@ -91,14 +94,25 @@ def simulate_dsi_pool(target_latency: float, drafter_latency: float,
     reject) — the hook the speculation-parallel orchestrator's property
     suite uses to pin its event scheduler to this model on identical
     randomness (tests/test_orchestrator_props.py).
+
+    ``tree_width > 1`` models token-tree speculation (core/tree.py): each
+    rejection consumes one ``sib_accept`` draw (in rejection order;
+    exhaustion/None => no sibling). A sibling accept advances the
+    confirmed frontier one token further — the bonus confirms at the
+    same time as the correction, from the same verify forwards, so the
+    run's timing and forward counts are unchanged.
     """
     assert sp >= 1 and lookahead >= 1
+    assert tree_width >= 1
     rng = np.random.default_rng(seed)
     if accept is not None:
         it = iter([bool(a) for a in accept])
         draw = lambda: next(it, False)          # noqa: E731
     else:
         draw = lambda: rng.random() < acceptance  # noqa: E731
+    sib_it = iter([bool(a) for a in sib_accept]) \
+        if sib_accept is not None else iter([])
+    sib_draw = lambda: next(sib_it, False)      # noqa: E731
     servers: List[float] = [0.0] * sp      # free-at times (min-heap)
     heapq.heapify(servers)
 
@@ -117,6 +131,7 @@ def simulate_dsi_pool(target_latency: float, drafter_latency: float,
             j += 1
         rejected = j <= needed             # draft j is wrong
         last = j if rejected else needed   # final confirmed offset this run
+        sib = rejected and tree_width > 1 and sib_draw()
 
         run_start = t
         d_extra = max((ttft_drafter or drafter_latency) - drafter_latency,
@@ -152,6 +167,11 @@ def simulate_dsi_pool(target_latency: float, drafter_latency: float,
             timeline.append((confirm, min(frontier + i, n_tokens)))
 
         frontier += last
+        if sib:
+            # sibling bonus: one more confirmed token, same confirm time,
+            # no extra forward (it rides the rejecting verify's rows)
+            frontier += 1
+            timeline.append((confirm, min(frontier, n_tokens)))
         # cancelled tasks free their servers at run end
         servers = [min(s_, confirm) for s_ in servers]
         heapq.heapify(servers)

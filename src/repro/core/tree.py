@@ -1,0 +1,243 @@
+"""Token-tree speculation: layout, masking and lossless verify rules.
+
+A *token tree* generalizes the flat W-token verify window: at every
+draft depth the drafter's top-``width`` candidates are verified in one
+target forward, and the engine commits the longest accepted **root
+path**. The layout is **spine-first**:
+
+  chunk = [ the R·D spine tokens — exactly the flat block ] ++
+          [ sibling tokens, tree-major → depth-major → rank ]
+
+so the spine occupies the same chunk indices, cache slots and key/PRNG
+positions as flat DSI, and ``width == 1`` degenerates to byte-identical
+flat behaviour. Sibling node ``i`` of depth ``d`` in tree ``j`` sits at
+chunk index ``n_spine + j·D·(width-1) + d·(width-1) + i``.
+
+Positions are split in two:
+
+  * **virtual** position of chunk index ``q`` is ``pos + q`` — it names
+    the cache slot the node writes (``verify_chunk``'s slot scheme,
+    unchanged from flat). Stale sibling slots are causally invisible
+    (their virtual positions sit beyond every later frontier bound) and
+    the next equal-size chunk write covers them, so commit stays the
+    flat prefix commit with no gather.
+  * **true** position ``pos + true_offset(q)`` is where the node would
+    sit if accepted — it drives RoPE and the ancestor/window masks. For
+    spine rows ``true_offset(q) == q``.
+
+The unified mask rule (kernels/flash_attention — both Pallas and jnp):
+
+  key visible to row q  ⟺  k_pos < pos + true_offset(q)   (ancestors)
+                            or k_pos == pos + q           (self)
+
+which for flat rows reduces exactly to ``k_pos <= q_pos``. A sibling
+sees the spine prefix strictly below its depth plus itself; other
+siblings (virtual positions >= pos + n_spine) and deeper spine tokens
+are excluded automatically. ``ancestor_mask_dense`` is the direct
+parent-pointer oracle the property suite checks this arithmetic against.
+
+Verify rules (``exact_tree_verify`` / ``leviathan_tree_verify``) walk
+the spine with *exactly* the flat rules' draws, then — at the first
+rejection — try the rejected depth's siblings:
+
+  * exact: the target's greedy token either is a sibling (accept it and
+    emit the greedy bonus from that sibling's own verified row) or
+    becomes the correction. Token-identical to target greedy decoding
+    for any tree shape.
+  * leviathan: siblings are accepted by inverse-CDF over their masses
+    under the residual distribution ``norm(max(p_t - p_d, 0))``, in
+    canonical token-id order (acceptance is sibling-order invariant);
+    the no-sibling branch resamples the residual with the sibling mass
+    removed. Mixture check: P(sibling s_i) = resid(s_i) and
+    P(x not a sibling) = (1 - Σ resid(s_i)) · resid(x)/(1 - Σ) =
+    resid(x) — exactly the flat correction law, so the emitted stream
+    still follows the target distribution (tests/test_tree_verify.py).
+
+A sibling accept yields **two** tokens at rejection cost: the sibling
+``tok_a`` plus the bonus ``tok_b`` sampled from the sibling node's own
+target row (already computed by the same forward). Both re-enter the
+pipeline as forced tokens (docs/orchestrator.md §tree-speculation).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = Tuple[int, int, int]   # (n_spine, depth, width)
+
+
+def tree_chunk_len(tree: Tree) -> int:
+    ns, depth, width = tree
+    return ns * width
+
+
+def true_offsets(tree: Tree) -> np.ndarray:
+    """Chunk index -> true position offset, (n_spine * width,) int32.
+    Spine rows map to themselves; sibling rows map to their depth's
+    spine offset (host-side: the tree shape is static)."""
+    ns, depth, width = tree
+    m1 = width - 1
+    out = np.arange(ns * width, dtype=np.int32)
+    if m1:
+        s = np.arange(ns * m1)
+        per = depth * m1
+        out[ns:] = (s // per) * depth + (s % per) // m1
+    return out
+
+
+def tree_parents(tree: Tree) -> np.ndarray:
+    """Chunk index -> parent chunk index (-1 = root's parent, i.e. the
+    committed context). Spine q's parent is q-1 (tree-local root when
+    q % depth == 0 parents into the previous tree's last spine token —
+    the speculative continuation chain); sibling parents equal their
+    depth's spine parent."""
+    ns, depth, width = tree
+    off = true_offsets(tree)
+    return (off - 1).astype(np.int32)
+
+
+def ancestor_mask_dense(tree: Tree) -> np.ndarray:
+    """Oracle (n_nodes, n_nodes) bool: entry [q, k] — may row q attend
+    the chunk's own node k? Built by walking parent pointers: node k is
+    visible iff k is a strict ancestor of q's true position (any node
+    whose true offset < q's true offset, spine-resident) or k == q.
+    This is what the kernels' iota arithmetic must reproduce
+    (tests/test_tree_verify.py::test_mask_matches_dense_reference)."""
+    ns, depth, width = tree
+    n = ns * width
+    off = true_offsets(tree)
+    mask = np.zeros((n, n), bool)
+    for q in range(n):
+        for k in range(n):
+            if k == q:
+                mask[q, k] = True
+            elif k < ns and off[k] < off[q]:
+                # within-chunk spine ancestor: in the spine-first layout
+                # a node's in-chunk ancestors are exactly the spine
+                # entries strictly below its true offset
+                mask[q, k] = True
+    return mask
+
+
+def sibling_candidates(tokens: jnp.ndarray, probs: jnp.ndarray,
+                       width: int) -> jnp.ndarray:
+    """Top-(width-1) alternative drafts per position, spine excluded.
+    tokens (..., K), probs (..., K, V) -> (..., K, width-1) int32."""
+    m1 = width - 1
+    masked = jnp.where(
+        jax.nn.one_hot(tokens, probs.shape[-1], dtype=bool), -1.0, probs)
+    _, idx = jax.lax.top_k(masked, m1)
+    return idx.astype(jnp.int32)
+
+
+def assemble_chunk(spine: jnp.ndarray, siblings: jnp.ndarray) -> jnp.ndarray:
+    """(B, ns) spine + (B, ns, width-1) siblings -> (B, ns*width) chunk
+    in spine-first layout (sibling section flattens to tree-major →
+    depth-major → rank when ns is laid out tree-major, which it is:
+    block index j·D + d)."""
+    b, ns = spine.shape
+    return jnp.concatenate([spine, siblings.reshape(b, -1)], axis=1)
+
+
+# ---------------------------------------------------------------- verify
+def exact_tree_verify(window: jnp.ndarray, target_probs: jnp.ndarray,
+                      siblings: jnp.ndarray, sib_rows: jnp.ndarray,
+                      n_forced=0
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                 jnp.ndarray]:
+    """Greedy root-path acceptance. window (K,), target_probs (K+1, V)
+    (spine rows + bonus), siblings (K, width-1), sib_rows (K, width-1, V)
+    (the target's rows at the sibling nodes). Returns
+    (n_accepted, sib_accepted, tok_a, tok_b): the spine chain is decided
+    exactly like ``exact_verify``; at the first rejection the target's
+    greedy token either matches a sibling (tok_a = sibling, tok_b = the
+    greedy bonus from that sibling's row) or is the correction
+    (tok_b = 0, unused)."""
+    k = window.shape[0]
+    tgt = jnp.argmax(target_probs, axis=-1)                     # (K+1,)
+    match = (window == tgt[:k]) | (jnp.arange(k) < n_forced)
+    n_acc = jnp.cumprod(match.astype(jnp.int32)).sum().astype(jnp.int32)
+    rejected = n_acc < k
+    j = jnp.minimum(n_acc, k - 1)
+    y = tgt[jnp.minimum(n_acc, k)]          # greedy correction / bonus
+    hits = siblings[j] == tgt[j]                                # (m1,)
+    sacc = rejected & hits.any()
+    pick = jnp.argmax(hits)
+    tok_b = jnp.argmax(sib_rows[j, pick], axis=-1).astype(jnp.int32)
+    return n_acc, sacc, y.astype(jnp.int32), jnp.where(sacc, tok_b, 0)
+
+
+def leviathan_tree_verify(key, window: jnp.ndarray, window_probs: jnp.ndarray,
+                          target_probs: jnp.ndarray, siblings: jnp.ndarray,
+                          sib_rows: jnp.ndarray, n_forced=0
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                     jnp.ndarray]:
+    """Rejection-sampling root-path acceptance; same shapes as the exact
+    rule plus window_probs (K, V). The spine chain consumes exactly
+    ``leviathan_verify``'s uniforms (same key split); the sibling pass
+    draws from ``fold_in(key_r, 1|2)`` so the flat draw positions are
+    untouched. See the module docstring for the losslessness argument."""
+    k, v = window_probs.shape
+    key_u, key_r = jax.random.split(key)
+    u = jax.random.uniform(key_u, (k,))
+    idx = jnp.arange(k)
+    p_t = target_probs[idx, window]
+    p_d = window_probs[idx, window]
+    accept = (u * p_d < p_t) | (idx < n_forced)
+    n_acc = jnp.cumprod(accept.astype(jnp.int32)).sum().astype(jnp.int32)
+    rejected = n_acc < k
+
+    j = jnp.minimum(n_acc, k - 1)
+    resid = jnp.clip(target_probs[j] - window_probs[j], 0.0, None)
+    z = resid.sum()
+    resid = jnp.where(z > 1e-20, resid / z, target_probs[j])
+
+    # sibling acceptance by inverse-CDF over residual masses, canonical
+    # (token-id-sorted) order — order of the candidate list cannot leak
+    # into the accept decision
+    order = jnp.argsort(siblings[j])
+    s_sorted = siblings[j][order]                               # (m1,)
+    q_mass = resid[s_sorted]
+    u_sib = jax.random.uniform(jax.random.fold_in(key_r, 1))
+    hit = u_sib < jnp.cumsum(q_mass)
+    sacc = rejected & hit.any()
+    pick = jnp.argmax(hit)
+    tok_sib = s_sorted[pick]
+    row = sib_rows[j, order[pick]]
+    tok_b = jax.random.categorical(jax.random.fold_in(key_r, 2),
+                                   jnp.log(row + 1e-30)).astype(jnp.int32)
+
+    # no-sibling branch: residual with the sibling mass struck out
+    resid2 = resid.at[s_sorted].set(0.0)
+    z2 = resid2.sum()
+    resid2 = jnp.where(z2 > 1e-20, resid2 / z2, resid)
+    dist = jnp.where(n_acc == k, target_probs[k], resid2)
+    other = jax.random.categorical(key_r, jnp.log(dist + 1e-30))
+    tok_a = jnp.where(sacc, tok_sib, other).astype(jnp.int32)
+    return n_acc, sacc, tok_a, jnp.where(sacc, tok_b, 0)
+
+
+def batched_tree_verify(key, window: jnp.ndarray, window_probs: jnp.ndarray,
+                        target_probs: jnp.ndarray, siblings: jnp.ndarray,
+                        sib_rows: jnp.ndarray, n_forced=None, *,
+                        rule: str = "leviathan"
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                   jnp.ndarray]:
+    """(B,·) batch of tree decisions; per-stream keys split exactly like
+    ``core.verify.batched_verify`` so the spine draws line up with the
+    flat engines'. Returns (n_acc (B,), sib_acc (B,), tok_a (B,),
+    tok_b (B,))."""
+    b = window.shape[0]
+    if n_forced is None:
+        n_forced = jnp.zeros((b,), jnp.int32)
+    if rule == "exact":
+        return jax.vmap(exact_tree_verify)(window, target_probs, siblings,
+                                           sib_rows,
+                                           jnp.asarray(n_forced, jnp.int32))
+    keys = jax.random.split(key, b)
+    return jax.vmap(leviathan_tree_verify)(keys, window, window_probs,
+                                           target_probs, siblings, sib_rows,
+                                           jnp.asarray(n_forced, jnp.int32))

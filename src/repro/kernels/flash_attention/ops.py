@@ -40,7 +40,7 @@ order; tests sweep shapes/dtypes against the oracle.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -101,20 +101,29 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
               block_tables: Optional[jnp.ndarray] = None,
               chunk: int = _DEFAULT_CHUNK,
               force_pallas: Optional[bool] = None,
-              interpret: Optional[bool] = None) -> jnp.ndarray:
+              interpret: Optional[bool] = None,
+              tree: Optional[Tuple[int, int, int]] = None) -> jnp.ndarray:
     """GQA attention. q (B,Sq,H,D); k/v (B,Sk,KV,D). See ref.py for masks.
 
     With ``block_tables`` (B, n_pages), k/v are a shared physical page
     pool (P, page, KV, D) and ``kv_positions`` maps *logical* slots
-    (paged ring cache — docs/cache.md)."""
+    (paged ring cache — docs/cache.md).
+
+    ``tree`` = (n_spine, depth, width) marks q as a token-tree verify
+    chunk (core/tree.py) and routes to the ``*_decode_tree`` tuning
+    families — same kernels, tree ancestor masking, separately keyed
+    tile knobs."""
     use_pallas, interp = resolve_pallas(force_pallas, interpret)
     use_pallas = use_pallas or interp   # interpret-only override still forces
     backend = "pallas" if use_pallas else "jnp"
     dt = str(q.dtype)
     h, d = q.shape[2], q.shape[3]
+    if tree is not None:
+        assert kv_positions is not None, "tree chunks are ring/paged calls"
     if block_tables is not None:        # paged ring cache
         assert kv_positions is not None, "paged calls need kv_positions"
-        cfg = resolve_config("paged_decode", backend=backend, dtype=dt,
+        fam = "paged_decode" if tree is None else "paged_decode_tree"
+        cfg = resolve_config(fam, backend=backend, dtype=dt,
                              w=q.shape[1], g=h // k.shape[2], d=d,
                              page=k.shape[1])
         if use_pallas:
@@ -123,18 +132,21 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                                           causal=causal, window=window,
                                           kv_len=kv_len,
                                           bm_pad=cfg["bm_pad"],
-                                          interpret=interp)
+                                          interpret=interp, tree=tree)
         if cfg["impl"] == "oracle":
             from repro.cache.paged import gather_pages
             return attention_ref(q, gather_pages(k, block_tables),
                                  gather_pages(v, block_tables),
                                  causal=causal, window=window,
                                  q_offset=q_offset,
-                                 kv_positions=kv_positions, kv_len=kv_len)
+                                 kv_positions=kv_positions, kv_len=kv_len,
+                                 tree=tree)
         return paged_decode_ref(q, k, v, block_tables, kv_positions, q_offset,
-                                causal=causal, window=window, kv_len=kv_len)
+                                causal=causal, window=window, kv_len=kv_len,
+                                tree=tree)
     if kv_positions is not None:        # the kernel path (matches spec_verify)
-        cfg = resolve_config("ring_decode", backend=backend, dtype=dt,
+        fam = "ring_decode" if tree is None else "ring_decode_tree"
+        cfg = resolve_config(fam, backend=backend, dtype=dt,
                              w=q.shape[1], g=h // k.shape[2], d=d,
                              s=k.shape[1])
         if use_pallas:
@@ -142,13 +154,16 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                                          causal=causal, window=window,
                                          kv_len=kv_len, bk=cfg["bk"],
                                          bm_pad=cfg["bm_pad"],
-                                         interpret=interp)
+                                         interpret=interp, tree=tree)
         if cfg["impl"] == "oracle":
             return attention_ref(q, k, v, causal=causal, window=window,
                                  q_offset=q_offset,
-                                 kv_positions=kv_positions, kv_len=kv_len)
+                                 kv_positions=kv_positions, kv_len=kv_len,
+                                 tree=tree)
         return ring_decode_ref(q, k, v, kv_positions, q_offset,
-                               causal=causal, window=window, kv_len=kv_len)
+                               causal=causal, window=window, kv_len=kv_len,
+                               tree=tree)
+    assert tree is None, "tree masking needs a ring/paged cache call"
     sq, sk = q.shape[1], k.shape[1]
     cfg = resolve_config("flash_attention", backend=backend, dtype=dt,
                          sq=sq, sk=sk, d=d)
@@ -184,7 +199,9 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      kv_len: Optional[jnp.ndarray] = None,
                      block_tables: Optional[jnp.ndarray] = None,
                      force_pallas: Optional[bool] = None,
-                     interpret: Optional[bool] = None) -> jnp.ndarray:
+                     interpret: Optional[bool] = None,
+                     tree: Optional[Tuple[int, int, int]] = None
+                     ) -> jnp.ndarray:
     """Decode/verify attention: q (B,W,H,D) against a (ring or linear)
     cache — paged when ``block_tables`` is given (k/v are then the shared
     page pool). Thin alias of :func:`attention` with ``kv_positions``
@@ -193,4 +210,5 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return attention(q, k, v, causal=causal, window=window, q_offset=pos,
                      kv_positions=kv_positions, kv_len=kv_len,
                      block_tables=block_tables,
-                     force_pallas=force_pallas, interpret=interpret)
+                     force_pallas=force_pallas, interpret=interpret,
+                     tree=tree)

@@ -12,10 +12,17 @@ slots with position < 0 are invalid); (Sk,) shared across batch or (B, Sk)
 per-stream. Defaults to ``arange(Sk)``.
 ``kv_len`` masks out slots with position >= kv_len (padded decode caches);
 scalar or (B,).
+``tree`` = (n_spine, depth, width) marks the Sq rows as a token-tree
+verify chunk (core/tree.py): row q's *true* position is
+``q_offset + true_offset(q)`` while its cache slot stays the *virtual*
+``q_offset + q``. A key is visible iff it is a strict ancestor
+(``k_pos < q_offset + true_offset(q)``, window-bounded around the true
+position) or the row's own virtual slot (``k_pos == q_offset + q``) —
+for flat rows (true_offset(q) == q) this is exactly the causal rule.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -27,7 +34,8 @@ def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                   window: Optional[int] = None,
                   q_offset=0,
                   kv_len: Optional[jnp.ndarray] = None,
-                  kv_positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                  kv_positions: Optional[jnp.ndarray] = None,
+                  tree: Optional[Tuple[int, int, int]] = None) -> jnp.ndarray:
     b, sq, h, d = q.shape
     _, sk, kv, _ = k.shape
     assert h % kv == 0, (h, kv)
@@ -50,10 +58,21 @@ def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         k_pos = k_pos[None] if k_pos.ndim == 1 else k_pos
         k_pos = k_pos[:, None, :]                                  # (·,1,sk)
     valid = k_pos >= 0
-    if causal:
-        valid = valid & (k_pos <= q_pos)
-    if window is not None:
-        valid = valid & (k_pos > q_pos - window)
+    if tree is not None:
+        from repro.core.tree import true_offsets
+        assert causal, "tree masking implies causality"
+        assert tree[0] * tree[2] == sq, (tree, sq)
+        t_pos = qo[:, None, None] + jnp.asarray(
+            true_offsets(tree))[None, :, None]                 # (·,sq,1)
+        anc = k_pos < t_pos
+        if window is not None:
+            anc = anc & (k_pos > t_pos - window)
+        valid = valid & (anc | (k_pos == q_pos))
+    else:
+        if causal:
+            valid = valid & (k_pos <= q_pos)
+        if window is not None:
+            valid = valid & (k_pos > q_pos - window)
     if kv_len is not None:
         kl = jnp.asarray(kv_len, jnp.int32)
         kl = kl[None] if kl.ndim == 0 else kl

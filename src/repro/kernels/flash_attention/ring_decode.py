@@ -43,7 +43,7 @@ resolved in the scalar-prefetched BlockSpec index maps.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -98,13 +98,29 @@ def _norm_slots(slot_pos, b: int) -> jnp.ndarray:
     return jnp.broadcast_to(jnp.atleast_2d(s), (b, s.shape[-1]))
 
 
+def _tree_true_off(qi: jnp.ndarray, tree: Tuple[int, int, int]) -> jnp.ndarray:
+    """Chunk index -> true position offset (core.tree.true_offsets as iota
+    arithmetic over a traced index array — the tree shape is static, so
+    the divisions lower to constant div/mod on the VPU). Spine rows
+    (qi < n_spine) map to themselves; sibling s = qi - n_spine of tree
+    j = s // (depth·(width-1)) at depth d = (s % ·) // (width-1) maps to
+    j·depth + d."""
+    ns, depth, width = tree
+    m1 = width - 1
+    s = qi - ns
+    per = depth * m1
+    toff = (s // per) * depth + (s % per) // m1
+    return jnp.where(qi < ns, qi, toff)
+
+
 def _kernel(scalars_ref,               # SMEM (B, 2): [pos, kv_len] per stream
             q_ref, k_ref, v_ref,       # VMEM tiles
             slot_ref,                  # VMEM (1, bk) absolute slot positions
             o_ref,
             m_scr, l_scr, acc_scr,     # VMEM online-softmax scratch
             *, bm: int, bk: int, nk: int, w: int, causal: bool,
-            window: Optional[int], scale: float):
+            window: Optional[int], scale: float,
+            tree: Optional[Tuple[int, int, int]] = None):
     bi = pl.program_id(0)
     ik = pl.program_id(2)
 
@@ -135,13 +151,25 @@ def _kernel(scalars_ref,               # SMEM (B, 2): [pos, kv_len] per stream
                                 preferred_element_type=jnp.float32) * scale
         # row r packs (g, i): its query sits at absolute position pos + r%W
         row = jax.lax.broadcasted_iota(jnp.int32, (bm, bk), 0)
-        q_pos = pos + (jnp.remainder(row, w) if w > 1 else 0)
+        qi = jnp.remainder(row, w) if w > 1 else jnp.zeros_like(row)
         k_pos = jnp.broadcast_to(slots, (bm, bk))
         mask = (k_pos >= 0) & (k_pos < kv_len)
-        if causal:
-            mask = jnp.logical_and(mask, k_pos <= q_pos)
-        if window is not None:
-            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        if tree is not None:
+            # token-tree chunk: ancestors live strictly below the row's
+            # *true* position; the row also sees its own *virtual* slot
+            # (core/tree.py — for flat rows this is exactly the causal
+            # rule below)
+            t_pos = pos + _tree_true_off(qi, tree)
+            anc = k_pos < t_pos
+            if window is not None:
+                anc = jnp.logical_and(anc, k_pos > t_pos - window)
+            mask = jnp.logical_and(mask, anc | (k_pos == pos + qi))
+        else:
+            q_pos = pos + qi
+            if causal:
+                mask = jnp.logical_and(mask, k_pos <= q_pos)
+            if window is not None:
+                mask = jnp.logical_and(mask, k_pos > q_pos - window)
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_scr[...]
@@ -161,7 +189,7 @@ def _kernel(scalars_ref,               # SMEM (B, 2): [pos, kv_len] per stream
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "bk",
-                                             "bm_pad", "interpret"))
+                                             "bm_pad", "interpret", "tree"))
 def ring_decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                           slot_pos: jnp.ndarray, pos, *,
                           causal: bool = True,
@@ -169,7 +197,9 @@ def ring_decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                           kv_len=None,
                           bk: int = 128,
                           bm_pad: int = 16,
-                          interpret: bool = False) -> jnp.ndarray:
+                          interpret: bool = False,
+                          tree: Optional[Tuple[int, int, int]] = None
+                          ) -> jnp.ndarray:
     """q (B,W,H,D) against a ring cache k/v (B,S,KV,D) with per-slot
     absolute positions ``slot_pos`` ((S,) or (B,S); -1 = empty) and window
     start ``pos`` (scalar or (B,)). Semantics == attention_ref with
@@ -178,10 +208,18 @@ def ring_decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     ``bk`` (KV-block slots) and ``bm_pad`` (M-dim pad multiple; >= 16
     keeps f32/bf16 sublane alignment) are the autotuner's knobs
     (kernels/tuning) — they retile the grid but never change masking or
-    accumulation semantics."""
+    accumulation semantics.
+
+    ``tree`` = (n_spine, depth, width) switches the W rows to token-tree
+    ancestor masking (core/tree.py; W == n_spine·width). Tree nodes ride
+    the same M-dim packing as GQA heads × window rows — the tree is just
+    one more meaning of the row index, the grid and block-skip bound are
+    unchanged (every node's virtual slot stays within pos + W - 1)."""
     b, w, h, d = q.shape
     _, s, kv, _ = k.shape
     assert h % kv == 0, (h, kv)
+    if tree is not None:
+        assert causal and tree[0] * tree[2] == w and tree[2] > 1, (tree, w)
     g = h // kv
     m = g * w
     bm = _round_up(m, max(16, bm_pad))    # sublane-aligned for f32 and bf16
@@ -206,7 +244,7 @@ def ring_decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
     kernel = functools.partial(_kernel, bm=bm, bk=bk, nk=nk, w=w,
                                causal=causal, window=window,
-                               scale=1.0 / float(d) ** 0.5)
+                               scale=1.0 / float(d) ** 0.5, tree=tree)
     grid = (b, kv, nk)
     out = pl.pallas_call(
         kernel,
@@ -245,7 +283,7 @@ def _paged_kernel(scalars_ref, bt_ref,     # SMEM: per-stream scalars + block ta
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "bm_pad",
-                                             "interpret"))
+                                             "interpret", "tree"))
 def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
                            v_pool: jnp.ndarray, block_tables: jnp.ndarray,
                            slot_pos: jnp.ndarray, pos, *,
@@ -253,7 +291,9 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
                            window: Optional[int] = None,
                            kv_len=None,
                            bm_pad: int = 16,
-                           interpret: bool = False) -> jnp.ndarray:
+                           interpret: bool = False,
+                           tree: Optional[Tuple[int, int, int]] = None
+                           ) -> jnp.ndarray:
     """Paged flash-decode: q (B,W,H,D) against a *shared* physical page
     pool k/v (P, page, KV, D) addressed through per-stream block tables
     (B, n_pages). Logical slot ``s`` of stream ``b`` lives at
@@ -273,6 +313,8 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
     assert h % kv == 0, (h, kv)
     assert slot_pos.shape[-1] == n_pages * page, \
         (slot_pos.shape, n_pages, page)
+    if tree is not None:
+        assert causal and tree[0] * tree[2] == w and tree[2] > 1, (tree, w)
     g = h // kv
     m = g * w
     bm = _round_up(m, max(16, bm_pad))
@@ -289,7 +331,7 @@ def paged_decode_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
 
     kernel = functools.partial(_paged_kernel, bm=bm, bk=page, nk=n_pages,
                                w=w, causal=causal, window=window,
-                               scale=1.0 / float(d) ** 0.5)
+                               scale=1.0 / float(d) ** 0.5, tree=tree)
     grid = (b, kv, n_pages)
     out = pl.pallas_call(
         kernel,
@@ -329,7 +371,9 @@ def paged_decode_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
                      slot_pos: jnp.ndarray, pos, *,
                      causal: bool = True,
                      window: Optional[int] = None,
-                     kv_len=None) -> jnp.ndarray:
+                     kv_len=None,
+                     tree: Optional[Tuple[int, int, int]] = None
+                     ) -> jnp.ndarray:
     """Portable paged twin: gather each stream's pages into the logical
     dense view, then run the packed-GEMM ring path. Bit-identical to the
     ring path on an equivalent dense cache (the gather only permutes
@@ -338,14 +382,16 @@ def paged_decode_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
     k = gather_pages(k_pool, block_tables)
     v = gather_pages(v_pool, block_tables)
     return ring_decode_ref(q, k, v, slot_pos, pos, causal=causal,
-                           window=window, kv_len=kv_len)
+                           window=window, kv_len=kv_len, tree=tree)
 
 
 def ring_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                     slot_pos: jnp.ndarray, pos, *,
                     causal: bool = True,
                     window: Optional[int] = None,
-                    kv_len=None) -> jnp.ndarray:
+                    kv_len=None,
+                    tree: Optional[Tuple[int, int, int]] = None
+                    ) -> jnp.ndarray:
     """Portable decode path with the kernel's GQA packing: two
     (B·KV)-batched GEMMs on (G·W, D)/(G·W, S) tiles — XLA:CPU dispatches
     these to real GEMMs where the oracle's 5-D einsum stays in generic
@@ -372,9 +418,16 @@ def ring_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     q_pos = pos_b[:, None] + row[None]                          # (B, M)
     k_pos = _norm_slots(slot_pos, b)[:, None, :]                # (B, 1, S)
     valid = k_pos >= 0
-    if causal:
+    if tree is not None:
+        assert causal and tree[0] * tree[2] == w and tree[2] > 1, (tree, w)
+        t_pos = (pos_b[:, None] + _tree_true_off(row, tree)[None])[:, :, None]
+        anc = k_pos < t_pos
+        if window is not None:
+            anc = anc & (k_pos > t_pos - window)
+        valid = valid & (anc | (k_pos == q_pos[:, :, None]))
+    elif causal:
         valid = valid & (k_pos <= q_pos[:, :, None])
-    if window is not None:
+    if tree is None and window is not None:
         valid = valid & (k_pos > q_pos[:, :, None] - window)
     if kv_len is not None:
         kl = _norm_pos(kv_len, b)

@@ -65,3 +65,21 @@ def batched_verify_and_sample(key, draft_tokens: jnp.ndarray,
             interpret=interpret)
     )(keys, draft_tokens, draft_probs, target_probs,
       jnp.asarray(n_forced, jnp.int32))
+
+
+def batched_tree_verify_and_sample(key, window: jnp.ndarray,
+                                   window_probs: jnp.ndarray,
+                                   target_probs: jnp.ndarray,
+                                   siblings: jnp.ndarray,
+                                   sib_rows: jnp.ndarray, n_forced=None, *,
+                                   rule: str = "leviathan"):
+    """Tree-aware verify: accept the longest root-path through the spine,
+    then try the rejected depth's siblings (core.tree — the module
+    docstring there carries the losslessness argument). The spine walk
+    consumes exactly the flat rule's uniforms; the O(width) sibling pass
+    is cheap jnp on top, so both dispatch routes share one
+    implementation and the vocab-tiled Pallas kernel stays flat-only.
+    Returns (n_acc (B,), sib_acc (B,), tok_a (B,), tok_b (B,))."""
+    from repro.core.tree import batched_tree_verify
+    return batched_tree_verify(key, window, window_probs, target_probs,
+                               siblings, sib_rows, n_forced, rule=rule)

@@ -27,6 +27,11 @@ Families and their knobs:
   flash_attention  pallas: bq, bk (q/k tile)
                    jnp:    chunk (q-chunk of the blocked scan; chunking
                            only splits the q dim, bit-identical output)
+  ring_decode_tree / paged_decode_tree — the token-tree verify chunks
+                   (docs/kernels.md#tree-masking): same kernels and the
+                   same knobs as their flat families, but keyed
+                   separately because the M-dim also packs tree nodes
+                   (W = n_spine·width), so the winning tiles differ.
 """
 from __future__ import annotations
 
@@ -36,7 +41,8 @@ from typing import Any, Dict, List
 __all__ = ["FAMILIES", "DEFAULTS", "default_config", "candidates",
            "vmem_bytes", "sanitize_config", "VMEM_BUDGET_BYTES"]
 
-FAMILIES = ("ring_decode", "paged_decode", "spec_verify", "flash_attention")
+FAMILIES = ("ring_decode", "paged_decode", "spec_verify", "flash_attention",
+            "ring_decode_tree", "paged_decode_tree")
 
 #: conservative per-core VMEM working-set budget for one grid step
 #: (v5e has 16 MiB; leave headroom for double-buffered DMA)
@@ -52,6 +58,10 @@ DEFAULTS: Dict[str, Dict[str, Dict[str, Any]]] = {
     "spec_verify": {"pallas": {"bv": 512}, "jnp": {}},
     "flash_attention": {"pallas": {"bq": 128, "bk": 128},
                         "jnp": {"chunk": 1024}},
+    "ring_decode_tree": {"pallas": {"bk": 128, "bm_pad": 16},
+                         "jnp": {"impl": "packed"}},
+    "paged_decode_tree": {"pallas": {"bm_pad": 16},
+                          "jnp": {"impl": "packed"}},
 }
 
 _IMPLS = ("packed", "oracle")
@@ -69,6 +79,10 @@ def vmem_bytes(family: str, config: Dict[str, Any],
                **shape: int) -> int:
     """Rough fp32 working set of one grid step: score tile + accumulator
     + k/v tiles + softmax state (double-counted 2x for DMA buffers)."""
+    if family.endswith("_tree"):
+        # tree chunks reuse the flat kernels; ``w`` arrives as the full
+        # chunk length (n_spine·width), so the flat model is exact
+        family = family[:-len("_tree")]
     if family == "ring_decode":
         m = shape["g"] * shape["w"]
         bm = _round_up(m, max(16, int(config.get("bm_pad", 16))))
@@ -97,6 +111,8 @@ def candidates(family: str, backend: str, **shape: int
     element 0 (the policy compares winners against it)."""
     default = default_config(family, backend)
     out: List[Dict[str, Any]] = [default]
+    if family.endswith("_tree"):     # same grids as the flat family
+        family = family[:-len("_tree")]
 
     def add(cfg: Dict[str, Any]) -> None:
         if cfg in out:

@@ -46,6 +46,15 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--lookahead", type=int, default=4)
+    ap.add_argument("--tree-width", type=int, default=1,
+                    help="token-tree speculation width for --mode dsi: "
+                         "verify this many candidates per draft depth "
+                         "(1 = flat windows; docs/orchestrator.md "
+                         "§token-tree speculation)")
+    ap.add_argument("--tree-depth", type=int, default=None,
+                    help="tree depth per replica window (defaults to "
+                         "--lookahead; the tree's root-path IS the "
+                         "lookahead window, so this overrides it)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--page-size", type=int, default=0,
                     help="> 0 serves over the paged KV cache with prefix "
@@ -106,6 +115,14 @@ def main(argv=None):
         ap.error("--planner auto and --spec-mesh are mutually exclusive: "
                  "a spec mesh pins the SP degree to its topology, so the "
                  "planner would be inert")
+    if args.tree_depth is not None:
+        args.lookahead = args.tree_depth
+    if args.tree_width > 1 and args.mode != "dsi":
+        ap.error("--tree-width > 1 requires --mode dsi (token trees ride "
+                 "the speculative verify chunk)")
+    if args.tree_width > 1 and args.lookahead < 2:
+        ap.error("--tree-width > 1 needs a tree depth >= 2 "
+                 "(--tree-depth/--lookahead)")
 
     cfg_t = reduced(get_config(args.arch), layers=4, d_model=256)
     cfg_d = reduced(get_config(args.arch), layers=2, d_model=128)
@@ -138,7 +155,8 @@ def main(argv=None):
         print(f"telemetry: http://127.0.0.1:{port}/metrics /trace /snapshot")
     eng = ServingEngine(target=target, params_t=params_t, drafter=drafter,
                         params_d=params_d, mode=args.mode,
-                        lookahead=args.lookahead, paged=paged,
+                        lookahead=args.lookahead,
+                        tree_width=args.tree_width, paged=paged,
                         sp_degree=args.sp_degree, mesh=mesh,
                         max_batch=args.max_batch, admission=args.admission,
                         planner="auto" if args.planner == "auto" else None,
@@ -176,6 +194,9 @@ def main(argv=None):
         if req.stats is not None:
             extra = (f" steps={req.stats.macro_steps}"
                      f" rejections={getattr(req.stats, 'rejections', '-')}")
+            if args.tree_width > 1:
+                extra += (" sib_accepts="
+                          f"{getattr(req.stats, 'sibling_accepts', 0)}")
             if req.stats.faults or req.stats.degradations:
                 extra += (f" faults={req.stats.faults}"
                           f" degradations={req.stats.degradations}")

@@ -134,13 +134,16 @@ def block_decode(p: dict, x: jnp.ndarray, cache: dict, slot_pos, pos, cfg, *,
 
 
 def _attn_verify(p_attn, xn, cache, slot_pos_new, pos, cfg, *, window,
-                 block_table=None):
+                 block_table=None, tree=None):
     """Chunk attention against a cache: write K new kv slots, then attend
     with absolute-position masking (within-chunk causality falls out of
     slot positions). ``pos`` scalar or per-stream (B,); ``slot_pos_new``
     (S_cache,) or per-stream (B,S_cache). With ``block_table`` the cache
     is a shared page pool and logical slots route through the stream's
-    pages (docs/cache.md)."""
+    pages (docs/cache.md). With ``tree`` = (n_spine, depth, width) the K
+    tokens are a token-tree verify chunk (core/tree.py): cache slots stay
+    *virtual* (pos + chunk index — the self-healing overwrite scheme),
+    while RoPE and the attention mask use each node's *true* position."""
     import jax
     from repro.kernels.flash_attention import decode_attention
     from repro.models.layers import dense
@@ -156,8 +159,13 @@ def _attn_verify(p_attn, xn, cache, slot_pos_new, pos, cfg, *, window,
     vn = attn_mod._split_heads(dense(xn, p_attn["wv"]), cfg.num_kv_heads, cfg.head_dim)
     positions = pos_b[:, None] + jnp.arange(k_len, dtype=jnp.int32)[None]
     from repro.models.layers import rope
-    q = rope(q, positions, cfg.rope_theta)
-    kn = rope(kn, positions, cfg.rope_theta)
+    if tree is None:
+        rope_pos = positions
+    else:
+        from repro.core.tree import true_offsets
+        rope_pos = pos_b[:, None] + jnp.asarray(true_offsets(tree))[None]
+    q = rope(q, rope_pos, cfg.rope_theta)
+    kn = rope(kn, rope_pos, cfg.rope_theta)
     slots = jnp.mod(positions, s_cache)                         # (B,K)
     if paged:
         page = cache["k"].shape[1]
@@ -179,7 +187,7 @@ def _attn_verify(p_attn, xn, cache, slot_pos_new, pos, cfg, *, window,
     # dispatcher: Pallas ring-decode kernel on TPU (W rows × G heads packed
     # into one MXU tile), packed-GEMM jnp path elsewhere
     y = decode_attention(q, k_cache, v_cache, slot_pos_new, pos_b,
-                         window=window, block_tables=block_table)
+                         window=window, block_tables=block_table, tree=tree)
     if attn_mod._kv_head_sharded(cfg):
         y = cs(y, "batch", None, "model", None)
     else:
@@ -190,12 +198,17 @@ def _attn_verify(p_attn, xn, cache, slot_pos_new, pos, cfg, *, window,
 
 def block_verify(p: dict, x: jnp.ndarray, cache: dict, slot_pos_new, pos,
                  cfg, *, window: Optional[int],
-                 block_table=None) -> Tuple[jnp.ndarray, dict]:
+                 block_table=None, tree=None) -> Tuple[jnp.ndarray, dict]:
     """Verification-chunk block: processes K tokens against the cache and
     emits rollback-ready state ("ssm_states"/"conv_full" for recurrent
-    layers; attention kv is overwrite-safe and needs no rollback)."""
+    layers; attention kv is overwrite-safe and needs no rollback).
+    ``tree`` marks a token-tree chunk — attention-only (a recurrent scan
+    has no notion of sibling branches; engines assert cfg.ssm is None
+    before enabling tree mode)."""
     xn = rmsnorm(x, p["norm1"], cfg.norm_eps)
     new_cache = dict(cache)
+    if tree is not None:
+        assert cfg.ssm is None, "token-tree verify requires attention-only"
     if cfg.attn and cfg.ssm is not None:
         a, k, v = _attn_verify(p["attn"], xn, cache, slot_pos_new, pos, cfg,
                                window=window, block_table=block_table)
@@ -206,7 +219,8 @@ def block_verify(p: dict, x: jnp.ndarray, cache: dict, slot_pos_new, pos,
         new_cache.update(k=k, v=v, ssm_states=states, conv_full=conv_full)
     elif cfg.attn:
         y, k, v = _attn_verify(p["attn"], xn, cache, slot_pos_new, pos, cfg,
-                               window=window, block_table=block_table)
+                               window=window, block_table=block_table,
+                               tree=tree)
         new_cache.update(k=k, v=v)
     else:
         y, states, conv_full = mamba2.mamba_verify(

@@ -483,8 +483,8 @@ class Model:
         return logits[:, 0], new_cache
 
     # --------------------------------------------------- verification chunk
-    def verify_chunk(self, params: Params, cache: Cache, tokens: jnp.ndarray
-                     ) -> Tuple[jnp.ndarray, Cache]:
+    def verify_chunk(self, params: Params, cache: Cache, tokens: jnp.ndarray,
+                     tree=None) -> Tuple[jnp.ndarray, Cache]:
         """Process W tokens starting at ``cache['pos']`` against the cache —
         the DSI verification forward. Returns (logits (B,W,V), cache') where
         cache' holds per-position recurrent states (``ssm_states``,
@@ -492,10 +492,19 @@ class Model:
         written in place (overwrite-safe, no rollback needed) and ``pos`` is
         *not* advanced (commit does that). The W-row attention routes
         through the same ring-decode kernel dispatch as :meth:`decode_step`
-        (W rows × GQA group packed into one MXU tile)."""
+        (W rows × GQA group packed into one MXU tile).
+
+        ``tree`` = (n_spine, depth, width) marks the W tokens as a
+        token-tree chunk (core/tree.py): slot writes keep the flat
+        virtual-position scheme below — siblings land in scratch slots
+        that the next equal-size chunk write reclaims — while RoPE and
+        masking inside ``block_verify`` use true tree positions.
+        Attention-only (asserted per block)."""
         cfg = self.cfg
         assert cfg.causal
         b, w = tokens.shape
+        assert tree is None or (tree[0] * tree[2] == w
+                                and not self.is_vlm), (tree, w)
         pos = batched_pos(cache["pos"], b)                      # (B,)
         x = embed(params, tokens)
         x = cs(x, "batch", None, None)
@@ -527,7 +536,8 @@ class Model:
                 def body(h, xs, _w=window, _slot=slot_new, _blk=block):
                     p_layer, c_layer = xs
                     h, c2 = blk.block_verify(p_layer, h, c_layer, _slot, pos,
-                                             cfg, window=_w, block_table=_blk)
+                                             cfg, window=_w, block_table=_blk,
+                                             tree=tree)
                     return h, c2
 
                 if i1 - i0 == 1:

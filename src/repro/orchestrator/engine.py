@@ -159,12 +159,22 @@ class SPOrchestrator:
                  sp: int = 2, rule: str = "exact",
                  paged: Optional[PagedSpec] = None, mesh=None,
                  record_events: bool = False,
-                 history_cap: Optional[int] = None):
+                 history_cap: Optional[int] = None, tree_width: int = 1):
         assert rule in ("exact", "leviathan")
         assert sp >= 1 and lookahead >= 1
+        assert tree_width >= 1
+        if tree_width > 1:
+            # token-tree speculation (core/tree.py): each replica window
+            # carries tree_width-1 sibling candidates per depth. The
+            # sibling-accept bonus token needs a second forced position,
+            # and tree chunks ride the attention ring cache only.
+            assert lookahead >= 2, "tree speculation needs lookahead >= 2"
+            assert target.cfg.ssm is None, \
+                "tree verify needs an attention-only target"
         self.target, self.drafter = target, drafter
         self.w = lookahead
         self.sp = sp
+        self.tree_width = tree_width
         self.rule = rule
         self.paged = paged
         self.mesh = mesh
@@ -184,27 +194,57 @@ class SPOrchestrator:
         self._slot_counters: Dict[int, int] = {}
         self._zero_keys: Dict[int, Tuple[jnp.ndarray, jnp.ndarray]] = {}
 
+    @property
+    def _chunk(self) -> int:
+        """Verify-chunk length per tick: the R·W spine plus, in tree
+        mode, (tree_width-1) siblings per spine position."""
+        return self.w * self.sp * self.tree_width
+
     # ----------------------------------------------------------------- tick
     def _tick(self, params_t, params_d, state: State, dk: jnp.ndarray,
               vk: jnp.ndarray) -> State:
         """One orchestrator tick: draft R windows ∥ verify last tick's
         block ∥ fold R replica decisions; dk (B, R·W, 2) per-position
         draft keys, vk (B, R, 2) per-replica decision keys."""
-        w, r = self.w, self.sp
+        w, r, tw = self.w, self.sp, self.tree_width
         wn = w * r
         greedy = self.rule == "exact"
 
-        # (a) drafter: R speculative windows (sequential recurrent scan)
+        # (a) drafter: R speculative windows (sequential recurrent scan).
+        # In tree mode the scan's first sampled token is overridden by the
+        # pending sibling-accept bonus token (the draw still happens, so
+        # key consumption is position-identical to flat).
         d_toks, d_probs, d_cache, d_hist = draft_scan_keys(
             self.drafter, params_d, state["d_cache"], state["prefetch"], dk,
-            greedy)
+            greedy,
+            boot_tok=state["boot_tok"] if tw > 1 else None,
+            boot_on=state["boot_on"] if tw > 1 else None)
 
         # (b) R replicas verify the pending block concurrently: one chunk
-        # forward, window dim sharded over the spec mesh axis
+        # forward, window dim sharded over the spec mesh axis. Tree mode
+        # appends tree_width-1 sibling candidates per spine position
+        # (core/tree.py layout: spine first, then siblings grouped per
+        # window, depth-major) and verifies spine + siblings in the same
+        # forward under the tree ancestor mask.
         block = cs(state["block"], "batch", "window")
-        rows, t_post = verify_stage(self.target, params_t, state["t_cache"],
-                                    block)                    # (B,RW,V)
-        rows = cs(rows, "batch", "window", None)
+        if tw > 1:
+            from repro.core.tree import assemble_chunk, sibling_candidates
+            sib = sibling_candidates(state["block"], state["block_probs"],
+                                     tw)                      # (B,RW,tw-1)
+            chunk = cs(assemble_chunk(state["block"], sib),
+                       "batch", "window")
+            rows_full, t_post = verify_stage(
+                self.target, params_t, state["t_cache"], chunk,
+                tree=(wn, w, tw))                             # (B,RW·tw,V)
+            rows_full = cs(rows_full, "batch", "window", None)
+            rows = rows_full[:, :wn]
+            sib_rows = rows_full[:, wn:].reshape(
+                block.shape[0], r, w, tw - 1, rows_full.shape[-1])
+        else:
+            rows, t_post = verify_stage(self.target, params_t,
+                                        state["t_cache"],
+                                        block)                # (B,RW,V)
+            rows = cs(rows, "batch", "window", None)
 
         # (c) deterministic left-to-right decision fold: commit the
         # longest verified prefix, preempt everything younger than the
@@ -220,6 +260,8 @@ class SPOrchestrator:
         rejected = jnp.zeros((bsz,), bool)
         rej_win = jnp.full((bsz,), r, jnp.int32)
         nxt = jnp.zeros((bsz,), jnp.int32)
+        sib_acc = jnp.zeros((bsz,), bool)
+        tok_b = jnp.zeros((bsz,), jnp.int32)
         alive_win = []
         acc_win = []
         for j in range(r):
@@ -229,7 +271,20 @@ class SPOrchestrator:
                                   rows[:, j * w:(j + 1) * w]], axis=1)
             nf = state["forced"] if j == 0 \
                 else jnp.zeros_like(state["forced"])
-            if greedy:
+            if tw > 1:
+                # tree rule: walk the spine exactly like the flat rule,
+                # then try the rejected depth's siblings (core/tree.py)
+                from repro.core.tree import (exact_tree_verify,
+                                             leviathan_tree_verify)
+                sj = sib[:, j * w:(j + 1) * w]
+                srj = sib_rows[:, j]
+                if greedy:
+                    nj, saccj, xj, tbj = jax.vmap(exact_tree_verify)(
+                        win, tp, sj, srj, nf)
+                else:
+                    nj, saccj, xj, tbj = jax.vmap(leviathan_tree_verify)(
+                        vk[:, j], win, wp, tp, sj, srj, nf)
+            elif greedy:
                 nj, xj = jax.vmap(exact_verify)(win, tp, nf)
             else:
                 nj, xj = jax.vmap(leviathan_verify)(vk[:, j], win, wp, tp, nf)
@@ -240,6 +295,9 @@ class SPOrchestrator:
             rejected = rejected | rej_j
             rej_win = jnp.where(rej_j, j, rej_win)
             nxt = jnp.where(rej_j, xj, nxt)
+            if tw > 1:
+                sib_acc = jnp.where(rej_j, saccj, sib_acc)
+                tok_b = jnp.where(rej_j, tbj, tok_b)
             alive_win.append(alive)
             acc_win.append(nj)
             alive = full_j
@@ -248,9 +306,12 @@ class SPOrchestrator:
 
         t_cache = self.target.commit(state["t_cache"], t_post, n_acc)
 
-        # (d) emit committed tokens (+ correction) as one batched scatter
+        # (d) emit committed tokens (+ correction, + the sibling-accept
+        # bonus token in tree mode) as one batched scatter
         buf, n_out = emit_block(state["out"], state["n_out"], block,
-                                state["forced"], n_acc, have, rejected, nxt)
+                                state["forced"], n_acc, have, rejected, nxt,
+                                extra2=sib_acc if tw > 1 else None,
+                                tok2=tok_b if tw > 1 else None)
 
         # (e) drafter rollback to the committed frontier where rejected
         d_cache = rollback_drafter(d_cache, state["d_hist_prev"], n_acc,
@@ -269,7 +330,10 @@ class SPOrchestrator:
         pprob_next = jnp.where(rejected[:, None], onehot_nxt,
                                d_probs[:, wn - 1])
         have_next = active & ~rejected
-        forced_next = jnp.where(rejected, 1, jnp.zeros_like(state["forced"]))
+        # sibling accept: the correction (tok_a) AND its bonus (tok_b)
+        # re-enter the next live window as forced positions
+        forced_next = jnp.where(rejected, 1 + sib_acc.astype(jnp.int32),
+                                jnp.zeros_like(state["forced"]))
         forced_next = jnp.where(have, forced_next, state["forced"])
         carry_next = jnp.where(full_block[:, None], rows[:, wn - 1],
                                state["carry"])
@@ -287,6 +351,11 @@ class SPOrchestrator:
             "had_block": have,
             "alive_win": jnp.stack(alive_win, axis=1),   # (B,R)
             "acc_win": jnp.stack(acc_win, axis=1),       # (B,R)
+            # tree-mode pipeline state: armed by THIS tick's sibling
+            # accept, consumed by the NEXT tick's draft scan (which runs
+            # every tick, so the boot never survives past one tick)
+            "sib_acc": sib_acc,
+            "boot_tok": tok_b, "boot_on": sib_acc,
         }
 
     # ------------------------------------------------------------ key plumb
@@ -340,24 +409,25 @@ class SPOrchestrator:
         n_arr = np.broadcast_to(np.asarray(n_new, np.int32), (b,))
         n_max = int(n_arr.max())
         key = key if key is not None else jax.random.PRNGKey(0)
-        slack = 2 * wn + 2
+        cn = self._chunk                 # R·W spine + tree siblings
+        slack = 2 * cn + 2
         _check_capacity(self.target, s, n_max, slack, max_len)
         _check_capacity(self.drafter, s, n_max, slack, max_len)
         max_len = max_len or (s + n_max + slack)
-        cap = n_max + wn + 1
+        cap = n_max + wn + 1 + (1 if self.tree_width > 1 else 0)
 
         batch = {"tokens": prompt, **(extra_inputs or {})}
         t_logits, t_cache = self.target.prefill(params_t, batch,
                                                 max_len=max_len,
-                                                window_headroom=wn)
+                                                window_headroom=cn)
         d_logits, d_cache = self.drafter.prefill(params_d, batch,
                                                  max_len=max_len,
-                                                 window_headroom=wn)
+                                                 window_headroom=cn)
         if self.paged is not None:
             t_cache = paged_from_dense(self.target, t_cache, self.paged,
-                                       max_len, window_headroom=wn)
+                                       max_len, window_headroom=cn)
             d_cache = paged_from_dense(self.drafter, d_cache, self.paged,
-                                       max_len, window_headroom=wn)
+                                       max_len, window_headroom=cn)
         prefetch, d_prob0, key = self._bootstrap(d_logits, key)
         chain = _KeyChain(key, w, b)
         counters = np.ones((b,), np.int64)
@@ -376,6 +446,9 @@ class SPOrchestrator:
             "d_hist_prev": self._zero_hist(d_cache, wn),
             "out": jnp.zeros((b, cap), jnp.int32),
             "n_out": jnp.zeros((b,), jnp.int32),
+            "sib_acc": jnp.zeros((b,), bool),
+            "boot_tok": jnp.zeros((b,), jnp.int32),
+            "boot_on": jnp.zeros((b,), bool),
         }
 
         per = [EngineStats(max_history=self.history_cap) for _ in range(b)]
@@ -404,6 +477,7 @@ class SPOrchestrator:
             had = np.asarray(state["had_block"])
             alive_win = np.asarray(state["alive_win"])
             acc_win = np.asarray(state["acc_win"])
+            sib = np.asarray(state["sib_acc"])
             prev_out = n_out
             n_out = np.asarray(state["n_out"])
             om.ticks.inc()
@@ -413,10 +487,12 @@ class SPOrchestrator:
                                   - np.minimum(prev_out, n_arr))
                                  [unfinished].sum()))
             om.rollbacks.inc(int(rej[unfinished].sum()))
+            om.sibling_accepts.inc(int(sib[unfinished].sum()))
             for i in range(b):
                 if not unfinished[i]:
                     continue
-                per[i].record(int(n_acc[i]), bool(rej[i]), int(n_out[i]))
+                per[i].record(int(n_acc[i]), bool(rej[i]), int(n_out[i]),
+                              sib_acc=bool(sib[i]))
                 if not had[i]:
                     continue
                 for j in range(r):
@@ -437,12 +513,13 @@ class SPOrchestrator:
                     replicas[j].busy_ticks += 1
             if self.record_events:
                 self._log_tick(ticks, unfinished, had, rej, rej_win,
-                               alive_win, n_out)
+                               alive_win, n_out, prev_out)
                 self.tick_log.append({
                     "tick": ticks, "had_block": had.copy(),
                     "rejected": rej.copy(), "rej_win": rej_win.copy(),
                     "alive_win": alive_win.copy(), "acc_win": acc_win.copy(),
                     "n_out": n_out.copy(), "unfinished": unfinished.copy(),
+                    "sib_acc": sib.copy(),
                 })
             # virtual-step counters: resume at m+2 after a rejection at
             # window op m (DSIEngine's bubble-step key indices), else +R
@@ -473,9 +550,11 @@ class SPOrchestrator:
         self.table_max_len = max_len
         self._slot_chains.clear()
         self._slot_counters.clear()
-        t_cache = self.target.init_cache(b, max_len, window_headroom=wn,
+        t_cache = self.target.init_cache(b, max_len,
+                                         window_headroom=self._chunk,
                                          paged=self.paged)
-        d_cache = self.drafter.init_cache(b, max_len, window_headroom=wn,
+        d_cache = self.drafter.init_cache(b, max_len,
+                                          window_headroom=self._chunk,
                                           paged=self.paged)
         return {
             "key": key if key is not None else jax.random.PRNGKey(0),
@@ -498,6 +577,9 @@ class SPOrchestrator:
             "had_block": jnp.zeros((b,), bool),
             "alive_win": jnp.zeros((b, r), bool),
             "acc_win": jnp.zeros((b, r), jnp.int32),
+            "sib_acc": jnp.zeros((b,), bool),
+            "boot_tok": jnp.zeros((b,), jnp.int32),
+            "boot_on": jnp.zeros((b,), bool),
         }
 
     def _admit_row(self, state: State, slot, t_row, d_row, carry, prefetch,
@@ -543,6 +625,9 @@ class SPOrchestrator:
                               jnp.zeros((1, self.sp), bool))
         s["acc_win"] = set0(state["acc_win"],
                             jnp.zeros((1, self.sp), jnp.int32))
+        s["sib_acc"] = set0(state["sib_acc"], jnp.zeros((1,), bool))
+        s["boot_tok"] = set0(state["boot_tok"], jnp.zeros((1,), jnp.int32))
+        s["boot_on"] = set0(state["boot_on"], jnp.zeros((1,), bool))
         s["active"] = set0(state["active"], jnp.ones((1,), bool))
         return s
 
@@ -571,12 +656,12 @@ class SPOrchestrator:
                 params_d, batch, d_row, ticket.n_cached["d"])
             manager.register(ticket, tokens)
         else:
-            t_logits, t_row = self.target.prefill(params_t, batch,
-                                                  max_len=self.table_max_len,
-                                                  window_headroom=wn)
-            d_logits, d_row = self.drafter.prefill(params_d, batch,
-                                                   max_len=self.table_max_len,
-                                                   window_headroom=wn)
+            t_logits, t_row = self.target.prefill(
+                params_t, batch, max_len=self.table_max_len,
+                window_headroom=self._chunk)
+            d_logits, d_row = self.drafter.prefill(
+                params_d, batch, max_len=self.table_max_len,
+                window_headroom=self._chunk)
         self._admissions += 1
         k_admit = jax.random.fold_in(state["key"], self._admissions)
         prefetch, d_prob0, _ = self._bootstrap(d_logits, k_admit)
@@ -709,13 +794,17 @@ class SPOrchestrator:
                 rep.busy_seconds += wall_s
                 om.busy_seconds.labels(replica=rep.replica).inc(wall_s)
             om.rollbacks.inc(int(rej[mask & had].sum()))
+            om.sibling_accepts.inc(
+                int(np.asarray(state["sib_acc"])[mask & had].sum()))
 
     # ------------------------------------------------------------ event log
     def _log_tick(self, tick, unfinished, had, rej, rej_win, alive_win,
-                  n_out) -> None:
+                  n_out, prev_out) -> None:
         """Append this tick's scheduler events per stream, in the exact
         order ``scheduler.replay_ticks`` emits them (task id of window j
-        drafted at tick T = (T-1)·R + j)."""
+        drafted at tick T = (T-1)·R + j). COMMIT events carry the
+        accepted root-path length: the stream's emitted delta this tick
+        (spine prefix + correction + tree bonus token)."""
         r = self.sp
         for i, log in enumerate(self.events):
             if not unfinished[i]:
@@ -731,7 +820,8 @@ class SPOrchestrator:
                     log.append(Event(tick, COMPLETE, pend + j, replica=j))
                 else:
                     log.append(Event(tick, PREEMPT, pend + j, replica=j))
-            log.append(Event(tick, COMMIT, position=int(n_out[i])))
+            log.append(Event(tick, COMMIT, position=int(n_out[i]),
+                             path_len=int(n_out[i] - prev_out[i])))
             if rej[i]:
                 for j in range(r):
                     log.append(Event(tick, PREEMPT, base + j, replica=j))

@@ -45,12 +45,17 @@ class Event:
     """One scheduler event. ``task`` is the verify-task id (the global
     drafted-window index in the tick domain; -1 for commits), ``position``
     the last confirmed/covered token position, ``replica`` the verifier
-    replica id (-1 where not applicable)."""
+    replica id (-1 where not applicable). COMMIT events additionally
+    carry ``path_len``: the length of the root-path committed by that
+    event (the stream's emitted delta — spine prefix + correction +
+    tree bonus token; -1 on non-commit events and continuous-time
+    schedules, which commit per position)."""
     time: float
     kind: str
     task: int = -1
     position: int = -1
     replica: int = -1
+    path_len: int = -1
 
 
 @dataclass
@@ -171,7 +176,9 @@ def schedule_pool(target_latency: float, drafter_latency: float,
 
 
 def replay_ticks(accept: Sequence[bool], lookahead: int, sp: int,
-                 n_tokens: int) -> TickSchedule:
+                 n_tokens: int, *, tree_width: int = 1,
+                 sib_accept: Optional[Sequence[bool]] = None
+                 ) -> TickSchedule:
     """Tick-domain replay of the SP orchestrator's scheduler.
 
     One tick = the drafter drafts ``sp`` lookahead-windows while the
@@ -183,9 +190,19 @@ def replay_ticks(accept: Sequence[bool], lookahead: int, sp: int,
     The accept trace is consumed one draw per *live, non-forced* draft
     position — the same consumption order for every ``sp``, which is why
     emitted tokens are sp-invariant (tests pin this).
+
+    ``tree_width > 1`` models token-tree speculation (core/tree.py): each
+    rejection additionally consumes one ``sib_accept`` draw (in rejection
+    order; exhaustion => no sibling). A sibling accept still costs the
+    bubble, but the rejecting tick emits TWO tokens — the sibling
+    correction plus its bonus — and both re-enter the next live window as
+    forced positions. COMMIT events carry ``path_len`` = the tick's
+    emitted delta, matching ``SPOrchestrator._log_tick``.
     """
     assert sp >= 1 and lookahead >= 1 and n_tokens >= 0
+    assert tree_width >= 1
     draw = _make_draw(accept)
+    sib_draw = _make_draw(sib_accept if tree_width > 1 else [])
     w, r = lookahead, sp
     ticks = emitted = 0
     have = False
@@ -199,6 +216,7 @@ def replay_ticks(accept: Sequence[bool], lookahead: int, sp: int,
 
     while emitted < n_tokens:
         ticks += 1
+        emitted0 = emitted
         # draft this tick's block (one op per window, replica j <- window j)
         drafting = list(range(next_op, next_op + r))
         next_op += r
@@ -206,6 +224,7 @@ def replay_ticks(accept: Sequence[bool], lookahead: int, sp: int,
             events.append(Event(ticks, SPAWN, op, replica=j))
 
         rejected = False
+        sib = False
         if have:
             dead_from = r          # first dead window index in the block
             for j, op in enumerate(pending):
@@ -222,11 +241,15 @@ def replay_ticks(accept: Sequence[bool], lookahead: int, sp: int,
                         emitted += 1                 # the correction token
                         rejected = True
                         dead_from = j + 1
+                        if tree_width > 1 and sib_draw():
+                            emitted += 1             # sibling bonus token
+                            sib = True
                         break
                 events.append(Event(ticks, COMPLETE, op, replica=j))
                 verified[j] += 1
             commits.append((ticks, emitted))
-            events.append(Event(ticks, COMMIT, position=emitted))
+            events.append(Event(ticks, COMMIT, position=emitted,
+                                path_len=emitted - emitted0))
             if rejected:
                 # this tick's drafts continue dead speculation: preempt
                 # them as schedule events — but they never reached a
@@ -236,7 +259,7 @@ def replay_ticks(accept: Sequence[bool], lookahead: int, sp: int,
                 for j, op in enumerate(drafting):
                     events.append(Event(ticks, PREEMPT, op, replica=j))
                 have = False
-                forced = 1
+                forced = 2 if sib else 1
                 pending = []
             else:
                 forced = 0
@@ -252,9 +275,12 @@ def replay_ticks(accept: Sequence[bool], lookahead: int, sp: int,
 
 
 def steps_to_tokens(accept: Sequence[bool], lookahead: int, sp: int,
-                    n_tokens: int) -> int:
+                    n_tokens: int, *, tree_width: int = 1,
+                    sib_accept: Optional[Sequence[bool]] = None) -> int:
     """Ticks the SP orchestrator needs to emit ``n_tokens`` on a given
     accept trace — monotonically non-increasing in ``sp`` (property-
     tested): a bigger replica pool verifies more windows per tick and a
-    rejection still costs exactly one bubble."""
-    return replay_ticks(accept, lookahead, sp, n_tokens).ticks
+    rejection still costs exactly one bubble. Tree kwargs as in
+    :func:`replay_ticks` — sibling accepts can only shorten the run."""
+    return replay_ticks(accept, lookahead, sp, n_tokens,
+                        tree_width=tree_width, sib_accept=sib_accept).ticks

@@ -94,6 +94,11 @@ class ServingEngine:
     mode: str = "dsi"
     lookahead: int = 8
     rule: str = "exact"
+    # token-tree speculation (core/tree.py, docs/orchestrator.md): > 1
+    # verifies tree_width-1 sibling candidates per draft position in the
+    # same chunk forward; a rejection rescued by a sibling emits the
+    # sibling plus a bonus token. Width 1 is exactly the flat engine.
+    tree_width: int = 1
     max_batch: int = 8
     history_cap: int = 256       # per-request EngineStats.history bound
     # paged-KV serving (docs/cache.md): block-table caches + prefix reuse.
@@ -162,7 +167,9 @@ class ServingEngine:
             # (verify window + drafter prefetch); SP serving multiplies the
             # in-flight window by sp_degree; plain decode does not
             sp = self.sp_degree if self.mode == "dsi" else 1
-            slack = 0 if self.mode == "nonsi" else 2 * sp * self.lookahead + 2
+            tw = self.tree_width if self.mode == "dsi" else 1
+            slack = 0 if self.mode == "nonsi" \
+                else 2 * sp * self.lookahead * tw + 2
             models = [self.target] + ([self.drafter]
                                       if self.drafter is not None else [])
             if any(m.has_unbounded_cache for m in models):
@@ -256,11 +263,13 @@ class ServingEngine:
 
         w = self.lookahead
         wn = w * sp
+        cn = wn * self.tree_width      # verify chunk incl. tree siblings
         n_slots = min(self.max_batch, len(self._queue))
-        cap = max(max(r.remaining_new() for r in self._queue), 1) + wn + 1
+        cap = max(max(r.remaining_new() for r in self._queue), 1) + wn + 1 \
+            + (1 if self.tree_width > 1 else 0)
         max_len = self.max_len or (
             max(len(r.effective_prompt()) for r in self._queue)
-            + max(r.remaining_new() for r in self._queue) + 2 * wn + 2)
+            + max(r.remaining_new() for r in self._queue) + 2 * cn + 2)
         if bucket:
             cap = self._geom_bucket(cap)
             if self.max_len is None:
@@ -268,9 +277,12 @@ class ServingEngine:
         state = eng.init_slots(n_slots, cap, max_len)
         mgr = None
         if self.paged is not None:
+            # the manager sizes per-slot ring headroom as lookahead·sp;
+            # tree siblings ride the same chunk, so fold tree_width into
+            # the per-window length (no manager API change)
             mgr = CacheManager(self.target, self.drafter, self.paged,
                                n_slots=n_slots, max_len=max_len,
-                               lookahead=w, sp=sp,
+                               lookahead=w * self.tree_width, sp=sp,
                                prefix_sharing=self.prefix_sharing)
             self.cache_manager = mgr
 
@@ -651,7 +663,8 @@ class ServingEngine:
             eng = SPOrchestrator(
                 self.target, self.drafter, lookahead=self.lookahead,
                 sp=sp, rule=self.rule, paged=self.paged,
-                mesh=self.mesh, history_cap=self.history_cap)
+                mesh=self.mesh, history_cap=self.history_cap,
+                tree_width=self.tree_width)
             self._sp_engines[sp] = eng
         return eng
 
@@ -757,9 +770,12 @@ class ServingEngine:
         run() calls, so repeated serving rounds with the same geometry
         never recompile the macro-step."""
         if self._engine is None or type(self._engine) is not cls:
+            kw = {}
+            if cls is DSIEngine and self.tree_width > 1:
+                kw["tree_width"] = self.tree_width
             self._engine = cls(self.target, self.drafter,
                                lookahead=self.lookahead, rule=self.rule,
-                               paged=self.paged)
+                               paged=self.paged, **kw)
         return self._engine
 
     def _run_spec(self, req: Request):

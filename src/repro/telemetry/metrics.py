@@ -80,6 +80,11 @@ def orchestrator_metrics(reg: MetricsRegistry = None) -> SimpleNamespace:
         rollbacks=reg.counter(
             "dsi_rollbacks_total",
             "rejection rollbacks (block + drafter rewind)"),
+        sibling_accepts=reg.counter(
+            "dsi_sibling_accepts_total",
+            "rejections rescued by a token-tree sibling (tree "
+            "speculation, core/tree.py): the step still bubbles but "
+            "emits the sibling and its bonus token"),
         windows=reg.counter(
             "dsi_replica_windows_total",
             "verify windows per replica by outcome",

@@ -236,3 +236,108 @@ def test_dsi_leviathan_with_kernels_forced(rng):
     arr = np.asarray(out)
     assert arr.shape == (1, 10)
     assert ((0 <= arr) & (arr < cfg_t.vocab_size)).all()
+
+
+# ------------------------------------------------------ token-tree chunks
+@pytest.mark.parametrize("impl", ["kernel", "fallback"])
+@pytest.mark.parametrize("nt,depth,width", [(2, 4, 2), (1, 4, 3), (1, 1, 4)])
+def test_ring_decode_tree_chunk(impl, nt, depth, width, rng):
+    """Tree-masked verify chunks (core/tree.py) vs the oracle, including
+    the single-node tree (ns == depth == 1: every row but the root is a
+    sibling of the root). Wrapped + mid-fill per-stream positions."""
+    ns = nt * depth
+    tree = (ns, depth, width)
+    b, h, kv, d, s = 2, 4, 2, 64, 96
+    w = ns * width
+    pos = jnp.array([s + 5, 17], jnp.int32)
+    q, k, v, slot = _inputs(rng, b, w, h, kv, d, s, jnp.float32, pos)
+    if impl == "kernel":
+        out = ring_decode_attention(q, k, v, slot, pos, tree=tree,
+                                    interpret=True)
+    else:
+        out = ring_decode_ref(q, k, v, slot, pos, tree=tree)
+    ref = attention_ref(q, k, v, causal=True, q_offset=pos,
+                        kv_positions=slot, tree=tree)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["kernel", "fallback"])
+def test_ring_decode_tree_sq_equals_window(impl, rng):
+    """Edge shape: the tree chunk exactly fills the sliding window
+    (Sq == window) — the window bound applies around *true* positions,
+    so sibling rows keep the same live span as their spine depth."""
+    nt, depth, width = 2, 2, 2
+    ns = nt * depth
+    tree = (ns, depth, width)
+    b, h, kv, d, s = 2, 4, 2, 64, 40
+    w = ns * width
+    win = w                                       # Sq == window
+    pos = jnp.array([s + 7, 19], jnp.int32)
+    q, k, v, slot = _inputs(rng, b, w, h, kv, d, s, jnp.float32, pos)
+    if impl == "kernel":
+        out = ring_decode_attention(q, k, v, slot, pos, window=win,
+                                    tree=tree, interpret=True)
+    else:
+        out = ring_decode_ref(q, k, v, slot, pos, window=win, tree=tree)
+    ref = attention_ref(q, k, v, causal=True, window=win, q_offset=pos,
+                        kv_positions=slot, tree=tree)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["kernel", "fallback"])
+@pytest.mark.parametrize("h,kv", [(4, 4), (1, 1)])
+def test_ring_decode_tree_gqa_group_one(impl, h, kv, rng):
+    """Edge shape: GQA group size 1 with a tree chunk — the packed M-dim
+    is exactly the ns*width tree rows, no head replication."""
+    tree = (4, 2, 2)
+    b, d, s = 2, 64, 96
+    w = 4 * 2
+    pos = jnp.array([s + 3, 21], jnp.int32)
+    q, k, v, slot = _inputs(rng, b, w, h, kv, d, s, jnp.float32, pos)
+    if impl == "kernel":
+        out = ring_decode_attention(q, k, v, slot, pos, tree=tree,
+                                    interpret=True)
+    else:
+        out = ring_decode_ref(q, k, v, slot, pos, tree=tree)
+    ref = attention_ref(q, k, v, causal=True, q_offset=pos,
+                        kv_positions=slot, tree=tree)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", ["kernel", "fallback"])
+def test_paged_decode_tree_page_edge_wrap(impl, rng):
+    """Edge shape: a tree chunk whose slots straddle a page boundary on a
+    ring-wrapped stream (the chunk's virtual slots cross pages mid-tree),
+    vs the oracle on the gathered dense view."""
+    from repro.cache.paged import gather_pages
+    from repro.kernels.flash_attention.ring_decode import (
+        paged_decode_attention, paged_decode_ref)
+    nt, depth, width = 2, 3, 2
+    ns = nt * depth
+    tree = (ns, depth, width)
+    b, h, kv, d, page, n_pages = 2, 4, 2, 64, 16, 6
+    w = ns * width                                # 12 rows: crosses a page
+    s = page * n_pages
+    # stream 0 wraps the ring; stream 1's chunk starts 3 slots before a
+    # page edge, so the tree's sibling section lands on the next page
+    pos = jnp.array([s + 5, 2 * page - 3], jnp.int32)
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (b, w, h, d))
+    pool = 1 + b * n_pages
+    kp = jax.random.normal(ks[1], (pool, page, kv, d))
+    vp = jax.random.normal(ks[2], (pool, page, kv, d))
+    bt = 1 + jnp.arange(n_pages)[None] * b + jnp.arange(b)[:, None]
+    slot = ring_slot_map(pos + w, s)
+    ref = attention_ref(q, gather_pages(kp, bt), gather_pages(vp, bt),
+                        causal=True, q_offset=pos, kv_positions=slot,
+                        tree=tree)
+    if impl == "kernel":
+        out = paged_decode_attention(q, kp, vp, bt, slot, pos, tree=tree,
+                                     interpret=True)
+    else:
+        out = paged_decode_ref(q, kp, vp, bt, slot, pos, tree=tree)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)

@@ -53,8 +53,8 @@ def matrix():
     memo = {}
 
     def cell(engine: str, cache: str = "dense", backend: str = "jnp",
-             rule: str = "greedy") -> np.ndarray:
-        k = (engine, cache, backend, rule)
+             rule: str = "greedy", tree: int = 1) -> np.ndarray:
+        k = (engine, cache, backend, rule, tree)
         if k in memo:
             return memo[k]
         paged = PS if cache == "paged" else None
@@ -65,20 +65,22 @@ def matrix():
             if backend == "kernel" else contextlib.nullcontext()
         with ctx:
             if engine == "nonsi":
-                assert cache == "dense" and rule == "greedy"
+                assert cache == "dense" and rule == "greedy" and tree == 1
                 out = nonsi_generate(mt, pt, prompt, N_NEW)
             elif engine == "si":
+                assert tree == 1
                 out, _ = SIEngine(mt, md, lookahead=4, rule=vrule,
                                   paged=paged).generate(
                     pt, pd, prompt, N_NEW, key=key)
             elif engine == "dsi":
                 out, _ = DSIEngine(mt, md, lookahead=4, rule=vrule,
-                                   paged=paged).generate(
+                                   paged=paged, tree_width=tree).generate(
                     pt, pd, prompt, N_NEW, key=key)
             elif engine in ("dsi_r1", "dsi_r4"):
                 out, _ = SPOrchestrator(mt, md, lookahead=4,
                                         sp=4 if engine == "dsi_r4" else 1,
-                                        rule=vrule, paged=paged).generate(
+                                        rule=vrule, paged=paged,
+                                        tree_width=tree).generate(
                     pt, pd, prompt, N_NEW, key=key)
             else:  # pragma: no cover
                 raise AssertionError(engine)
@@ -186,6 +188,89 @@ def test_mid_admit_continuous_equals_drain_and_reference(matrix, cache):
     assert eng_cont.engine_invocations > 0
     assert sum(r.windows_verified + r.windows_preempted
                for r in eng_cont.replica_stats) > 0
+
+
+# ------------------------------------------------------ token-tree cells
+@pytest.mark.parametrize("backend", ["jnp", "kernel"])
+@pytest.mark.parametrize("cache", ["dense", "paged"])
+@pytest.mark.parametrize("engine,tree", [("dsi", 2), ("dsi_r1", 2),
+                                         ("dsi_r4", 2), ("dsi_r4", 3)])
+def test_greedy_tree_matrix_matches_reference(matrix, engine, tree, cache,
+                                              backend):
+    """Token-tree speculation under the exact rule is token-identical to
+    the non-SI greedy reference at any width — the tree only ever
+    *rescues* rejections with the token greedy decoding would have
+    emitted anyway (docs/orchestrator.md §8)."""
+    ref = matrix("nonsi")
+    out = matrix(engine, cache, backend, "greedy", tree)
+    assert np.array_equal(out, ref), (engine, tree, cache, backend)
+
+
+@pytest.mark.parametrize("cache", ["dense", "paged"])
+@pytest.mark.parametrize("engine", ["dsi", "dsi_r1", "dsi_r4"])
+def test_tree_width1_is_flat_bitwise(matrix, engine, cache):
+    """Width 1 routes through the flat engine path: bit-identical streams
+    under seeded sampling (the degenerate-tree regression pin at the
+    engine level)."""
+    a = matrix(engine, cache, "jnp", "seeded", 1)
+    b = matrix(engine, cache, "jnp", "seeded")
+    assert np.array_equal(a, b), (engine, cache)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "kernel"])
+@pytest.mark.parametrize("engine", ["dsi", "dsi_r1", "dsi_r4"])
+def test_seeded_tree_paged_equals_dense(matrix, engine, backend):
+    """Cache layout must never leak into tree sampling either: paged ==
+    dense token-for-token at width 2 on the same backend."""
+    a = matrix(engine, "dense", backend, "seeded", 2)
+    b = matrix(engine, "paged", backend, "seeded", 2)
+    assert np.array_equal(a, b), (engine, backend)
+
+
+@pytest.mark.parametrize("cache", ["dense", "paged"])
+def test_seeded_tree_sp_degree_invariant(matrix, cache):
+    """Speculation parallelism never changes the tree-sampled stream:
+    R=4 == R=1 at width 2 (same per-stream key chain, whichever window
+    the rejection lands in)."""
+    a = matrix("dsi_r4", cache, "jnp", "seeded", 2)
+    b = matrix("dsi_r1", cache, "jnp", "seeded", 2)
+    assert a.shape == (1, N_NEW)
+    assert np.array_equal(a, b), cache
+
+
+@pytest.mark.parametrize("cache", ["dense", "paged"])
+def test_mid_admit_tree_equals_drain_and_reference(matrix, cache):
+    """The continuous-serving mid-tick-admission cell with token trees:
+    tree_width=2 SP serving — requests admitted into the running tick —
+    stays token-identical to drain-then-refill AND to the non-SI greedy
+    reference, dense and paged."""
+    import jax.numpy as jnp
+
+    from repro.serving.engine import ServingEngine
+
+    mt, md, pt, pd = matrix.models
+    rs = np.random.default_rng(2)
+    reqs = [(rs.integers(0, matrix.vocab,
+                         size=int(rs.integers(6, 11))).tolist(),
+             int(rs.integers(4, 9))) for _ in range(5)]
+    paged = PS if cache == "paged" else None
+
+    def run(admission):
+        eng = ServingEngine(target=mt, params_t=pt, drafter=md, params_d=pd,
+                            mode="dsi", lookahead=4, max_batch=2,
+                            sp_degree=2, tree_width=2, admission=admission,
+                            paged=paged)
+        for p, m in reqs:
+            eng.submit(p, m)
+        return {r.rid: r.output for r in eng.run()}
+
+    cont = run("continuous")
+    drain = run("drain")
+    assert cont == drain, cache
+    for rid, (p, m) in enumerate(reqs):
+        ref = np.asarray(nonsi_generate(
+            mt, pt, jnp.asarray(p, jnp.int32)[None], m))[0, :m]
+        assert cont[rid] == ref.tolist(), (cache, rid)
 
 
 # --------------------------------------------------------- chaos cells

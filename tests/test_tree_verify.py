@@ -1,0 +1,534 @@
+"""Property suite for token-tree speculation (core/tree.py): the
+tree-lossless contract that pins the tentpole.
+
+Properties (docs/orchestrator.md §8, docs/kernels.md §tree-masking):
+
+  * a degenerate tree (siblings that can never be accepted) is
+    bit-identical to the flat verify rules under both ``exact`` and
+    ``leviathan``, across seeds — the spine chain consumes exactly the
+    flat draws;
+  * committed tokens always form a root path: the accepted spine prefix
+    plus (on a sibling accept) a child of the last accepted node;
+  * acceptance is invariant to sibling order (leviathan walks residual
+    masses in canonical token-id order; exact matches a unique token);
+  * the kernels' iota/true-offset mask arithmetic reproduces the dense
+    parent-pointer oracle ``ancestor_mask_dense`` for random tree
+    shapes, and the attention twins agree under tree masking;
+  * the first emitted token's distribution under the leviathan tree
+    rule is the target distribution (the mixture decomposition in
+    core/tree.py's docstring, checked empirically);
+  * the scheduler/simulator twins (``replay_ticks`` / ``steps_to_tokens``
+    / ``simulate_dsi_pool``) keep their flat behaviour at width 1 (the
+    regression pin) and model sibling accepts as strictly-helpful
+    two-token rejections, and the realized SPOrchestrator event log —
+    COMMIT ``path_len`` included — equals the tick replay on the
+    realized accept + sibling traces.
+
+``hypothesis`` is optional (CI deliberately omits it): deterministic
+grids cover every property on fixed seeds either way.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny
+from repro.core.dsi_sim import simulate_dsi_pool
+from repro.core.tree import (ancestor_mask_dense, assemble_chunk,
+                             batched_tree_verify, exact_tree_verify,
+                             leviathan_tree_verify, sibling_candidates,
+                             tree_chunk_len, tree_parents, true_offsets)
+from repro.core.verify import exact_verify, leviathan_verify
+from repro.models.model import Model
+from repro.orchestrator import COMMIT, SPOrchestrator, replay_ticks, \
+    steps_to_tokens
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _dists(seed: int, k: int, v: int, width: int, reserve0: bool = False):
+    """Random drafter/target distributions + a drafted window + sibling
+    candidates. ``reserve0=True`` gives token 0 zero mass under both
+    models and makes every sibling token 0 — a tree whose branches can
+    never be accepted (the degenerate single-path tree)."""
+    rng = np.random.default_rng(seed)
+    wp = rng.random((k, v)) + 1e-3
+    tp = rng.random((k + 1, v)) + 1e-3
+    if reserve0:
+        wp[:, 0] = 0.0
+        tp[:, 0] = 0.0
+    wp /= wp.sum(-1, keepdims=True)
+    tp /= tp.sum(-1, keepdims=True)
+    lo = 1 if reserve0 else 0
+    window = rng.integers(lo, v, size=k)
+    if reserve0:
+        sib = np.zeros((k, width - 1), np.int64)
+    else:
+        # distinct sibling tokens per position, spine token excluded
+        sib = np.stack([rng.choice([t for t in range(v) if t != window[i]],
+                                   size=width - 1, replace=False)
+                        for i in range(k)])
+    sib_rows = rng.random((k, width - 1, v)) + 1e-3
+    sib_rows /= sib_rows.sum(-1, keepdims=True)
+    return (jnp.asarray(window, jnp.int32), jnp.asarray(wp, jnp.float32),
+            jnp.asarray(tp, jnp.float32), jnp.asarray(sib, jnp.int32),
+            jnp.asarray(sib_rows, jnp.float32))
+
+
+# ---------------------------------------------------------------- layout
+def check_layout(n_trees: int, depth: int, width: int):
+    """true_offsets/tree_parents/assemble_chunk agree with the documented
+    spine-first index formula: sibling i of depth d in tree j sits at
+    chunk index ns + j·D·(width-1) + d·(width-1) + i, with true offset
+    j·D + d (its depth's spine offset) and parent offset one below."""
+    ns = n_trees * depth
+    tree = (ns, depth, width)
+    assert tree_chunk_len(tree) == ns * width
+    off = true_offsets(tree)
+    par = tree_parents(tree)
+    assert off.shape == (ns * width,)
+    np.testing.assert_array_equal(off[:ns], np.arange(ns))
+    np.testing.assert_array_equal(par, off - 1)
+    m1 = width - 1
+    for j in range(n_trees):
+        for d in range(depth):
+            for i in range(m1):
+                q = ns + j * depth * m1 + d * m1 + i
+                assert off[q] == j * depth + d, (j, d, i)
+    # assemble_chunk realizes the same order
+    spine = jnp.arange(ns)[None] * 10
+    sibs = (jnp.arange(ns * m1).reshape(1, ns, m1) + 1000)
+    chunk = assemble_chunk(spine, sibs)
+    assert chunk.shape == (1, ns * width)
+    np.testing.assert_array_equal(np.asarray(chunk[0, :ns]),
+                                  np.asarray(spine[0]))
+    for j in range(n_trees):
+        for d in range(depth):
+            for i in range(m1):
+                q = ns + j * depth * m1 + d * m1 + i
+                assert chunk[0, q] == sibs[0, j * depth + d, i]
+
+
+def check_mask_matches_dense(n_trees: int, depth: int, width: int):
+    """The kernels' unified rule — key k visible to row q iff
+    k < true_off(q) (ancestor) or k == q (self), over chunk-internal
+    indices — equals the parent-pointer oracle."""
+    ns = n_trees * depth
+    tree = (ns, depth, width)
+    n = ns * width
+    off = true_offsets(tree)
+    qi = np.arange(n)[:, None]
+    ki = np.arange(n)[None, :]
+    rule = (ki < off[:, None]) | (ki == qi)
+    np.testing.assert_array_equal(rule, ancestor_mask_dense(tree))
+
+
+TREE_SHAPES = [(1, 1, 2), (1, 4, 2), (2, 4, 2), (2, 4, 3),
+               (4, 2, 4), (1, 3, 5), (3, 3, 3)]
+
+
+@pytest.mark.parametrize("nt,depth,width", TREE_SHAPES)
+def test_layout_grid(nt, depth, width):
+    check_layout(nt, depth, width)
+
+
+@pytest.mark.parametrize("nt,depth,width", TREE_SHAPES)
+def test_mask_matches_dense_reference_grid(nt, depth, width):
+    check_mask_matches_dense(nt, depth, width)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(nt=st.integers(1, 5), depth=st.integers(1, 6),
+           width=st.integers(2, 5))
+    def test_layout(nt, depth, width):
+        check_layout(nt, depth, width)
+
+    @settings(max_examples=60, deadline=None)
+    @given(nt=st.integers(1, 5), depth=st.integers(1, 6),
+           width=st.integers(2, 5))
+    def test_mask_matches_dense_reference(nt, depth, width):
+        check_mask_matches_dense(nt, depth, width)
+
+
+@pytest.mark.parametrize("nt,depth,width", [(1, 3, 2), (2, 3, 3), (2, 2, 4)])
+def test_attention_twins_agree_under_tree_mask(nt, depth, width, rng):
+    """attention_ref (oracle) and ring_decode_ref (packed-GEMM twin)
+    produce the same output for a tree-masked verify chunk over a ring
+    cache, and the oracle equals a from-scratch softmax using the dense
+    ancestor-mask oracle — three independent realizations of the mask."""
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.kernels.flash_attention.ring_decode import ring_decode_ref
+    ns = nt * depth
+    tree = (ns, depth, width)
+    n = ns * width
+    pos, h, kv, d = 7, 4, 2, 16
+    s = pos + n
+    keys = jax.random.split(rng, 3)
+    q = jax.random.normal(keys[0], (1, n, h, d), jnp.float32)
+    k = jax.random.normal(keys[1], (1, s, kv, d), jnp.float32)
+    v = jax.random.normal(keys[2], (1, s, kv, d), jnp.float32)
+    slot_pos = jnp.arange(s)[None, :]
+
+    ref = attention_ref(q, k, v, causal=True, q_offset=pos,
+                        kv_positions=slot_pos, tree=tree)
+    ring = ring_decode_ref(q, k, v, slot_pos, jnp.array([pos]), tree=tree)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(ring),
+                               rtol=2e-5, atol=2e-5)
+
+    # dense oracle: committed prefix always visible, chunk-internal
+    # visibility straight from ancestor_mask_dense
+    amask = ancestor_mask_dense(tree)
+    full = np.zeros((n, s), bool)
+    full[:, :pos] = True
+    full[:, pos:] = amask
+    g = h // kv
+    qg = np.asarray(q).reshape(1, n, kv, g, d)
+    scores = np.einsum("bqkgd,bskd->bkgqs", qg, np.asarray(k)) / np.sqrt(d)
+    scores = np.where(full[None, None, None], scores, -1e30)
+    p = np.exp(scores - scores.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True) + 1e-30
+    oracle = np.einsum("bkgqs,bskd->bqkgd", p,
+                       np.asarray(v)).reshape(1, n, h, d)
+    np.testing.assert_allclose(np.asarray(ref), oracle, rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------- degenerate = flat rules
+def check_degenerate_exact(seed, k, v, width):
+    window, wp, tp, sib, sib_rows = _dists(seed, k, v, width, reserve0=True)
+    n_flat, nxt_flat = exact_verify(window, tp)
+    n_tree, sacc, tok_a, tok_b = exact_tree_verify(window, tp, sib, sib_rows)
+    assert int(n_tree) == int(n_flat)
+    assert not bool(sacc)
+    assert int(tok_a) == int(nxt_flat)
+
+
+def check_degenerate_leviathan(seed, k, v, width):
+    window, wp, tp, sib, sib_rows = _dists(seed, k, v, width, reserve0=True)
+    key = jax.random.PRNGKey(seed)
+    n_flat, nxt_flat = leviathan_verify(key, window, wp, tp)
+    n_tree, sacc, tok_a, tok_b = leviathan_tree_verify(
+        key, window, wp, tp, sib, sib_rows)
+    # zero-residual-mass siblings: the no-sibling branch's struck-out
+    # residual equals the flat residual, so the whole decision is
+    # bit-identical (same key splits, same categorical)
+    assert int(n_tree) == int(n_flat)
+    assert not bool(sacc)
+    assert int(tok_a) == int(nxt_flat)
+
+
+DEGEN_GRID = [(s, k, v, w) for s in (0, 1, 2, 3, 4, 5, 6, 7)
+              for k, v, w in [(4, 11, 2), (1, 5, 3), (6, 7, 4)]]
+
+
+@pytest.mark.parametrize("seed,k,v,width", DEGEN_GRID)
+def test_degenerate_tree_is_flat_exact_grid(seed, k, v, width):
+    check_degenerate_exact(seed, k, v, width)
+
+
+@pytest.mark.parametrize("seed,k,v,width", DEGEN_GRID)
+def test_degenerate_tree_is_flat_leviathan_grid(seed, k, v, width):
+    check_degenerate_leviathan(seed, k, v, width)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 10_000), k=st.integers(1, 8),
+           v=st.integers(3, 16), width=st.integers(2, 4))
+    def test_degenerate_tree_is_flat(seed, k, v, width):
+        check_degenerate_exact(seed, k, v, width)
+        check_degenerate_leviathan(seed, k, v, width)
+
+
+# ------------------------------------------------------ root-path commit
+def check_root_path(seed, k, v, width, rule):
+    window, wp, tp, sib, sib_rows = _dists(seed, k, v, width)
+    b = 8
+    stack = lambda x: jnp.stack([x] * b)            # noqa: E731
+    seeds = jnp.arange(b)
+
+    def one(i):
+        w2, wp2, tp2, s2, sr2 = _dists(seed * 131 + int(i), k, v, width)
+        return w2, wp2, tp2, s2, sr2
+    cols = [one(i) for i in range(b)]
+    window = jnp.stack([c[0] for c in cols])
+    wp = jnp.stack([c[1] for c in cols])
+    tp = jnp.stack([c[2] for c in cols])
+    sib = jnp.stack([c[3] for c in cols])
+    sib_rows = jnp.stack([c[4] for c in cols])
+    del stack, seeds
+    n_acc, sacc, tok_a, tok_b = batched_tree_verify(
+        jax.random.PRNGKey(seed), window, wp, tp, sib, sib_rows, rule=rule)
+    n_acc, sacc = np.asarray(n_acc), np.asarray(sacc)
+    tok_a, tok_b = np.asarray(tok_a), np.asarray(tok_b)
+    assert ((0 <= n_acc) & (n_acc <= k)).all()
+    for i in range(b):
+        if sacc[i]:
+            # the committed path is spine[:n_acc] + a CHILD of the last
+            # accepted node: tok_a must be one of depth n_acc's siblings
+            assert n_acc[i] < k
+            assert tok_a[i] in np.asarray(sib[i, n_acc[i]]), (i, tok_a[i])
+            if rule == "exact":
+                assert tok_a[i] == int(np.argmax(tp[i, n_acc[i]]))
+                assert tok_b[i] == int(np.argmax(
+                    sib_rows[i, n_acc[i],
+                             list(np.asarray(sib[i, n_acc[i]])).index(
+                                 tok_a[i])]))
+        elif rule == "exact":
+            j = min(int(n_acc[i]), k)
+            assert tok_a[i] == int(np.argmax(tp[i, j]))
+    return int(sacc.sum())
+
+
+@pytest.mark.parametrize("rule", ["exact", "leviathan"])
+@pytest.mark.parametrize("seed,k,v,width", [(0, 4, 5, 2), (1, 3, 4, 3),
+                                            (2, 5, 6, 4), (3, 2, 3, 2)])
+def test_commit_is_root_path(seed, k, v, width, rule):
+    check_root_path(seed, k, v, width, rule)
+
+
+@pytest.mark.parametrize("rule", ["exact", "leviathan"])
+def test_sibling_accepts_do_fire(rule):
+    """The root-path checks are vacuous unless sibling accepts actually
+    occur: across the seed grid, small vocabs make them common."""
+    fired = sum(check_root_path(s, 3, 4, 3, rule) for s in range(8))
+    assert fired > 0
+
+
+# ---------------------------------------------- sibling-order invariance
+def check_order_invariance(seed, k, v, width, rule):
+    window, wp, tp, sib, sib_rows = _dists(seed, k, v, width)
+    key = jax.random.PRNGKey(seed)
+    perm = np.random.default_rng(seed + 99).permutation(width - 1)
+    sib_p = sib[:, perm]
+    sib_rows_p = sib_rows[:, perm]
+    if rule == "exact":
+        a = exact_tree_verify(window, tp, sib, sib_rows)
+        bq = exact_tree_verify(window, tp, sib_p, sib_rows_p)
+    else:
+        a = leviathan_tree_verify(key, window, wp, tp, sib, sib_rows)
+        bq = leviathan_tree_verify(key, window, wp, tp, sib_p, sib_rows_p)
+    for x, y in zip(a, bq):
+        assert int(x) == int(y), (rule, perm)
+
+
+ORDER_GRID = [(s, k, v, w) for s in range(10)
+              for k, v, w in [(4, 6, 3), (3, 5, 4), (5, 8, 5)]]
+
+
+@pytest.mark.parametrize("rule", ["exact", "leviathan"])
+@pytest.mark.parametrize("seed,k,v,width", ORDER_GRID)
+def test_sibling_order_invariance_grid(seed, k, v, width, rule):
+    check_order_invariance(seed, k, v, width, rule)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 10_000), k=st.integers(1, 6),
+           v=st.integers(4, 12), width=st.integers(3, 4))
+    def test_sibling_order_invariance(seed, k, v, width):
+        check_order_invariance(seed, k, v, width, "exact")
+        check_order_invariance(seed, k, v, width, "leviathan")
+
+
+# -------------------------------------------------- emitted distribution
+def test_leviathan_tree_first_token_follows_target():
+    """Lossless-as-distribution: with K=1 and the draft sampled from the
+    drafter (the speculative-sampling setting), the first emitted token
+    (the draft on accept, else tok_a — sibling or correction) must follow
+    the *target* distribution exactly; the sibling decomposition may not
+    distort it. Empirical TV distance over many keys."""
+    v = 6
+    _, wp, tp, _, sib_rows = _dists(11, 1, v, 3)
+    n = 20_000
+    keys = jax.random.split(jax.random.PRNGKey(42), n)
+
+    def draw(key):
+        kd, kv = jax.random.split(key)
+        x0 = jax.random.categorical(kd, jnp.log(wp[0] + 1e-30))[None]
+        sib = sibling_candidates(x0, wp, 3)
+        n_acc, sacc, tok_a, _ = leviathan_tree_verify(
+            kv, x0.astype(jnp.int32), wp, tp, sib, sib_rows)
+        return jnp.where(n_acc == 1, x0[0], tok_a)
+    toks = np.asarray(jax.vmap(draw)(keys))
+    emp = np.bincount(toks, minlength=v) / n
+    tv = 0.5 * np.abs(emp - np.asarray(tp[0])).sum()
+    assert tv < 0.02, (tv, emp, np.asarray(tp[0]))
+
+
+def test_sibling_candidates_are_topk_excluding_spine(rng):
+    probs = jax.random.dirichlet(rng, jnp.ones(9), (2, 4))
+    tokens = jnp.argsort(probs, axis=-1)[..., -2]    # 2nd-best as "draft"
+    sib = np.asarray(sibling_candidates(tokens, probs, 3))
+    p = np.asarray(probs)
+    t = np.asarray(tokens)
+    for bi in range(2):
+        for ki in range(4):
+            assert t[bi, ki] not in sib[bi, ki]
+            rest = sorted((x for x in range(9) if x != t[bi, ki]),
+                          key=lambda x: -p[bi, ki, x])
+            assert set(sib[bi, ki]) == set(rest[:2])
+
+
+# ------------------------------------------- scheduler / simulator twins
+def _trace(seed, n, p):
+    r = np.random.default_rng(seed)
+    return (r.random(n) < p).tolist()
+
+
+@pytest.mark.parametrize("seed,p,la,sp,n", [(0, 0.6, 4, 1, 20),
+                                            (1, 0.3, 3, 2, 24),
+                                            (2, 0.9, 4, 4, 30)])
+def test_replay_ticks_width1_is_flat(seed, p, la, sp, n):
+    """Regression pin: tree kwargs at width 1 (or an empty sibling trace)
+    leave the flat tick replay untouched — ticks, emitted and the full
+    event log, path_len included."""
+    trace = _trace(seed, 8 * n, p)
+    flat = replay_ticks(list(trace), la, sp, n)
+    w1 = replay_ticks(list(trace), la, sp, n, tree_width=1,
+                      sib_accept=[True] * 99)
+    none = replay_ticks(list(trace), la, sp, n, tree_width=2, sib_accept=[])
+    for other in (w1, none):
+        assert other.ticks == flat.ticks
+        assert other.emitted == flat.emitted
+        assert other.events == flat.events
+    assert sum(e.path_len for e in flat.events if e.kind == COMMIT) \
+        == flat.emitted
+
+
+@pytest.mark.parametrize("seed,p,la,sp,n", [(0, 0.5, 4, 1, 20),
+                                            (1, 0.2, 3, 2, 24),
+                                            (2, 0.8, 4, 4, 30),
+                                            (3, 0.0, 2, 2, 16)])
+def test_replay_ticks_siblings_only_help(seed, p, la, sp, n):
+    """Tree sibling accepts emit two tokens per rescued rejection, never
+    slow the replay down, and path_len stays the per-tick emitted delta."""
+    trace = _trace(seed, 8 * n, p)
+    flat = replay_ticks(list(trace), la, sp, n)
+    tree = replay_ticks(list(trace), la, sp, n, tree_width=2,
+                        sib_accept=[True] * (8 * n))
+    assert tree.ticks <= flat.ticks
+    assert tree.emitted >= n
+    commits = [e for e in tree.events if e.kind == COMMIT]
+    assert sum(e.path_len for e in commits) == tree.emitted
+    assert [e.position for e in commits] == \
+        list(np.cumsum([e.path_len for e in commits]))
+    assert steps_to_tokens(list(trace), la, sp, n, tree_width=2,
+                           sib_accept=[True] * (8 * n)) == tree.ticks
+    # all-reject + always-accepted siblings: every decision emits 2
+    if p == 0.0:
+        assert all(e.path_len == 2 for e in commits)
+
+
+@pytest.mark.parametrize("seed,p", [(0, 0.5), (1, 0.2), (2, 0.8)])
+def test_sim_pool_tree_flat_regression_and_bonus(seed, p):
+    """simulate_dsi_pool: width 1 / empty sibling trace reproduce the
+    flat run exactly; live sibling accepts reach N no later and with no
+    extra target forwards (the bonus rides the rejecting verify)."""
+    n, la, sp = 24, 4, 2
+    trace = _trace(seed, 8 * n, p)
+    flat = simulate_dsi_pool(1.0, 0.15, 0.0, la, sp, n, accept=list(trace))
+    w1 = simulate_dsi_pool(1.0, 0.15, 0.0, la, sp, n, accept=list(trace),
+                           tree_width=1, sib_accept=[True] * 99)
+    none = simulate_dsi_pool(1.0, 0.15, 0.0, la, sp, n, accept=list(trace),
+                             tree_width=2, sib_accept=[])
+    for other in (w1, none):
+        assert abs(other.latency - flat.latency) < 1e-12
+        assert other.timeline == flat.timeline
+        assert other.n_target_forwards == flat.n_target_forwards
+        assert other.n_drafter_forwards == flat.n_drafter_forwards
+    tree = simulate_dsi_pool(1.0, 0.15, 0.0, la, sp, n, accept=list(trace),
+                             tree_width=2, sib_accept=[True] * (8 * n))
+    assert tree.latency <= flat.latency + 1e-12
+    assert tree.n_target_forwards <= flat.n_target_forwards
+    assert max(c for _, c in tree.timeline) == n
+    # bonus confirmations share their correction's timestamp
+    times = {}
+    for t, c in tree.timeline:
+        times.setdefault(t, []).append(c)
+    assert any(len(cs) > 1 for cs in times.values()) or \
+        tree.latency == flat.latency
+
+
+# ------------------------------------------- engine <-> replay lockstep
+@pytest.fixture(scope="module")
+def tree_models():
+    cfg = tiny("yi-9b")
+    mt = Model(cfg)
+    pt = mt.init(jax.random.PRNGKey(0))
+    # mildly perturbed drafter: high acceptance with real rejections,
+    # close enough that the greedy target is often in the drafter's
+    # top-k — the regime where sibling accepts fire
+    noise = jax.tree_util.tree_map(
+        lambda x: x + 0.005 * jax.random.normal(
+            jax.random.PRNGKey(7), x.shape, x.dtype)
+        if x.dtype == jnp.float32 else x, pt)
+    return cfg, mt, pt, noise
+
+
+def _tree_trace_from_ticks(orch, stream):
+    """Realized accept + sibling-accept traces from the orchestrator's
+    tick log, in replay consumption order (the tree-aware extension of
+    test_orchestrator._trace_from_ticks: a sibling accept re-enters two
+    forced positions)."""
+    w, r = orch.w, orch.sp
+    trace, sibs = [], []
+    forced = 0
+    for rec in orch.tick_log:
+        if not rec["unfinished"][stream]:
+            break
+        if not rec["had_block"][stream]:
+            continue
+        rejd = bool(rec["rejected"][stream])
+        rw = int(rec["rej_win"][stream])
+        for j in range(r):
+            if not rec["alive_win"][stream][j]:
+                continue
+            acc = int(rec["acc_win"][stream][j])
+            f = forced if j == 0 else 0
+            trace += [True] * (acc - f)
+            if rejd and rw == j:
+                trace.append(False)
+                sibs.append(bool(rec["sib_acc"][stream]))
+        forced = (1 + int(rec["sib_acc"][stream])) if rejd else 0
+    return trace, sibs
+
+
+@pytest.mark.parametrize("sp", [1, 2])
+def test_engine_schedule_matches_tree_tick_replay(tree_models, sp):
+    """The realized SPOrchestrator event log under tree speculation —
+    spawn/complete/preempt order, COMMIT positions AND path_len — equals
+    ``replay_ticks`` on the realized accept + sibling traces, and the
+    run is still token-identical to greedy."""
+    from repro.core.si_jax import nonsi_generate
+    cfg, mt, pt, pd = tree_models
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (1, 9), 0,
+                                cfg.vocab_size)
+    n_new = 17
+    orch = SPOrchestrator(mt, mt, lookahead=4, sp=sp, tree_width=2,
+                          record_events=True)
+    out, stats = orch.generate(pt, pd, prompt, n_new)
+    ref = nonsi_generate(mt, pt, prompt, n_new)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+    trace, sibs = _tree_trace_from_ticks(orch, 0)
+    ts = replay_ticks(trace, 4, sp, n_new, tree_width=2, sib_accept=sibs)
+    assert ts.ticks == stats.macro_steps
+    assert ts.emitted == stats.emitted
+    assert ts.events == orch.events[0]
+    assert sum(sibs) == stats.sibling_accepts
+
+
+def test_engine_tree_sibling_accepts_fire(tree_models):
+    """The lockstep test above is only meaningful if the perturbed
+    drafter actually produces sibling accepts on this config."""
+    cfg, mt, pt, pd = tree_models
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (1, 9), 0,
+                                cfg.vocab_size)
+    orch = SPOrchestrator(mt, mt, lookahead=4, sp=2, tree_width=2)
+    _, stats = orch.generate(pt, pd, prompt, 17)
+    assert stats.rejections > 0
+    assert stats.sibling_accepts > 0

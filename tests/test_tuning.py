@@ -478,3 +478,36 @@ def test_perverse_store_is_lossless(rng):
                                   paged=ps).generate(pt, pd, prompt, n_new)
     assert np.array_equal(np.asarray(out_k), ref)
     assert np.array_equal(np.asarray(out_j), ref)
+
+
+def test_perverse_store_is_lossless_tree(rng):
+    """Same firewall, tree dispatch path: a width-2 token tree routes
+    through the ``ring_decode_tree``/``paged_decode_tree`` families, so a
+    hostile store entry for those families must also sanitize down to the
+    closed knob set without touching tokens."""
+    from repro.core.si_jax import nonsi_generate
+    from repro.kernels.dispatch import pallas_override
+    from repro.models.model import Model
+    from repro.orchestrator import SPOrchestrator
+    cfg_t = tiny("yi-9b")
+    cfg_d = tiny("yi-9b", d_model=128)
+    mt, md = Model(cfg_t), Model(cfg_d)
+    pt = mt.init(jax.random.PRNGKey(0))
+    pd = md.init(jax.random.PRNGKey(1))
+    prompt = jax.random.randint(rng, (2, 9), 0, cfg_t.vocab_size)
+    n_new = 10
+    ps = PagedSpec(page_size=8)
+    ref = np.asarray(nonsi_generate(mt, pt, prompt, n_new))
+    for family in ("ring_decode_tree", "paged_decode_tree"):
+        for backend in DEFAULTS[family]:
+            out = sanitize_config(family, backend, _perverse_params())
+            assert set(out) == set(DEFAULTS[family][backend]), (family, backend)
+    with tuned_store(_PerverseStore()):
+        with pallas_override(force_pallas=True, interpret=True):
+            out_k, _ = SPOrchestrator(mt, md, lookahead=4, sp=2, rule="exact",
+                                      tree_width=2,
+                                      paged=ps).generate(pt, pd, prompt, n_new)
+        out_d, _ = SPOrchestrator(mt, md, lookahead=4, sp=2, rule="exact",
+                                  tree_width=2).generate(pt, pd, prompt, n_new)
+    assert np.array_equal(np.asarray(out_k), ref)
+    assert np.array_equal(np.asarray(out_d), ref)

@@ -91,6 +91,10 @@ def _list_key(item: Any, i: int) -> str:
     if isinstance(item, dict):
         if "op" in item and "shape" in item:
             return f"[{item['op']}|{item['shape']}]"
+        if "tree_width" in item:
+            # tree rows also carry "sp" (fixed R): key by width first or
+            # every row would collide on the same [spR] key
+            return f"[tw{item['tree_width']}]"
         if "sp" in item:
             return f"[sp{item['sp']}]"
     return f"[{i}]"
@@ -240,6 +244,30 @@ def check_invariants(kernels: Optional[dict] = None,
                 "BENCH_orchestrator.steady_state.continuous.tokens_per_tick",
                 "regressed", f"continuous {cont} < drain {drain}",
                 waivable=False))
+        # tree speculation (core/tree.py): every width must emit the
+        # greedy reference stream, and accepted tokens per target forward
+        # must never fall below the width-1 (flat) row at equal R —
+        # a sibling accept only ever adds tokens to a tick
+        tree_rows = orchestrator.get("tree", [])
+        flat_tptf = None
+        for row in tree_rows:
+            if row.get("lossless") is not True:
+                out.append(Violation(
+                    f"BENCH_orchestrator.tree[tw{row.get('tree_width')}]"
+                    ".lossless", "tree-lossless",
+                    "tree run diverged from the sequential stream",
+                    waivable=False))
+            if row.get("tree_width") == 1:
+                flat_tptf = row.get("tokens_per_target_forward")
+        if flat_tptf is not None:
+            for row in tree_rows:
+                tptf = row.get("tokens_per_target_forward")
+                if (row.get("tree_width", 1) > 1 and tptf is not None
+                        and tptf < flat_tptf):
+                    out.append(Violation(
+                        f"BENCH_orchestrator.tree[tw{row['tree_width']}]"
+                        ".tokens_per_target_forward", "regressed",
+                        f"tree {tptf} < flat {flat_tptf}", waivable=False))
     return out
 
 
@@ -402,6 +430,33 @@ def self_test() -> List[str]:
     expect(any(v.kind == "lossless" for v in
                check_invariants(serving={"lossless": False})),
            "lossless=false must be caught")
+
+    # tree invariants: lossless never waivable, throughput floor at flat
+    bad_tree = {"tree": [
+        {"tree_width": 1, "tokens_per_target_forward": 1.5,
+         "lossless": True},
+        {"tree_width": 2, "tokens_per_target_forward": 1.6,
+         "lossless": False}]}
+    vs = check_invariants(orchestrator=bad_tree)
+    expect(any(v.kind == "tree-lossless" and not v.waivable for v in vs),
+           "tree lossless=false must be caught, never waivable")
+    slow_tree = {"tree": [
+        {"tree_width": 1, "tokens_per_target_forward": 1.5,
+         "lossless": True},
+        {"tree_width": 2, "tokens_per_target_forward": 1.2,
+         "lossless": True}]}
+    expect(any(v.kind == "regressed" and "tree" in v.metric
+               for v in check_invariants(orchestrator=slow_tree)),
+           "tree throughput below flat must be caught")
+    good_tree = {"tree": [
+        {"tree_width": 1, "tokens_per_target_forward": 1.5,
+         "lossless": True},
+        {"tree_width": 2, "tokens_per_target_forward": 1.562,
+         "lossless": True}]}
+    expect(check_invariants(orchestrator=good_tree) == [],
+           "lossless tree at or above flat must pass")
+    expect(_list_key({"tree_width": 2, "sp": 2}, 0) == "[tw2]",
+           "tree rows must key by width, not collide on [sp2]")
 
     # waivers: active suppresses, expired does not, invariants never waive
     v = [Violation("B.rows[a|S2048].ms", "regressed", "x"),
